@@ -1,0 +1,65 @@
+//! The paper-reproduction driver: regenerates every table and figure in the
+//! paper's evaluation (DESIGN.md §4) against the real serving stack.
+//!
+//! ```sh
+//! cargo run --release --example paper_tables -- --table 1 --prompts 64 --seeds 3
+//! cargo run --release --example paper_tables -- --table all
+//! ```
+//!
+//! Tables: 1, 3, 4..8, fig3, fig4, motivating, all.  Results print to
+//! stdout; EXPERIMENTS.md records canonical runs.
+
+use std::sync::Arc;
+
+use specd::config::ExperimentConfig;
+use specd::experiments::{motivating_table, Harness};
+use specd::runtime::Runtime;
+use specd::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let table = args.get_or("table", "1").to_string();
+    if table == "motivating" {
+        println!("{}", motivating_table());
+        return Ok(());
+    }
+    let dir = args
+        .get("artifacts")
+        .map(String::from)
+        .or_else(|| std::env::var("SPECD_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".into());
+    let rt = Arc::new(Runtime::load(std::path::Path::new(&dir))?);
+    let cfg = ExperimentConfig {
+        prompts_per_dataset: args.usize_or("prompts", 32)?,
+        seeds: (0..args.u64_or("seeds", 3)?).collect(),
+        max_new_tokens: args.usize_or("max-new-tokens", 40)?,
+    };
+    println!(
+        "# paper_tables --table {table} ({} prompts/dataset, {} seeds, {} new tokens)\n",
+        cfg.prompts_per_dataset,
+        cfg.seeds.len(),
+        cfg.max_new_tokens
+    );
+    let h = Harness::new(rt, cfg)?;
+    let t0 = std::time::Instant::now();
+    match table.as_str() {
+        "1" => println!("{}", h.table1()?),
+        "3" => println!("{}", h.table3()?),
+        "fig3" => println!("{}", h.fig3()?),
+        "fig4" => println!("{}", h.fig4()?),
+        "4" | "5" | "6" | "7" | "8" => println!("{}", h.appendix_table(table.parse()?)?),
+        "all" => {
+            println!("{}", motivating_table());
+            println!("{}", h.table1()?);
+            println!("{}", h.table3()?);
+            println!("{}", h.fig3()?);
+            println!("{}", h.fig4()?);
+            for i in 4..=8 {
+                println!("{}", h.appendix_table(i)?);
+            }
+        }
+        other => anyhow::bail!("unknown table '{other}'"),
+    }
+    eprintln!("[paper_tables] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end serving demo: starts the coordinator + HTTP server on a
+//! loopback port, fires a small batched workload from several client
+//! threads, and reports latency/throughput — the serving-paper E2E driver
+//! (EXPERIMENTS.md records a run).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use specd::config::{Config, EngineConfig};
+use specd::coordinator::Coordinator;
+use specd::runtime::Runtime;
+use specd::server::{client, serve, ServerState};
+use specd::stats::mean_std;
+use specd::workload::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Arc::new(Runtime::load(std::path::Path::new(&dir))?);
+    let datasets = Dataset::load_all(rt.artifacts_dir())?;
+    let cfg = Config::default();
+    let engine_cfg = EngineConfig { max_new_tokens: 32, ..Default::default() };
+    let coordinator = Coordinator::spawn(rt, engine_cfg, &cfg.server)?;
+    let state = Arc::new(ServerState { coordinator, datasets });
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    {
+        let st = state.clone();
+        std::thread::spawn(move || {
+            let _ = serve(listener, st);
+        });
+    }
+    println!("serving on http://{addr}");
+
+    // Warm up (compiles the programs on first use).
+    let t0 = Instant::now();
+    client::generate(&addr, "gsm8k", 8, 99)?;
+    println!("warmup (incl. program compilation): {:?}", t0.elapsed());
+
+    // 4 client threads x 4 requests, mixed datasets -> continuous batching.
+    let n_clients = 4;
+    let per_client = 4;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            let mut toks = 0usize;
+            let ds = ["gsm8k", "wmt", "xsum", "sharegpt"][c % 4];
+            for r in 0..per_client {
+                let resp = client::generate(&addr, ds, 32, (c * 100 + r) as u64).unwrap();
+                lat.push(resp.latency_ms);
+                toks += resp.n_tokens;
+            }
+            (lat, toks)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let (lat, toks) = h.join().unwrap();
+        all_lat.extend(lat);
+        total_tokens += toks;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (mean, std) = mean_std(&all_lat);
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\n{} requests, {total_tokens} tokens in {wall:.2}s -> {:.1} tok/s",
+        n_clients * per_client,
+        total_tokens as f64 / wall
+    );
+    println!(
+        "request latency: mean {mean:.0}±{std:.0} ms, p50 {:.0} ms, max {:.0} ms",
+        all_lat[all_lat.len() / 2],
+        all_lat.last().unwrap()
+    );
+    let (_, metrics) = client::get(&addr, "/metrics")?;
+    println!("\nserver metrics:\n{metrics}");
+    Ok(())
+}

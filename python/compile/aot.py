@@ -1,0 +1,328 @@
+"""AOT export: train the model family, lower every serving program to HLO
+text, and write the artifact bundle consumed by the rust runtime.
+
+Run once via ``make artifacts``.  Python never runs after this.
+
+Bundle layout (artifacts/):
+  manifest.json            — shapes, program arg/out signatures, profiles
+  weights_<model>.bin      — raw little-endian f32, tree-flatten order
+  <program>.hlo.txt        — HLO text (NOT serialized proto: jax>=0.5 emits
+                             64-bit instruction ids that xla_extension 0.5.1
+                             rejects; the text parser reassigns ids)
+  prompts_<dataset>.json   — canonical eval prompts per synthetic dataset
+  golden_verify.json       — draw-for-draw verification test vectors for the
+                             rust `verify` module
+  train_log.json           — loss curves (EXPERIMENTS.md provenance)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common, corpus, model, train
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, *example_args) -> tuple[str, list[dict], list[dict]]:
+    """Lower ``fn`` to HLO text plus its flattened arg/out signatures.
+
+    ``keep_unused=True`` is load-bearing: the rust runtime feeds arguments
+    positionally in tree-flatten order, so jax must not prune parameters the
+    program happens to ignore (e.g. prefill's ``length``).
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    flat, _ = jax.tree_util.tree_flatten_with_path(example_args)
+    args = [
+        {
+            "name": jax.tree_util.keystr(path),
+            "shape": list(np.shape(leaf)),
+            "dtype": str(np.asarray(leaf).dtype),
+        }
+        for path, leaf in flat
+    ]
+    out_flat, _ = jax.tree_util.tree_flatten(jax.eval_shape(fn, *example_args))
+    outs = [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_flat]
+    return comp.as_hlo_text(), args, outs
+
+
+def flatten_params(params) -> tuple[list[tuple[str, np.ndarray]], int]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    named = [(jax.tree_util.keystr(p), np.asarray(x, np.float32)) for p, x in flat]
+    total = sum(int(x.size) for _, x in named)
+    return named, total
+
+
+def write_weights(path: str, params) -> list[dict]:
+    named, _ = flatten_params(params)
+    entries, offset = [], 0
+    with open(path, "wb") as f:
+        for name, arr in named:
+            data = np.ascontiguousarray(arr, dtype="<f4").tobytes()
+            f.write(data)
+            entries.append({"name": name, "shape": list(arr.shape), "offset": offset})
+            offset += arr.size
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Program definitions (the export surface; see model.py for the contract)
+# ---------------------------------------------------------------------------
+
+
+def build_programs(params):
+    """Yield (program_name, fn, example_args, meta) for every export."""
+    B, L = common.BATCH, common.MAX_LEN
+    toks = jnp.zeros((B, L), jnp.int32)
+    length = jnp.ones((B,), jnp.int32)
+    seed = jnp.int32(0)
+
+    cfgs = common.VARIANTS
+    kv = {name: model.init_kv(cfg, B) for name, cfg in cfgs.items()}
+
+    for name, cfg in cfgs.items():
+        p = params[name]
+        yield (
+            f"prefill_{name}",
+            functools.partial(model.prefill, cfg),
+            (p, toks, length),
+            {"kind": "prefill", "model": name},
+        )
+
+    tcfg, tp = cfgs["target"], params["target"]
+    for drafter in common.DRAFTERS:
+        dcfg, dp = cfgs[drafter], params[drafter]
+        for gamma in common.GAMMAS:
+            for algo in common.ALGOS:
+                fn = functools.partial(
+                    _spec_iter_export, tcfg, dcfg, gamma=gamma, algo=algo, max_len=L
+                )
+                yield (
+                    f"spec_iter_{algo}_{drafter}_g{gamma}",
+                    fn,
+                    (tp, dp, toks, length, kv["target"], kv[drafter], seed),
+                    {"kind": "spec_iter", "algo": algo, "drafter": drafter, "gamma": gamma},
+                )
+            # host-verify path: draft block only (greedy & debugging)
+            yield (
+                f"draft_block_{drafter}_g{gamma}",
+                functools.partial(_draft_block_export, dcfg, gamma=gamma),
+                (dp, toks, length, kv[drafter], seed),
+                {"kind": "draft_block", "drafter": drafter, "gamma": gamma},
+            )
+
+    for gamma in common.GAMMAS:
+        yield (
+            f"target_score_g{gamma}",
+            functools.partial(_target_score_export, tcfg, gamma=gamma),
+            (tp, toks, length, kv["target"], jnp.zeros((B, gamma), jnp.int32)),
+            {"kind": "target_score", "gamma": gamma},
+        )
+
+    yield (
+        "baseline_step",
+        functools.partial(_baseline_export, tcfg, max_len=L),
+        (tp, toks, length, kv["target"], seed),
+        {"kind": "baseline"},
+    )
+
+
+def _spec_iter_export(tcfg, dcfg, tp, dp, toks, length, kvt, kvd, seed, *, gamma, algo, max_len):
+    return model.spec_iter(
+        tcfg, dcfg, tp, dp, toks, length, kvt, kvd, seed,
+        gamma=gamma, algo=algo, max_len=max_len,
+    )
+
+
+def _draft_block_export(dcfg, dp, toks, length, kvd, seed, *, gamma):
+    key = jax.random.PRNGKey(seed)
+    drafts, qs, kvd = model.draft_scan(dcfg, dp, kvd, toks, length, gamma, key)
+    return drafts, qs, kvd
+
+
+def _target_score_export(tcfg, tp, toks, length, kvt, drafts, *, gamma):
+    ps, kvt = model.target_score(tcfg, tp, kvt, toks, length, drafts)
+    return ps, kvt
+
+
+def _baseline_export(tcfg, tp, toks, length, kvt, seed, *, max_len):
+    return model.baseline_step(tcfg, tp, toks, length, kvt, seed, max_len=max_len)
+
+
+# ---------------------------------------------------------------------------
+# Eval prompt + golden vector export
+# ---------------------------------------------------------------------------
+
+
+def export_prompts(outdir: str, grammar: corpus.Grammar, n: int) -> dict:
+    info = {}
+    for prof in corpus.PROFILES:
+        rng = np.random.default_rng(hash(prof.name) % 2**31)
+        prompts = [grammar.sample_prompt(prof, rng) for _ in range(n)]
+        path = os.path.join(outdir, f"prompts_{prof.name}.json")
+        with open(path, "w") as f:
+            json.dump(prompts, f)
+        info[prof.name] = {
+            "file": os.path.basename(path),
+            "marker": prof.marker,
+            "count": n,
+            "mean_len": float(np.mean([len(p) for p in prompts])),
+        }
+    return info
+
+
+def export_golden(outdir: str, n_cases: int = 64) -> None:
+    """Draw-for-draw test vectors: rust `verify` must match these exactly."""
+    rng = np.random.default_rng(20250710)
+    cases = []
+    for i in range(n_cases):
+        gamma = int(rng.choice([1, 2, 4, 6, 8]))
+        vocab = int(rng.choice([8, 32, 256]))
+        conc = float(rng.choice([0.3, 1.0, 5.0]))
+        ps = rng.gamma(conc, size=(gamma + 1, vocab))
+        qs = rng.gamma(conc, size=(gamma, vocab))
+        ps /= ps.sum(-1, keepdims=True)
+        qs /= qs.sum(-1, keepdims=True)
+        if i % 4 == 0:  # identical-model edge case
+            qs = ps[:gamma].copy()
+        drafts = np.array([rng.choice(vocab, p=qs[j]) for j in range(gamma)])
+        etas = rng.random(gamma)
+        u = float(rng.random())
+        tok_tau, tok_em = ref.token_verify(ps, qs, drafts, etas, u)
+        blk_tau, blk_em = ref.block_verify(ps, qs, drafts, etas, u)
+        p_chain, h_chain = ref.block_chain(ps, qs, drafts)
+        # random greedy modification-window state (Algorithm 5/6 layers)
+        layers = []
+        if gamma > 1 and rng.random() < 0.6:
+            layers.append((int(rng.integers(1, gamma)), float(rng.uniform(0.2, 2.0))))
+            if gamma > 2 and rng.random() < 0.3:
+                layers.append((int(rng.integers(1, gamma - 1)), float(rng.uniform(0.2, 2.0))))
+        g_tau, g_em, g_new = ref.greedy_verify(ps, qs, drafts, etas, u, layers)
+        cases.append(
+            {
+                "gamma": gamma,
+                "vocab": vocab,
+                "ps": ps.flatten().tolist(),
+                "qs": qs.flatten().tolist(),
+                "drafts": drafts.tolist(),
+                "etas": etas.tolist(),
+                "u": u,
+                "token": {"tau": tok_tau, "emitted": tok_em},
+                "block": {
+                    "tau": blk_tau,
+                    "emitted": blk_em,
+                    "p": p_chain.tolist(),
+                    "h": h_chain.tolist(),
+                },
+                "greedy": {
+                    "tau": g_tau,
+                    "emitted": g_em,
+                    "layers_in": [[r, v] for r, v in layers],
+                    "layers_out": [[r, v] for r, v in g_new],
+                },
+            }
+        )
+    with open(os.path.join(outdir, "golden_verify.json"), "w") as f:
+        json.dump(cases, f)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--fast", action="store_true", help="CI smoke build")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    t_start = time.time()
+
+    fast = args.fast or os.environ.get("SPECD_FAST") == "1"
+    print(f"[aot] training model family (fast={fast}) ...", flush=True)
+    trained = train.train_all(fast=fast)
+    params = {k: v[0] for k, v in trained.items()}
+    with open(os.path.join(outdir, "train_log.json"), "w") as f:
+        json.dump({k: v[1] for k, v in trained.items()}, f)
+
+    models_meta = {}
+    for name, cfg in common.VARIANTS.items():
+        weights = write_weights(os.path.join(outdir, f"weights_{name}.bin"), params[name])
+        models_meta[name] = {
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "vocab_size": cfg.vocab_size,
+            "max_len": cfg.max_len,
+            "param_count": cfg.param_count(),
+            "weights_file": f"weights_{name}.bin",
+            "weights": weights,
+        }
+
+    programs_meta = {}
+    for name, fn, example_args, meta in build_programs(params):
+        t0 = time.time()
+        text, sig_args, sig_outs = to_hlo_text(fn, *example_args)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        programs_meta[name] = {
+            "file": os.path.basename(path),
+            "args": sig_args,
+            "outs": sig_outs,
+            **meta,
+        }
+        print(
+            f"[aot] {name}: {len(text) / 1e3:.0f} kB, {len(sig_args)} args "
+            f"({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+
+    grammar = corpus.Grammar()
+    n_prompts = 48 if fast else common.PROMPTS_PER_DATASET
+    datasets_meta = export_prompts(outdir, grammar, n_prompts)
+    export_golden(outdir)
+
+    manifest = {
+        "version": 1,
+        "batch": common.BATCH,
+        "max_len": common.MAX_LEN,
+        "vocab_size": common.VOCAB_SIZE,
+        "pad_id": common.PAD_ID,
+        "bos_id": common.BOS_ID,
+        "eos_id": common.EOS_ID,
+        "gammas": list(common.GAMMAS),
+        "algos": list(common.ALGOS),
+        "drafters": list(common.DRAFTERS),
+        "models": models_meta,
+        "programs": programs_meta,
+        "datasets": datasets_meta,
+        "built_unix": int(t_start),
+        "fast_build": fast,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] bundle complete in {time.time() - t_start:.0f}s -> {outdir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

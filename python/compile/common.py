@@ -1,0 +1,81 @@
+"""Shared configuration for the build-time (L1/L2) python stack.
+
+Everything here is compile-path only: these configs decide the fixed shapes
+baked into the AOT HLO programs.  The rust runtime reads the same values back
+from ``artifacts/manifest.json`` and never imports this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (byte-level synthetic language).
+# ---------------------------------------------------------------------------
+VOCAB_SIZE = 256
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+# Dataset-domain marker tokens occupy 3..10 (8 synthetic "datasets").
+MARKER_BASE = 3
+NUM_DATASETS = 8
+CONTENT_BASE = 16  # first ordinary content token
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A decoder-only transformer LM variant."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab_size: int = VOCAB_SIZE
+    max_len: int = 96  # prompt + generation + draft scratch
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model**2 + 2 * self.d_model * self.d_ff
+        per_layer += 4 * self.d_model  # layernorm scales/biases
+        return (
+            self.vocab_size * self.d_model  # tied embedding / unembedding
+            + self.max_len * self.d_model  # learned positions
+            + self.n_layers * per_layer
+            + 2 * self.d_model  # final LN
+        )
+
+
+# The PALM-2-{S, XXS, XXXS} substitution (see DESIGN.md §2.2): a trained
+# target and two distilled drafters with a strict quality ordering.
+TARGET = ModelConfig("target", n_layers=3, d_model=128, n_heads=4)
+XXS = ModelConfig("xxs", n_layers=2, d_model=64, n_heads=4)
+XXXS = ModelConfig("xxxs", n_layers=1, d_model=32, n_heads=2)
+VARIANTS = {m.name: m for m in (TARGET, XXS, XXXS)}
+DRAFTERS = ("xxs", "xxxs")
+
+# Fixed serving shapes baked into the AOT programs.
+BATCH = 4  # engine slot count per program
+MAX_LEN = TARGET.max_len
+GAMMAS = (4, 6, 8)
+ALGOS = ("token", "block")  # fused in-HLO verification variants
+# "greedy" (Appendix C) runs through the host-verify path, see engine/.
+
+# Training schedule (overridable for CI smoke runs).
+TRAIN_STEPS = int(os.environ.get("SPECD_TRAIN_STEPS", "700"))
+DISTILL_STEPS_XXS = int(os.environ.get("SPECD_DISTILL_STEPS", "400"))
+DISTILL_STEPS_XXXS = int(os.environ.get("SPECD_DISTILL_STEPS_XXXS", "250"))
+TRAIN_BATCH = 8
+TRAIN_SEQ = MAX_LEN
+LEARNING_RATE = 3e-3
+
+# Workload export: prompts per dataset written to artifacts/prompts_<ds>.json.
+PROMPTS_PER_DATASET = int(os.environ.get("SPECD_PROMPTS", "256"))

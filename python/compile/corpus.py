@@ -1,0 +1,140 @@
+"""Synthetic multi-domain corpus (the dataset substitution, DESIGN.md §2.2).
+
+The paper evaluates on eight public/proprietary prompt datasets with PALM-2
+models.  We replace them with a *learnable* synthetic language: a hidden-state
+Markov emitter ("grammar") whose per-domain statistics (transition
+peakedness, emission entropy, prompt length) differ, mirroring how GSM8K is
+more predictable than WMT for a fixed drafter.  One LM family is trained on
+the mixture; the domain marker token lets it condition per-dataset, so the
+per-dataset spread in acceptance rates emerges exactly as in the paper.
+
+Deterministic given (dataset, seed): the prompt sets exported to
+``artifacts/prompts_<ds>.json`` are the canonical eval workload shared by the
+rust benches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import common
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetProfile:
+    """Statistics of one synthetic "dataset" (paper Table 1 rows)."""
+
+    name: str
+    marker: int  # domain marker token id
+    trans_temp: float  # hidden-state transition temperature (lower = more predictable)
+    emit_temp: float  # emission temperature (lower = peakier next-token dist)
+    prompt_len: tuple[int, int]  # (min, max) prompt content tokens
+    eos_rate: float  # per-sentence-boundary probability of ending generation
+
+
+# Ordered so that the expected block-efficiency ordering resembles Table 1:
+# gsm8k most predictable (paper BE 3.81), wmt/lm1b least (3.19/3.21).
+PROFILES = [
+    DatasetProfile("lm1b", common.MARKER_BASE + 0, 1.00, 1.00, (8, 28), 0.06),
+    DatasetProfile("gptprompt", common.MARKER_BASE + 1, 0.75, 0.80, (10, 30), 0.05),
+    DatasetProfile("webqa", common.MARKER_BASE + 2, 0.80, 0.78, (6, 20), 0.07),
+    DatasetProfile("piqa", common.MARKER_BASE + 3, 0.82, 0.82, (8, 24), 0.06),
+    DatasetProfile("sharegpt", common.MARKER_BASE + 4, 0.88, 0.88, (12, 32), 0.05),
+    DatasetProfile("xsum", common.MARKER_BASE + 5, 0.78, 0.76, (14, 32), 0.06),
+    DatasetProfile("gsm8k", common.MARKER_BASE + 6, 0.55, 0.55, (10, 26), 0.04),
+    DatasetProfile("wmt", common.MARKER_BASE + 7, 1.05, 1.05, (10, 28), 0.06),
+]
+PROFILE_BY_NAME = {p.name: p for p in PROFILES}
+assert len(PROFILES) == common.NUM_DATASETS
+
+
+class Grammar:
+    """Hidden-state Markov emitter shared across domains.
+
+    ``n_states`` hidden states; each state owns a bank of content tokens with
+    a peaked score vector.  Domains re-temper the *same* underlying tables so
+    the LM can share structure across domains (as a real multi-task LM does).
+    """
+
+    N_STATES = 12
+    TOKENS_PER_STATE = 14
+
+    def __init__(self, seed: int = 1234):
+        rng = np.random.default_rng(seed)
+        n_content = common.VOCAB_SIZE - common.CONTENT_BASE
+        # Each state's token bank: a window of content tokens (overlapping).
+        self.state_tokens = np.stack(
+            [
+                common.CONTENT_BASE
+                + (rng.permutation(n_content)[: self.TOKENS_PER_STATE])
+                for _ in range(self.N_STATES)
+            ]
+        )  # (S, T)
+        # Raw emission scores: one clear favourite + decaying tail.
+        self.emit_scores = np.sort(rng.gumbel(size=(self.N_STATES, self.TOKENS_PER_STATE)))[
+            :, ::-1
+        ] * 1.6
+        # Raw transition scores: SECOND-ORDER (depend on the previous two
+        # hidden states).  This is the capacity knife between the model
+        # sizes: the 3-layer target tracks two states of history, the tiny
+        # drafters approximate an order-1 chain, giving the moderate
+        # drafter-acceptance regime of the paper (PALM-2-XXS vs -S).
+        self.trans_scores = rng.gumbel(size=(self.N_STATES, self.N_STATES, self.N_STATES)) * 1.4
+        # "Sentence boundary" states: reaching them may emit EOS.
+        self.boundary_states = np.array([0, 5, 9])
+
+    @staticmethod
+    def _softmax(scores: np.ndarray, temp: float) -> np.ndarray:
+        z = scores / max(temp, 1e-3)
+        z = z - z.max(axis=-1, keepdims=True)
+        e = np.exp(z)
+        return e / e.sum(axis=-1, keepdims=True)
+
+    def sample_sequence(
+        self,
+        profile: DatasetProfile,
+        rng: np.random.Generator,
+        max_len: int,
+    ) -> list[int]:
+        """One full document: [BOS, marker, content..., EOS]."""
+        trans = self._softmax(self.trans_scores, profile.trans_temp)
+        emit = self._softmax(self.emit_scores, profile.emit_temp)
+        toks = [common.BOS_ID, profile.marker]
+        prev = int(rng.integers(self.N_STATES))
+        state = int(rng.integers(self.N_STATES))
+        while len(toks) < max_len - 1:
+            bank = self.state_tokens[state]
+            tok = int(rng.choice(bank, p=emit[state]))
+            toks.append(tok)
+            prev, state = state, int(rng.choice(self.N_STATES, p=trans[prev, state]))
+            if state in self.boundary_states and rng.random() < profile.eos_rate:
+                break
+        toks.append(common.EOS_ID)
+        return toks
+
+    def sample_prompt(
+        self, profile: DatasetProfile, rng: np.random.Generator
+    ) -> list[int]:
+        """Prompt prefix only (no EOS): what the serving workload submits."""
+        lo, hi = profile.prompt_len
+        want = int(rng.integers(lo, hi + 1))
+        seq = self.sample_sequence(profile, rng, max_len=want + 8)
+        seq = [t for t in seq if t != common.EOS_ID]
+        return seq[: max(want, 3)]
+
+
+def training_batch(
+    grammar: Grammar, rng: np.random.Generator, batch: int, seq_len: int
+) -> np.ndarray:
+    """Mixture-of-domains LM training batch, PAD-padded to ``seq_len``."""
+    out = np.full((batch, seq_len), common.PAD_ID, dtype=np.int32)
+    for b in range(batch):
+        profile = PROFILES[int(rng.integers(len(PROFILES)))]
+        # Pack documents until the row is full to avoid wasting positions.
+        row: list[int] = []
+        while len(row) < seq_len:
+            row.extend(grammar.sample_sequence(profile, rng, max_len=seq_len))
+        out[b] = np.asarray(row[:seq_len], dtype=np.int32)
+    return out

@@ -1,0 +1,78 @@
+"""Pallas flash-style attention kernel for the parallel-scoring path (L1).
+
+Used when the target model scores the gamma+1 draft prefixes in one call:
+T query positions attend to an L-long KV cache with a dynamic validity
+length.  GPU->TPU adaptation (DESIGN.md §2.3): instead of a threadblock per
+query tile with shared-memory K/V staging, we grid over (batch, head) and
+stream K/V row-blocks HBM->VMEM via BlockSpec, accumulating an online
+softmax; q.Kᵀ and w.V hit the MXU.
+
+interpret=True on CPU — the numerics path the tests certify; real-TPU cost
+is estimated in EXPERIMENTS.md §Perf from the VMEM footprint below.
+
+VMEM per grid step (defaults T=9, L=96, D=32 f32):
+  q (T, D) 1.1 KiB + K,V (Lblk, D) 2x16 KiB + acc (T, D) — far under 16 MiB,
+  so a single L-block per step suffices at these shapes; the block size is a
+  parameter for larger caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_body(scale, ps_len_static, qpos_ref, vlen_ref, q_ref, k_ref, v_ref, o_ref):
+    """One (batch, head) grid step: full-cache attention with causal +
+    validity masking done in VMEM."""
+    q = q_ref[0, :, 0]          # (T, D)
+    k = k_ref[0, :, 0]          # (L, D)
+    v = v_ref[0, :, 0]          # (L, D)
+    qpos = qpos_ref[0]          # (T,) absolute positions of the queries
+    vlen = vlen_ref[0]          # scalar: kv rows < vlen-? are valid  (unused rows masked)
+
+    logits = jnp.dot(q, k.T) * scale  # (T, L)  -- MXU on TPU
+    kpos = jnp.arange(k.shape[0], dtype=jnp.int32)[None, :]  # (1, L)
+    # causal: key position <= query position; validity: key row was written
+    # (row < qpos works because consumption is contiguous; see engine docs).
+    mask = kpos <= qpos[:, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[0, :, 0] = jnp.dot(w, v).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cached_attention(q, k, v, qpos, vlen):
+    """Attention of T new queries against an L-row KV cache.
+
+    q: (B, T, H, D); k, v: (B, L, H, D); qpos: (B, T) int32 absolute
+    positions; vlen: (B,) int32 (informational; masking is positional).
+    Returns (B, T, H, D).
+    """
+    b, t, h, d = q.shape
+    l = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_attn_body, scale, l)
+    grid = (b, h)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t), lambda b_, h_: (b_, 0)),        # qpos
+            pl.BlockSpec((1,), lambda b_, h_: (b_,)),            # vlen
+            pl.BlockSpec((1, t, 1, d), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, l, 1, d), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, l, 1, d), lambda b_, h_: (b_, 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, 1, d), lambda b_, h_: (b_, 0, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
+        interpret=True,
+    )(qpos, vlen, q, k, v)
+    return out

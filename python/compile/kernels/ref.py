@@ -1,0 +1,219 @@
+"""Pure-numpy verification oracles — the correctness reference for L1.
+
+Direct, readable ports of the paper's Algorithms 1 (token verification),
+2 (block verification, Eqs. 3/4) and 4 (greedy block verification,
+Appendix C), matching the Appendix A sketches but with *explicit* randomness:
+every function takes the uniform variates as arguments so the Pallas kernels
+(and the rust implementations, via golden vectors) can be checked
+bit-for-bit against the same draws.
+
+Conventions (one batch row):
+  ps     : (gamma+1, V) — ps[i] = M_b(. | c, X^i), ps[0] = M_b(. | c)
+  qs     : (gamma,   V) — qs[i] = M_s(. | c, X^i)
+  drafts : (gamma,) int — X_1..X_gamma
+  etas   : (gamma,) f32 — per-position accept/reject uniforms
+  u_final: f32          — inverse-CDF uniform for the bonus/residual token
+Returns (tau, emitted) where emitted = [X_1..X_tau, Y] (length tau+1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EPS = 1e-30
+
+
+def _inv_cdf(weights: np.ndarray, u: float) -> int:
+    """Sample index via inverse CDF on (possibly unnormalised) weights."""
+    total = float(weights.sum())
+    if total <= 0.0:
+        # Degenerate residual (ps == qs exactly): callers fall back to ps.
+        return 0
+    cdf = np.cumsum(weights) / total
+    return int(np.searchsorted(cdf, u * (1.0 - 1e-7), side="right"))
+
+
+def token_verify(ps, qs, drafts, etas, u_final):
+    """Paper Algorithm 1 (standard speculative-decoding verification)."""
+    ps, qs = np.asarray(ps, np.float64), np.asarray(qs, np.float64)
+    gamma = len(drafts)
+    tau = 0
+    for i in range(gamma):
+        x = int(drafts[i])
+        ratio = ps[i, x] / max(qs[i, x], EPS)
+        if etas[i] <= min(ratio, 1.0):
+            tau = i + 1
+        else:
+            break
+    if tau == gamma:
+        y = _inv_cdf(ps[gamma], u_final)
+    else:
+        res = np.maximum(ps[tau] - qs[tau], 0.0)
+        if res.sum() <= 0.0:
+            res = ps[tau]
+        y = _inv_cdf(res, u_final)
+    return tau, list(map(int, drafts[:tau])) + [y]
+
+
+def block_chain(ps, qs, drafts):
+    """The coupled acceptance chain of Algorithm 2.
+
+    Returns (p, h) with p[i] = p_i (Eq. 8), i in 0..gamma, and
+    h[i] = h_i (Eq. 4) for i in 1..gamma (index 0 unused).
+    """
+    ps, qs = np.asarray(ps, np.float64), np.asarray(qs, np.float64)
+    gamma = len(drafts)
+    p = np.zeros(gamma + 1)
+    h = np.zeros(gamma + 1)
+    p[0] = 1.0
+    h[0] = 1.0  # unused sentinel, kept for parity with the kernel
+    for i in range(1, gamma + 1):
+        x = int(drafts[i - 1])
+        ratio = ps[i - 1, x] / max(qs[i - 1, x], EPS)
+        p[i] = min(p[i - 1] * ratio, 1.0)
+        if i == gamma:
+            h[i] = p[i]
+        else:
+            s_i = np.maximum(p[i] * ps[i] - qs[i], 0.0).sum()
+            denom = s_i + 1.0 - p[i]
+            h[i] = 1.0 if denom <= EPS else s_i / denom
+    return p, h
+
+
+def block_verify(ps, qs, drafts, etas, u_final):
+    """Paper Algorithm 2 (block verification). NEVER breaks early: scans the
+    whole block and keeps the longest accepted sub-block."""
+    ps, qs = np.asarray(ps, np.float64), np.asarray(qs, np.float64)
+    gamma = len(drafts)
+    p, h = block_chain(ps, qs, drafts)
+    tau = 0
+    for i in range(1, gamma + 1):
+        if etas[i - 1] <= h[i]:
+            tau = i
+    if tau == gamma:
+        y = _inv_cdf(ps[gamma], u_final)
+    else:
+        res = np.maximum(p[tau] * ps[tau] - qs[tau], 0.0)
+        if res.sum() <= 0.0:
+            res = ps[tau]
+        y = _inv_cdf(res, u_final)
+    return tau, list(map(int, drafts[:tau])) + [y]
+
+
+def greedy_verify(ps, qs, drafts, etas, u_final, layers=None):
+    """Paper Algorithm 4 (greedy block verification, Appendix C) with the
+    Algorithm 5/6 distribution modification.
+
+    Algorithm 5 (Eq. 23) defines the modified target via *joint* sequence
+    probabilities: ``M_new(x_i | .) ∝ max(M_b(c, X^tau, Y, x^i) -
+    M_s(c, X^tau, Y, x^i), 0)``.  Factoring the joints, the modified row at
+    a window position is ``norm(max(M_row - R * Ms_row, 0))`` where ``R`` is
+    the running ratio Ms_joint / M_joint accumulated along every token
+    emitted since the window opened (M = the composite target the window was
+    created against).  Because Algorithm 6 re-modifies the current (already
+    composite) target on each rejection, windows nest: state is a list of
+    *layers*, oldest first, each ``(remaining_positions, ratio)``.
+
+    Returns (tau, emitted, new_layers).
+    """
+    ps = np.asarray(ps, np.float64)
+    qs = np.asarray(qs, np.float64)
+    gamma = len(drafts)
+    layers = list(layers) if layers else []
+    n_layers = len(layers)
+
+    def norm_or(row, fallback):
+        tot = row.sum()
+        return row / tot if tot > 0 else fallback.copy()
+
+    # Walk positions 0..gamma building composite rows and layer-ratio
+    # snapshots along the draft path.
+    comp = []            # composite target row per position
+    below = []           # below[i][l] = composite with layers < l applied
+    ratio_snap = []      # ratio_snap[i][l] = layer ratio BEFORE consuming pos i
+    cur_r = [r for (_rem, r) in layers]
+    for i in range(gamma + 1):
+        row = ps[i].copy()
+        below_i = []
+        for l, (rem, _r0) in enumerate(layers):
+            below_i.append(row.copy())
+            if rem > i and i < gamma:
+                row = norm_or(np.maximum(row - cur_r[l] * qs[i], 0.0), qs[i])
+        comp.append(row)
+        below.append(below_i)
+        ratio_snap.append(list(cur_r))
+        if i < gamma:
+            x = int(drafts[i])
+            for l, (rem, _r0) in enumerate(layers):
+                if rem > i:
+                    cur_r[l] *= qs[i, x] / max(below_i[l][x], EPS)
+
+    # Algorithm 4 proper, against the composite rows.
+    ptilde = np.zeros(gamma + 1)
+    ptilde[0] = 1.0
+    tau = 0
+    for i in range(1, gamma):
+        x = int(drafts[i - 1])
+        ptilde[i] = ptilde[i - 1] * comp[i - 1][x] / max(qs[i - 1, x], EPS)
+        p_remain = np.maximum(ptilde[i] * comp[i] - qs[i], 0.0).sum()
+        p_rej = np.maximum(qs[i] - ptilde[i] * comp[i], 0.0).sum()
+        h_i = 1.0 if p_rej <= EPS else min(1.0, p_remain / p_rej)
+        if etas[i - 1] <= h_i:
+            tau = i
+    x = int(drafts[gamma - 1])
+    ptilde[gamma] = ptilde[gamma - 1] * comp[gamma - 1][x] / max(qs[gamma - 1, x], EPS)
+    if etas[gamma - 1] <= ptilde[gamma]:
+        tau = gamma
+        y = _inv_cdf(comp[gamma], u_final)
+    else:
+        res = np.maximum(ptilde[tau] * comp[tau] - qs[tau], 0.0)
+        if res.sum() <= 0.0:
+            res = comp[tau]
+        y = _inv_cdf(res, u_final)
+
+    # Build the next-iteration layer state: surviving old layers (ratios
+    # advanced through the emitted tokens X^tau and Y), plus the new window.
+    new_layers = []
+    for l, (rem, _r0) in enumerate(layers):
+        rem2 = rem - (tau + 1)
+        if rem2 <= 0:
+            continue
+        r = ratio_snap[tau][l]  # advanced through X^tau during the walk
+        # advance through Y at position tau (layer is active there: rem > tau)
+        if tau < gamma:
+            r *= qs[tau, y] / max(below[tau][l][y], EPS)
+        new_layers.append((rem2, r))
+    if tau < gamma and gamma - tau - 1 > 0:
+        r_new = 1.0
+        for i in range(tau):
+            xi = int(drafts[i])
+            r_new *= qs[i, xi] / max(comp[i][xi], EPS)
+        r_new *= qs[tau, y] / max(comp[tau][y], EPS)
+        new_layers.append((gamma - tau - 1, r_new))
+    _ = n_layers
+    return tau, list(map(int, drafts[:tau])) + [y], new_layers
+
+
+def sample_categorical(probs: np.ndarray, u: float) -> int:
+    """Inverse-CDF categorical draw (shared with baseline decoding)."""
+    return _inv_cdf(np.asarray(probs, np.float64), u)
+
+
+def reference_attention(q, k, v, mask):
+    """Attention oracle for the Pallas attention kernel.
+
+    q: (T, H, D), k/v: (S, H, D), mask: (T, S) bool (True = attend).
+    """
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    out = np.zeros_like(q)
+    for h in range(q.shape[1]):
+        logits = (q[:, h] @ k[:, h].T) * scale  # (T, S)
+        logits = np.where(mask, logits, -1e30)
+        logits = logits - logits.max(axis=-1, keepdims=True)
+        w = np.exp(logits)
+        w = w / w.sum(axis=-1, keepdims=True)
+        out[:, h] = w @ v[:, h]
+    return out

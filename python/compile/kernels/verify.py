@@ -1,0 +1,196 @@
+"""Pallas draft-verification kernels (L1) — the paper's hot-spot.
+
+Implements Algorithm 1 (token verification) and Algorithm 2 (block
+verification, Eqs. 3/4) as Pallas kernels, gridded over the batch dimension.
+The greedy Appendix-C variant intentionally lives on the host-verify path
+(rust `verify::greedy`) because Algorithm 6 threads state across iterations.
+
+TPU mapping (see DESIGN.md §2.3): per grid step one batch row's
+(gamma+1, V) probability block lives in VMEM (gamma=8, V=256 f32 = 9 KiB);
+every reduction (Eq. 3/4 sums, inverse-CDF cumsum) is a lane-dimension
+reduction over V on the VPU.  gamma is static, so the acceptance chain is a
+fully unrolled dependency chain of scalar ops.  `interpret=True` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and correctness is
+what the CPU path certifies.
+
+Randomness is explicit: callers pass uniforms (etas, u_final), making the
+kernels deterministic functions that can be checked against
+:mod:`python.compile.kernels.ref` draw-for-draw.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-30
+
+
+def _inv_cdf_idx(weights, u):
+    """Inverse-CDF index over the lane dimension V.
+
+    weights: (V,) unnormalised, non-negative. u in [0,1).
+    Matches ref._inv_cdf: searchsorted(cumsum/total, u*(1-1e-7), 'right').
+    """
+    total = jnp.sum(weights)
+    cdf = jnp.cumsum(weights) / jnp.maximum(total, EPS)
+    return jnp.sum((cdf <= u * (1.0 - 1e-7)).astype(jnp.int32))
+
+
+def _residual_pick(weights, fallback, u):
+    """Sample from `weights`, falling back to `fallback` when degenerate."""
+    use_fb = jnp.sum(weights) <= 0.0
+    w = jnp.where(use_fb, fallback, weights)
+    return _inv_cdf_idx(w, u)
+
+
+def _emit(drafts, tau, y, gamma, pad_id):
+    """emitted[j] = drafts[j] for j < tau; y at j == tau; pad after."""
+    idx = jnp.arange(gamma + 1, dtype=jnp.int32)
+    drafts_ext = jnp.concatenate([drafts, jnp.zeros((1,), drafts.dtype)])
+    out = jnp.where(idx < tau, drafts_ext, pad_id)
+    return jnp.where(idx == tau, y, out)
+
+
+def _token_body(gamma, pad_id, ps_ref, qs_ref, d_ref, eta_ref, u_ref,
+                emit_ref, tau_ref):
+    ps = ps_ref[0]          # (gamma+1, V)
+    qs = qs_ref[0]          # (gamma, V)
+    drafts = d_ref[0]       # (gamma,)
+    etas = eta_ref[0]       # (gamma,)
+    u = u_ref[0]
+
+    # Algorithm 1: accept while eta_i <= min(1, p/q); stop at first reject.
+    # Data-independent form: tau = count of prefix-all-accepted positions.
+    ratios = jnp.stack(
+        [ps[i, drafts[i]] / jnp.maximum(qs[i, drafts[i]], EPS) for i in range(gamma)]
+    )
+    accept = etas <= jnp.minimum(ratios, 1.0)
+    # prefix products: accepted up to first failure
+    pref = jnp.cumprod(accept.astype(jnp.int32))
+    tau = jnp.sum(pref).astype(jnp.int32)
+
+    res_rows = jnp.stack(
+        [jnp.maximum(ps[i] - qs[i], 0.0) for i in range(gamma)]
+        + [ps[gamma]]  # tau == gamma: bonus token straight from M_b
+    )
+    res = res_rows[tau]
+    y = _residual_pick(res, ps[tau], u)
+    tau_ref[0] = tau
+    emit_ref[0] = _emit(drafts, tau, y, gamma, pad_id)
+
+
+def _block_body(gamma, pad_id, ps_ref, qs_ref, d_ref, eta_ref, u_ref,
+                emit_ref, tau_ref, p_ref, h_ref):
+    ps = ps_ref[0]
+    qs = qs_ref[0]
+    drafts = d_ref[0]
+    etas = eta_ref[0]
+    u = u_ref[0]
+
+    # Algorithm 2: coupled chain p_i = min(1, p_{i-1} * Mb/Ms), Eq. (4) h_i.
+    p_list = [jnp.float32(1.0)]
+    h_list = [jnp.float32(1.0)]  # h_0 unused
+    for i in range(1, gamma + 1):
+        x = drafts[i - 1]
+        ratio = ps[i - 1, x] / jnp.maximum(qs[i - 1, x], EPS)
+        p_i = jnp.minimum(p_list[i - 1] * ratio, 1.0)
+        p_list.append(p_i)
+        if i == gamma:
+            h_list.append(p_i)
+        else:
+            s_i = jnp.sum(jnp.maximum(p_i * ps[i] - qs[i], 0.0))
+            denom = s_i + 1.0 - p_i
+            h_list.append(jnp.where(denom <= EPS, 1.0, s_i / denom))
+    p = jnp.stack(p_list)   # (gamma+1,)
+    h = jnp.stack(h_list)   # (gamma+1,)
+
+    # No break: tau = longest accepted sub-block = max accepted index.
+    idx = jnp.arange(1, gamma + 1, dtype=jnp.int32)
+    accepted = etas <= h[1:]
+    tau = jnp.max(jnp.where(accepted, idx, 0)).astype(jnp.int32)
+
+    # Residual (Eq. 3) with p_tau coupling; bonus from M_b when tau == gamma.
+    res_rows = jnp.stack(
+        [jnp.maximum(p[i] * ps[i] - qs[i], 0.0) for i in range(gamma)]
+        + [ps[gamma]]
+    )
+    res = res_rows[tau]
+    y = _residual_pick(res, ps[tau], u)
+    tau_ref[0] = tau
+    emit_ref[0] = _emit(drafts, tau, y, gamma, pad_id)
+    p_ref[0] = p
+    h_ref[0] = h
+
+
+def _specs(batch, gamma, vocab):
+    row = lambda *dims: pl.BlockSpec((1,) + dims, lambda b: (b,) + (0,) * len(dims))
+    in_specs = [
+        row(gamma + 1, vocab),  # ps
+        row(gamma, vocab),      # qs
+        row(gamma),             # drafts
+        row(gamma),             # etas
+        pl.BlockSpec((1,), lambda b: (b,)),  # u
+    ]
+    return in_specs
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id",))
+def token_verify(ps, qs, drafts, etas, us, *, pad_id: int = 0):
+    """Batched Algorithm 1. Shapes: ps (B, g+1, V), qs (B, g, V),
+    drafts/etas (B, g), us (B,). Returns (emitted (B, g+1) i32, tau (B,) i32).
+    """
+    batch, g1, vocab = ps.shape
+    gamma = g1 - 1
+    kernel = functools.partial(_token_body, gamma, pad_id)
+    out = pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=_specs(batch, gamma, vocab),
+        out_specs=[
+            pl.BlockSpec((1, gamma + 1), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, gamma + 1), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ],
+        interpret=True,
+    )(ps, qs, drafts.astype(jnp.int32), etas, us)
+    return out[0], out[1]
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id", "debug"))
+def block_verify(ps, qs, drafts, etas, us, *, pad_id: int = 0, debug: bool = False):
+    """Batched Algorithm 2.  With ``debug=True`` additionally returns the
+    acceptance chain (p, h) for property tests against the oracle."""
+    batch, g1, vocab = ps.shape
+    gamma = g1 - 1
+    kernel = functools.partial(_block_body, gamma, pad_id)
+    out = pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=_specs(batch, gamma, vocab),
+        out_specs=[
+            pl.BlockSpec((1, gamma + 1), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, gamma + 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, gamma + 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, gamma + 1), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch, gamma + 1), jnp.float32),
+            jax.ShapeDtypeStruct((batch, gamma + 1), jnp.float32),
+        ],
+        interpret=True,
+    )(ps, qs, drafts.astype(jnp.int32), etas, us)
+    if debug:
+        return out[0], out[1], out[2], out[3]
+    return out[0], out[1]
+
+
+VERIFIERS = {"token": token_verify, "block": block_verify}

@@ -1,0 +1,293 @@
+"""L2: JAX decoder-only transformer LMs + the fused SpecDec iteration.
+
+The serving contract (shared with rust/src/engine, enforced by the manifest):
+
+* ``tokens`` is a (B, L) i32 ring of the full sequence; ``len`` is the
+  current sequence length per row.  The *pending* token ``tokens[len-1]`` has
+  not been fed through the models yet.
+* KV caches hold rows for positions ``0..len-2`` plus stale junk above;
+  every program consumes a contiguous run of positions starting at
+  ``len-1`` and rewrites exactly those cache rows, so a query at position p
+  only ever attends to rows that were written with the correct tokens
+  (causal mask ``key_pos <= query_pos``).
+* One SpecDec iteration (paper Algorithm 3) is ONE program:
+  draft ``lax.scan`` (gamma steps) -> target parallel score (gamma+1
+  positions, Pallas attention) -> L1 verify kernel -> token/len/done update.
+  L3's hot loop is therefore a single PJRT ``execute`` per scheduler tick.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .kernels import attention as attn_kernel
+from .kernels import verify as verify_kernel
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: common.ModelConfig, key) -> dict:
+    """Initialise a parameter pytree (dict-of-dicts, deterministic order)."""
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    d, f = cfg.d_model, cfg.d_ff
+    scale = d ** -0.5
+
+    def dense(k, shape):
+        return jax.random.normal(k, shape, jnp.float32) * (shape[0] ** -0.5)
+
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d), jnp.float32) * scale,
+        "pos": jax.random.normal(keys[1], (cfg.max_len, d), jnp.float32) * 0.02,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + i], 6)
+        params[f"layer_{i}"] = {
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "wq": dense(lk[0], (d, d)),
+            "wk": dense(lk[1], (d, d)),
+            "wv": dense(lk[2], (d, d)),
+            "wo": dense(lk[3], (d, d)),
+            "w1": dense(lk[4], (d, f)),
+            "w2": dense(lk[5], (f, d)),
+        }
+    return params
+
+
+def init_kv(cfg: common.ModelConfig, batch: int) -> dict:
+    shape = (cfg.n_layers, batch, cfg.max_len, cfg.n_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, jnp.float32), "v": jnp.zeros(shape, jnp.float32)}
+
+
+def _ln(x, p):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def _update_rows(cache, new, start):
+    """Per-row dynamic write: cache (B, L, H, D) <- new (B, T, H, D) at start (B,)."""
+
+    def one(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+
+    return jax.vmap(one)(cache, new, start)
+
+
+def _jnp_attention(q, k, v, qpos):
+    """Reference-path attention (used on the draft scan; the Pallas kernel
+    covers the target scoring path)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    mask = kpos[None, None, None, :] <= qpos[:, None, :, None]
+    logits = jnp.where(mask, logits, attn_kernel.NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", w, v)
+
+
+def forward_block(cfg, params, kv, tokens_t, start_pos, *, use_pallas: bool):
+    """Consume T tokens per row starting at per-row positions ``start_pos``.
+
+    tokens_t: (B, T) i32; start_pos: (B,) i32.
+    Returns probs (B, T, V) — probs[:, j] = M(. | ..., tokens_t[:, :j+1]) —
+    and the updated kv cache.
+    """
+    b, t = tokens_t.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    pos = start_pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B, T)
+    pos_c = jnp.minimum(pos, cfg.max_len - 1)
+    x = params["embed"][tokens_t] + params["pos"][pos_c]
+    new_kv = {"k": kv["k"], "v": kv["v"]}
+    for i in range(cfg.n_layers):
+        lp = params[f"layer_{i}"]
+        y = _ln(x, lp["ln1"])
+        q = (y @ lp["wq"]).reshape(b, t, h, hd)
+        k = (y @ lp["wk"]).reshape(b, t, h, hd)
+        v = (y @ lp["wv"]).reshape(b, t, h, hd)
+        ck = _update_rows(new_kv["k"][i], k, start_pos)
+        cv = _update_rows(new_kv["v"][i], v, start_pos)
+        new_kv = {
+            "k": new_kv["k"].at[i].set(ck),
+            "v": new_kv["v"].at[i].set(cv),
+        }
+        if use_pallas:
+            o = attn_kernel.cached_attention(q, ck, cv, pos, start_pos + t)
+        else:
+            o = _jnp_attention(q, ck, cv, pos)
+        x = x + o.reshape(b, t, cfg.d_model) @ lp["wo"]
+        y = _ln(x, lp["ln2"])
+        x = x + jax.nn.gelu(y @ lp["w1"]) @ lp["w2"]
+    x = _ln(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return jax.nn.softmax(logits, axis=-1), new_kv
+
+
+# ---------------------------------------------------------------------------
+# Training-path forward (dense, no cache) — used by train.py only.
+# ---------------------------------------------------------------------------
+
+
+def forward_train(cfg, params, tokens):
+    """Full-sequence causal forward returning log-probs (B, T, V)."""
+    b, t = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x = params["embed"][tokens] + params["pos"][pos][None]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for i in range(cfg.n_layers):
+        lp = params[f"layer_{i}"]
+        y = _ln(x, lp["ln1"])
+        q = (y @ lp["wq"]).reshape(b, t, h, hd)
+        k = (y @ lp["wk"]).reshape(b, t, h, hd)
+        v = (y @ lp["wv"]).reshape(b, t, h, hd)
+        logits = jnp.einsum("bthd,bshd->bhts", q, k) * hd**-0.5
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, -1)
+        o = jnp.einsum("bhts,bshd->bthd", w, v).reshape(b, t, cfg.d_model)
+        x = x + o @ lp["wo"]
+        y = _ln(x, lp["ln2"])
+        x = x + jax.nn.gelu(y @ lp["w1"]) @ lp["w2"]
+    x = _ln(x, params["ln_f"])
+    return jax.nn.log_softmax(x @ params["embed"].T, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Serving programs (the AOT export surface)
+# ---------------------------------------------------------------------------
+
+
+def _gather_pending(tokens, length):
+    """tokens[b, length[b]-1] for each row."""
+
+    def one(row, l):
+        return jax.lax.dynamic_index_in_dim(row, l - 1, keepdims=False)
+
+    return jax.vmap(one)(tokens, length)
+
+
+def _sample_rows(probs, key):
+    """Categorical sample per row via inverse CDF with explicit uniforms
+    (keeps the sampling story identical across prefill/draft/baseline)."""
+    u = jax.random.uniform(key, (probs.shape[0],))
+    cdf = jnp.cumsum(probs, axis=-1)
+    return jnp.sum(cdf <= u[:, None] * (1.0 - 1e-7), axis=-1).astype(jnp.int32)
+
+
+def prefill(cfg, params, tokens, length):
+    """Ingest prompts: writes KV rows 0..L-1 (rows >= len-1 are junk that the
+    decode loop rewrites before reading — see module docstring)."""
+    kv = init_kv(cfg, tokens.shape[0])
+    _, kv = forward_block(
+        cfg, params, kv, tokens, jnp.zeros_like(length), use_pallas=False
+    )
+    return kv
+
+
+def draft_scan(cfg, params, kv, tokens, length, gamma, key):
+    """gamma autoregressive draft steps from the pending token.
+
+    Returns drafts (B, gamma) i32, qs (B, gamma, V), updated kv.
+    qs[:, j] = M_s(. | c, X^j) and X_{j+1} ~ qs[:, j].
+    """
+    b = tokens.shape[0]
+    cur = _gather_pending(tokens, length)  # X_0 = pending token
+
+    def step(carry, j):
+        kv_c, cur_t = carry
+        probs, kv_n = forward_block(
+            cfg, params, kv_c, cur_t[:, None], length - 1 + j, use_pallas=False
+        )
+        q_j = probs[:, 0]  # (B, V)
+        nxt = _sample_rows(q_j, jax.random.fold_in(key, j))
+        return (kv_n, nxt), (q_j, nxt)
+
+    (kv, _), (qs, drafts) = jax.lax.scan(
+        step, (kv, cur), jnp.arange(gamma, dtype=jnp.int32)
+    )
+    # scan stacks on axis 0 -> (gamma, B, ...); move batch first.
+    return jnp.swapaxes(drafts, 0, 1), jnp.swapaxes(qs, 0, 1), kv
+
+
+def target_score(cfg, params, kv, tokens, length, drafts, *, use_pallas=True):
+    """Parallel scoring of the gamma+1 prefixes (Algorithm 3 line 3).
+
+    Feeds [pending, X_1..X_gamma] at positions len-1..len+gamma-1; returns
+    ps (B, gamma+1, V) with ps[:, i] = M_b(. | c, X^i), plus updated kv.
+    """
+    pending = _gather_pending(tokens, length)
+    inp = jnp.concatenate([pending[:, None], drafts], axis=1)  # (B, gamma+1)
+    ps, kv = forward_block(cfg, params, kv, inp, length - 1, use_pallas=use_pallas)
+    return ps, kv
+
+
+def _write_emitted(tokens, emitted, length):
+    def one(row, em, l):
+        return jax.lax.dynamic_update_slice(row, em, (l,))
+
+    return jax.vmap(one)(tokens, emitted, length)
+
+
+def spec_iter(
+    cfg_t: common.ModelConfig,
+    cfg_d: common.ModelConfig,
+    params_t,
+    params_d,
+    tokens,
+    length,
+    kv_t,
+    kv_d,
+    seed,
+    *,
+    gamma: int,
+    algo: str,
+    max_len: int,
+):
+    """One fused SpecDec iteration (paper Algorithm 3 with VERIFY = `algo`).
+
+    Returns (tokens', length', kv_t', kv_d', tau, emitted, done).
+    """
+    key = jax.random.PRNGKey(seed)
+    k_draft, k_eta, k_res = jax.random.split(key, 3)
+    b = tokens.shape[0]
+
+    drafts, qs, kv_d = draft_scan(cfg_d, params_d, kv_d, tokens, length, gamma, k_draft)
+    ps, kv_t = target_score(cfg_t, params_t, kv_t, tokens, length, drafts)
+
+    etas = jax.random.uniform(k_eta, (b, gamma))
+    us = jax.random.uniform(k_res, (b,))
+    verifier = verify_kernel.VERIFIERS[algo]
+    emitted, tau = verifier(ps, qs, drafts, etas, us, pad_id=common.PAD_ID)
+
+    tokens = _write_emitted(tokens, emitted, length)
+    new_len = length + tau + 1
+    idx = jnp.arange(gamma + 1, dtype=jnp.int32)[None, :]
+    eos_hit = jnp.any((emitted == common.EOS_ID) & (idx <= tau[:, None]), axis=1)
+    out_of_room = new_len > max_len - (gamma + 2)
+    done = (eos_hit | out_of_room).astype(jnp.int32)  # i32: PJRT-friendly
+    return tokens, new_len, kv_t, kv_d, tau, emitted, done
+
+
+def baseline_step(cfg, params, tokens, length, kv, seed, *, max_len: int):
+    """One autoregressive target step — the paper's 1x wall-clock baseline."""
+    key = jax.random.PRNGKey(seed)
+    probs, kv = forward_block(
+        cfg,
+        params,
+        kv,
+        _gather_pending(tokens, length)[:, None],
+        length - 1,
+        use_pallas=False,
+    )
+    nxt = _sample_rows(probs[:, 0], key)
+    tokens = _write_emitted(tokens, nxt[:, None], length)
+    new_len = length + 1
+    done = ((nxt == common.EOS_ID) | (new_len > max_len - 2)).astype(jnp.int32)
+    return tokens, new_len, kv, nxt, done

@@ -1,0 +1,136 @@
+"""Training + distillation pipeline (build-time only).
+
+Produces the PALM-2 substitution (DESIGN.md §2.2):
+  * `target` — trained on the synthetic multi-domain corpus with the standard
+    next-token NLL loss.
+  * `xxs`, `xxxs` — drafters distilled from the target (forward-KL on the
+    target's full next-token distribution), with `xxs` given a bigger model
+    and more steps so the paper's drafter-quality ordering holds.
+
+Optimiser is a hand-rolled Adam (no optax in the image).  Everything is
+deterministic given the seeds.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, corpus, model
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.int32(0)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def nll_loss(cfg, params, tokens):
+    """Next-token NLL, ignoring positions whose *target* is PAD."""
+    logp = model.forward_train(cfg, params, tokens)  # (B, T, V)
+    tgt = tokens[:, 1:]
+    lp = jnp.take_along_axis(logp[:, :-1], tgt[..., None], axis=-1)[..., 0]
+    mask = (tgt != common.PAD_ID).astype(jnp.float32)
+    return -(lp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def distill_loss(cfg_s, params_s, teacher_logp, tokens):
+    """Forward KL(teacher || student) on every position."""
+    logp_s = model.forward_train(cfg_s, params_s, tokens)
+    p_t = jnp.exp(teacher_logp)
+    mask = (tokens[:, 1:] != common.PAD_ID).astype(jnp.float32)
+    kl = (p_t * (teacher_logp - logp_s)).sum(-1)[:, :-1]
+    return (kl * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_target(cfg, grammar, *, steps, batch, seq_len, lr, seed=0, log_every=50):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    state = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, state, tokens):
+        loss, grads = jax.value_and_grad(lambda p: nll_loss(cfg, p, tokens))(params)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    t0 = time.time()
+    losses = []
+    for s in range(steps):
+        tokens = jnp.asarray(corpus.training_batch(grammar, rng, batch, seq_len))
+        params, state, loss = step_fn(params, state, tokens)
+        losses.append(float(loss))
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            print(
+                f"[train:{cfg.name}] step {s:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+def distill(cfg_t, params_t, cfg_s, grammar, *, steps, batch, seq_len, lr, seed=1,
+            log_every=50):
+    rng = np.random.default_rng(seed + 100)
+    params_s = model.init_params(cfg_s, jax.random.PRNGKey(seed))
+    state = adam_init(params_s)
+
+    @jax.jit
+    def step_fn(params_s, state, tokens):
+        teacher_logp = jax.lax.stop_gradient(model.forward_train(cfg_t, params_t, tokens))
+        loss, grads = jax.value_and_grad(
+            lambda p: distill_loss(cfg_s, p, teacher_logp, tokens)
+        )(params_s)
+        params_s, state = adam_update(params_s, grads, state, lr)
+        return params_s, state, loss
+
+    t0 = time.time()
+    losses = []
+    for s in range(steps):
+        tokens = jnp.asarray(corpus.training_batch(grammar, rng, batch, seq_len))
+        params_s, state, loss = step_fn(params_s, state, tokens)
+        losses.append(float(loss))
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            print(
+                f"[distill:{cfg_s.name}] step {s:4d} KL {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params_s, losses
+
+
+def train_all(fast: bool = False):
+    """Train the whole family. ``fast`` shrinks steps for CI smoke runs."""
+    grammar = corpus.Grammar()
+    scale = 0.1 if fast else 1.0
+    steps_t = max(20, int(common.TRAIN_STEPS * scale))
+    steps_xxs = max(15, int(common.DISTILL_STEPS_XXS * scale))
+    steps_xxxs = max(10, int(common.DISTILL_STEPS_XXXS * scale))
+    kw = dict(batch=common.TRAIN_BATCH, seq_len=common.TRAIN_SEQ, lr=common.LEARNING_RATE)
+    params_t, loss_t = train_target(common.TARGET, grammar, steps=steps_t, **kw)
+    params_xxs, loss_xxs = distill(
+        common.TARGET, params_t, common.XXS, grammar, steps=steps_xxs, **kw
+    )
+    params_xxxs, loss_xxxs = distill(
+        common.TARGET, params_t, common.XXXS, grammar, steps=steps_xxxs, **kw
+    )
+    return {
+        "target": (params_t, loss_t),
+        "xxs": (params_xxs, loss_xxs),
+        "xxxs": (params_xxxs, loss_xxxs),
+    }

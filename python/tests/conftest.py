@@ -1,0 +1,32 @@
+"""Shared fixtures for the build-path test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def random_probs(rng, *shape, conc=0.7):
+    """Random rows of categorical distributions (float32)."""
+    x = rng.gamma(conc, size=shape).astype(np.float32) + 1e-7
+    return x / x.sum(-1, keepdims=True)
+
+
+@pytest.fixture(scope="session")
+def artifacts_dir():
+    """The built artifact bundle, if present (integration tests)."""
+    cand = os.environ.get(
+        "SPECD_ARTIFACTS",
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    if not os.path.exists(os.path.join(cand, "manifest.json")):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    return cand

@@ -1,0 +1,106 @@
+"""AOT pipeline: weight flattening, golden-vector generation, and (when the
+bundle has been built) manifest/bundle integrity."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, common, model
+from compile.kernels import ref
+
+
+def test_flatten_params_order_is_deterministic():
+    cfg = common.ModelConfig("t", 1, 16, 2, max_len=8)
+    p1 = model.init_params(cfg, jax.random.PRNGKey(0))
+    p2 = model.init_params(cfg, jax.random.PRNGKey(0))
+    n1, _ = aot.flatten_params(p1)
+    n2, _ = aot.flatten_params(p2)
+    assert [n for n, _ in n1] == [n for n, _ in n2]
+    # embed must come first (dict order is sorted)
+    assert "embed" in n1[0][0]
+
+
+def test_write_weights_offsets(tmp_path):
+    cfg = common.ModelConfig("t", 1, 16, 2, max_len=8)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    path = tmp_path / "w.bin"
+    entries = aot.write_weights(str(path), params)
+    data = np.fromfile(path, dtype="<f4")
+    total = sum(int(np.prod(e["shape"]) if e["shape"] else 1) for e in entries)
+    assert len(data) == total
+    # spot-check an entry round-trips
+    named, _ = aot.flatten_params(params)
+    for (name, arr), e in zip(named, entries):
+        assert name == e["name"]
+        n = int(np.prod(e["shape"])) if e["shape"] else 1
+        np.testing.assert_array_equal(
+            data[e["offset"] : e["offset"] + n], arr.flatten()
+        )
+
+
+def test_golden_vectors_selfcheck(tmp_path):
+    aot.export_golden(str(tmp_path), n_cases=8)
+    cases = json.load(open(tmp_path / "golden_verify.json"))
+    assert len(cases) == 8
+    for c in cases:
+        g, v = c["gamma"], c["vocab"]
+        ps = np.array(c["ps"]).reshape(g + 1, v)
+        qs = np.array(c["qs"]).reshape(g, v)
+        tau, emitted = ref.block_verify(ps, qs, c["drafts"], c["etas"], c["u"])
+        assert tau == c["block"]["tau"]
+        assert emitted == c["block"]["emitted"]
+        assert len(emitted) == tau + 1
+
+
+# ---------------------------------------------------------------------------
+# Bundle integrity (needs `make artifacts`)
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_structure(artifacts_dir):
+    m = json.load(open(os.path.join(artifacts_dir, "manifest.json")))
+    assert m["version"] == 1
+    assert set(m["drafters"]) == {"xxs", "xxxs"}
+    assert sorted(m["gammas"]) == [4, 6, 8]
+    for name in ["target", "xxs", "xxxs"]:
+        meta = m["models"][name]
+        wpath = os.path.join(artifacts_dir, meta["weights_file"])
+        n_floats = os.path.getsize(wpath) // 4
+        declared = sum(
+            int(np.prod(w["shape"])) if w["shape"] else 1 for w in meta["weights"]
+        )
+        assert n_floats == declared, name
+    # every program file exists and declares matching arg counts
+    for pname, prog in m["programs"].items():
+        path = os.path.join(artifacts_dir, prog["file"])
+        assert os.path.exists(path), pname
+        text = open(path).read(200_000)
+        assert "ENTRY" in text
+    # the full fused grid exists
+    for algo in ["token", "block"]:
+        for drafter in ["xxs", "xxxs"]:
+            for g in [4, 6, 8]:
+                assert f"spec_iter_{algo}_{drafter}_g{g}" in m["programs"]
+
+
+def test_prompt_files(artifacts_dir):
+    m = json.load(open(os.path.join(artifacts_dir, "manifest.json")))
+    for ds, info in m["datasets"].items():
+        prompts = json.load(open(os.path.join(artifacts_dir, info["file"])))
+        assert len(prompts) == info["count"]
+        for p in prompts[:16]:
+            assert p[0] == m["bos_id"]
+            assert p[1] == info["marker"]
+            assert all(0 <= t < m["vocab_size"] for t in p)
+
+
+def test_train_log_shows_learning(artifacts_dir):
+    log = json.load(open(os.path.join(artifacts_dir, "train_log.json")))
+    tgt = log["target"]
+    assert tgt[-1] < tgt[0] * 0.7, "target training did not reduce loss"
+    for d in ["xxs", "xxxs"]:
+        kl = log[d]
+        assert kl[-1] < kl[0], f"{d} distillation did not reduce KL"

@@ -1,0 +1,129 @@
+"""Theorem 1 (losslessness) at the oracle level: the distribution of
+SpecDec output prefixes equals ancestral sampling from M_b, for all three
+verification algorithms, on small context-independent and Markov model
+pairs where the exact joint is enumerable.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+class IIDPair:
+    """Context-independent (M_b, M_s) pair — the paper's §2 setting."""
+
+    def __init__(self, pb, qb):
+        self.pb = np.asarray(pb, np.float64)
+        self.qb = np.asarray(qb, np.float64)
+        self.vocab = len(pb)
+
+    def target(self, _ctx):
+        return self.pb
+
+    def draft(self, _ctx):
+        return self.qb
+
+
+def spec_decode_prefix(pair, gamma, algo, n_tokens, rng):
+    """Decode >= n_tokens via SpecDec with the given oracle verifier."""
+    out = []
+    layers = None
+    while len(out) < n_tokens:
+        ctx = out
+        qs, ps, drafts = [], [], []
+        c = list(ctx)
+        for _ in range(gamma):
+            q = pair.draft(c)
+            x = int(rng.choice(pair.vocab, p=q))
+            qs.append(q)
+            ps.append(pair.target(c))
+            drafts.append(x)
+            c = c + [x]
+        ps.append(pair.target(c))
+        etas = rng.random(gamma)
+        u = float(rng.random())
+        if algo == "token":
+            tau, emitted = ref.token_verify(np.array(ps), np.array(qs), drafts, etas, u)
+        elif algo == "block":
+            tau, emitted = ref.block_verify(np.array(ps), np.array(qs), drafts, etas, u)
+        else:
+            tau, emitted, layers = ref.greedy_verify(
+                np.array(ps), np.array(qs), drafts, etas, u, layers
+            )
+        out.extend(emitted)
+    return out[:n_tokens]
+
+
+def exact_prefix_dist(pair, h):
+    """Exact M_b^h distribution over length-h prefixes (iid pair)."""
+    dist = {(): 1.0}
+    for _ in range(h):
+        new = {}
+        for seq, p in dist.items():
+            pb = pair.target(list(seq))
+            for x in range(pair.vocab):
+                new[seq + (x,)] = p * pb[x]
+        dist = new
+    return dist
+
+
+@pytest.mark.parametrize("algo", ["token", "block", "greedy"])
+def test_lossless_bernoulli(algo):
+    """§2 example: output prefix distribution must equal M_b^h."""
+    pair = IIDPair([1 / 3, 2 / 3], [2 / 3, 1 / 3])
+    rng = np.random.default_rng(0)
+    h, n_samples = 3, 12_000
+    counts = {}
+    for _ in range(n_samples):
+        seq = tuple(spec_decode_prefix(pair, 2, algo, h, rng))
+        counts[seq] = counts.get(seq, 0) + 1
+    exact = exact_prefix_dist(pair, h)
+    tv = 0.5 * sum(
+        abs(counts.get(k, 0) / n_samples - v) for k, v in exact.items()
+    )
+    # 3 std of the multinomial TV estimator at this sample size is ~0.02
+    assert tv < 0.035, f"{algo}: TV {tv}"
+
+
+@pytest.mark.parametrize("algo", ["token", "block"])
+def test_lossless_peaky_pair(algo):
+    """Peaked target vs flat drafter (high-mismatch regime)."""
+    pair = IIDPair([0.85, 0.1, 0.05], [1 / 3, 1 / 3, 1 / 3])
+    rng = np.random.default_rng(1)
+    h, n_samples = 2, 12_000
+    counts = {}
+    for _ in range(n_samples):
+        seq = tuple(spec_decode_prefix(pair, 3, algo, h, rng))
+        counts[seq] = counts.get(seq, 0) + 1
+    exact = exact_prefix_dist(pair, h)
+    tv = 0.5 * sum(abs(counts.get(k, 0) / n_samples - v) for k, v in exact.items())
+    assert tv < 0.035, f"{algo}: TV {tv}"
+
+
+def test_block_beats_token_on_bernoulli():
+    """The §2 numbers: E[tau] = 10/9 (token) vs 11/9 (block) at gamma=2."""
+    pair = IIDPair([1 / 3, 2 / 3], [2 / 3, 1 / 3])
+    rng = np.random.default_rng(2)
+    n = 30_000
+    acc = {"token": 0, "block": 0}
+    for algo in acc:
+        r = np.random.default_rng(2)
+        total = 0
+        for _ in range(n):
+            qs, ps, drafts = [], [], []
+            for _ in range(2):
+                q = pair.draft([])
+                x = int(r.choice(2, p=q))
+                qs.append(q)
+                ps.append(pair.target([]))
+                drafts.append(x)
+            ps.append(pair.target([]))
+            etas = r.random(2)
+            u = float(r.random())
+            fn = ref.token_verify if algo == "token" else ref.block_verify
+            tau, _ = fn(np.array(ps), np.array(qs), drafts, etas, u)
+            total += tau
+        acc[algo] = total / n
+    assert abs(acc["token"] - 10 / 9) < 0.02, acc
+    assert abs(acc["block"] - 11 / 9) < 0.02, acc

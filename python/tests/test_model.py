@@ -1,0 +1,153 @@
+"""L2 correctness: the transformer substrate and the fused SpecDec programs.
+
+Uses a tiny config so tests run in seconds; the contracts checked here are
+shape- and semantics-level (incremental == dense forward, Pallas attention
+== jnp attention, spec_iter bookkeeping) and hold for any size.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model
+
+TINY_T = common.ModelConfig("tiny_t", n_layers=2, d_model=32, n_heads=2, max_len=32)
+TINY_D = common.ModelConfig("tiny_d", n_layers=1, d_model=16, n_heads=2, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    pt = model.init_params(TINY_T, jax.random.PRNGKey(0))
+    pd = model.init_params(TINY_D, jax.random.PRNGKey(1))
+    return pt, pd
+
+
+def test_incremental_equals_dense(tiny):
+    pt, _ = tiny
+    B, L = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, L), 3, common.VOCAB_SIZE)
+    dense = np.exp(np.array(model.forward_train(TINY_T, pt, toks)))
+    kv = model.prefill(TINY_T, pt, toks, jnp.full((B,), 6, jnp.int32))
+    for p in range(5, 12):
+        probs, kv = model.forward_block(
+            TINY_T, pt, kv, toks[:, p][:, None], jnp.full((B,), p, jnp.int32),
+            use_pallas=False,
+        )
+        np.testing.assert_allclose(np.array(probs[:, 0]), dense[:, p], rtol=2e-3, atol=2e-5)
+
+
+def test_pallas_attention_equals_jnp(tiny):
+    pt, _ = tiny
+    B = 2
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 32), 3, common.VOCAB_SIZE)
+    length = jnp.full((B,), 7, jnp.int32)
+    kv = model.prefill(TINY_T, pt, toks, length)
+    drafts = toks[:, 8:12]
+    ps_pl, _ = model.target_score(TINY_T, pt, kv, toks, length, drafts, use_pallas=True)
+    ps_jn, _ = model.target_score(TINY_T, pt, kv, toks, length, drafts, use_pallas=False)
+    np.testing.assert_allclose(np.array(ps_pl), np.array(ps_jn), rtol=2e-3, atol=2e-5)
+
+
+def test_probs_are_distributions(tiny):
+    pt, _ = tiny
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 32), 3, common.VOCAB_SIZE)
+    kv = model.init_kv(TINY_T, 2)
+    probs, _ = model.forward_block(
+        TINY_T, pt, kv, toks[:, :5], jnp.zeros((2,), jnp.int32), use_pallas=False
+    )
+    s = np.array(probs.sum(-1))
+    np.testing.assert_allclose(s, np.ones_like(s), rtol=1e-4)
+    assert np.all(np.array(probs) >= 0)
+
+
+def test_draft_scan_qs_match_single_steps(tiny):
+    """The scan's qs rows must equal step-by-step decoding distributions."""
+    _, pd = tiny
+    B, L, g = 2, 32, 4
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, L), 3, common.VOCAB_SIZE)
+    length = jnp.full((B,), 6, jnp.int32)
+    kv0 = model.prefill(TINY_D, pd, toks, length)
+    key = jax.random.PRNGKey(9)
+    drafts, qs, _ = model.draft_scan(TINY_D, pd, kv0, toks, length, g, key)
+    assert drafts.shape == (B, g)
+    assert qs.shape == (B, g, common.VOCAB_SIZE)
+    # Replay: feed the pending token then the sampled drafts manually.
+    kv = model.prefill(TINY_D, pd, toks, length)
+    cur = toks[jnp.arange(B), length - 1][:, None]
+    for j in range(g):
+        probs, kv = model.forward_block(
+            TINY_D, pd, kv, cur, length - 1 + j, use_pallas=False
+        )
+        np.testing.assert_allclose(
+            np.array(probs[:, 0]), np.array(qs[:, j]), rtol=2e-3, atol=1e-5
+        )
+        cur = drafts[:, j][:, None]
+
+
+def test_spec_iter_bookkeeping(tiny):
+    pt, pd = tiny
+    B, L, g = 2, 32, 4
+    toks = jnp.full((B, L), common.PAD_ID, jnp.int32)
+    prompt = jnp.array(
+        [[common.BOS_ID, 3, 20, 21], [common.BOS_ID, 4, 30, 31]], jnp.int32
+    )
+    toks = toks.at[:, :4].set(prompt)
+    length = jnp.full((B,), 4, jnp.int32)
+    kvt = model.prefill(TINY_T, pt, toks, length)
+    kvd = model.prefill(TINY_D, pd, toks, length)
+    toks2, len2, _, _, tau, emitted, done = model.spec_iter(
+        TINY_T, TINY_D, pt, pd, toks, length, kvt, kvd, 7,
+        gamma=g, algo="block", max_len=L,
+    )
+    tau = np.array(tau)
+    len2 = np.array(len2)
+    emitted = np.array(emitted)
+    toks2 = np.array(toks2)
+    assert np.all(len2 == 4 + tau + 1)
+    for b in range(B):
+        # emitted tokens were written into the sequence buffer
+        for j in range(tau[b] + 1):
+            assert toks2[b, 4 + j] == emitted[b, j]
+        # prompt untouched
+        assert np.array_equal(toks2[b, :4], np.array(prompt[b]))
+    assert np.array(done).dtype == np.int32
+
+
+def test_spec_iter_token_vs_block_same_drafts(tiny):
+    """With the same seed the two algorithms see identical drafts; block
+    must accept at least as many tokens in expectation."""
+    pt, pd = tiny
+    B, L, g = 2, 32, 4
+    toks = jnp.full((B, L), common.PAD_ID, jnp.int32)
+    toks = toks.at[:, :3].set(jnp.array([[1, 3, 20], [1, 4, 30]], jnp.int32))
+    length = jnp.full((B,), 3, jnp.int32)
+    kvt = model.prefill(TINY_T, pt, toks, length)
+    kvd = model.prefill(TINY_D, pd, toks, length)
+    tot = {"token": 0, "block": 0}
+    for algo in tot:
+        acc = 0
+        for seed in range(40):
+            *_, tau, _, _ = model.spec_iter(
+                TINY_T, TINY_D, pt, pd, toks, length, kvt, kvd, seed,
+                gamma=g, algo=algo, max_len=L,
+            )
+            acc += int(np.array(tau).sum())
+        tot[algo] = acc
+    assert tot["block"] >= tot["token"] * 0.95, tot
+
+
+def test_baseline_step(tiny):
+    pt, _ = tiny
+    B, L = 2, 32
+    toks = jnp.full((B, L), common.PAD_ID, jnp.int32)
+    toks = toks.at[:, :3].set(jnp.array([[1, 3, 20], [1, 4, 30]], jnp.int32))
+    length = jnp.full((B,), 3, jnp.int32)
+    kv = model.prefill(TINY_T, pt, toks, length)
+    toks2, len2, kv, nxt, done = model.baseline_step(
+        TINY_T, pt, toks, length, kv, 5, max_len=L
+    )
+    assert np.all(np.array(len2) == 4)
+    assert np.all(np.array(nxt) >= 0)
+    assert np.all(np.array(nxt) < common.VOCAB_SIZE)
+    assert np.array(toks2)[0, 3] == np.array(nxt)[0]

@@ -1,0 +1,156 @@
+"""L1 correctness: the Pallas verification kernels against the numpy oracle.
+
+The kernels take explicit uniforms, so agreement is draw-for-draw: same
+(ps, qs, drafts, etas, u) must give the same (tau, emitted).  Hypothesis
+sweeps shapes, concentrations and adversarial cases (identical models,
+deterministic rows).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, verify
+from tests.conftest import random_probs
+
+
+def run_both(ps, qs, drafts, etas, us, algo):
+    kfn = verify.VERIFIERS[algo]
+    em, tau = kfn(jnp.asarray(ps), jnp.asarray(qs), jnp.asarray(drafts), jnp.asarray(etas), jnp.asarray(us))
+    rfn = {"token": ref.token_verify, "block": ref.block_verify}[algo]
+    out = []
+    for b in range(ps.shape[0]):
+        rt, re = rfn(ps[b], qs[b], drafts[b], etas[b], us[b])
+        out.append((rt, re, int(tau[b]), [int(x) for x in np.array(em[b][: rt + 1])]))
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    gamma=st.sampled_from([1, 2, 4, 8]),
+    vocab=st.sampled_from([4, 16, 64]),
+    conc=st.sampled_from([0.3, 1.0, 4.0]),
+    seed=st.integers(0, 10_000),
+    algo=st.sampled_from(["token", "block"]),
+)
+def test_kernel_matches_oracle(gamma, vocab, conc, seed, algo):
+    rng = np.random.default_rng(seed)
+    B = 2
+    ps = random_probs(rng, B, gamma + 1, vocab, conc=conc)
+    qs = random_probs(rng, B, gamma, vocab, conc=conc)
+    drafts = np.stack(
+        [[rng.choice(vocab, p=qs[b, i]) for i in range(gamma)] for b in range(B)]
+    ).astype(np.int32)
+    etas = rng.random((B, gamma)).astype(np.float32)
+    us = rng.random(B).astype(np.float32)
+    for rt, re, kt, ke in run_both(ps, qs, drafts, etas, us, algo):
+        assert rt == kt
+        assert re == ke
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), gamma=st.sampled_from([2, 6]))
+def test_identical_models_accept_everything(seed, gamma):
+    """ps == qs ⇒ every draft accepted, bonus from M_b (both algorithms)."""
+    rng = np.random.default_rng(seed)
+    vocab = 16
+    rows = random_probs(rng, gamma + 1, vocab)
+    ps = rows[None]
+    qs = rows[None, :gamma]
+    drafts = np.array([[rng.choice(vocab, p=qs[0, i]) for i in range(gamma)]], np.int32)
+    etas = rng.random((1, gamma)).astype(np.float32)
+    us = rng.random(1).astype(np.float32)
+    for algo in ["token", "block"]:
+        em, tau = verify.VERIFIERS[algo](
+            jnp.asarray(ps), jnp.asarray(qs), jnp.asarray(drafts),
+            jnp.asarray(etas), jnp.asarray(us),
+        )
+        assert int(tau[0]) == gamma, algo
+        assert np.array_equal(np.array(em[0][:gamma]), drafts[0]), algo
+
+
+def test_block_chain_matches_oracle_values():
+    rng = np.random.default_rng(3)
+    gamma, vocab = 6, 32
+    ps = random_probs(rng, 1, gamma + 1, vocab)
+    qs = random_probs(rng, 1, gamma, vocab)
+    drafts = np.array([[rng.choice(vocab, p=qs[0, i]) for i in range(gamma)]], np.int32)
+    etas = rng.random((1, gamma)).astype(np.float32)
+    us = rng.random(1).astype(np.float32)
+    _, _, p, h = verify.block_verify(
+        jnp.asarray(ps), jnp.asarray(qs), jnp.asarray(drafts),
+        jnp.asarray(etas), jnp.asarray(us), debug=True,
+    )
+    rp, rh = ref.block_chain(ps[0], qs[0], drafts[0])
+    np.testing.assert_allclose(np.array(p[0]), rp, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.array(h[0]), rh, rtol=1e-4, atol=1e-6)
+    # chain is in [0, 1]
+    assert np.all(np.array(p[0]) >= 0) and np.all(np.array(p[0]) <= 1 + 1e-6)
+
+
+def test_gamma1_token_equals_block():
+    """The paper notes the algorithms coincide at gamma = 1."""
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        ps = random_probs(rng, 1, 2, 8)
+        qs = random_probs(rng, 1, 1, 8)
+        drafts = np.array([[rng.choice(8, p=qs[0, 0])]], np.int32)
+        etas = rng.random((1, 1)).astype(np.float32)
+        us = rng.random(1).astype(np.float32)
+        a = run_both(ps, qs, drafts, etas, us, "token")[0]
+        b = run_both(ps, qs, drafts, etas, us, "block")[0]
+        assert a == b
+
+
+def test_block_never_worse_than_token_in_tau_expectation():
+    """Theorem 2 at kernel level: E[tau_block] >= E[tau_token] (paired MC)."""
+    rng = np.random.default_rng(7)
+    gamma, vocab, B = 6, 16, 4
+    tot_t = tot_b = 0
+    for _ in range(60):
+        ps = random_probs(rng, B, gamma + 1, vocab)
+        qs = random_probs(rng, B, gamma, vocab)
+        drafts = np.stack(
+            [[rng.choice(vocab, p=qs[b, i]) for i in range(gamma)] for b in range(B)]
+        ).astype(np.int32)
+        etas = rng.random((B, gamma)).astype(np.float32)
+        us = rng.random(B).astype(np.float32)
+        _, tau_t = verify.token_verify(
+            jnp.asarray(ps), jnp.asarray(qs), jnp.asarray(drafts),
+            jnp.asarray(etas), jnp.asarray(us))
+        _, tau_b = verify.block_verify(
+            jnp.asarray(ps), jnp.asarray(qs), jnp.asarray(drafts),
+            jnp.asarray(etas), jnp.asarray(us))
+        tot_t += int(np.sum(np.array(tau_t)))
+        tot_b += int(np.sum(np.array(tau_b)))
+    # statistical: allow tiny slack
+    assert tot_b >= tot_t * 0.98, (tot_t, tot_b)
+
+
+def test_greedy_oracle_layer_bookkeeping():
+    """Algorithm 5: a rejection opens a window layer of the right length
+    with a positive joint ratio; full acceptance leaves no layers."""
+    rng = np.random.default_rng(5)
+    gamma, vocab = 4, 8
+    ps = random_probs(rng, gamma + 1, vocab)
+    qs = random_probs(rng, gamma, vocab)
+    drafts = np.array([rng.choice(vocab, p=qs[i]) for i in range(gamma)])
+    # Force rejection of everything: etas = 1.0 (h < 1 almost surely)
+    etas = np.ones(gamma) - 1e-9
+    tau, emitted, layers = ref.greedy_verify(ps, qs, drafts, etas, 0.5)
+    assert len(emitted) == tau + 1
+    if tau < gamma - 1:
+        assert len(layers) == 1
+        rem, ratio = layers[0]
+        assert rem == gamma - tau - 1
+        assert ratio > 0
+    # identical models + tiny etas: accept everything, no window
+    rows = random_probs(rng, gamma + 1, vocab)
+    drafts2 = np.array([rng.choice(vocab, p=rows[i]) for i in range(gamma)])
+    tau2, _, layers2 = ref.greedy_verify(
+        rows, rows[:gamma], drafts2, np.zeros(gamma) + 1e-9, 0.5
+    )
+    assert tau2 == gamma
+    assert layers2 == []

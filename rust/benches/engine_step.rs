@@ -1,0 +1,75 @@
+//! End-to-end engine benchmarks over the real AOT bundle: per-iteration
+//! latency of the fused spec_iter path vs the baseline step vs the
+//! host-verify path, plus prefill cost.  The paper's wall-clock speedup
+//! claims rest on these (EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+use specd::bench::{fmt_dur, Bench};
+use specd::config::EngineConfig;
+use specd::engine::baseline::run_baseline_prompts;
+use specd::engine::host::HostVerifyEngine;
+use specd::engine::spec::SpecEngine;
+use specd::runtime::Runtime;
+use specd::verify::Algo;
+use specd::workload::Dataset;
+
+fn main() {
+    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping engine benches: artifacts not built");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(&p).unwrap());
+    let ds = Dataset::load(rt.artifacts_dir(), "gsm8k").unwrap();
+    let prompts = ds.take(4);
+    let b = Bench::new(1, 5);
+
+    let mk = |algo: Algo| EngineConfig {
+        gamma: 8,
+        algo,
+        drafter: "xxs".into(),
+        max_new_tokens: 32,
+        host_verify: !algo.fused(),
+        seed: 0,
+    };
+
+    // warm up compiles so the timed runs measure execution only
+    let eng = SpecEngine::new(rt.clone(), mk(Algo::Block)).unwrap();
+    let _ = eng.run_batch(&prompts, 0).unwrap();
+
+    for algo in [Algo::Token, Algo::Block] {
+        let eng = SpecEngine::new(rt.clone(), mk(algo)).unwrap();
+        let mut iters = 0usize;
+        let mut toks = 0usize;
+        let s = b.run(&format!("engine/fused_{algo}_batch4_32tok"), || {
+            let rep = eng.run_batch(&prompts, 1).unwrap();
+            iters += rep.device_iterations;
+            toks += rep.total_tokens();
+        });
+        let per_iter = s.mean.as_secs_f64() / (iters as f64 / (s.iters + 1) as f64).max(1.0);
+        println!(
+            "  -> ~{} per fused iteration, {:.1} tok/s",
+            fmt_dur(std::time::Duration::from_secs_f64(per_iter)),
+            toks as f64 / (s.mean.as_secs_f64() * s.iters as f64).max(1e-9)
+        );
+    }
+
+    {
+        let eng = HostVerifyEngine::new(rt.clone(), mk(Algo::Greedy)).unwrap();
+        let _ = eng.run_batch(&prompts, 0).unwrap();
+        b.run("engine/host_greedy_batch4_32tok", || {
+            let rep = eng.run_batch(&prompts, 1).unwrap();
+            std::hint::black_box(rep.total_tokens());
+        });
+    }
+
+    {
+        let _ = run_baseline_prompts(&rt, &prompts, 32, 0).unwrap();
+        b.run("engine/baseline_batch4_32tok", || {
+            let rep = run_baseline_prompts(&rt, &prompts, 32, 1).unwrap();
+            std::hint::black_box(rep[0].total_tokens());
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! Theorem-2 harness benchmarks: exact enumeration vs Monte-Carlo cost of
+//! estimating E[tau] for both algorithms (E7 in DESIGN.md), plus the §2
+//! motivating example regeneration speed.
+
+use specd::bench::Bench;
+use specd::sim::{self, MarkovPair};
+use specd::verify::Algo;
+
+fn main() {
+    let b = Bench::new(2, 8);
+    let pair = MarkovPair::random(4, 0.6, 5);
+
+    for gamma in [2, 3, 4] {
+        b.run(&format!("exact/enumeration_v4_g{gamma}"), || {
+            std::hint::black_box(sim::exact::expected_tau_block(&pair, gamma));
+            std::hint::black_box(sim::exact::expected_tau_token(&pair, gamma));
+            std::hint::black_box(sim::exact::fullinfo_bound(&pair, gamma));
+        });
+    }
+
+    for algo in [Algo::Token, Algo::Block, Algo::Greedy] {
+        b.run(&format!("mc/simulate_{algo}_20k_tokens"), || {
+            std::hint::black_box(sim::simulate(&pair, 4, algo, 20_000, 1).mean_tau());
+        });
+    }
+
+    b.run("motivating_example_100k", || {
+        let r = sim::motivating_example(100_000, 3);
+        std::hint::black_box(r.mc_block);
+    });
+
+    // Theorem 2 gap across drafter quality (Figure-4-style series on the
+    // simulator substrate).
+    println!("\nTheorem 2 gap (exact), vocab=4, gamma=4:");
+    for mix in [0.2, 0.4, 0.6, 0.8, 0.95] {
+        let p = MarkovPair::random(4, mix, 9);
+        let t = sim::exact::expected_tau_token(&p, 4);
+        let bl = sim::exact::expected_tau_block(&p, 4);
+        let f = sim::exact::fullinfo_bound(&p, 4);
+        println!(
+            "  mix {mix:.2}: token {t:.4}  block {bl:.4}  bound {f:.4}  gain {:+.2}%",
+            (bl - t) / t * 100.0
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! L3 hot-path microbenchmarks: the three verification algorithms at the
+//! production shape (gamma=8, V=256), plus the allocation-free scratch
+//! variant used by the host-verify engine (EXPERIMENTS.md §Perf).
+
+use specd::bench::Bench;
+use specd::util::proptest::rand_instance;
+use specd::verify::{self, Algo, BlockScratch, GreedyState, Rng};
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let gamma = 8;
+    let vocab = 256;
+    let instances: Vec<_> =
+        (0..64).map(|_| rand_instance(&mut rng, gamma, vocab, 0.8)).collect();
+    let etas: Vec<f64> = (0..gamma).map(|_| rng.uniform()).collect();
+    let b = Bench::new(3, 15);
+
+    for algo in [Algo::Token, Algo::Block, Algo::Greedy] {
+        b.run_n(&format!("verify/{algo}/g8_v256"), instances.len(), || {
+            for (ps, qs, drafts) in &instances {
+                let out = verify::verify(algo, ps, qs, drafts, &etas, 0.37);
+                std::hint::black_box(out.tau);
+            }
+        });
+    }
+
+    // scratch (allocation-free) block verification
+    let mut scratch = BlockScratch::new(gamma, vocab);
+    let mut emitted = Vec::with_capacity(gamma + 1);
+    b.run_n("verify/block_scratch/g8_v256", instances.len(), || {
+        for (ps, qs, drafts) in &instances {
+            let tau = scratch.verify(ps, qs, drafts, &etas, 0.37, &mut emitted);
+            std::hint::black_box(tau);
+        }
+    });
+
+    // greedy with an active window layer (worst-case composite rebuild)
+    let st = GreedyState {
+        layers: vec![specd::verify::Layer { remaining: 4, ratio: 0.7 }],
+    };
+    b.run_n("verify/greedy_windowed/g8_v256", instances.len(), || {
+        for (ps, qs, drafts) in &instances {
+            let (out, _) = verify::greedy_verify(ps, qs, drafts, &etas, 0.37, &st);
+            std::hint::black_box(out.tau);
+        }
+    });
+}

@@ -1,0 +1,145 @@
+//! In-tree micro/macro benchmark harness (criterion is unavailable
+//! offline).  Provides warmup + timed repetitions with mean/std/min and a
+//! stable one-line report format consumed by EXPERIMENTS.md §Perf.
+//!
+//! Benches are `harness = false` binaries under rust/benches/ that call
+//! [`Bench::run`] / [`Bench::run_n`], so `cargo bench` works as usual.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::mean_std;
+
+/// Configuration for one benchmark group.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, sample_iters: 10 }
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<42} mean {:>12} std {:>10} min {:>12} (n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.std),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 10_000 {
+        format!("{ns}ns")
+    } else if ns < 10_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 10_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Bench { warmup_iters, sample_iters }
+    }
+
+    /// Benchmark `f`, printing and returning the sample.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let (mean, std) = mean_std(&times);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let s = Sample {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(std),
+            min: Duration::from_secs_f64(min.max(0.0)),
+            iters: self.sample_iters,
+        };
+        println!("{}", s.report());
+        s
+    }
+
+    /// Benchmark a batch of `n` inner operations, reporting per-op time.
+    pub fn run_n<F: FnMut()>(&self, name: &str, n: usize, mut f: F) -> Sample {
+        let s = self.run(name, &mut f);
+        let per = Sample {
+            name: format!("{name}/op"),
+            mean: s.mean / n as u32,
+            std: s.std / n as u32,
+            min: s.min / n as u32,
+            iters: s.iters * n,
+        };
+        println!("{}", per.report());
+        per
+    }
+}
+
+/// Throughput helper: report items/sec from a closure returning item count.
+pub fn throughput<F: FnMut() -> usize>(name: &str, reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    let mut items = 0usize;
+    for _ in 0..reps {
+        items += f();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let rate = items as f64 / secs.max(1e-12);
+    println!("bench {name:<42} {rate:>12.1} items/s  ({items} items in {secs:.2}s)");
+    rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_positive_times() {
+        let b = Bench::new(1, 3);
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.min <= s.mean);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(50)).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_counts_items() {
+        let r = throughput("count", 5, || 10);
+        assert!(r > 0.0);
+    }
+}

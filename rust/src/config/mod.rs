@@ -1,0 +1,229 @@
+//! Configuration system: one JSON file (or defaults) drives the launcher,
+//! the engine, the server and the experiment harness.  Decoded with the
+//! in-tree parser (util::json); unknown fields are ignored, missing fields
+//! fall back to defaults, so partial configs compose cleanly.
+//!
+//! ```json
+//! {
+//!   "engine":      {"gamma": 8, "algo": "block", "drafter": "xxs",
+//!                   "max_new_tokens": 48},
+//!   "server":      {"addr": "127.0.0.1:8377", "queue_limit": 1024},
+//!   "experiments": {"prompts_per_dataset": 64, "seeds": [0, 1, 2]}
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+use crate::verify::Algo;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Draft block length (paper gamma).
+    pub gamma: usize,
+    /// Verification algorithm.
+    pub algo: Algo,
+    /// Drafter variant name ("xxs" | "xxxs").
+    pub drafter: String,
+    /// Per-request generation cap (the paper uses 128; our scaled default
+    /// fits the CPU substrate — see DESIGN.md §8).
+    pub max_new_tokens: usize,
+    /// Verification location: fused in-HLO kernels or host-side rust
+    /// (required for greedy; also used for cross-checks).
+    pub host_verify: bool,
+    /// RNG seed feeding per-iteration device seeds.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            gamma: 8,
+            algo: Algo::Block,
+            drafter: "xxs".into(),
+            max_new_tokens: 48,
+            host_verify: false,
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Greedy verification only exists on the host-verify path.
+    pub fn effective_host_verify(&self) -> bool {
+        self.host_verify || !self.algo.fused()
+    }
+
+    fn apply(&mut self, v: &Value) -> Result<()> {
+        if let Some(x) = v.get("gamma").and_then(Value::as_usize) {
+            self.gamma = x;
+        }
+        if let Some(x) = v.get("algo").and_then(Value::as_str) {
+            self.algo = Algo::parse(x).ok_or_else(|| anyhow!("unknown algo '{x}'"))?;
+        }
+        if let Some(x) = v.get("drafter").and_then(Value::as_str) {
+            self.drafter = x.to_string();
+        }
+        if let Some(x) = v.get("max_new_tokens").and_then(Value::as_usize) {
+            self.max_new_tokens = x;
+        }
+        if let Some(x) = v.get("host_verify").and_then(Value::as_bool) {
+            self.host_verify = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Value::as_u64) {
+            self.seed = x;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Max queued requests before admission control rejects (429).
+    pub queue_limit: usize,
+    /// Batch-formation wait: how long the batcher waits to fill a batch.
+    pub batch_wait_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8377".into(), queue_limit: 1024, batch_wait_ms: 5 }
+    }
+}
+
+impl ServerConfig {
+    fn apply(&mut self, v: &Value) {
+        if let Some(x) = v.get("addr").and_then(Value::as_str) {
+            self.addr = x.to_string();
+        }
+        if let Some(x) = v.get("queue_limit").and_then(Value::as_usize) {
+            self.queue_limit = x;
+        }
+        if let Some(x) = v.get("batch_wait_ms").and_then(Value::as_u64) {
+            self.batch_wait_ms = x;
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Prompts per dataset per run (paper: 1000; scaled default).
+    pub prompts_per_dataset: usize,
+    /// Seeds averaged in each table cell (paper: 3).
+    pub seeds: Vec<u64>,
+    /// Generation cap per prompt.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig { prompts_per_dataset: 64, seeds: vec![0, 1, 2], max_new_tokens: 48 }
+    }
+}
+
+impl ExperimentConfig {
+    fn apply(&mut self, v: &Value) {
+        if let Some(x) = v.get("prompts_per_dataset").and_then(Value::as_usize) {
+            self.prompts_per_dataset = x;
+        }
+        if let Some(arr) = v.get("seeds").and_then(Value::as_arr) {
+            self.seeds = arr.iter().filter_map(Value::as_u64).collect();
+        }
+        if let Some(x) = v.get("max_new_tokens").and_then(Value::as_usize) {
+            self.max_new_tokens = x;
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    /// Artifact bundle directory (manifest.json etc).
+    pub artifacts: Option<PathBuf>,
+    pub engine: EngineConfig,
+    pub server: ServerConfig,
+    pub experiments: ExperimentConfig,
+}
+
+impl Config {
+    pub fn parse(raw: &str) -> Result<Self> {
+        let v = crate::util::json::parse(raw).context("parsing config JSON")?;
+        let mut cfg = Config::default();
+        if let Some(a) = v.get("artifacts").and_then(Value::as_str) {
+            cfg.artifacts = Some(PathBuf::from(a));
+        }
+        if let Some(e) = v.get("engine") {
+            cfg.engine.apply(e)?;
+        }
+        if let Some(s) = v.get("server") {
+            cfg.server.apply(s);
+        }
+        if let Some(x) = v.get("experiments") {
+            cfg.experiments.apply(x);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&raw)
+    }
+
+    /// Resolve the artifacts directory: explicit config > $SPECD_ARTIFACTS >
+    /// ./artifacts.
+    pub fn artifacts_dir(&self) -> PathBuf {
+        if let Some(p) = &self.artifacts {
+            return p.clone();
+        }
+        if let Ok(p) = std::env::var("SPECD_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.engine.gamma, 8);
+        assert_eq!(c.engine.algo, Algo::Block);
+        assert!(!c.engine.effective_host_verify());
+        let mut g = c.engine.clone();
+        g.algo = Algo::Greedy;
+        assert!(g.effective_host_verify());
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let c = Config::parse(r#"{"engine": {"gamma": 4, "algo": "token"}}"#).unwrap();
+        assert_eq!(c.engine.gamma, 4);
+        assert_eq!(c.engine.algo, Algo::Token);
+        assert_eq!(c.engine.drafter, "xxs");
+        assert_eq!(c.experiments.seeds, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn full_sections_parse() {
+        let c = Config::parse(
+            r#"{"artifacts": "/tmp/a",
+                "server": {"addr": "0.0.0.0:9000", "queue_limit": 8},
+                "experiments": {"prompts_per_dataset": 16, "seeds": [5, 6]}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.artifacts_dir(), PathBuf::from("/tmp/a"));
+        assert_eq!(c.server.addr, "0.0.0.0:9000");
+        assert_eq!(c.experiments.seeds, vec![5, 6]);
+    }
+
+    #[test]
+    fn bad_algo_rejected() {
+        assert!(Config::parse(r#"{"engine": {"algo": "bogus"}}"#).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! L3 coordinator: request queue, admission control and the continuous
+//! batcher that feeds the engine.
+//!
+//! Architecture (vLLM-router-like, scaled to a single-process CPU PJRT
+//! backend): front-end threads enqueue [`GenRequest`]s into a bounded
+//! channel; a dedicated worker thread drains the queue into batches of the
+//! engine's slot count `B` and runs each batch to completion ("batch
+//! drain" — per-slot refill requires a KV-merge program, listed as future
+//! work in DESIGN.md).  Responses flow back through per-request oneshot
+//! channels.  Everything is std-only: the offline image has no tokio.
+
+pub mod queue;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{EngineConfig, ServerConfig};
+use crate::engine::spec::SpecEngine;
+use crate::engine::RowResult;
+use crate::metrics::EngineMetrics;
+use crate::runtime::Runtime;
+
+pub use queue::{AdmissionError, RequestQueue};
+
+/// A generation request as accepted by the coordinator.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: Option<usize>,
+    pub enqueued: Instant,
+}
+
+type Reply = std::sync::mpsc::SyncSender<Result<RowResult>>;
+
+/// The coordinator handle cloned into server handlers.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: SyncSender<(GenRequest, Reply)>,
+    pub metrics: Arc<EngineMetrics>,
+    inflight: Arc<AtomicUsize>,
+    queue_limit: usize,
+}
+
+impl Coordinator {
+    /// Spawn the coordinator worker thread.
+    pub fn spawn(
+        rt: Arc<Runtime>,
+        engine_cfg: EngineConfig,
+        server_cfg: &ServerConfig,
+    ) -> Result<Coordinator> {
+        let engine = SpecEngine::new(rt, engine_cfg)?;
+        let metrics = engine.metrics.clone();
+        let limit = server_cfg.queue_limit.max(1);
+        let (tx, rx) = sync_channel(limit);
+        let batch_wait = Duration::from_millis(server_cfg.batch_wait_ms);
+        let m2 = metrics.clone();
+        std::thread::Builder::new()
+            .name("specd-batcher".into())
+            .spawn(move || batch_worker(engine, rx, batch_wait, m2))
+            .map_err(|e| anyhow!("spawning batcher: {e}"))?;
+        Ok(Coordinator {
+            tx,
+            metrics,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            queue_limit: limit,
+        })
+    }
+
+    /// Enqueue a request and block until its batch completes.
+    pub fn generate(&self, req: GenRequest) -> Result<RowResult> {
+        if self.inflight.load(Ordering::Relaxed) >= self.queue_limit {
+            return Err(anyhow!("queue full — admission rejected"));
+        }
+        let (otx, orx) = sync_channel(1);
+        self.metrics.requests_enqueued.inc();
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let res = (|| {
+            self.tx
+                .try_send((req, otx))
+                .map_err(|_| anyhow!("queue full — admission rejected"))?;
+            orx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+        })();
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        res
+    }
+}
+
+/// Batch formation loop: greedily drain up to `B` requests, waiting at most
+/// `batch_wait` for stragglers after the first arrival.
+fn batch_worker(
+    engine: SpecEngine,
+    rx: Receiver<(GenRequest, Reply)>,
+    batch_wait: Duration,
+    metrics: Arc<EngineMetrics>,
+) {
+    let b = engine.runtime().manifest.batch;
+    let mut seed: u64 = 0xc0ffee0;
+    loop {
+        let first = match rx.recv() {
+            Ok(x) => x,
+            Err(_) => return, // all senders dropped: shut down
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + batch_wait;
+        while batch.len() < b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(x) => batch.push(x),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for (req, _) in &batch {
+            metrics.queue_wait.observe(req.enqueued.elapsed());
+        }
+        seed = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let prompts: Vec<Vec<u32>> = batch.iter().map(|(r, _)| r.prompt.clone()).collect();
+        match engine.run_batch(&prompts, seed) {
+            Ok(rep) => {
+                for ((req, otx), row) in batch.into_iter().zip(rep.rows.into_iter()) {
+                    metrics.requests_completed.inc();
+                    metrics.request_latency.observe(req.enqueued.elapsed());
+                    let _ = otx.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, otx) in batch {
+                    let _ = otx.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

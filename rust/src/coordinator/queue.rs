@@ -1,0 +1,106 @@
+//! Bounded request queue with admission control — a standalone, testable
+//! model of the coordinator's backpressure policy (the async path in
+//! `coordinator::mod` uses tokio's bounded mpsc with the same semantics).
+
+use std::collections::VecDeque;
+
+/// Admission failures surfaced to clients as HTTP 429 / 400.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    QueueFull { limit: usize },
+    PromptTooLong { len: usize, max: usize },
+    PromptTooShort,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { limit } => write!(f, "queue full (limit {limit})"),
+            AdmissionError::PromptTooLong { len, max } => {
+                write!(f, "prompt length {len} exceeds {max}")
+            }
+            AdmissionError::PromptTooShort => write!(f, "prompt needs >= 2 tokens"),
+        }
+    }
+}
+
+/// FIFO queue with a hard limit and prompt validation.
+#[derive(Debug)]
+pub struct RequestQueue<T> {
+    items: VecDeque<(Vec<u32>, T)>,
+    pub limit: usize,
+    pub max_prompt_len: usize,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(limit: usize, max_prompt_len: usize) -> Self {
+        RequestQueue { items: VecDeque::new(), limit, max_prompt_len }
+    }
+
+    pub fn push(&mut self, prompt: Vec<u32>, payload: T) -> Result<(), AdmissionError> {
+        if prompt.len() < 2 {
+            return Err(AdmissionError::PromptTooShort);
+        }
+        if prompt.len() > self.max_prompt_len {
+            return Err(AdmissionError::PromptTooLong {
+                len: prompt.len(),
+                max: self.max_prompt_len,
+            });
+        }
+        if self.items.len() >= self.limit {
+            return Err(AdmissionError::QueueFull { limit: self.limit });
+        }
+        self.items.push_back((prompt, payload));
+        Ok(())
+    }
+
+    /// Drain up to `n` requests in FIFO order.
+    pub fn take_batch(&mut self, n: usize) -> Vec<(Vec<u32>, T)> {
+        let k = n.min(self.items.len());
+        self.items.drain(..k).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = RequestQueue::new(10, 32);
+        for i in 0..5u32 {
+            q.push(vec![1, 3, 20 + i], i).unwrap();
+        }
+        let batch = q.take_batch(3);
+        assert_eq!(batch.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn admission_limits() {
+        let mut q: RequestQueue<()> = RequestQueue::new(1, 4);
+        assert_eq!(q.push(vec![1], ()), Err(AdmissionError::PromptTooShort));
+        assert_eq!(
+            q.push(vec![1; 5], ()),
+            Err(AdmissionError::PromptTooLong { len: 5, max: 4 })
+        );
+        q.push(vec![1, 3], ()).unwrap();
+        assert_eq!(q.push(vec![1, 3], ()), Err(AdmissionError::QueueFull { limit: 1 }));
+    }
+
+    #[test]
+    fn take_more_than_available() {
+        let mut q = RequestQueue::new(10, 32);
+        q.push(vec![1, 3], 0u32).unwrap();
+        assert_eq!(q.take_batch(8).len(), 1);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Host-verify engine: draft and score on device (`draft_block_*`,
+//! `target_score_*` programs), verify in rust.
+//!
+//! This path exists because greedy block verification (Appendix C) threads
+//! the distribution-modification state across iterations (Algorithm 6),
+//! which cannot live inside a stateless fused program.  It also serves as
+//! the cross-check harness for the in-HLO Pallas verify kernels: identical
+//! math, independent implementation.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::config::EngineConfig;
+use crate::metrics::EngineMetrics;
+use crate::models::vocab;
+use crate::runtime::{literal, Runtime, StateHandle};
+use crate::verify::{self, Algo, GreedyState, ProbMatrix, Rng};
+
+use super::{pad_prompts, BatchReport, RowTracker};
+
+pub struct HostVerifyEngine {
+    rt: Arc<Runtime>,
+    pub cfg: EngineConfig,
+    pub metrics: Arc<EngineMetrics>,
+}
+
+impl HostVerifyEngine {
+    pub fn new(rt: Arc<Runtime>, cfg: EngineConfig) -> anyhow::Result<Self> {
+        if !rt.manifest.gammas.contains(&cfg.gamma) {
+            return Err(anyhow!("gamma {} not exported", cfg.gamma));
+        }
+        Ok(HostVerifyEngine { rt, cfg, metrics: Arc::new(EngineMetrics::default()) })
+    }
+
+    pub fn run_batch(&self, prompts: &[Vec<u32>], seed: u64) -> anyhow::Result<BatchReport> {
+        let rt = &*self.rt;
+        let b = rt.manifest.batch;
+        let l = rt.manifest.max_len;
+        let v = rt.manifest.vocab_size;
+        let gamma = self.cfg.gamma;
+        let t_start = Instant::now();
+
+        let n_real = prompts.len();
+        let padded = pad_prompts(prompts, b);
+
+        // Host-owned token/length state.
+        let mut toks = vec![vocab::PAD as i32; b * l];
+        let mut lens = vec![0i32; b];
+        for (i, p) in padded.iter().enumerate() {
+            for (j, &t) in p.iter().enumerate() {
+                toks[i * l + j] = t as i32;
+            }
+            lens[i] = p.len() as i32;
+        }
+
+        let w_t = rt.weights("target")?;
+        let w_d = rt.weights(&self.cfg.drafter)?;
+        let tok_lit = literal::i32_literal(&toks, &[b, l])?;
+        let len_lit = literal::i32_literal(&lens, &[b])?;
+        let tok_buf = rt.upload(tok_lit)?;
+        let len_buf = rt.upload(len_lit)?;
+
+        let prefill_t = rt.program("prefill_target")?;
+        let prefill_d = rt.program(&format!("prefill_{}", self.cfg.drafter))?;
+        let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let kvt = rt.execute(prefill_t, &args)?.into_handles();
+        let mut args: Vec<&xla::PjRtBuffer> = w_d.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let kvd = rt.execute(prefill_d, &args)?.into_handles();
+        let [mut kvt_k, mut kvt_v] =
+            <[StateHandle; 2]>::try_from(kvt).map_err(|_| anyhow!("prefill: 2 outs"))?;
+        let [mut kvd_k, mut kvd_v] =
+            <[StateHandle; 2]>::try_from(kvd).map_err(|_| anyhow!("prefill: 2 outs"))?;
+
+        let draft_prog =
+            rt.program(&format!("draft_block_{}_g{gamma}", self.cfg.drafter))?;
+        let score_prog = rt.program(&format!("target_score_g{gamma}"))?;
+
+        let mut trackers: Vec<RowTracker> =
+            (0..b).map(|i| RowTracker::new(i < n_real, self.cfg.max_new_tokens)).collect();
+        let mut greedy: Vec<GreedyState> = (0..b).map(|_| GreedyState::new(gamma)).collect();
+        let mut rng = Rng::new(seed ^ 0x705f_3eed);
+        let mut seed_rng = Rng::new(seed ^ 0xd3af_7000);
+        let mut device_iterations = 0usize;
+        let max_iters = self.cfg.max_new_tokens + l;
+
+        while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
+            // --- draft on device --------------------------------------------------
+            let tok_lit = literal::i32_literal(&toks, &[b, l])?;
+            let len_lit = literal::i32_literal(&lens, &[b])?;
+            let tok_buf = rt.upload(tok_lit)?;
+            let len_buf = rt.upload(len_lit)?;
+            let seed_lit = literal::i32_scalar(seed_rng.next_u64() as i32)?;
+            let seed_buf = rt.upload(seed_lit)?;
+            let kvd_k_b = kvd_k.ensure_buffer(rt)?;
+            let kvd_v_b = kvd_v.ensure_buffer(rt)?;
+            let mut args: Vec<&xla::PjRtBuffer> = w_d.iter().collect();
+            args.push(&tok_buf);
+            args.push(&len_buf);
+            args.push(&kvd_k_b);
+            args.push(&kvd_v_b);
+            args.push(&seed_buf);
+            let out = rt.execute(draft_prog, &args)?;
+            // outs: drafts (B,g) i32, qs (B,g,V) f32, kvd_k, kvd_v
+            let drafts = out.i32s(0)?;
+            let qs_flat = out.f32s(1)?;
+            let mut handles = out.into_handles();
+            kvd_v = handles.pop().unwrap();
+            kvd_k = handles.pop().unwrap();
+
+            // --- score on device --------------------------------------------------
+            let drafts_lit = literal::i32_literal(&drafts, &[b, gamma])?;
+            let drafts_buf = rt.upload(drafts_lit)?;
+            let kvt_k_b = kvt_k.ensure_buffer(rt)?;
+            let kvt_v_b = kvt_v.ensure_buffer(rt)?;
+            let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
+            args.push(&tok_buf);
+            args.push(&len_buf);
+            args.push(&kvt_k_b);
+            args.push(&kvt_v_b);
+            args.push(&drafts_buf);
+            let out = rt.execute(score_prog, &args)?;
+            // outs: ps (B,g+1,V) f32, kvt_k, kvt_v
+            let ps_flat = out.f32s(0)?;
+            let mut handles = out.into_handles();
+            kvt_v = handles.pop().unwrap();
+            kvt_k = handles.pop().unwrap();
+
+            // --- verify on host ---------------------------------------------------
+            for (i, tr) in trackers.iter_mut().enumerate() {
+                if !tr.active() {
+                    continue;
+                }
+                let ps = ProbMatrix::from_f32(
+                    gamma + 1,
+                    v,
+                    &ps_flat[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v],
+                );
+                let qs =
+                    ProbMatrix::from_f32(gamma, v, &qs_flat[i * gamma * v..(i + 1) * gamma * v]);
+                let row_drafts: Vec<u32> =
+                    drafts[i * gamma..(i + 1) * gamma].iter().map(|&x| x as u32).collect();
+                let etas: Vec<f64> = (0..gamma).map(|_| rng.uniform()).collect();
+                let u = rng.uniform();
+                let outcome = match self.cfg.algo {
+                    Algo::Greedy => {
+                        let (o, st) = verify::greedy_verify(
+                            &ps, &qs, &row_drafts, &etas, u, &greedy[i],
+                        );
+                        greedy[i] = st;
+                        o
+                    }
+                    a => verify::verify(a, &ps, &qs, &row_drafts, &etas, u),
+                };
+                // Write emitted into host tokens; advance length.
+                let start = lens[i] as usize;
+                for (j, &t) in outcome.emitted.iter().enumerate() {
+                    if start + j < l {
+                        toks[i * l + start + j] = t as i32;
+                    }
+                }
+                lens[i] = (lens[i] + outcome.tau as i32 + 1).min(l as i32 - 1);
+                let out_of_room = lens[i] as usize > l - (gamma + 2);
+                tr.absorb(&outcome.emitted, outcome.tau, out_of_room);
+                self.metrics.tokens_emitted.add(outcome.emitted.len() as u64);
+                self.metrics.drafts_accepted.add(outcome.tau as u64);
+                self.metrics.iterations.inc();
+            }
+            device_iterations += 1;
+        }
+
+        self.metrics.batches.inc();
+        rt.clear_pinned();
+        let rows = trackers.into_iter().take(n_real).map(|t| t.into_result()).collect();
+        Ok(BatchReport { rows, device_iterations, wall: t_start.elapsed() })
+    }
+
+    pub fn run_prompts(
+        &self,
+        prompts: &[Vec<u32>],
+        seed: u64,
+    ) -> anyhow::Result<Vec<BatchReport>> {
+        let b = self.rt.manifest.batch;
+        prompts
+            .chunks(b)
+            .enumerate()
+            .map(|(i, c)| self.run_batch(c, seed.wrapping_add(i as u64 * 7919)))
+            .collect()
+    }
+}

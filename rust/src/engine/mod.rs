@@ -1,0 +1,200 @@
+//! The speculative-decoding engine: drives the AOT programs through whole
+//! request batches.
+//!
+//! Three execution paths:
+//! * [`spec::SpecEngine::run_batch`] — fused path: one `spec_iter_*` PJRT
+//!   call per iteration (draft scan + target score + L1 verify kernel all
+//!   inside the program).  Used for token/block verification.
+//! * [`host::HostVerifyEngine`] — host-verify path: `draft_block` +
+//!   `target_score` programs plus rust-side verification.  Required for
+//!   greedy verification (Appendix C threads state across iterations) and
+//!   used to cross-check the in-HLO kernels.
+//! * [`baseline::run_baseline`] — plain autoregressive target decoding, the
+//!   1x reference for wall-clock speedups.
+
+pub mod baseline;
+pub mod host;
+pub mod spec;
+
+use crate::models::vocab;
+
+/// Why a row stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Model emitted EOS.
+    Eos,
+    /// Hit the per-request `max_new_tokens` cap.
+    Length,
+    /// Ran out of sequence buffer (device `done` flag).
+    OutOfRoom,
+}
+
+/// Per-request decode result.
+#[derive(Clone, Debug)]
+pub struct RowResult {
+    /// Generated tokens (prompt excluded), truncated at EOS if present.
+    pub tokens: Vec<u32>,
+    /// Target-model calls consumed while this row was active.
+    pub iterations: usize,
+    /// Draft tokens accepted across those iterations (sum of tau).
+    pub accepted: usize,
+    /// Tokens emitted across those iterations (sum of tau + 1) — the
+    /// numerator of block efficiency, which counts EOS/overflow tokens too.
+    pub emitted: usize,
+    pub finish: FinishReason,
+}
+
+impl RowResult {
+    pub fn block_efficiency(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.emitted as f64 / self.iterations as f64
+    }
+}
+
+/// Batch-level report.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub rows: Vec<RowResult>,
+    /// Device iterations executed (the batch runs until every row is done).
+    pub device_iterations: usize,
+    pub wall: std::time::Duration,
+}
+
+impl BatchReport {
+    /// Aggregate block efficiency: total emitted / total per-row active
+    /// iterations (the paper's "decoded tokens per serial target call").
+    pub fn block_efficiency(&self) -> f64 {
+        let iters: usize = self.rows.iter().map(|r| r.iterations).sum();
+        let toks: usize = self.rows.iter().map(|r| r.emitted).sum();
+        if iters == 0 {
+            0.0
+        } else {
+            toks as f64 / iters as f64
+        }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.rows.iter().map(|r| r.tokens.len()).sum()
+    }
+}
+
+/// Tracks one batch row across iterations, independent of the verify path.
+#[derive(Clone, Debug)]
+pub(crate) struct RowTracker {
+    pub real: bool,
+    pub max_new_tokens: usize,
+    pub generated: Vec<u32>,
+    pub iterations: usize,
+    pub accepted: usize,
+    pub emitted: usize,
+    pub finish: Option<FinishReason>,
+}
+
+impl RowTracker {
+    pub fn new(real: bool, max_new_tokens: usize) -> Self {
+        RowTracker {
+            real,
+            max_new_tokens,
+            generated: Vec::new(),
+            iterations: 0,
+            accepted: 0,
+            emitted: 0,
+            finish: None,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.real && self.finish.is_none()
+    }
+
+    /// Record one iteration's outcome for this row.
+    pub fn absorb(&mut self, emitted: &[u32], tau: usize, device_done: bool) {
+        debug_assert_eq!(emitted.len(), tau + 1);
+        self.iterations += 1;
+        self.accepted += tau;
+        self.emitted += emitted.len();
+        for &t in emitted {
+            if t == vocab::EOS {
+                self.finish = Some(FinishReason::Eos);
+                return;
+            }
+            self.generated.push(t);
+            if self.generated.len() >= self.max_new_tokens {
+                self.finish = Some(FinishReason::Length);
+                return;
+            }
+        }
+        if device_done {
+            self.finish = Some(FinishReason::OutOfRoom);
+        }
+    }
+
+    pub fn into_result(self) -> RowResult {
+        RowResult {
+            tokens: self.generated,
+            iterations: self.iterations,
+            accepted: self.accepted,
+            emitted: self.emitted,
+            finish: self.finish.unwrap_or(FinishReason::Length),
+        }
+    }
+}
+
+/// Pad a prompt batch to exactly `batch` rows; extra rows are inert
+/// (BOS-only) and their outputs are discarded.
+pub(crate) fn pad_prompts(prompts: &[Vec<u32>], batch: usize) -> Vec<Vec<u32>> {
+    assert!(prompts.len() <= batch, "batch overflow: {} > {batch}", prompts.len());
+    let mut out = prompts.to_vec();
+    while out.len() < batch {
+        out.push(vec![vocab::BOS, vocab::marker_for(0), vocab::CONTENT_BASE]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_stops_at_eos_and_truncates() {
+        let mut t = RowTracker::new(true, 10);
+        t.absorb(&[20, 21, vocab::EOS], 2, false);
+        assert_eq!(t.finish, Some(FinishReason::Eos));
+        assert_eq!(t.generated, vec![20, 21]);
+        assert_eq!(t.emitted, 3);
+        assert_eq!(t.accepted, 2);
+    }
+
+    #[test]
+    fn tracker_caps_length() {
+        let mut t = RowTracker::new(true, 3);
+        t.absorb(&[20, 21], 1, false);
+        assert!(t.active());
+        t.absorb(&[22, 23], 1, false);
+        assert_eq!(t.finish, Some(FinishReason::Length));
+        assert_eq!(t.generated.len(), 3);
+    }
+
+    #[test]
+    fn tracker_device_done() {
+        let mut t = RowTracker::new(true, 100);
+        t.absorb(&[20], 0, true);
+        assert_eq!(t.finish, Some(FinishReason::OutOfRoom));
+    }
+
+    #[test]
+    fn pad_prompts_fills_batch() {
+        let p = pad_prompts(&[vec![1, 3, 20]], 4);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p[3][0], vocab::BOS);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_prompts_rejects_overflow() {
+        let five: Vec<Vec<u32>> = (0..5).map(|_| vec![1u32]).collect();
+        pad_prompts(&five, 4);
+    }
+}

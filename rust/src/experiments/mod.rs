@@ -1,0 +1,310 @@
+//! The paper-reproduction harness: every table and figure in the paper's
+//! evaluation maps to a function here (experiment index in DESIGN.md §4).
+//!
+//! * Table 1  — [`Harness::table1`] (γ=8, xxs, 8 datasets, BE + wall-clock)
+//! * Figure 3 — [`Harness::fig3`]  (avg BE/WS grid over γ × drafter)
+//! * Figure 4 — [`Harness::fig4`]  (relative improvement series)
+//! * Table 3  — [`Harness::table3`] (token vs block vs greedy BE)
+//! * Tables 4–8 — [`Harness::appendix_table`] (per-dataset grids)
+//! * §2 example — [`motivating_table`] (exact + MC, no artifacts needed)
+//!
+//! Each cell is averaged over the configured seeds with mean ± std, exactly
+//! as the paper reports.  Wall-clock speedup is measured against the
+//! autoregressive baseline on the same substrate (see DESIGN.md §8.3).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::engine::baseline::run_baseline_prompts;
+use crate::engine::host::HostVerifyEngine;
+use crate::engine::spec::SpecEngine;
+use crate::engine::BatchReport;
+use crate::runtime::Runtime;
+use crate::sim;
+use crate::stats::{paired_improvement, Cell};
+use crate::verify::Algo;
+use crate::workload::{paper_name, Dataset, DATASET_NAMES};
+
+/// One measured cell: per-seed block efficiencies and throughputs.
+#[derive(Clone, Debug, Default)]
+pub struct Measurement {
+    pub be: Vec<f64>,
+    pub tokens_per_sec: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn be_cell(&self) -> Cell {
+        Cell::from_samples(&self.be)
+    }
+}
+
+/// Experiment driver; caches baseline throughputs per (dataset, seed).
+pub struct Harness {
+    pub rt: Arc<Runtime>,
+    pub cfg: ExperimentConfig,
+    pub datasets: Vec<Dataset>,
+    baseline_cache: Mutex<HashMap<(String, u64), f64>>,
+    /// Engine cache keyed by (algo, drafter, gamma) — avoids recompiling.
+    quiet: bool,
+}
+
+impl Harness {
+    pub fn new(rt: Arc<Runtime>, cfg: ExperimentConfig) -> Result<Self> {
+        let datasets = Dataset::load_all(rt.artifacts_dir())?;
+        Ok(Harness { rt, cfg, datasets, baseline_cache: Mutex::new(HashMap::new()), quiet: false })
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    fn log(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("[harness] {msg}");
+        }
+    }
+
+    fn dataset(&self, name: &str) -> &Dataset {
+        self.datasets.iter().find(|d| d.name == name).expect("dataset loaded")
+    }
+
+    fn agg(reports: &[BatchReport]) -> (f64, f64) {
+        let iters: usize = reports.iter().flat_map(|r| &r.rows).map(|x| x.iterations).sum();
+        let toks: usize = reports.iter().flat_map(|r| &r.rows).map(|x| x.emitted).sum();
+        let out_toks: usize =
+            reports.iter().flat_map(|r| &r.rows).map(|x| x.tokens.len()).sum();
+        let wall: f64 = reports.iter().map(|r| r.wall.as_secs_f64()).sum();
+        let be = if iters == 0 { 0.0 } else { toks as f64 / iters as f64 };
+        let tps = if wall == 0.0 { 0.0 } else { out_toks as f64 / wall };
+        (be, tps)
+    }
+
+    /// Tokens/sec of the autoregressive baseline (cached per dataset/seed).
+    pub fn baseline_tps(&self, ds_name: &str, seed: u64) -> Result<f64> {
+        if let Some(v) = self.baseline_cache.lock().unwrap().get(&(ds_name.into(), seed)) {
+            return Ok(*v);
+        }
+        let prompts = self.dataset(ds_name).take(self.cfg.prompts_per_dataset);
+        let reports =
+            run_baseline_prompts(&self.rt, &prompts, self.cfg.max_new_tokens, seed)?;
+        let (_, tps) = Self::agg(&reports);
+        self.baseline_cache.lock().unwrap().insert((ds_name.into(), seed), tps);
+        Ok(tps)
+    }
+
+    /// Measure one (dataset, algo, drafter, gamma) cell across seeds.
+    pub fn run_cell(
+        &self,
+        ds_name: &str,
+        algo: Algo,
+        drafter: &str,
+        gamma: usize,
+    ) -> Result<Measurement> {
+        let prompts = self.dataset(ds_name).take(self.cfg.prompts_per_dataset);
+        let mut m = Measurement::default();
+        for &seed in &self.cfg.seeds {
+            let cfg = crate::config::EngineConfig {
+                gamma,
+                algo,
+                drafter: drafter.to_string(),
+                max_new_tokens: self.cfg.max_new_tokens,
+                host_verify: !algo.fused(),
+                seed,
+            };
+            let reports = if algo.fused() {
+                SpecEngine::new(self.rt.clone(), cfg)?.run_prompts(&prompts, seed)?
+            } else {
+                HostVerifyEngine::new(self.rt.clone(), cfg)?.run_prompts(&prompts, seed)?
+            };
+            let (be, tps) = Self::agg(&reports);
+            m.be.push(be);
+            m.tokens_per_sec.push(tps);
+        }
+        self.log(&format!(
+            "{ds_name} {algo} {drafter} g{gamma}: BE {:.3} tps {:.1}",
+            m.be_cell().mean,
+            m.tokens_per_sec.iter().sum::<f64>() / m.tokens_per_sec.len().max(1) as f64
+        ));
+        Ok(m)
+    }
+
+    /// Wall-clock speedups per seed for a measurement on a dataset.
+    pub fn speedups(&self, ds_name: &str, m: &Measurement) -> Result<Vec<f64>> {
+        self.cfg
+            .seeds
+            .iter()
+            .zip(&m.tokens_per_sec)
+            .map(|(&seed, &tps)| Ok(tps / self.baseline_tps(ds_name, seed)?.max(1e-9)))
+            .collect()
+    }
+
+    // ---------------------------------------------------------------------
+    // Table generators
+    // ---------------------------------------------------------------------
+
+    /// Paper Table 1 (and Tables 4–8 via `drafter`/`gamma`): per-dataset
+    /// TokenV vs BlockV, block efficiency + wall-clock speedup.
+    pub fn speedup_table(&self, drafter: &str, gamma: usize) -> Result<String> {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Speedup comparison: TokenV vs BlockV, gamma={gamma}, drafter={drafter}\n"
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>13} {:>13} {:>9} | {:>13} {:>13} {:>9}\n",
+            "Dataset", "TokenV BE", "BlockV BE", "Impr.%", "TokenV WS", "BlockV WS", "Impr.%"
+        ));
+        let (mut sum_bt, mut sum_bb, mut sum_ib) = (0.0, 0.0, 0.0);
+        let (mut sum_wt, mut sum_wb, mut sum_iw) = (0.0, 0.0, 0.0);
+        for ds in DATASET_NAMES {
+            let mt = self.run_cell(ds, Algo::Token, drafter, gamma)?;
+            let mb = self.run_cell(ds, Algo::Block, drafter, gamma)?;
+            let wt = self.speedups(ds, &mt)?;
+            let wb = self.speedups(ds, &mb)?;
+            let be_t = mt.be_cell();
+            let be_b = mb.be_cell();
+            let imp_be = paired_improvement(&mt.be, &mb.be);
+            let ws_t = Cell::from_samples(&wt);
+            let ws_b = Cell::from_samples(&wb);
+            let imp_ws = paired_improvement(&wt, &wb);
+            out.push_str(&format!(
+                "{:<12} {:>13} {:>13} {:>9} | {:>13} {:>13} {:>9}\n",
+                paper_name(ds),
+                be_t.to_string(),
+                be_b.to_string(),
+                format!("{:+.2}", imp_be.mean),
+                ws_t.to_string(),
+                ws_b.to_string(),
+                format!("{:+.2}", imp_ws.mean),
+            ));
+            sum_bt += be_t.mean;
+            sum_bb += be_b.mean;
+            sum_ib += imp_be.mean;
+            sum_wt += ws_t.mean;
+            sum_wb += ws_b.mean;
+            sum_iw += imp_ws.mean;
+        }
+        let n = DATASET_NAMES.len() as f64;
+        out.push_str(&format!(
+            "{:<12} {:>13.2} {:>13.2} {:>9} | {:>13.2} {:>13.2} {:>9}\n",
+            "Average",
+            sum_bt / n,
+            sum_bb / n,
+            format!("{:+.2}", sum_ib / n),
+            sum_wt / n,
+            sum_wb / n,
+            format!("{:+.2}", sum_iw / n),
+        ));
+        Ok(out)
+    }
+
+    pub fn table1(&self) -> Result<String> {
+        self.speedup_table("xxs", 8)
+    }
+
+    /// Averages across datasets for one (drafter, gamma, algo).
+    fn averages(&self, drafter: &str, gamma: usize, algo: Algo) -> Result<(f64, f64)> {
+        let (mut be_sum, mut ws_sum) = (0.0, 0.0);
+        for ds in DATASET_NAMES {
+            let m = self.run_cell(ds, algo, drafter, gamma)?;
+            let ws = self.speedups(ds, &m)?;
+            be_sum += m.be_cell().mean;
+            ws_sum += ws.iter().sum::<f64>() / ws.len() as f64;
+        }
+        let n = DATASET_NAMES.len() as f64;
+        Ok((be_sum / n, ws_sum / n))
+    }
+
+    /// Paper Figure 3: avg BE and wall-clock speedup per γ × drafter.
+    pub fn fig3(&self) -> Result<String> {
+        let mut out = String::from(
+            "Figure 3: average BE / WS across datasets\n  γ  drafter |  TokenV BE  TokenV WS |  BlockV BE  BlockV WS\n",
+        );
+        for &gamma in &self.rt.manifest.gammas.clone() {
+            for drafter in ["xxs", "xxxs"] {
+                let (bt, wt) = self.averages(drafter, gamma, Algo::Token)?;
+                let (bb, wb) = self.averages(drafter, gamma, Algo::Block)?;
+                out.push_str(&format!(
+                    "  {gamma}  {drafter:<7} | {bt:>10.2} {wt:>10.2} | {bb:>10.2} {wb:>10.2}\n"
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Paper Figure 4: relative improvement (%) of BlockV over TokenV in BE
+    /// and WS per γ × drafter, rendered as an ASCII series.
+    pub fn fig4(&self) -> Result<String> {
+        let mut out =
+            String::from("Figure 4: relative improvement of BlockV over TokenV (%)\n");
+        for drafter in ["xxs", "xxxs"] {
+            out.push_str(&format!("  drafter {drafter}:\n"));
+            for &gamma in &self.rt.manifest.gammas.clone() {
+                let (bt, wt) = self.averages(drafter, gamma, Algo::Token)?;
+                let (bb, wb) = self.averages(drafter, gamma, Algo::Block)?;
+                let ibe = (bb - bt) / bt * 100.0;
+                let iws = (wb - wt) / wt * 100.0;
+                let bar = |v: f64| "#".repeat((v.max(0.0) * 2.0).round() as usize);
+                out.push_str(&format!(
+                    "    γ={gamma}: BE {ibe:+6.2}% {:<24} WS {iws:+6.2}% {}\n",
+                    bar(ibe),
+                    bar(iws)
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Paper Table 3: token vs block vs greedy block efficiency (γ=8, xxs).
+    pub fn table3(&self) -> Result<String> {
+        let mut out = String::from(
+            "Table 3: block efficiency, gamma=8, drafter=xxs\nDataset      TokenV   BlockV   GreedyBlockV\n",
+        );
+        for ds in DATASET_NAMES {
+            let t = self.run_cell(ds, Algo::Token, "xxs", 8)?.be_cell();
+            let b = self.run_cell(ds, Algo::Block, "xxs", 8)?.be_cell();
+            let g = self.run_cell(ds, Algo::Greedy, "xxs", 8)?.be_cell();
+            out.push_str(&format!(
+                "{:<12} {:>7.2} {:>8.2} {:>13.2}\n",
+                paper_name(ds),
+                t.mean,
+                b.mean,
+                g.mean
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Appendix Tables 4–8.
+    pub fn appendix_table(&self, idx: usize) -> Result<String> {
+        let (drafter, gamma) = match idx {
+            4 => ("xxs", 4),
+            5 => ("xxs", 6),
+            6 => ("xxxs", 4),
+            7 => ("xxxs", 6),
+            8 => ("xxxs", 8),
+            _ => anyhow::bail!("appendix tables are 4..=8"),
+        };
+        Ok(format!("Table {idx}:\n{}", self.speedup_table(drafter, gamma)?))
+    }
+}
+
+/// §2 motivating example (E0) — pure simulator, no artifacts required.
+pub fn motivating_table() -> String {
+    let r = sim::motivating_example(400_000, 42);
+    format!(
+        "Motivating example (paper §2): E[accepted tokens], gamma=2\n\
+         {:<28} {:>8} {:>12}\n\
+         {:<28} {:>8.4} {:>12.4}\n\
+         {:<28} {:>8.4} {:>12.4}\n\
+         {:<28} {:>8.4} {:>12}\n",
+        "algorithm", "exact", "monte-carlo",
+        "token verification (10/9)", r.exact_token, r.mc_token,
+        "block verification (11/9)", r.exact_block, r.mc_block,
+        "full-info ideal (12/9)", r.exact_ideal, "-",
+    )
+}

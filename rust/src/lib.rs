@@ -1,0 +1,32 @@
+//! `specd` — a speculative-decoding serving stack reproducing
+//! *Block Verification Accelerates Speculative Decoding* (ICLR 2025).
+//!
+//! Three-layer architecture:
+//! * L3 (this crate): request routing, continuous batching, KV-slot
+//!   management, spec-dec scheduling, metrics, CLI.
+//! * L2 (python/compile/model.py): JAX transformer LMs, AOT-lowered to HLO
+//!   text programs loaded by [`runtime`].
+//! * L1 (python/compile/kernels/): Pallas verification + attention kernels,
+//!   lowered into the same HLO programs.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` plus weights, and the rust binary is self-contained
+//! afterwards.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod util;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod stats;
+pub mod verify;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

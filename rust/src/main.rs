@@ -1,0 +1,185 @@
+//! `specd` — CLI launcher for the block-verification serving stack.
+//!
+//! Subcommands:
+//! * `serve`  — start the HTTP serving front-end (coordinator + engine).
+//! * `run`    — one-off batch decode of a dataset, printing stats.
+//! * `tables` — regenerate the paper's tables/figures (see DESIGN.md §4).
+//! * `sim`    — distribution-level simulator studies (no artifacts needed).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use specd::config::{Config, EngineConfig, ExperimentConfig};
+use specd::coordinator::Coordinator;
+use specd::engine::host::HostVerifyEngine;
+use specd::engine::spec::SpecEngine;
+use specd::experiments::{motivating_table, Harness};
+use specd::runtime::Runtime;
+use specd::server::{serve, ServerState};
+use specd::sim::{self, MarkovPair};
+use specd::util::argparse::Args;
+use specd::verify::Algo;
+use specd::workload::Dataset;
+
+const USAGE: &str = "\
+specd — block-verification speculative decoding server
+
+USAGE: specd <serve|run|tables|sim> [options]
+  common:   --config <file.json>  --artifacts <dir>
+  serve:    --addr <ip:port>
+  run:      --dataset gsm8k --algo block --gamma 8 --drafter xxs
+            --prompts 16 --seed 0
+  tables:   --table 1|3|4..8|fig3|fig4|motivating|all
+            --prompts <n> --seeds <n>
+  sim:      --vocab 8 --gamma 4 --tokens 200000
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts = Some(PathBuf::from(a));
+    }
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&cfg, &args),
+        Some("run") => cmd_run(&cfg, &args),
+        Some("tables") => cmd_tables(&cfg, &args),
+        Some("sim") => cmd_sim(&args),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir())?);
+    let datasets = Dataset::load_all(rt.artifacts_dir())?;
+    let addr = args.get_or("addr", &cfg.server.addr).to_string();
+    let coordinator = Coordinator::spawn(rt, cfg.engine.clone(), &cfg.server)?;
+    let state = Arc::new(ServerState { coordinator, datasets });
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("specd serving on http://{addr}  (POST /v1/generate)");
+    serve(listener, state)
+}
+
+fn cmd_run(cfg: &Config, args: &Args) -> Result<()> {
+    let algo_s = args.get_or("algo", "block");
+    let algo = Algo::parse(algo_s).ok_or_else(|| anyhow::anyhow!("unknown algo {algo_s}"))?;
+    let gamma = args.usize_or("gamma", 8)?;
+    let drafter = args.get_or("drafter", "xxs").to_string();
+    let dataset = args.get_or("dataset", "gsm8k");
+    let n_prompts = args.usize_or("prompts", 16)?;
+    let seed = args.u64_or("seed", 0)?;
+
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir())?);
+    let ds = Dataset::load(rt.artifacts_dir(), dataset)?;
+    let engine_cfg = EngineConfig {
+        gamma,
+        algo,
+        drafter: drafter.clone(),
+        max_new_tokens: cfg.engine.max_new_tokens,
+        host_verify: !algo.fused(),
+        seed,
+    };
+    let prompts = ds.take(n_prompts);
+    let reports = if algo.fused() {
+        SpecEngine::new(rt.clone(), engine_cfg)?.run_prompts(&prompts, seed)?
+    } else {
+        HostVerifyEngine::new(rt.clone(), engine_cfg)?.run_prompts(&prompts, seed)?
+    };
+    let mut iters = 0usize;
+    let mut emitted = 0usize;
+    let mut out_tokens = 0usize;
+    let mut wall = 0.0f64;
+    for r in &reports {
+        for row in &r.rows {
+            iters += row.iterations;
+            emitted += row.emitted;
+            out_tokens += row.tokens.len();
+        }
+        wall += r.wall.as_secs_f64();
+    }
+    println!(
+        "dataset={dataset} algo={algo} gamma={gamma} drafter={drafter}\n\
+         prompts={} tokens={out_tokens} target_calls={iters}\n\
+         block_efficiency={:.3} tokens/sec={:.1} wall={:.2}s",
+        prompts.len(),
+        emitted as f64 / iters.max(1) as f64,
+        out_tokens as f64 / wall.max(1e-9),
+        wall
+    );
+    Ok(())
+}
+
+fn cmd_tables(cfg: &Config, args: &Args) -> Result<()> {
+    let table = args.get_or("table", "1");
+    if table == "motivating" {
+        println!("{}", motivating_table());
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir())?);
+    let mut exp_cfg: ExperimentConfig = cfg.experiments.clone();
+    if let Some(p) = args.get("prompts") {
+        exp_cfg.prompts_per_dataset = p.parse()?;
+    }
+    if let Some(s) = args.get("seeds") {
+        exp_cfg.seeds = (0..s.parse::<u64>()?).collect();
+    }
+    let h = Harness::new(rt, exp_cfg)?;
+    let text = match table {
+        "1" => h.table1()?,
+        "3" => h.table3()?,
+        "fig3" => h.fig3()?,
+        "fig4" => h.fig4()?,
+        "4" | "5" | "6" | "7" | "8" => h.appendix_table(table.parse()?)?,
+        "all" => {
+            let mut s = String::new();
+            s.push_str(&motivating_table());
+            s.push('\n');
+            s.push_str(&h.table1()?);
+            s.push('\n');
+            s.push_str(&h.table3()?);
+            s.push('\n');
+            s.push_str(&h.fig3()?);
+            s.push('\n');
+            s.push_str(&h.fig4()?);
+            for i in 4..=8 {
+                s.push('\n');
+                s.push_str(&h.appendix_table(i)?);
+            }
+            s
+        }
+        other => bail!("unknown table '{other}'"),
+    };
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let vocab = args.usize_or("vocab", 8)?;
+    let gamma = args.usize_or("gamma", 4)?;
+    let tokens = args.usize_or("tokens", 200_000)?;
+    println!("{}", motivating_table());
+    println!("Simulator: BE vs drafter quality (vocab={vocab}, gamma={gamma})");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>10}",
+        "mix", "token BE", "block BE", "greedy BE", "impr.%"
+    );
+    for mix in [0.2, 0.4, 0.6, 0.8, 0.9, 0.95] {
+        let pair = MarkovPair::random(vocab, mix, 7);
+        let t = sim::simulate(&pair, gamma, Algo::Token, tokens, 1).block_efficiency();
+        let b = sim::simulate(&pair, gamma, Algo::Block, tokens, 1).block_efficiency();
+        let g = sim::simulate(&pair, gamma, Algo::Greedy, tokens, 1).block_efficiency();
+        println!(
+            "{mix:>6.2} {t:>12.3} {b:>12.3} {g:>12.3} {:>9.2}%",
+            (b - t) / t * 100.0
+        );
+    }
+    Ok(())
+}

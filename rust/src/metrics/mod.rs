@@ -1,0 +1,183 @@
+//! Serving metrics: counters, latency histograms and throughput windows.
+//! Exposed through the HTTP `/metrics` endpoint and the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Lock-free monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket latency histogram (microseconds, log2 buckets up to ~67 s).
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: (0..27).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile from the log2 buckets (upper bucket edge).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let want = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= want {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (self.buckets.len() - 1)
+    }
+}
+
+/// Engine/coordinator metric bundle.
+#[derive(Default, Debug)]
+pub struct EngineMetrics {
+    pub requests_enqueued: Counter,
+    pub requests_completed: Counter,
+    pub tokens_emitted: Counter,
+    pub drafts_accepted: Counter,
+    pub iterations: Counter,
+    pub batches: Counter,
+    pub queue_wait: LatencyHist,
+    pub iter_latency: LatencyHist,
+    pub request_latency: LatencyHist,
+}
+
+impl EngineMetrics {
+    /// Running block efficiency = emitted tokens per target call.
+    pub fn block_efficiency(&self) -> f64 {
+        let it = self.iterations.get();
+        if it == 0 {
+            return 0.0;
+        }
+        self.tokens_emitted.get() as f64 / it as f64
+    }
+
+    /// Render in a Prometheus-ish plain-text exposition format.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let mut put = |k: &str, v: f64| s.push_str(&format!("specd_{k} {v}\n"));
+        put("requests_enqueued", self.requests_enqueued.get() as f64);
+        put("requests_completed", self.requests_completed.get() as f64);
+        put("tokens_emitted", self.tokens_emitted.get() as f64);
+        put("drafts_accepted", self.drafts_accepted.get() as f64);
+        put("iterations", self.iterations.get() as f64);
+        put("batches", self.batches.get() as f64);
+        put("block_efficiency", self.block_efficiency());
+        put("iter_latency_mean_us", self.iter_latency.mean_us());
+        put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
+        put("request_latency_mean_us", self.request_latency.mean_us());
+        put("queue_wait_mean_us", self.queue_wait.mean_us());
+        s
+    }
+}
+
+/// Wall-clock stopwatch accumulating named phase durations (perf pass).
+#[derive(Default, Debug)]
+pub struct PhaseTimer {
+    phases: Mutex<Vec<(String, Duration)>>,
+}
+
+impl PhaseTimer {
+    pub fn record(&self, name: &str, d: Duration) {
+        self.phases.lock().unwrap().push((name.to_string(), d));
+    }
+
+    pub fn totals(&self) -> Vec<(String, Duration)> {
+        let mut map: std::collections::BTreeMap<String, Duration> = Default::default();
+        for (n, d) in self.phases.lock().unwrap().iter() {
+            *map.entry(n.clone()).or_default() += *d;
+        }
+        map.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_be() {
+        let m = EngineMetrics::default();
+        m.iterations.add(4);
+        m.tokens_emitted.add(14);
+        assert!((m.block_efficiency() - 3.5).abs() < 1e-12);
+        assert!(m.render().contains("specd_block_efficiency 3.5"));
+    }
+
+    #[test]
+    fn hist_quantiles_monotone() {
+        let h = LatencyHist::new();
+        for us in [10u64, 100, 1000, 10_000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let t = PhaseTimer::default();
+        t.record("draft", Duration::from_millis(2));
+        t.record("draft", Duration::from_millis(3));
+        let tot = t.totals();
+        assert_eq!(tot.len(), 1);
+        assert_eq!(tot[0].1, Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,63 @@
+//! Model-family metadata: vocabulary layout and variant descriptions.
+//! Mirrors python/compile/common.py; the authoritative values ship in
+//! `artifacts/manifest.json` and are validated against these constants at
+//! runtime load.
+
+/// Vocabulary layout of the synthetic byte-level language.
+pub mod vocab {
+    pub const PAD: u32 = 0;
+    pub const BOS: u32 = 1;
+    pub const EOS: u32 = 2;
+    pub const MARKER_BASE: u32 = 3;
+    pub const NUM_DATASETS: u32 = 8;
+    pub const CONTENT_BASE: u32 = 16;
+    pub const SIZE: u32 = 256;
+
+    /// Is this a control (non-content) token?
+    pub fn is_control(tok: u32) -> bool {
+        tok < CONTENT_BASE
+    }
+
+    pub fn marker_for(dataset_idx: u32) -> u32 {
+        assert!(dataset_idx < NUM_DATASETS);
+        MARKER_BASE + dataset_idx
+    }
+}
+
+/// A model variant in the family (the PALM-2 substitution).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub name: &'static str,
+    pub role: Role,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Target,
+    Drafter,
+}
+
+pub const TARGET: Variant = Variant { name: "target", role: Role::Target };
+pub const XXS: Variant = Variant { name: "xxs", role: Role::Drafter };
+pub const XXXS: Variant = Variant { name: "xxxs", role: Role::Drafter };
+
+pub const DRAFTERS: [&str; 2] = ["xxs", "xxxs"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_layout() {
+        assert!(vocab::is_control(vocab::PAD));
+        assert!(vocab::is_control(vocab::marker_for(7)));
+        assert!(!vocab::is_control(vocab::CONTENT_BASE));
+        assert_eq!(vocab::marker_for(0), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn marker_out_of_range_panics() {
+        vocab::marker_for(8);
+    }
+}

@@ -1,0 +1,61 @@
+//! Host <-> `xla::Literal` conversion helpers.
+
+use anyhow::anyhow;
+
+/// Build an f32 literal of the given dims from a flat slice.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != n {
+        return Err(anyhow!("literal size mismatch: {} vs dims {:?}", data.len(), dims));
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        // rank-0: reshape to scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        Ok(lit.reshape(&d)?)
+    }
+}
+
+/// Build an i32 literal of the given dims from a flat slice.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != n {
+        return Err(anyhow!("literal size mismatch: {} vs dims {:?}", data.len(), dims));
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        Ok(lit.reshape(&[])?)
+    } else {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        Ok(lit.reshape(&d)?)
+    }
+}
+
+/// Scalar i32 literal.
+pub fn i32_scalar(v: i32) -> anyhow::Result<xla::Literal> {
+    i32_literal(&[v], &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar() {
+        let lit = i32_scalar(7).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(f32_literal(&[1.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python build path (aot.py) and this runtime.  Every fixed shape baked
+//! into the HLO programs is declared here and validated at load time.
+//! Decoded with the in-tree JSON parser (util::json).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub batch: usize,
+    pub max_len: usize,
+    pub vocab_size: usize,
+    pub pad_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub gammas: Vec<usize>,
+    pub algos: Vec<String>,
+    pub drafters: Vec<String>,
+    pub models: HashMap<String, ModelMeta>,
+    pub programs: HashMap<String, ProgramMeta>,
+    pub datasets: HashMap<String, crate::workload::DatasetInfo>,
+    pub fast_build: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab_size: usize,
+    pub max_len: usize,
+    pub param_count: u64,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramMeta {
+    pub file: String,
+    pub args: Vec<ArgMeta>,
+    pub outs: Vec<OutMeta>,
+    pub kind: String,
+    pub algo: Option<String>,
+    pub drafter: Option<String>,
+    pub model: Option<String>,
+    pub gamma: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct OutMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+fn decode_model(v: &Value) -> Result<ModelMeta> {
+    let weights = v
+        .arr_field("weights")?
+        .iter()
+        .map(|w| {
+            Ok(WeightEntry {
+                name: w.str_field("name")?,
+                shape: w.usize_vec("shape")?,
+                offset: w.usize_field("offset")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelMeta {
+        n_layers: v.usize_field("n_layers")?,
+        d_model: v.usize_field("d_model")?,
+        n_heads: v.usize_field("n_heads")?,
+        vocab_size: v.usize_field("vocab_size")?,
+        max_len: v.usize_field("max_len")?,
+        param_count: v.f64_field("param_count")? as u64,
+        weights_file: v.str_field("weights_file")?,
+        weights,
+    })
+}
+
+fn decode_program(v: &Value) -> Result<ProgramMeta> {
+    let args = v
+        .arr_field("args")?
+        .iter()
+        .map(|a| {
+            Ok(ArgMeta {
+                name: a.str_field("name")?,
+                shape: a.usize_vec("shape")?,
+                dtype: a.str_field("dtype")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let outs = v
+        .arr_field("outs")?
+        .iter()
+        .map(|o| Ok(OutMeta { shape: o.usize_vec("shape")?, dtype: o.str_field("dtype")? }))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ProgramMeta {
+        file: v.str_field("file")?,
+        args,
+        outs,
+        kind: v.str_field("kind")?,
+        algo: v.get("algo").and_then(|x| x.as_str()).map(String::from),
+        drafter: v.get("drafter").and_then(|x| x.as_str()).map(String::from),
+        model: v.get("model").and_then(|x| x.as_str()).map(String::from),
+        gamma: v.get("gamma").and_then(|x| x.as_usize()),
+    })
+}
+
+impl Manifest {
+    pub fn parse(raw: &str) -> Result<Self> {
+        let v = crate::util::json::parse(raw).context("parsing manifest.json")?;
+        let mut models = HashMap::new();
+        for (k, mv) in v.field("models")?.as_obj().ok_or_else(|| anyhow!("models: not obj"))? {
+            models.insert(k.clone(), decode_model(mv).with_context(|| format!("model {k}"))?);
+        }
+        let mut programs = HashMap::new();
+        for (k, pv) in
+            v.field("programs")?.as_obj().ok_or_else(|| anyhow!("programs: not obj"))?
+        {
+            programs
+                .insert(k.clone(), decode_program(pv).with_context(|| format!("program {k}"))?);
+        }
+        let mut datasets = HashMap::new();
+        for (k, dv) in
+            v.field("datasets")?.as_obj().ok_or_else(|| anyhow!("datasets: not obj"))?
+        {
+            datasets.insert(
+                k.clone(),
+                crate::workload::DatasetInfo {
+                    file: dv.str_field("file")?,
+                    marker: dv.usize_field("marker")? as u32,
+                    count: dv.usize_field("count")?,
+                    mean_len: dv.f64_field("mean_len")?,
+                },
+            );
+        }
+        let m = Manifest {
+            version: v.usize_field("version")? as u32,
+            batch: v.usize_field("batch")?,
+            max_len: v.usize_field("max_len")?,
+            vocab_size: v.usize_field("vocab_size")?,
+            pad_id: v.usize_field("pad_id")? as u32,
+            bos_id: v.usize_field("bos_id")? as u32,
+            eos_id: v.usize_field("eos_id")? as u32,
+            gammas: v.usize_vec("gammas")?,
+            algos: v
+                .arr_field("algos")?
+                .iter()
+                .map(|x| x.as_str().unwrap_or_default().to_string())
+                .collect(),
+            drafters: v
+                .arr_field("drafters")?
+                .iter()
+                .map(|x| x.as_str().unwrap_or_default().to_string())
+                .collect(),
+            models,
+            programs,
+            datasets,
+            fast_build: v.get("fast_build").and_then(|x| x.as_bool()).unwrap_or(false),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to build the AOT bundle",
+                path.display()
+            )
+        })?;
+        Self::parse(&raw)
+    }
+
+    fn validate(&self) -> Result<()> {
+        use crate::models::vocab;
+        if self.version != 1 {
+            return Err(anyhow!("unsupported manifest version {}", self.version));
+        }
+        if self.vocab_size != vocab::SIZE as usize
+            || self.pad_id != vocab::PAD
+            || self.eos_id != vocab::EOS
+        {
+            return Err(anyhow!("manifest vocab layout disagrees with models::vocab"));
+        }
+        if !self.models.contains_key("target") {
+            return Err(anyhow!("manifest missing model 'target'"));
+        }
+        for d in &self.drafters {
+            if !self.models.contains_key(d) {
+                return Err(anyhow!("manifest missing drafter '{d}'"));
+            }
+        }
+        for (name, prog) in &self.programs {
+            if prog.args.is_empty() || prog.outs.is_empty() {
+                return Err(anyhow!("program {name} has empty signature"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramMeta> {
+        self.programs.get(name).ok_or_else(|| {
+            anyhow!(
+                "program '{name}' not in manifest (have: {:?})",
+                self.programs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn program_path(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        Ok(dir.join(&self.program(name)?.file))
+    }
+
+    /// Name of the fused iteration program for (algo, drafter, gamma).
+    pub fn spec_iter_name(&self, algo: &str, drafter: &str, gamma: usize) -> String {
+        format!("spec_iter_{algo}_{drafter}_g{gamma}")
+    }
+}
+
+impl ArgMeta {
+    /// Index of the top-level (python-signature) argument this leaf
+    /// belongs to: `"[0]['embed']"` -> 0, `"[3]"` -> 3.
+    pub fn top_index(&self) -> usize {
+        let inner = self.name.trim_start_matches('[');
+        inner.split(']').next().and_then(|s| s.parse().ok()).unwrap_or(usize::MAX)
+    }
+}
+
+impl ProgramMeta {
+    /// How many leading top-level args are parameter pytrees.
+    pub fn n_param_args(&self) -> usize {
+        if self.kind == "spec_iter" {
+            2 // (params_target, params_drafter, ...)
+        } else {
+            1 // (params, ...)
+        }
+    }
+
+    /// Number of leading flattened args that are weight tensors.
+    pub fn weight_arg_count(&self) -> usize {
+        let n = self.n_param_args();
+        self.args.iter().take_while(|a| a.top_index() < n).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_program_meta() {
+        let j = r#"{"file":"x.hlo.txt","args":[{"name":"[0]['embed']","shape":[256,128],"dtype":"float32"},
+                    {"name":"[1]","shape":[4,96],"dtype":"int32"}],
+                    "outs":[{"shape":[4,96],"dtype":"int32"}],"kind":"prefill","model":"target"}"#;
+        let p = decode_program(&crate::util::json::parse(j).unwrap()).unwrap();
+        assert_eq!(p.kind, "prefill");
+        assert_eq!(p.args[0].shape, vec![256, 128]);
+        assert_eq!(p.args[0].top_index(), 0);
+        assert_eq!(p.args[1].top_index(), 1);
+        assert_eq!(p.weight_arg_count(), 1);
+    }
+
+    #[test]
+    fn spec_iter_weight_args_span_two_pytrees() {
+        let j = r#"{"file":"x","kind":"spec_iter","args":[
+            {"name":"[0]['embed']","shape":[2],"dtype":"float32"},
+            {"name":"[1]['embed']","shape":[2],"dtype":"float32"},
+            {"name":"[2]","shape":[4],"dtype":"int32"}],
+            "outs":[{"shape":[4],"dtype":"int32"}]}"#;
+        let p = decode_program(&crate::util::json::parse(j).unwrap()).unwrap();
+        assert_eq!(p.n_param_args(), 2);
+        assert_eq!(p.weight_arg_count(), 2);
+    }
+}

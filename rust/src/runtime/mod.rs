@@ -1,0 +1,10 @@
+//! Runtime layer: loads and executes the AOT-compiled HLO programs via the
+//! `xla` crate's PJRT CPU client.  See DESIGN.md §2.1 for the program
+//! catalogue and pjrt.rs for the execution model.
+
+pub mod literal;
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ModelMeta, ProgramMeta};
+pub use pjrt::{ExecOutput, Program, Runtime, StateHandle};

@@ -1,0 +1,262 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt`, compiles them on the CPU
+//! client, uploads weights once, and executes programs with device-resident
+//! state.  This is the only module that touches the `xla` crate FFI.
+//!
+//! Two output layouts exist across PJRT builds: results may come back as
+//! one buffer per output leaf (untupled) or as a single tuple buffer.  The
+//! wrapper detects which case it is at first execution and normalises to
+//! host literals for small outputs while keeping large state tensors on
+//! device when the layout permits (see [`ExecOutput`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context};
+
+use super::manifest::{Manifest, ProgramMeta};
+
+/// A compiled program plus its manifest signature.
+pub struct Program {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub meta: ProgramMeta,
+    pub compile_ms: u128,
+}
+
+/// The runtime: client + manifest + lazily compiled programs + uploaded
+/// weights.  `Send`-able behind a mutex; engine keeps it in an `Arc`.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    programs: Mutex<HashMap<String, &'static Program>>,
+    weights: Mutex<HashMap<String, &'static Vec<xla::PjRtBuffer>>>,
+    /// Host literals pinned until their async host->device copies are known
+    /// complete (PJRT's BufferFromHostLiteral copies on a worker thread; the
+    /// literal must outlive the copy).  Engines call [`Runtime::clear_pinned`]
+    /// at batch boundaries, after output readbacks have forced completion.
+    pinned: Mutex<Vec<xla::Literal>>,
+}
+
+// The xla crate wrappers are raw pointers without Send/Sync markers; the
+// PJRT CPU client is thread-safe for our usage pattern (all mutation goes
+// through &self FFI calls which PJRT serialises internally).  The engine
+// additionally serialises all execution behind its own lock.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            programs: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+            pinned: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch the cached) program by manifest name.
+    ///
+    /// Compiled executables are intentionally leaked: they live for the
+    /// process lifetime (a serving binary), which sidesteps self-referential
+    /// lifetimes without refcounting FFI handles.
+    pub fn program(&self, name: &str) -> anyhow::Result<&'static Program> {
+        if let Some(p) = self.programs.lock().unwrap().get(name) {
+            return Ok(p);
+        }
+        let meta = self.manifest.program(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let prog: &'static Program = Box::leak(Box::new(Program {
+            name: name.to_string(),
+            exe,
+            meta,
+            compile_ms: t0.elapsed().as_millis(),
+        }));
+        self.programs.lock().unwrap().insert(name.to_string(), prog);
+        Ok(prog)
+    }
+
+    /// Upload (or fetch cached) weight buffers for a model, in the
+    /// tree-flatten order shared with every program signature.
+    pub fn weights(&self, model: &str) -> anyhow::Result<&'static Vec<xla::PjRtBuffer>> {
+        if let Some(w) = self.weights.lock().unwrap().get(model) {
+            return Ok(w);
+        }
+        let meta = self.manifest.model(model)?.clone();
+        let path = self.dir.join(&meta.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut bufs = Vec::with_capacity(meta.weights.len());
+        for w in &meta.weights {
+            let n: usize = w.shape.iter().product::<usize>().max(1);
+            let slice = floats
+                .get(w.offset..w.offset + n)
+                .ok_or_else(|| anyhow!("weights file too short for {}", w.name))?;
+            let lit = super::literal::f32_literal(slice, &w.shape)?;
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("uploading {}: {e}", w.name))?;
+            self.pinned.lock().unwrap().push(lit);
+            bufs.push(buf);
+        }
+        let leaked: &'static Vec<xla::PjRtBuffer> = Box::leak(Box::new(bufs));
+        self.weights.lock().unwrap().insert(model.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Upload a host literal to the device, pinning it until
+    /// [`Runtime::clear_pinned`] (the copy is asynchronous; see field docs).
+    pub fn upload(&self, lit: xla::Literal) -> anyhow::Result<xla::PjRtBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload: {e}"))?;
+        self.pinned.lock().unwrap().push(lit);
+        Ok(buf)
+    }
+
+    /// Drop pinned upload literals.  Callers must have read back at least
+    /// one output that depends on every outstanding upload (execution
+    /// ordering then guarantees the copies completed).
+    pub fn clear_pinned(&self) {
+        self.pinned.lock().unwrap().clear();
+    }
+
+    /// Execute a program on device buffers, normalising the output layout.
+    pub fn execute(
+        &self,
+        prog: &Program,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<ExecOutput> {
+        if args.len() != prog.meta.args.len() {
+            return Err(anyhow!(
+                "{}: supplied {} args, program expects {}",
+                prog.name,
+                args.len(),
+                prog.meta.args.len()
+            ));
+        }
+        let mut out = prog
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e}", prog.name))?;
+        let row = out
+            .pop()
+            .filter(|r| !r.is_empty())
+            .ok_or_else(|| anyhow!("{}: empty execution result", prog.name))?;
+        let want = prog.meta.outs.len();
+        if row.len() == want {
+            Ok(ExecOutput::Untupled(row))
+        } else if row.len() == 1 {
+            // Single tuple buffer: decompose on the host.
+            let lit = row[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{}: readback: {e}", prog.name))?;
+            let parts = lit.to_tuple().map_err(|e| anyhow!("{}: untuple: {e}", prog.name))?;
+            if parts.len() != want {
+                return Err(anyhow!("{}: tuple arity {} != {}", prog.name, parts.len(), want));
+            }
+            Ok(ExecOutput::Host(parts))
+        } else {
+            Err(anyhow!("{}: unexpected output count {}", prog.name, row.len()))
+        }
+    }
+}
+
+/// Normalised execution output.
+pub enum ExecOutput {
+    /// One device buffer per output leaf (state can stay resident).
+    Untupled(Vec<xla::PjRtBuffer>),
+    /// Host literals (tuple layout forced a readback).
+    Host(Vec<xla::Literal>),
+}
+
+impl ExecOutput {
+    pub fn len(&self) -> usize {
+        match self {
+            ExecOutput::Untupled(v) => v.len(),
+            ExecOutput::Host(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read output `idx` back as an i32 vector.
+    pub fn i32s(&self, idx: usize) -> anyhow::Result<Vec<i32>> {
+        match self {
+            ExecOutput::Untupled(v) => {
+                let lit = v[idx].to_literal_sync().map_err(|e| anyhow!("readback: {e}"))?;
+                Ok(lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?)
+            }
+            ExecOutput::Host(v) => {
+                Ok(v[idx].to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?)
+            }
+        }
+    }
+
+    /// Read output `idx` back as an f32 vector.
+    pub fn f32s(&self, idx: usize) -> anyhow::Result<Vec<f32>> {
+        match self {
+            ExecOutput::Untupled(v) => {
+                let lit = v[idx].to_literal_sync().map_err(|e| anyhow!("readback: {e}"))?;
+                Ok(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?)
+            }
+            ExecOutput::Host(v) => {
+                Ok(v[idx].to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?)
+            }
+        }
+    }
+
+    /// Consume into per-output state handles for carrying across calls.
+    pub fn into_handles(self) -> Vec<StateHandle> {
+        match self {
+            ExecOutput::Untupled(v) => v.into_iter().map(StateHandle::Buf).collect(),
+            ExecOutput::Host(v) => v.into_iter().map(StateHandle::Lit).collect(),
+        }
+    }
+}
+
+/// A carried state tensor: already on device, or a host literal awaiting
+/// (re-)upload — the latter occurs on PJRT builds whose execute returns a
+/// single tuple buffer.
+pub enum StateHandle {
+    Buf(xla::PjRtBuffer),
+    Lit(xla::Literal),
+}
+
+impl StateHandle {
+    /// Materialise as a device buffer (no-op when already resident).
+    pub fn ensure_buffer(self, rt: &Runtime) -> anyhow::Result<xla::PjRtBuffer> {
+        match self {
+            StateHandle::Buf(b) => Ok(b),
+            StateHandle::Lit(l) => rt.upload(l),
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Tiny blocking HTTP client for the examples and load tests (avoids an
+//! HTTP client dependency for loopback calls).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Value};
+
+/// POST a JSON body and return (status, body).
+pub fn post_json(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    read_response(stream)
+}
+
+/// GET a path and return (status, body).
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!("GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    read_response(stream)
+}
+
+fn read_response(mut stream: TcpStream) -> Result<(u16, String)> {
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed response"))?;
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
+}
+
+/// Parsed generate response.
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub tokens: Vec<u32>,
+    pub n_tokens: usize,
+    pub iterations: usize,
+    pub accepted: usize,
+    pub block_efficiency: f64,
+    pub finish: String,
+    pub latency_ms: f64,
+}
+
+/// Generate via the API and parse the response.
+pub fn generate(
+    addr: &str,
+    dataset: &str,
+    max_new_tokens: usize,
+    seed: u64,
+) -> Result<GenerateResponse> {
+    let body = json::to_string(&json::obj(vec![
+        ("dataset", json::str_v(dataset)),
+        ("max_new_tokens", json::num(max_new_tokens as f64)),
+        ("seed", json::num(seed as f64)),
+    ]));
+    let (status, body) = post_json(addr, "/v1/generate", &body)?;
+    if status != 200 {
+        return Err(anyhow!("generate failed: {status}: {body}"));
+    }
+    let v = json::parse(&body)?;
+    Ok(GenerateResponse {
+        tokens: v
+            .get("tokens")
+            .and_then(Value::as_arr)
+            .map(|a| a.iter().filter_map(Value::as_u64).map(|x| x as u32).collect())
+            .unwrap_or_default(),
+        n_tokens: v.usize_field("n_tokens")?,
+        iterations: v.usize_field("iterations")?,
+        accepted: v.usize_field("accepted")?,
+        block_efficiency: v.f64_field("block_efficiency")?,
+        finish: v.str_field("finish")?,
+        latency_ms: v.f64_field("latency_ms")?,
+    })
+}

@@ -1,0 +1,152 @@
+//! Hand-rolled HTTP/1.1 parsing/serialisation — enough protocol for the
+//! JSON API (request line, headers, Content-Length bodies, keep-alive; no
+//! chunked encoding).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::ServerState;
+
+/// A parsed request head + body.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Client sent `Connection: close` — the server must close after
+    /// responding (clients using read-to-EOF depend on this).
+    pub close: bool,
+}
+
+/// Parse one HTTP/1.1 request from a raw byte buffer.
+/// Returns `(request, bytes_consumed)` or None if incomplete.
+pub fn parse_request(buf: &[u8]) -> Result<Option<(Request, usize)>> {
+    let Some(head_end) = find_subsequence(buf, b"\r\n\r\n") else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| anyhow!("non-utf8 header"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let mut content_length = 0usize;
+    let mut close = false;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().map_err(|_| anyhow!("bad content-length"))?;
+            }
+            if k.trim().eq_ignore_ascii_case("connection")
+                && v.trim().eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    Ok(Some((Request { method, path, body, close }, body_start + content_length)))
+}
+
+/// Serialise a response.
+pub fn render_response(status: u16, content_type: &str, body: &str) -> Vec<u8> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    };
+    format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Serve requests on one connection until EOF (keep-alive loop).
+pub fn handle_connection(mut stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    loop {
+        match parse_request(&buf)? {
+            Some((req, consumed)) => {
+                buf.drain(..consumed);
+                let (status, ctype, body) = super::route(&state, &req.method, &req.path, &req.body);
+                stream.write_all(&render_response(status, &ctype, &body))?;
+                if req.close {
+                    return Ok(());
+                }
+            }
+            None => {
+                let n = stream.read(&mut chunk)?;
+                if n == 0 {
+                    return Ok(());
+                }
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.len() > 1 << 20 {
+                    return Err(anyhow!("request too large"));
+                }
+            }
+        }
+    }
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_get() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        let (req, used) = parse_request(raw).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+        assert_eq!(used, raw.len());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd";
+        let (req, used) = parse_request(raw).unwrap().unwrap();
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(used, raw.len());
+    }
+
+    #[test]
+    fn incomplete_returns_none() {
+        assert!(parse_request(b"GET / HT").unwrap().is_none());
+        assert!(parse_request(b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nab")
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn pipelined_requests_consume_correctly() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let (r1, used) = parse_request(raw).unwrap().unwrap();
+        assert_eq!(r1.path, "/a");
+        let (r2, _) = parse_request(&raw[used..]).unwrap().unwrap();
+        assert_eq!(r2.path, "/b");
+    }
+
+    #[test]
+    fn response_has_content_length() {
+        let r = render_response(200, "text/plain", "hello");
+        let s = String::from_utf8(r).unwrap();
+        assert!(s.contains("content-length: 5"));
+        assert!(s.ends_with("hello"));
+    }
+}

@@ -1,0 +1,115 @@
+//! HTTP/1.1 JSON front-end over std::net (thread-per-connection; the
+//! offline image has no tokio, and the engine serialises on one device
+//! anyway — see DESIGN.md §3).
+//!
+//! Endpoints:
+//! * `POST /v1/generate` — body `{"prompt_tokens": [...], "dataset":
+//!   "gsm8k", "max_new_tokens": 48, "seed": 0}`; either explicit tokens or
+//!   a dataset to sample a prompt from.  Responds with generated tokens +
+//!   decode stats.
+//! * `GET /metrics`  — plain-text metrics exposition.
+//! * `GET /healthz`  — liveness.
+
+pub mod client;
+pub mod http;
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenRequest};
+use crate::util::json::{self, Value};
+use crate::workload::Dataset;
+
+/// Parsed generate-request body.
+#[derive(Debug, Default)]
+pub struct GenerateBody {
+    pub prompt_tokens: Option<Vec<u32>>,
+    pub dataset: Option<String>,
+    pub max_new_tokens: Option<usize>,
+    pub seed: Option<u64>,
+}
+
+impl GenerateBody {
+    pub fn parse(body: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(body)?;
+        let v = json::parse(text)?;
+        Ok(GenerateBody {
+            prompt_tokens: v.get("prompt_tokens").and_then(Value::as_arr).map(|a| {
+                a.iter().filter_map(Value::as_u64).map(|x| x as u32).collect()
+            }),
+            dataset: v.get("dataset").and_then(Value::as_str).map(String::from),
+            max_new_tokens: v.get("max_new_tokens").and_then(Value::as_usize),
+            seed: v.get("seed").and_then(Value::as_u64),
+        })
+    }
+}
+
+/// Shared server state.
+pub struct ServerState {
+    pub coordinator: Coordinator,
+    pub datasets: Vec<Dataset>,
+}
+
+/// Accept loop: one thread per connection (loopback serving scale).
+pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
+    loop {
+        let (stream, _) = listener.accept()?;
+        let st = state.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = http::handle_connection(stream, st) {
+                eprintln!("[server] connection error: {e:#}");
+            }
+        });
+    }
+}
+
+/// Route one parsed request to (status, content-type, body).
+pub fn route(state: &ServerState, method: &str, path: &str, body: &[u8]) -> (u16, String, String) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, "text/plain".into(), "ok\n".into()),
+        ("GET", "/metrics") => (200, "text/plain".into(), state.coordinator.metrics.render()),
+        ("POST", "/v1/generate") => generate(state, body),
+        _ => (404, "text/plain".into(), "not found\n".into()),
+    }
+}
+
+fn generate(state: &ServerState, body: &[u8]) -> (u16, String, String) {
+    let req = match GenerateBody::parse(body) {
+        Ok(r) => r,
+        Err(e) => return (400, "text/plain".into(), format!("bad request: {e}\n")),
+    };
+    let prompt = match (&req.prompt_tokens, &req.dataset) {
+        (Some(p), _) if p.len() >= 2 => p.clone(),
+        (Some(_), _) => return (400, "text/plain".into(), "prompt too short\n".into()),
+        (None, Some(ds)) => {
+            let seed = req.seed.unwrap_or(0);
+            match state.datasets.iter().find(|d| &d.name == ds) {
+                Some(d) => d.sample(1, seed).pop().unwrap(),
+                None => return (400, "text/plain".into(), format!("unknown dataset {ds}\n")),
+            }
+        }
+        (None, None) => {
+            return (400, "text/plain".into(), "need prompt_tokens or dataset\n".into())
+        }
+    };
+    let t0 = Instant::now();
+    let gen = GenRequest { prompt, max_new_tokens: req.max_new_tokens, enqueued: t0 };
+    match state.coordinator.generate(gen) {
+        Ok(row) => {
+            let resp = json::obj(vec![
+                ("tokens", json::arr_u32(&row.tokens)),
+                ("n_tokens", json::num(row.tokens.len() as f64)),
+                ("iterations", json::num(row.iterations as f64)),
+                ("accepted", json::num(row.accepted as f64)),
+                ("block_efficiency", json::num(row.block_efficiency())),
+                ("finish", json::str_v(&format!("{:?}", row.finish))),
+                ("latency_ms", json::num(t0.elapsed().as_secs_f64() * 1e3)),
+            ]);
+            (200, "application/json".into(), json::to_string(&resp))
+        }
+        Err(e) => (429, "text/plain".into(), format!("{e:#}\n")),
+    }
+}

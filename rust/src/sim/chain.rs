@@ -1,0 +1,139 @@
+//! Synthetic (target, draft) model pairs for distribution-level studies.
+//!
+//! The paper's claims (Theorems 1/2, the §2 example) are statements about
+//! *pairs of conditional distributions* — no transformer needed.  This
+//! module provides cheap model pairs over which block efficiency, the
+//! optimality bound, and losslessness can be measured exactly (small cases)
+//! or by Monte Carlo, independent of the NN serving substrate.
+
+use crate::verify::dist::normalize;
+use crate::verify::Rng;
+
+/// A pair of order-1 Markov language models over a small vocabulary: the
+/// next-token distribution depends only on the previous token.
+#[derive(Clone, Debug)]
+pub struct MarkovPair {
+    pub vocab: usize,
+    /// target rows: `vocab` distributions of length `vocab` (row = prev tok)
+    target: Vec<Vec<f64>>,
+    draft: Vec<Vec<f64>>,
+    /// initial distributions (empty-context row)
+    target0: Vec<f64>,
+    draft0: Vec<f64>,
+}
+
+impl MarkovPair {
+    /// A random pair whose draft is a `mix`-interpolation between the
+    /// target and an independent random model: `mix = 1` ⇒ draft == target
+    /// (perfect drafter), `mix = 0` ⇒ unrelated drafter.
+    pub fn random(vocab: usize, mix: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let row = |rng: &mut Rng| {
+            let mut w: Vec<f64> = (0..vocab).map(|_| rng.uniform().powi(2) + 1e-3).collect();
+            normalize(&mut w);
+            w
+        };
+        let target: Vec<Vec<f64>> = (0..vocab).map(|_| row(&mut rng)).collect();
+        let noise: Vec<Vec<f64>> = (0..vocab).map(|_| row(&mut rng)).collect();
+        let draft: Vec<Vec<f64>> = target
+            .iter()
+            .zip(&noise)
+            .map(|(t, n)| {
+                let mut d: Vec<f64> =
+                    t.iter().zip(n).map(|(a, b)| mix * a + (1.0 - mix) * b).collect();
+                normalize(&mut d);
+                d
+            })
+            .collect();
+        let target0 = row(&mut rng);
+        let mut draft0: Vec<f64> = target0
+            .iter()
+            .zip(row(&mut rng).iter())
+            .map(|(a, b)| mix * a + (1.0 - mix) * b)
+            .collect();
+        normalize(&mut draft0);
+        Self { vocab, target, draft, target0, draft0 }
+    }
+
+    /// Context-independent pair (every row identical) — the paper's §2
+    /// Bernoulli setting generalised to any vocab.
+    pub fn iid(target: Vec<f64>, draft: Vec<f64>) -> Self {
+        let vocab = target.len();
+        assert_eq!(vocab, draft.len());
+        Self {
+            vocab,
+            target: vec![target.clone(); vocab],
+            draft: vec![draft.clone(); vocab],
+            target0: target,
+            draft0: draft,
+        }
+    }
+
+    #[inline]
+    pub fn target_row(&self, ctx_last: Option<u32>) -> &[f64] {
+        match ctx_last {
+            Some(t) => &self.target[t as usize],
+            None => &self.target0,
+        }
+    }
+
+    #[inline]
+    pub fn draft_row(&self, ctx_last: Option<u32>) -> &[f64] {
+        match ctx_last {
+            Some(t) => &self.draft[t as usize],
+            None => &self.draft0,
+        }
+    }
+
+    /// Expected per-token acceptance `1 - TV` averaged over target rows —
+    /// a quick drafter-quality diagnostic.
+    pub fn mean_overlap(&self) -> f64 {
+        let overlap = |p: &[f64], q: &[f64]| -> f64 {
+            p.iter().zip(q).map(|(a, b)| a.min(*b)).sum()
+        };
+        let s: f64 = self
+            .target
+            .iter()
+            .zip(&self.draft)
+            .map(|(t, d)| overlap(t, d))
+            .sum::<f64>()
+            + overlap(&self.target0, &self.draft0);
+        s / (self.vocab + 1) as f64
+    }
+}
+
+/// The §2 motivating example: vocab {A=0, B=1}, `M_b = (1/3, 2/3)`,
+/// `M_s = (2/3, 1/3)`, context-independent.
+pub fn bernoulli_example() -> MarkovPair {
+    MarkovPair::iid(vec![1.0 / 3.0, 2.0 / 3.0], vec![2.0 / 3.0, 1.0 / 3.0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_distributions() {
+        let p = MarkovPair::random(8, 0.7, 3);
+        for t in 0..8 {
+            let s: f64 = p.target_row(Some(t as u32)).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            let s: f64 = p.draft_row(Some(t as u32)).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mix_controls_overlap() {
+        let hi = MarkovPair::random(8, 0.95, 3).mean_overlap();
+        let lo = MarkovPair::random(8, 0.2, 3).mean_overlap();
+        assert!(hi > lo, "{hi} vs {lo}");
+        assert!(MarkovPair::random(8, 1.0, 3).mean_overlap() > 0.999);
+    }
+
+    #[test]
+    fn bernoulli_overlap_is_two_thirds() {
+        let p = bernoulli_example();
+        assert!((p.mean_overlap() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! Exact (enumeration-based) expected-acceptance computations for small
+//! model pairs — the analytic side of Theorem 2 and the §2 example.
+//!
+//! All quantities are per-iteration expectations over draft blocks
+//! `X^gamma ~ M_s^gamma`:
+//!
+//! * [`expected_tau_token`] — `E[tau]` under Algorithm 1:
+//!   `sum_l sum_{x^l} prod_i min(M_b(x_i|x^{i-1}), M_s(x_i|x^{i-1}))`.
+//! * [`expected_tau_block`] — `E[tau]` under Algorithm 2 (Lemma 3):
+//!   `sum_l sum_{x^l} M_s(x^l) * p_l(x^l)`.
+//! * [`fullinfo_bound`] — the Lemma 8 / full-information upper bound:
+//!   `sum_l sum_{x^l} min(M_s(x^l), M_b(x^l))` over *joint* probabilities.
+//!
+//! Complexity is `O(V^gamma)` — intended for `V <= 8`, `gamma <= 6`.
+
+use super::chain::MarkovPair;
+
+fn recurse<F: FnMut(usize, f64, f64, f64, f64)>(
+    pair: &MarkovPair,
+    depth: usize,
+    max_depth: usize,
+    last: Option<u32>,
+    qs_joint: f64,
+    ps_joint: f64,
+    min_prod: f64,
+    p_chain: f64,
+    visit: &mut F,
+) {
+    if depth == max_depth {
+        return;
+    }
+    let trow = pair.target_row(last);
+    let drow = pair.draft_row(last);
+    for x in 0..pair.vocab {
+        let q = drow[x];
+        let p = trow[x];
+        if q <= 0.0 && p <= 0.0 {
+            continue;
+        }
+        let qs2 = qs_joint * q;
+        let ps2 = ps_joint * p;
+        let min2 = min_prod * p.min(q);
+        // Eq. 8 chain with zero-draft guard (q = 0 ⇒ path has zero draft
+        // probability; contributes nothing).
+        let pch2 = if q > 0.0 { (p_chain * p / q).min(1.0) } else { 0.0 };
+        visit(depth + 1, qs2, ps2, min2, pch2);
+        recurse(pair, depth + 1, max_depth, Some(x as u32), qs2, ps2, min2, pch2, visit);
+    }
+}
+
+/// `E[tau]` for token verification (Algorithm 1), exact.
+pub fn expected_tau_token(pair: &MarkovPair, gamma: usize) -> f64 {
+    let mut total = 0.0;
+    recurse(pair, 0, gamma, None, 1.0, 1.0, 1.0, 1.0, &mut |_, _, _, min2, _| {
+        total += min2;
+    });
+    total
+}
+
+/// `E[tau]` for block verification (Algorithm 2 / Lemma 3), exact.
+pub fn expected_tau_block(pair: &MarkovPair, gamma: usize) -> f64 {
+    let mut total = 0.0;
+    recurse(pair, 0, gamma, None, 1.0, 1.0, 1.0, 1.0, &mut |_, qs, _, _, pch| {
+        total += qs * pch;
+    });
+    total
+}
+
+/// The full-information optimal-transport upper bound (Lemma 8).
+pub fn fullinfo_bound(pair: &MarkovPair, gamma: usize) -> f64 {
+    let mut total = 0.0;
+    recurse(pair, 0, gamma, None, 1.0, 1.0, 1.0, 1.0, &mut |_, qs, ps, _, _| {
+        total += qs.min(ps);
+    });
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::chain::bernoulli_example;
+
+    /// The paper's §2 numbers: E[accepted] = 10/9 (token), 11/9 (block),
+    /// 12/9 (full-information ideal) at gamma = 2.
+    #[test]
+    fn motivating_example_exact() {
+        let pair = bernoulli_example();
+        let tok = expected_tau_token(&pair, 2);
+        let blk = expected_tau_block(&pair, 2);
+        let ideal = fullinfo_bound(&pair, 2);
+        assert!((tok - 10.0 / 9.0).abs() < 1e-12, "token {tok}");
+        assert!((blk - 11.0 / 9.0).abs() < 1e-12, "block {blk}");
+        assert!((ideal - 12.0 / 9.0).abs() < 1e-12, "ideal {ideal}");
+    }
+
+    /// Theorem 2 ordering on random pairs: token <= block <= full-info.
+    #[test]
+    fn ordering_holds_on_random_pairs() {
+        for seed in 0..30 {
+            let mix = 0.2 + 0.6 * (seed as f64 / 30.0);
+            let pair = MarkovPair::random(4, mix, seed);
+            for gamma in 1..=4 {
+                let t = expected_tau_token(&pair, gamma);
+                let b = expected_tau_block(&pair, gamma);
+                let f = fullinfo_bound(&pair, gamma);
+                assert!(b >= t - 1e-12, "seed {seed} gamma {gamma}: {b} < {t}");
+                assert!(f >= b - 1e-12, "seed {seed} gamma {gamma}: {f} < {b}");
+            }
+        }
+    }
+
+    /// At gamma = 1 the three quantities coincide (1 - TV distance).
+    #[test]
+    fn gamma1_all_equal() {
+        let pair = MarkovPair::random(5, 0.5, 7);
+        let t = expected_tau_token(&pair, 1);
+        let b = expected_tau_block(&pair, 1);
+        let f = fullinfo_bound(&pair, 1);
+        assert!((t - b).abs() < 1e-12 && (b - f).abs() < 1e-12);
+    }
+
+    /// Perfect drafter: everything is accepted, E[tau] = gamma.
+    #[test]
+    fn perfect_drafter_accepts_everything() {
+        let pair = MarkovPair::random(4, 1.0, 11);
+        for gamma in 1..=4 {
+            assert!((expected_tau_block(&pair, gamma) - gamma as f64).abs() < 1e-9);
+            assert!((expected_tau_token(&pair, gamma) - gamma as f64).abs() < 1e-9);
+        }
+    }
+}

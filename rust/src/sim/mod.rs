@@ -1,0 +1,51 @@
+//! Distribution-level simulation substrate (no NN, no device).
+//!
+//! Everything the paper proves is a statement about pairs of conditional
+//! distributions; this module lets us check those statements exactly
+//! ([`exact`]) and by Monte Carlo ([`specdec`]) in microseconds, and
+//! regenerates the §2 motivating example.  The NN serving path (engine/)
+//! produces the paper's *measured* numbers; this module produces its
+//! *theoretical* ones.
+
+pub mod chain;
+pub mod exact;
+pub mod specdec;
+
+pub use chain::{bernoulli_example, MarkovPair};
+pub use specdec::{sample_target, simulate, specdec_prefix, SimStats};
+
+/// The §2 motivating-example report (E0 in DESIGN.md): exact values for
+/// token / block / full-information at gamma = 2 plus MC confirmation.
+pub struct MotivatingExample {
+    pub exact_token: f64,
+    pub exact_block: f64,
+    pub exact_ideal: f64,
+    pub mc_token: f64,
+    pub mc_block: f64,
+}
+
+pub fn motivating_example(mc_tokens: usize, seed: u64) -> MotivatingExample {
+    let pair = bernoulli_example();
+    MotivatingExample {
+        exact_token: exact::expected_tau_token(&pair, 2),
+        exact_block: exact::expected_tau_block(&pair, 2),
+        exact_ideal: exact::fullinfo_bound(&pair, 2),
+        mc_token: simulate(&pair, 2, crate::verify::Algo::Token, mc_tokens, seed).mean_tau(),
+        mc_block: simulate(&pair, 2, crate::verify::Algo::Block, mc_tokens, seed).mean_tau(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn motivating_example_report() {
+        let r = motivating_example(100_000, 1);
+        assert!((r.exact_token - 10.0 / 9.0).abs() < 1e-12);
+        assert!((r.exact_block - 11.0 / 9.0).abs() < 1e-12);
+        assert!((r.exact_ideal - 12.0 / 9.0).abs() < 1e-12);
+        assert!((r.mc_token - r.exact_token).abs() < 0.02);
+        assert!((r.mc_block - r.exact_block).abs() < 0.02);
+    }
+}

@@ -1,0 +1,202 @@
+//! Monte-Carlo speculative decoding at the distribution level (no NN):
+//! drafts are sampled from the pair's draft chain, verified with any of the
+//! three algorithms, and per-iteration acceptance statistics collected.
+//!
+//! This is the fast harness behind the optimality/losslessness tests and
+//! the `simulate` example; the real serving numbers come from the engine.
+
+use crate::verify::dist::inv_cdf;
+use crate::verify::{self, Algo, GreedyState, ProbMatrix, Rng};
+
+use super::chain::MarkovPair;
+
+/// Statistics from a simulated decode.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub iterations: usize,
+    pub tokens_emitted: usize,
+    pub accepted_total: usize,
+    /// histogram of tau values, length gamma + 1
+    pub tau_hist: Vec<usize>,
+}
+
+impl SimStats {
+    /// Paper "block efficiency": mean decoded tokens per target call.
+    pub fn block_efficiency(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.tokens_emitted as f64 / self.iterations as f64
+    }
+
+    pub fn mean_tau(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.accepted_total as f64 / self.iterations as f64
+    }
+}
+
+/// One verification iteration over the pair: draft `gamma` tokens from the
+/// draft chain, score both chains along the path, verify.
+/// Returns (emitted tokens, tau, updated greedy state).
+pub fn run_iteration(
+    pair: &MarkovPair,
+    last: Option<u32>,
+    gamma: usize,
+    algo: Algo,
+    rng: &mut Rng,
+    greedy_state: &GreedyState,
+) -> (Vec<u32>, usize, GreedyState) {
+    let v = pair.vocab;
+    let mut ps_rows: Vec<Vec<f64>> = Vec::with_capacity(gamma + 1);
+    let mut qs_rows: Vec<Vec<f64>> = Vec::with_capacity(gamma);
+    let mut drafts: Vec<u32> = Vec::with_capacity(gamma);
+    let mut cur = last;
+    for _ in 0..gamma {
+        let q = pair.draft_row(cur).to_vec();
+        let p = pair.target_row(cur).to_vec();
+        let x = inv_cdf(&q, rng.uniform()) as u32;
+        drafts.push(x);
+        qs_rows.push(q);
+        ps_rows.push(p);
+        cur = Some(x);
+    }
+    ps_rows.push(pair.target_row(cur).to_vec());
+    let ps = ProbMatrix::from_rows(ps_rows);
+    let qs = ProbMatrix::from_rows(qs_rows);
+    let etas: Vec<f64> = (0..gamma).map(|_| rng.uniform()).collect();
+    let u = rng.uniform();
+    debug_assert_eq!(ps.vocab, v);
+
+    match algo {
+        Algo::Greedy => {
+            let (out, st) = verify::greedy_verify(&ps, &qs, &drafts, &etas, u, greedy_state);
+            (out.emitted, out.tau, st)
+        }
+        _ => {
+            let out = verify::verify(algo, &ps, &qs, &drafts, &etas, u);
+            (out.emitted, out.tau, greedy_state.clone())
+        }
+    }
+}
+
+/// Decode `n_tokens` tokens via speculative decoding over the pair.
+pub fn simulate(
+    pair: &MarkovPair,
+    gamma: usize,
+    algo: Algo,
+    n_tokens: usize,
+    seed: u64,
+) -> SimStats {
+    let mut rng = Rng::new(seed);
+    let mut stats = SimStats { tau_hist: vec![0; gamma + 1], ..Default::default() };
+    let mut last: Option<u32> = None;
+    let mut greedy = GreedyState::new(gamma);
+    while stats.tokens_emitted < n_tokens {
+        let (emitted, tau, st) = run_iteration(pair, last, gamma, algo, &mut rng, &greedy);
+        greedy = st;
+        stats.iterations += 1;
+        stats.tokens_emitted += emitted.len();
+        stats.accepted_total += tau;
+        stats.tau_hist[tau] += 1;
+        last = emitted.last().copied().or(last);
+    }
+    stats
+}
+
+/// Ancestral sampling from the *target* chain only — ground truth for
+/// losslessness checks.
+pub fn sample_target(pair: &MarkovPair, n_tokens: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n_tokens);
+    let mut last = None;
+    for _ in 0..n_tokens {
+        let x = inv_cdf(pair.target_row(last), rng.uniform()) as u32;
+        out.push(x);
+        last = Some(x);
+    }
+    out
+}
+
+/// Decode a fixed-length prefix with speculative decoding (for empirical
+/// distribution comparison against [`sample_target`]).
+pub fn specdec_prefix(
+    pair: &MarkovPair,
+    gamma: usize,
+    algo: Algo,
+    n_tokens: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let mut out: Vec<u32> = Vec::with_capacity(n_tokens + gamma + 1);
+    let mut greedy = GreedyState::new(gamma);
+    while out.len() < n_tokens {
+        let (emitted, _tau, st) =
+            run_iteration(pair, out.last().copied(), gamma, algo, rng, &greedy);
+        greedy = st;
+        out.extend_from_slice(&emitted);
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::chain::bernoulli_example;
+    use crate::sim::exact;
+
+    /// MC block efficiency matches the exact enumeration within tolerance.
+    #[test]
+    fn mc_matches_exact_bernoulli() {
+        let pair = bernoulli_example();
+        let gamma = 2;
+        for (algo, want) in [(Algo::Token, 10.0 / 9.0), (Algo::Block, 11.0 / 9.0)] {
+            let stats = simulate(&pair, gamma, algo, 200_000, 17);
+            let got = stats.mean_tau();
+            assert!((got - want).abs() < 0.01, "{algo}: {got} vs {want}");
+        }
+    }
+
+    /// Per-iteration E[tau] from a fresh context matches the exact
+    /// enumeration (simulate() mixes contexts across iterations, so this
+    /// test drives single iterations from the empty context).
+    #[test]
+    fn mc_matches_exact_markov() {
+        let pair = MarkovPair::random(4, 0.6, 5);
+        let gamma = 3;
+        let want_t = exact::expected_tau_token(&pair, gamma);
+        let want_b = exact::expected_tau_block(&pair, gamma);
+        let fresh = GreedyState::new(gamma);
+        let n = 60_000;
+        let (mut tot_t, mut tot_b) = (0usize, 0usize);
+        let mut rng_t = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        for _ in 0..n {
+            tot_t += run_iteration(&pair, None, gamma, Algo::Token, &mut rng_t, &fresh).1;
+            tot_b += run_iteration(&pair, None, gamma, Algo::Block, &mut rng_b, &fresh).1;
+        }
+        let got_t = tot_t as f64 / n as f64;
+        let got_b = tot_b as f64 / n as f64;
+        assert!((got_t - want_t).abs() < 0.02, "token {got_t} vs {want_t}");
+        assert!((got_b - want_b).abs() < 0.02, "block {got_b} vs {want_b}");
+    }
+
+    /// Greedy accepts at least as much as block *per iteration* from a
+    /// fresh state (Theorem 3) — checked in expectation.
+    #[test]
+    fn greedy_beats_block_single_iteration() {
+        let pair = MarkovPair::random(6, 0.5, 9);
+        let gamma = 4;
+        let mut rng_b = Rng::new(123);
+        let mut rng_g = Rng::new(123);
+        let fresh = GreedyState::new(gamma);
+        let (mut accb, mut accg) = (0usize, 0usize);
+        for _ in 0..30_000 {
+            let (_, tb, _) = run_iteration(&pair, None, gamma, Algo::Block, &mut rng_b, &fresh);
+            let (_, tg, _) = run_iteration(&pair, None, gamma, Algo::Greedy, &mut rng_g, &fresh);
+            accb += tb;
+            accg += tg;
+        }
+        assert!(accg as f64 >= accb as f64 * 0.995, "greedy {accg} < block {accb}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Small statistics toolkit for the experiment harness: seed aggregation
+//! (mean ± std, as in the paper's tables), histograms and chi-square-ish
+//! distribution distance used by the losslessness tests.
+
+/// Mean and sample standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Relative improvement in percent: `(new - old) / old * 100`.
+pub fn improvement_pct(old: f64, new: f64) -> f64 {
+    if old == 0.0 {
+        return 0.0;
+    }
+    (new - old) / old * 100.0
+}
+
+/// A `mean ± std` cell as the paper prints them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cell {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Cell {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        let (mean, std) = mean_std(xs);
+        Cell { mean, std }
+    }
+}
+
+impl std::fmt::Display for Cell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.2} ± {:.2}", self.mean, self.std)
+    }
+}
+
+/// Per-seed paired improvement cell: the paper computes improvement per
+/// seed and then averages, which is what produces its small stds.
+pub fn paired_improvement(old: &[f64], new: &[f64]) -> Cell {
+    let imps: Vec<f64> =
+        old.iter().zip(new).map(|(o, n)| improvement_pct(*o, *n)).collect();
+    Cell::from_samples(&imps)
+}
+
+/// Empirical distribution over fixed-length token sequences.
+pub mod empirical {
+    use std::collections::HashMap;
+
+    #[derive(Default, Clone, Debug)]
+    pub struct SeqDist {
+        pub counts: HashMap<Vec<u32>, u64>,
+        pub total: u64,
+    }
+
+    impl SeqDist {
+        pub fn add(&mut self, seq: &[u32]) {
+            *self.counts.entry(seq.to_vec()).or_insert(0) += 1;
+            self.total += 1;
+        }
+
+        /// Total-variation distance to another empirical distribution.
+        pub fn tv(&self, other: &SeqDist) -> f64 {
+            let mut keys: std::collections::HashSet<&Vec<u32>> =
+                self.counts.keys().collect();
+            keys.extend(other.counts.keys());
+            let mut s = 0.0;
+            for k in keys {
+                let p = *self.counts.get(k).unwrap_or(&0) as f64 / self.total.max(1) as f64;
+                let q =
+                    *other.counts.get(k).unwrap_or(&0) as f64 / other.total.max(1) as f64;
+                s += (p - q).abs();
+            }
+            0.5 * s
+        }
+
+        /// TV distance to an exact distribution given by a probability fn.
+        pub fn tv_exact(&self, prob: impl Fn(&[u32]) -> f64, support: &[Vec<u32>]) -> f64 {
+            let mut s = 0.0;
+            for k in support {
+                let p = *self.counts.get(k).unwrap_or(&0) as f64 / self.total.max(1) as f64;
+                s += (p - prob(k)).abs();
+            }
+            0.5 * s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+
+    #[test]
+    fn improvement() {
+        assert!((improvement_pct(2.0, 2.2) - 10.0).abs() < 1e-9);
+        let c = paired_improvement(&[2.0, 4.0], &[2.2, 4.4]);
+        assert!((c.mean - 10.0).abs() < 1e-9);
+        assert!(c.std < 1e-9);
+    }
+
+    #[test]
+    fn seq_dist_tv() {
+        use empirical::SeqDist;
+        let mut a = SeqDist::default();
+        let mut b = SeqDist::default();
+        for _ in 0..50 {
+            a.add(&[0]);
+            b.add(&[1]);
+        }
+        assert!((a.tv(&b) - 1.0).abs() < 1e-12);
+        assert_eq!(a.tv(&a), 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal `--flag value` CLI parser for the launcher and examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: a subcommand, `--key value` options and bare
+/// positional args.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // flag followed by value, or boolean flag
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.options.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("tables --table 1 --prompts 64");
+        assert_eq!(a.subcommand.as_deref(), Some("tables"));
+        assert_eq!(a.get("table"), Some("1"));
+        assert_eq!(a.usize_or("prompts", 0).unwrap(), 64);
+    }
+
+    #[test]
+    fn equals_form_and_bool_flags() {
+        let a = parse("run --gamma=8 --verbose --seed 3");
+        assert_eq!(a.get("gamma"), Some("8"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 3);
+        assert_eq!(a.u64_or("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("run --gamma x");
+        assert!(a.usize_or("gamma", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("serve --quiet");
+        assert!(a.flag("quiet"));
+    }
+}

@@ -1,0 +1,474 @@
+//! In-tree JSON parser/serialiser (RFC 8259 subset sufficient for the
+//! artifact bundle and the HTTP API).
+//!
+//! The build image is offline with only the `xla` crate closure cached, so
+//! serde/serde_json are unavailable; this module is the substrate instead
+//! (DESIGN.md §3).  Supports the full JSON data model with f64 numbers,
+//! `\uXXXX` escapes (BMP + surrogate pairs) and nesting-depth limits.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    // ------------------------------------------------------------------
+    // Typed accessors (used pervasively by manifest/workload/server code).
+    // ------------------------------------------------------------------
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+
+    /// `obj.field` access with a descriptive error.
+    pub fn field(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow!("missing JSON field '{key}'"))
+    }
+
+    pub fn str_field(&self, key: &str) -> Result<String> {
+        Ok(self
+            .field(key)?
+            .as_str()
+            .ok_or_else(|| anyhow!("field '{key}' is not a string"))?
+            .to_string())
+    }
+
+    pub fn usize_field(&self, key: &str) -> Result<usize> {
+        self.field(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+    }
+
+    pub fn f64_field(&self, key: &str) -> Result<f64> {
+        self.field(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+    }
+
+    pub fn arr_field(&self, key: &str) -> Result<&[Value]> {
+        self.field(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("field '{key}' is not an array"))
+    }
+
+    /// Vec<usize> from a numeric array field.
+    pub fn usize_vec(&self, key: &str) -> Result<Vec<usize>> {
+        self.arr_field(key)?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("'{key}': non-numeric entry")))
+            .collect()
+    }
+
+    pub fn f64_vec(&self, key: &str) -> Result<Vec<f64>> {
+        self.arr_field(key)?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("'{key}': non-numeric entry")))
+            .collect()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Parsing
+// ----------------------------------------------------------------------
+
+const MAX_DEPTH: usize = 128;
+
+pub fn parse(input: &str) -> Result<Value> {
+    let b = input.as_bytes();
+    let mut p = Parser { b, i: 0 };
+    p.ws();
+    let v = p.value(0)?;
+    p.ws();
+    if p.i != b.len() {
+        bail!("trailing bytes at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of JSON"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at offset {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nesting exceeds {MAX_DEPTH}");
+        }
+        match self.peek()? {
+            b'n' => self.lit("null", Value::Null),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => self.array(depth),
+            b'{' => self.object(depth),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected byte '{}' at offset {}", c as char, self.i),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value(depth + 1)?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(out));
+                }
+                c => bail!("expected ',' or ']' got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut out = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value(depth + 1)?;
+            out.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(out));
+                }
+                c => bail!("expected ',' or '}}' got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let ch = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate");
+                                }
+                                let c =
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(c).ok_or_else(|| anyhow!("bad codepoint"))?
+                            } else {
+                                char::from_u32(hi).ok_or_else(|| anyhow!("bad codepoint"))?
+                            };
+                            s.push(ch);
+                        }
+                        _ => bail!("invalid escape at {}", self.i),
+                    }
+                }
+                _ => {
+                    // Re-sync on UTF-8 boundaries: push raw bytes until valid.
+                    let start = self.i - 1;
+                    let mut end = self.i;
+                    while end < self.b.len()
+                        && std::str::from_utf8(&self.b[start..end]).is_err()
+                    {
+                        end += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| anyhow!("invalid utf8 in string"))?;
+                    s.push_str(chunk);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        self.i += 4;
+        Ok(u32::from_str_radix(hex, 16)?)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Value::Num(s.parse::<f64>().map_err(|_| anyhow!("bad number '{s}'"))?))
+    }
+}
+
+// ----------------------------------------------------------------------
+// Serialisation
+// ----------------------------------------------------------------------
+
+pub fn to_string(v: &Value) -> String {
+    let mut s = String::new();
+    write_value(&mut s, v);
+    s
+}
+
+fn write_value(out: &mut String, v: &Value) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Value::Str(s) => write_string(out, s),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(out, x);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(out, k);
+                out.push(':');
+                write_value(out, x);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// Convenience constructors for response building.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+
+pub fn str_v(s: &str) -> Value {
+    Value::Str(s.to_string())
+}
+
+pub fn arr_u32(xs: &[u32]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for s in ["null", "true", "false", "0", "-1.5", "1e3", "\"hi\""] {
+            let v = parse(s).unwrap();
+            let v2 = parse(&to_string(&v)).unwrap();
+            assert_eq!(v, v2, "{s}");
+        }
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x\ny"}"#).unwrap();
+        assert_eq!(v.field("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.str_field("c").unwrap(), "x\ny");
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(parse(r#""é""#).unwrap(), Value::Str("é".into()));
+        // surrogate pair: U+1F600
+        assert_eq!(parse(r#""😀""#).unwrap(), Value::Str("😀".into()));
+        // raw utf8 passthrough
+        assert_eq!(parse("\"héllo\"").unwrap(), Value::Str("héllo".into()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("01a").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("[1] trailing").is_err());
+    }
+
+    #[test]
+    fn depth_limit() {
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert!(parse(&deep).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let v = parse(r#"{"n": 3, "xs": [1, 2.5], "s": "a", "b": true}"#).unwrap();
+        assert_eq!(v.usize_field("n").unwrap(), 3);
+        assert_eq!(v.f64_vec("xs").unwrap(), vec![1.0, 2.5]);
+        assert!(v.usize_field("s").is_err());
+        assert_eq!(v.field("b").unwrap().as_bool(), Some(true));
+        assert!(v.field("missing").is_err());
+    }
+
+    #[test]
+    fn serialises_integers_cleanly() {
+        assert_eq!(to_string(&Value::Num(42.0)), "42");
+        assert_eq!(to_string(&Value::Num(0.5)), "0.5");
+        assert_eq!(to_string(&obj(vec![("k", str_v("v"))])), r#"{"k":"v"}"#);
+    }
+
+    #[test]
+    fn large_numeric_array_roundtrip() {
+        let xs: Vec<Value> = (0..1000).map(|i| Value::Num(i as f64 * 0.25)).collect();
+        let s = to_string(&Value::Arr(xs.clone()));
+        assert_eq!(parse(&s).unwrap(), Value::Arr(xs));
+    }
+}

@@ -1,0 +1,5 @@
+//! In-tree utility substrates (the build image is offline; DESIGN.md §3).
+
+pub mod argparse;
+pub mod json;
+pub mod proptest;

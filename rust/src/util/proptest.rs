@@ -1,0 +1,92 @@
+//! Tiny property-testing helper (proptest is unavailable offline): runs a
+//! property over many seeded random cases and reports the first failing
+//! seed so failures are reproducible.
+
+use crate::verify::dist::normalize;
+use crate::verify::Rng;
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(seed));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Random probability vector of length `v` with concentration knob:
+/// smaller `conc` ⇒ peakier distributions (more interesting residuals).
+pub fn rand_dist(rng: &mut Rng, v: usize, conc: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..v)
+        .map(|_| {
+            let u = rng.uniform().max(1e-12);
+            // inverse-CDF of a rough gamma-ish shape
+            u.powf(1.0 / conc.max(1e-3))
+        })
+        .collect();
+    if !normalize(&mut w) {
+        w = vec![1.0 / v as f64; v];
+    }
+    w
+}
+
+/// Random (ps, qs, drafts) verification instance with drafts sampled from
+/// qs (as the real system does).
+pub fn rand_instance(
+    rng: &mut Rng,
+    gamma: usize,
+    v: usize,
+    conc: f64,
+) -> (crate::verify::ProbMatrix, crate::verify::ProbMatrix, Vec<u32>) {
+    use crate::verify::dist::inv_cdf;
+    let ps_rows: Vec<Vec<f64>> = (0..=gamma).map(|_| rand_dist(rng, v, conc)).collect();
+    let qs_rows: Vec<Vec<f64>> = (0..gamma).map(|_| rand_dist(rng, v, conc)).collect();
+    let drafts: Vec<u32> =
+        (0..gamma).map(|i| inv_cdf(&qs_rows[i], rng.uniform()) as u32).collect();
+    (
+        crate::verify::ProbMatrix::from_rows(ps_rows),
+        crate::verify::ProbMatrix::from_rows(qs_rows),
+        drafts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rand_dist_is_normalised() {
+        check("rand_dist normalised", 50, |rng| {
+            let d = rand_dist(rng, 16, 0.5);
+            let s: f64 = d.iter().sum();
+            if (s - 1.0).abs() > 1e-9 {
+                return Err(format!("sum {s}"));
+            }
+            if d.iter().any(|&x| x < 0.0) {
+                return Err("negative prob".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed at seed 0")]
+    fn reports_failing_seed() {
+        check("always-fails", 3, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn rand_instance_shapes() {
+        check("instance shapes", 20, |rng| {
+            let (ps, qs, d) = rand_instance(rng, 4, 8, 1.0);
+            if ps.rows != 5 || qs.rows != 4 || d.len() != 4 {
+                return Err("bad shapes".into());
+            }
+            if d.iter().any(|&x| x >= 8) {
+                return Err("draft out of vocab".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,206 @@
+//! Paper Algorithm 2 — **block verification**, the paper's contribution.
+//!
+//! Couples the acceptance of each draft token with the whole block: a
+//! running probability `p_i = min(1, p_{i-1} * M_b(X_i|.)/M_s(X_i|.))`
+//! (Eq. 8) drives per-length acceptance decisions `h_i` (Eq. 4); unlike
+//! token verification the scan never breaks — the final `tau` is the
+//! longest accepted sub-block.  Residuals follow Eq. 3 with the `p_tau`
+//! coupling.  Theorem 1: lossless; Theorem 2: optimal among valid
+//! verification algorithms.
+
+use super::dist::{pos_diff_sum, residual_pick, ProbMatrix, EPS};
+use super::VerifyOutcome;
+
+/// The coupled acceptance chain: returns `(p, h)` with `p[0] = 1` and, for
+/// `i` in `1..=gamma`, `p[i]` per Eq. 8 and `h[i]` per Eq. 4
+/// (`h[gamma] = p[gamma]`).  `h[0]` is an unused sentinel (1.0).
+pub fn block_chain(ps: &ProbMatrix, qs: &ProbMatrix, drafts: &[u32]) -> (Vec<f64>, Vec<f64>) {
+    let gamma = drafts.len();
+    let mut p = vec![1.0; gamma + 1];
+    let mut h = vec![1.0; gamma + 1];
+    for i in 1..=gamma {
+        let x = drafts[i - 1] as usize;
+        let ratio = ps.row(i - 1)[x] / qs.row(i - 1)[x].max(EPS);
+        p[i] = (p[i - 1] * ratio).min(1.0);
+        if i == gamma {
+            h[i] = p[i];
+        } else {
+            let s_i = pos_diff_sum(p[i], ps.row(i), qs.row(i));
+            let denom = s_i + 1.0 - p[i];
+            h[i] = if denom <= EPS { 1.0 } else { s_i / denom };
+        }
+    }
+    (p, h)
+}
+
+/// Verify a draft block jointly (Algorithm 2).  Same signature/semantics as
+/// [`super::token::token_verify`] — a drop-in replacement, as the paper
+/// stresses.
+pub fn block_verify(
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    etas: &[f64],
+    u_final: f64,
+) -> VerifyOutcome {
+    let gamma = drafts.len();
+    debug_assert_eq!(ps.rows, gamma + 1);
+    debug_assert_eq!(qs.rows, gamma);
+    let (p, h) = block_chain(ps, qs, drafts);
+    // Longest accepted sub-block: no break, keep the max accepted index.
+    let mut tau = 0;
+    for i in 1..=gamma {
+        if etas[i - 1] <= h[i] {
+            tau = i;
+        }
+    }
+    let y = if tau == gamma {
+        residual_pick(ps.row(gamma), ps.row(gamma), u_final)
+    } else {
+        // Eq. 3: residual ~ norm(max(p_tau * M_b - M_s, 0)).
+        let mut res = vec![0.0; ps.vocab];
+        let pr = ps.row(tau);
+        let qr = qs.row(tau);
+        for v in 0..ps.vocab {
+            res[v] = (p[tau] * pr[v] - qr[v]).max(0.0);
+        }
+        residual_pick(&res, pr, u_final)
+    };
+    let mut emitted: Vec<u32> = drafts[..tau].to_vec();
+    emitted.push(y as u32);
+    VerifyOutcome { tau, emitted }
+}
+
+/// Scratch-buffer variant for the engine hot path: avoids the per-call
+/// `Vec` allocations of [`block_verify`] (see EXPERIMENTS.md §Perf).
+pub struct BlockScratch {
+    p: Vec<f64>,
+    h: Vec<f64>,
+    res: Vec<f64>,
+}
+
+impl BlockScratch {
+    pub fn new(gamma: usize, vocab: usize) -> Self {
+        BlockScratch { p: vec![0.0; gamma + 1], h: vec![0.0; gamma + 1], res: vec![0.0; vocab] }
+    }
+
+    pub fn verify(
+        &mut self,
+        ps: &ProbMatrix,
+        qs: &ProbMatrix,
+        drafts: &[u32],
+        etas: &[f64],
+        u_final: f64,
+        emitted: &mut Vec<u32>,
+    ) -> usize {
+        let gamma = drafts.len();
+        self.p[0] = 1.0;
+        self.h[0] = 1.0;
+        for i in 1..=gamma {
+            let x = drafts[i - 1] as usize;
+            let ratio = ps.row(i - 1)[x] / qs.row(i - 1)[x].max(EPS);
+            self.p[i] = (self.p[i - 1] * ratio).min(1.0);
+            self.h[i] = if i == gamma {
+                self.p[i]
+            } else {
+                let s_i = pos_diff_sum(self.p[i], ps.row(i), qs.row(i));
+                let denom = s_i + 1.0 - self.p[i];
+                if denom <= EPS {
+                    1.0
+                } else {
+                    s_i / denom
+                }
+            };
+        }
+        let mut tau = 0;
+        for i in 1..=gamma {
+            if etas[i - 1] <= self.h[i] {
+                tau = i;
+            }
+        }
+        let y = if tau == gamma {
+            residual_pick(ps.row(gamma), ps.row(gamma), u_final)
+        } else {
+            let sum = {
+                let pr = ps.row(tau);
+                let qr = qs.row(tau);
+                let mut s = 0.0;
+                for v in 0..ps.vocab {
+                    let d = (self.p[tau] * pr[v] - qr[v]).max(0.0);
+                    self.res[v] = d;
+                    s += d;
+                }
+                s
+            };
+            if sum <= 0.0 {
+                residual_pick(ps.row(tau), ps.row(tau), u_final)
+            } else {
+                super::dist::inv_cdf(&self.res[..ps.vocab], u_final)
+            }
+        };
+        emitted.clear();
+        emitted.extend_from_slice(&drafts[..tau]);
+        emitted.push(y as u32);
+        tau
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: Vec<Vec<f64>>) -> ProbMatrix {
+        ProbMatrix::from_rows(rows)
+    }
+
+    #[test]
+    fn chain_is_clamped_and_monotone_under_min() {
+        let ps = mat(vec![vec![0.9, 0.1]; 4]);
+        let qs = mat(vec![vec![0.1, 0.9]; 3]);
+        let (p, _) = block_chain(&ps, &qs, &[0, 0, 0]);
+        assert_eq!(p[0], 1.0);
+        for &pi in &p {
+            assert!((0.0..=1.0).contains(&pi));
+        }
+        // ratio 9 each step but clamped at 1.
+        assert_eq!(p[1], 1.0);
+        assert_eq!(p[3], 1.0);
+    }
+
+    #[test]
+    fn no_early_break_can_accept_later_tokens() {
+        // Construct: token 1 rejected (eta > h_1) but token 2's h_2 can
+        // still fire, yielding tau = 2 — impossible for token verification.
+        let ps = mat(vec![vec![0.25, 0.75], vec![0.9, 0.1], vec![0.5, 0.5]]);
+        let qs = mat(vec![vec![0.5, 0.5], vec![0.1, 0.9]]);
+        // X1 = 0: ratio 0.5 -> p1 = 0.5. S1 = max(.5*.9-.1,0)+max(.5*.1-.9,0)
+        // = 0.35; h1 = 0.35/(0.35+0.5) ~ 0.41. eta1 = 0.9 rejects length 1.
+        // X2 = 0: ratio = .9/.1 = 9 -> p2 = min(0.5*9,1) = 1 -> h2 = 1:
+        // accepts length 2 regardless of eta2.
+        let out = block_verify(&ps, &qs, &[0, 0], &[0.9, 0.5], 0.2);
+        assert_eq!(out.tau, 2);
+        assert_eq!(&out.emitted[..2], &[0, 0]);
+    }
+
+    #[test]
+    fn scratch_matches_alloc_version() {
+        let ps = mat(vec![
+            vec![0.2, 0.3, 0.5],
+            vec![0.6, 0.2, 0.2],
+            vec![0.1, 0.1, 0.8],
+        ]);
+        let qs = mat(vec![vec![0.3, 0.3, 0.4], vec![0.2, 0.5, 0.3]]);
+        let drafts = [2u32, 1];
+        for seed in 0..50 {
+            let mut rng = crate::verify::rng::Rng::new(seed);
+            let etas = [rng.uniform(), rng.uniform()];
+            let u = rng.uniform();
+            let a = block_verify(&ps, &qs, &drafts, &etas, u);
+            let mut scratch = BlockScratch::new(2, 3);
+            let mut em = Vec::new();
+            let tau = scratch.verify(&ps, &qs, &drafts, &etas, u, &mut em);
+            assert_eq!(a.tau, tau);
+            assert_eq!(a.emitted, em);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Distribution utilities shared by the verification algorithms, the
+//! simulator and the engine's host-verify path.
+//!
+//! Probabilities are `f64` on the host path (the device kernels are f32;
+//! cross-checking happens through explicit-uniform golden vectors where the
+//! decisions are far from the knife edge).
+
+/// Guard against division by an exactly-zero draft probability (the draft
+/// sampled the token, so its true probability is positive; zeros only arise
+/// from float underflow).
+pub const EPS: f64 = 1e-30;
+
+/// A dense row-major matrix of next-token distributions: `rows x vocab`.
+#[derive(Clone, Debug)]
+pub struct ProbMatrix {
+    pub rows: usize,
+    pub vocab: usize,
+    data: Vec<f64>,
+}
+
+impl ProbMatrix {
+    pub fn new(rows: usize, vocab: usize) -> Self {
+        ProbMatrix { rows, vocab, data: vec![0.0; rows * vocab] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let vocab = rows.first().map(|r| r.len()).unwrap_or(0);
+        let n = rows.len();
+        let mut data = Vec::with_capacity(n * vocab);
+        for r in &rows {
+            assert_eq!(r.len(), vocab, "ragged probability rows");
+            data.extend_from_slice(r);
+        }
+        ProbMatrix { rows: n, vocab, data }
+    }
+
+    pub fn from_flat(rows: usize, vocab: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * vocab);
+        ProbMatrix { rows, vocab, data }
+    }
+
+    /// Build from an f32 slice (device readback path).
+    pub fn from_f32(rows: usize, vocab: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * vocab);
+        ProbMatrix { rows, vocab, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.vocab..(i + 1) * self.vocab]
+    }
+}
+
+/// Inverse-CDF draw over unnormalised non-negative weights.
+///
+/// Mirrors python `ref._inv_cdf`: `searchsorted(cumsum/total, u*(1-1e-7),
+/// side='right')`, i.e. count of cdf entries `<= u'`.
+pub fn inv_cdf(weights: &[f64], u: f64) -> usize {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let target = u * (1.0 - 1e-7) * total;
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w;
+        if acc > target {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// `max(a - b, 0)` elementwise into `out`; returns the sum.
+pub fn pos_diff_into(a: &[f64], b: &[f64], out: &mut [f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]).max(0.0);
+        out[i] = d;
+        s += d;
+    }
+    s
+}
+
+/// `sum(max(scale*a - b, 0))` without materialising the vector (hot path).
+#[inline]
+pub fn pos_diff_sum(scale: f64, a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = scale * a[i] - b[i];
+        if d > 0.0 {
+            s += d;
+        }
+    }
+    s
+}
+
+/// Sample from weights, falling back to `fallback` when degenerate
+/// (ps == qs exactly leaves an all-zero residual).
+pub fn residual_pick(weights: &[f64], fallback: &[f64], u: f64) -> usize {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        inv_cdf(fallback, u)
+    } else {
+        inv_cdf(weights, u)
+    }
+}
+
+/// Total-variation distance between two distributions.
+pub fn tv_distance(p: &[f64], q: &[f64]) -> f64 {
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+/// Normalise in place; returns false (leaving input untouched) if the sum
+/// is non-positive.
+pub fn normalize(w: &mut [f64]) -> bool {
+    let s: f64 = w.iter().sum();
+    if s <= 0.0 {
+        return false;
+    }
+    for x in w.iter_mut() {
+        *x /= s;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_cdf_matches_quantiles() {
+        let w = [0.1, 0.2, 0.3, 0.4];
+        assert_eq!(inv_cdf(&w, 0.05), 0);
+        assert_eq!(inv_cdf(&w, 0.15), 1);
+        assert_eq!(inv_cdf(&w, 0.95), 3);
+        assert_eq!(inv_cdf(&w, 0.999999), 3);
+    }
+
+    #[test]
+    fn inv_cdf_unnormalised() {
+        let w = [1.0, 3.0];
+        assert_eq!(inv_cdf(&w, 0.1), 0);
+        assert_eq!(inv_cdf(&w, 0.5), 1);
+    }
+
+    #[test]
+    fn inv_cdf_degenerate() {
+        assert_eq!(inv_cdf(&[0.0, 0.0], 0.5), 0);
+    }
+
+    #[test]
+    fn pos_diff() {
+        let mut out = [0.0; 3];
+        let s = pos_diff_into(&[0.5, 0.2, 0.3], &[0.1, 0.4, 0.3], &mut out);
+        assert!((s - 0.4).abs() < 1e-12);
+        assert_eq!(out, [0.4, 0.0, 0.0]);
+        assert!((pos_diff_sum(1.0, &[0.5, 0.2, 0.3], &[0.1, 0.4, 0.3]) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tv_symmetry_and_range() {
+        let p = [0.7, 0.3];
+        let q = [0.3, 0.7];
+        assert!((tv_distance(&p, &q) - 0.4).abs() < 1e-12);
+        assert_eq!(tv_distance(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn prob_matrix_roundtrip() {
+        let m = ProbMatrix::from_rows(vec![vec![0.5, 0.5], vec![0.1, 0.9]]);
+        assert_eq!(m.row(1), &[0.1, 0.9]);
+    }
+}

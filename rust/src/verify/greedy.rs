@@ -1,0 +1,238 @@
+//! Paper Appendix C — greedy block verification (Algorithm 4) plus the
+//! distribution-modification bookkeeping of Algorithms 5/6.
+//!
+//! Greedy verification accepts strictly more tokens *per iteration* than
+//! block verification (Theorem 3) but requires the target distribution at
+//! the first `gamma - tau - 1` positions of the *next* iteration to be
+//! replaced per Algorithm 5 (Eq. 23), which hurts future acceptance; the
+//! paper finds it empirically worse end-to-end (Table 3) and recommends
+//! block verification.  We implement it to reproduce Table 3.
+//!
+//! Eq. 23 defines the modified target through *joint* sequence
+//! probabilities: `M_new(x_i|.) ∝ max(M_b(c, X^tau, Y, x^i) -
+//! M_s(c, X^tau, Y, x^i), 0)`.  Factoring the joints, the modified row at a
+//! window position is `norm(max(M_row - R * Ms_row, 0))` with `R` the
+//! running ratio `Ms_joint / M_joint` accumulated along every token emitted
+//! since the window opened (`M` = the composite target the window was
+//! created against).  Algorithm 6 re-modifies the *current* composite on
+//! each rejection, so windows nest; per-sequence state is a list of
+//! [`Layer`]s, oldest first.  (Mirrors python ref.greedy_verify; checked
+//! draw-for-draw via golden vectors.)
+
+use super::dist::{inv_cdf, normalize, ProbMatrix, EPS};
+use super::VerifyOutcome;
+
+/// One active modification window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Layer {
+    /// How many upcoming positions this window still covers.
+    pub remaining: usize,
+    /// Running `Ms_joint / M_joint` ratio since the window opened.
+    pub ratio: f64,
+}
+
+/// Per-sequence greedy verification state (Algorithm 6 line 6).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GreedyState {
+    pub layers: Vec<Layer>,
+}
+
+impl GreedyState {
+    pub fn new(_gamma: usize) -> Self {
+        GreedyState { layers: Vec::new() }
+    }
+}
+
+fn norm_or(row: &mut [f64], fallback: &[f64]) {
+    if !normalize(row) {
+        row.copy_from_slice(fallback);
+    }
+}
+
+/// Greedy block verification (Algorithm 4) under the modified target
+/// dictated by `state` (Algorithms 5/6).  Returns the outcome and the new
+/// state for the next iteration.
+pub fn greedy_verify(
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    etas: &[f64],
+    u_final: f64,
+    state: &GreedyState,
+) -> (VerifyOutcome, GreedyState) {
+    let gamma = drafts.len();
+    debug_assert_eq!(ps.rows, gamma + 1);
+    debug_assert_eq!(qs.rows, gamma);
+    let v = ps.vocab;
+    let n_layers = state.layers.len();
+
+    // Walk positions 0..=gamma: composite rows, below-layer rows and ratio
+    // snapshots along the draft path.
+    let mut comp: Vec<Vec<f64>> = Vec::with_capacity(gamma + 1);
+    let mut below: Vec<Vec<Vec<f64>>> = Vec::with_capacity(gamma + 1);
+    let mut ratio_snap: Vec<Vec<f64>> = Vec::with_capacity(gamma + 1);
+    let mut cur_r: Vec<f64> = state.layers.iter().map(|l| l.ratio).collect();
+    for i in 0..=gamma {
+        let mut row = ps.row(i).to_vec();
+        let mut below_i: Vec<Vec<f64>> = Vec::with_capacity(n_layers);
+        for (l, layer) in state.layers.iter().enumerate() {
+            below_i.push(row.clone());
+            if layer.remaining > i && i < gamma {
+                let q = qs.row(i);
+                for x in 0..v {
+                    row[x] = (row[x] - cur_r[l] * q[x]).max(0.0);
+                }
+                let q_owned = q.to_vec();
+                norm_or(&mut row, &q_owned);
+            }
+        }
+        comp.push(row);
+        ratio_snap.push(cur_r.clone());
+        if i < gamma {
+            let x = drafts[i] as usize;
+            for (l, layer) in state.layers.iter().enumerate() {
+                if layer.remaining > i {
+                    cur_r[l] *= qs.row(i)[x] / below_i[l][x].max(EPS);
+                }
+            }
+        }
+        below.push(below_i);
+    }
+
+    // Algorithm 4 proper, against the composite rows.
+    let mut ptilde = vec![1.0; gamma + 1];
+    let mut tau = 0usize;
+    for i in 1..gamma {
+        let x = drafts[i - 1] as usize;
+        ptilde[i] = ptilde[i - 1] * comp[i - 1][x] / qs.row(i - 1)[x].max(EPS);
+        let (mut p_remain, mut p_rej) = (0.0, 0.0);
+        let q = qs.row(i);
+        for x2 in 0..v {
+            let d = ptilde[i] * comp[i][x2] - q[x2];
+            if d > 0.0 {
+                p_remain += d;
+            } else {
+                p_rej -= d;
+            }
+        }
+        let h_i = if p_rej <= EPS { 1.0 } else { (p_remain / p_rej).min(1.0) };
+        if etas[i - 1] <= h_i {
+            tau = i;
+        }
+    }
+    {
+        let x = drafts[gamma - 1] as usize;
+        ptilde[gamma] = ptilde[gamma - 1] * comp[gamma - 1][x] / qs.row(gamma - 1)[x].max(EPS);
+    }
+    let y: usize;
+    if etas[gamma - 1] <= ptilde[gamma] {
+        tau = gamma;
+        y = inv_cdf(&comp[gamma], u_final);
+    } else {
+        let q = qs.row(tau);
+        let mut res = vec![0.0; v];
+        let mut s = 0.0;
+        for x in 0..v {
+            let d = (ptilde[tau] * comp[tau][x] - q[x]).max(0.0);
+            res[x] = d;
+            s += d;
+        }
+        y = if s <= 0.0 { inv_cdf(&comp[tau], u_final) } else { inv_cdf(&res, u_final) };
+    }
+
+    // Next-iteration layer state: survivors (ratios advanced through
+    // X^tau and Y) plus the freshly opened window.
+    let mut new_state = GreedyState::default();
+    for (l, layer) in state.layers.iter().enumerate() {
+        if layer.remaining <= tau + 1 {
+            continue; // expired
+        }
+        let mut r = ratio_snap[tau][l];
+        if tau < gamma {
+            r *= qs.row(tau)[y] / below[tau][l][y].max(EPS);
+        }
+        new_state.layers.push(Layer { remaining: layer.remaining - (tau + 1), ratio: r });
+    }
+    if tau < gamma && gamma - tau - 1 > 0 {
+        let mut r_new = 1.0;
+        for i in 0..tau {
+            let xi = drafts[i] as usize;
+            r_new *= qs.row(i)[xi] / comp[i][xi].max(EPS);
+        }
+        r_new *= qs.row(tau)[y] / comp[tau][y].max(EPS);
+        new_state.layers.push(Layer { remaining: gamma - tau - 1, ratio: r_new });
+    }
+
+    let mut emitted: Vec<u32> = drafts[..tau].to_vec();
+    emitted.push(y as u32);
+    (VerifyOutcome { tau, emitted }, new_state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: Vec<Vec<f64>>) -> ProbMatrix {
+        ProbMatrix::from_rows(rows)
+    }
+
+    #[test]
+    fn bernoulli_example_acceptance() {
+        // Section 2 example: Mb = (1/3, 2/3), Ms = (2/3, 1/3), gamma = 2.
+        let ps = mat(vec![vec![1.0 / 3.0, 2.0 / 3.0]; 3]);
+        let qs = mat(vec![vec![2.0 / 3.0, 1.0 / 3.0]; 2]);
+        let st = GreedyState::new(2);
+        // AA with eta2 just under ptilde_2 = 1/4 -> accepted fully.
+        let (out, _) = greedy_verify(&ps, &qs, &[0, 0], &[0.9, 0.24], 0.1, &st);
+        assert_eq!(out.tau, 2);
+        // AA with eta2 over 1/4: everything rejected, Y forced to B,
+        // window of 1 position opens with ratio Ms(B)/Mb(B) = 1/2.
+        let (out, st2) = greedy_verify(&ps, &qs, &[0, 0], &[0.9, 0.9], 0.1, &st);
+        assert_eq!(out.tau, 0);
+        assert_eq!(out.emitted, vec![1]);
+        assert_eq!(st2.layers.len(), 1);
+        assert_eq!(st2.layers[0].remaining, 1);
+        assert!((st2.layers[0].ratio - 0.5).abs() < 1e-12, "{:?}", st2);
+    }
+
+    #[test]
+    fn window_forces_modified_distribution() {
+        // Continue the example: with the (1, 1/2) window active, the
+        // composite at position 0 is the point mass on B, so a drafted A is
+        // always rejected and Y = B again; the NEW window ratio is
+        // Ms(B)/M_comp(B) = (1/3)/1 = 1/3 (paper appendix C walk-through).
+        let ps = mat(vec![vec![1.0 / 3.0, 2.0 / 3.0]; 3]);
+        let qs = mat(vec![vec![2.0 / 3.0, 1.0 / 3.0]; 2]);
+        let st = GreedyState { layers: vec![Layer { remaining: 1, ratio: 0.5 }] };
+        let (out, st2) = greedy_verify(&ps, &qs, &[0, 0], &[0.5, 0.5], 0.3, &st);
+        assert_eq!(out.tau, 0);
+        assert_eq!(out.emitted, vec![1]);
+        assert_eq!(st2.layers.len(), 1);
+        assert!((st2.layers[0].ratio - 1.0 / 3.0).abs() < 1e-12, "{:?}", st2);
+    }
+
+    #[test]
+    fn full_acceptance_leaves_clean_state() {
+        let ps = mat(vec![vec![0.5, 0.5]; 3]);
+        let qs = mat(vec![vec![0.5, 0.5]; 2]);
+        let st = GreedyState::new(2);
+        let (out, st2) = greedy_verify(&ps, &qs, &[0, 1], &[0.4, 0.4], 0.2, &st);
+        assert_eq!(out.tau, 2);
+        assert!(st2.layers.is_empty());
+    }
+
+    #[test]
+    fn layer_count_is_bounded_by_gamma() {
+        let mut st = GreedyState::new(4);
+        let ps = mat(vec![vec![0.7, 0.1, 0.1, 0.1]; 5]);
+        let qs = mat(vec![vec![0.1, 0.1, 0.1, 0.7]; 4]);
+        let mut rng = crate::verify::Rng::new(3);
+        for _ in 0..200 {
+            let drafts = [3u32, 3, 3, 3];
+            let etas: Vec<f64> = (0..4).map(|_| rng.uniform()).collect();
+            let (_, st2) = greedy_verify(&ps, &qs, &drafts, &etas, rng.uniform(), &st);
+            st = st2;
+            assert!(st.layers.len() <= 3, "{:?}", st);
+        }
+    }
+}

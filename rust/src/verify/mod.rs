@@ -1,0 +1,126 @@
+//! Draft-verification algorithms (the paper's subject) on the host path.
+//!
+//! The device path runs the same math as Pallas kernels fused into the
+//! `spec_iter_*` HLO programs (python/compile/kernels/verify.py); this
+//! module powers the host-verify engine mode (needed for greedy
+//! verification, Appendix C), the distribution-level simulator, and all
+//! rust-side property tests.  Cross-layer agreement is enforced by the
+//! golden vectors in `artifacts/golden_verify.json` (see rust/tests/).
+
+pub mod block;
+pub mod dist;
+pub mod greedy;
+pub mod rng;
+pub mod token;
+
+pub use block::{block_chain, block_verify, BlockScratch};
+pub use dist::ProbMatrix;
+pub use greedy::{greedy_verify, GreedyState};
+pub use greedy::Layer;
+pub use rng::Rng;
+pub use token::token_verify;
+
+/// Result of verifying one draft block: `tau` accepted draft tokens plus
+/// the bonus/correction token — `emitted.len() == tau + 1` always.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    pub tau: usize,
+    pub emitted: Vec<u32>,
+}
+
+/// Which verification algorithm to run (paper Algorithms 1, 2, 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Algorithm 1 — standard token verification (Leviathan et al. 2022).
+    Token,
+    /// Algorithm 2 — block verification (the paper's contribution).
+    Block,
+    /// Algorithm 4 + 5/6 — greedy block verification (Appendix C).
+    Greedy,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Token => "token",
+            Algo::Block => "block",
+            Algo::Greedy => "greedy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "token" => Some(Algo::Token),
+            "block" => Some(Algo::Block),
+            "greedy" => Some(Algo::Greedy),
+            _ => None,
+        }
+    }
+
+    /// The two fused in-HLO variants; greedy requires host verification.
+    pub fn fused(self) -> bool {
+        !matches!(self, Algo::Greedy)
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Dispatch on a stateless algorithm (token/block).  Greedy needs
+/// [`GreedyState`]; use [`greedy_verify`] directly.
+pub fn verify(
+    algo: Algo,
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    etas: &[f64],
+    u_final: f64,
+) -> VerifyOutcome {
+    match algo {
+        Algo::Token => token_verify(ps, qs, drafts, etas, u_final),
+        Algo::Block => block_verify(ps, qs, drafts, etas, u_final),
+        Algo::Greedy => {
+            greedy_verify(ps, qs, drafts, etas, u_final, &GreedyState::new(drafts.len())).0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_roundtrip() {
+        for a in [Algo::Token, Algo::Block, Algo::Greedy] {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("bogus"), None);
+        assert!(Algo::Token.fused() && Algo::Block.fused() && !Algo::Greedy.fused());
+    }
+
+    /// gamma = 1 block verification degenerates to token verification
+    /// (the paper notes the two algorithms coincide at gamma = 1).
+    #[test]
+    fn gamma1_block_equals_token() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let v = 4;
+            let mk = |rng: &mut Rng| {
+                let mut w: Vec<f64> = (0..v).map(|_| rng.uniform() + 0.01).collect();
+                dist::normalize(&mut w);
+                w
+            };
+            let ps = ProbMatrix::from_rows(vec![mk(&mut rng), mk(&mut rng)]);
+            let qs = ProbMatrix::from_rows(vec![mk(&mut rng)]);
+            let draft = [rng.below(v) as u32];
+            let etas = [rng.uniform()];
+            let u = rng.uniform();
+            let t = token_verify(&ps, &qs, &draft, &etas, u);
+            let b = block_verify(&ps, &qs, &draft, &etas, u);
+            assert_eq!(t, b);
+        }
+    }
+}

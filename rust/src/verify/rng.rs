@@ -1,0 +1,108 @@
+//! Deterministic, dependency-free RNG for the host-verify path and the
+//! simulator: SplitMix64 for seeding, xoshiro256** for the stream.
+//!
+//! Verification randomness must be (a) reproducible across runs for the
+//! paper tables' seed-averaged cells and (b) independent of the device
+//! programs' threefry streams (the two paths are cross-checked via golden
+//! vectors with *explicit* uniforms, not via shared streams).
+
+/// xoshiro256** seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion (Vigna).
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (for per-row / per-iteration keys).
+    pub fn fold_in(&self, data: u64) -> Self {
+        let mix = self.s[0] ^ self.s[2].rotate_left(17) ^ data.wrapping_mul(0xA24BAED4963EE407);
+        Rng::new(mix)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.uniform() * n as f64) as usize % n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn fold_in_gives_distinct_streams() {
+        let base = Rng::new(1);
+        let mut a = base.fold_in(0);
+        let mut b = base.fold_in(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn seeds_decorrelated() {
+        let mut a = Rng::new(0);
+        let mut b = Rng::new(1);
+        let mut same = 0;
+        for _ in 0..64 {
+            if (a.next_u64() & 1) == (b.next_u64() & 1) {
+                same += 1;
+            }
+        }
+        assert!(same > 16 && same < 48);
+    }
+}

@@ -1,0 +1,87 @@
+//! Paper Algorithm 1 — standard token-by-token verification
+//! (Leviathan et al. 2022), the baseline the paper improves on.
+
+use super::dist::{pos_diff_into, residual_pick, ProbMatrix, EPS};
+use super::VerifyOutcome;
+
+/// Verify a draft block token-by-token.
+///
+/// * `ps`: `(gamma+1, V)` — `ps[i] = M_b(. | c, X^i)`, `ps[0] = M_b(. | c)`.
+/// * `qs`: `(gamma,   V)` — `qs[i] = M_s(. | c, X^i)`.
+/// * `drafts`: `X_1..X_gamma`.
+/// * `etas`, `u_final`: explicit uniforms (draw-for-draw testability).
+///
+/// Accepts `X_i` with prob `min(1, p/q)` (Eq. 1), stops at the first
+/// rejection, then samples the bonus/correction token from `M_b` or the
+/// residual `norm(max(p - q, 0))` (Eq. 2).
+pub fn token_verify(
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    etas: &[f64],
+    u_final: f64,
+) -> VerifyOutcome {
+    let gamma = drafts.len();
+    debug_assert_eq!(ps.rows, gamma + 1);
+    debug_assert_eq!(qs.rows, gamma);
+    let mut tau = 0;
+    for i in 0..gamma {
+        let x = drafts[i] as usize;
+        let ratio = ps.row(i)[x] / qs.row(i)[x].max(EPS);
+        if etas[i] <= ratio.min(1.0) {
+            tau = i + 1;
+        } else {
+            break;
+        }
+    }
+    let y = if tau == gamma {
+        residual_pick(ps.row(gamma), ps.row(gamma), u_final)
+    } else {
+        let mut res = vec![0.0; ps.vocab];
+        pos_diff_into(ps.row(tau), qs.row(tau), &mut res);
+        residual_pick(&res, ps.row(tau), u_final)
+    };
+    let mut emitted: Vec<u32> = drafts[..tau].to_vec();
+    emitted.push(y as u32);
+    VerifyOutcome { tau, emitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: Vec<Vec<f64>>) -> ProbMatrix {
+        ProbMatrix::from_rows(rows)
+    }
+
+    #[test]
+    fn accepts_all_when_models_equal() {
+        let ps = mat(vec![vec![0.5, 0.5]; 3]);
+        let qs = mat(vec![vec![0.5, 0.5]; 2]);
+        let out = token_verify(&ps, &qs, &[0, 1], &[0.99, 0.99], 0.3);
+        assert_eq!(out.tau, 2);
+        assert_eq!(out.emitted.len(), 3);
+    }
+
+    #[test]
+    fn rejects_on_high_eta_low_ratio() {
+        // ratio for token 0 is 0.2/0.8 = 0.25; eta 0.5 rejects.
+        let ps = mat(vec![vec![0.2, 0.8]; 2]);
+        let qs = mat(vec![vec![0.8, 0.2]]);
+        let out = token_verify(&ps, &qs, &[0], &[0.5], 0.0);
+        assert_eq!(out.tau, 0);
+        // residual = max(p - q, 0) = [0, 0.6] -> token 1.
+        assert_eq!(out.emitted, vec![1]);
+    }
+
+    #[test]
+    fn stops_at_first_rejection() {
+        let ps = mat(vec![vec![0.5, 0.5], vec![0.0, 1.0], vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let qs = mat(vec![vec![0.5, 0.5], vec![1.0, 0.0], vec![0.5, 0.5]]);
+        // token 2 (draft 0) has ratio 0 -> rejected for any eta > 0.
+        let out = token_verify(&ps, &qs, &[0, 0, 0], &[0.3, 0.3, 0.3], 0.1);
+        assert_eq!(out.tau, 1);
+        assert_eq!(out.emitted[0], 0);
+        assert_eq!(out.emitted[1], 1); // residual forced to token 1
+    }
+}

@@ -1,0 +1,117 @@
+//! Evaluation workloads: the eight synthetic "datasets" (paper Table 1
+//! rows).  Canonical prompts are generated at artifact-build time by
+//! python/compile/corpus.py and shipped as `artifacts/prompts_<ds>.json`
+//! so the serving workload is guaranteed in-distribution for the trained
+//! models; this module loads them and hands out deterministic slices.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json;
+use crate::verify::Rng;
+
+/// Dataset order matches paper Table 1 (and corpus.PROFILES).
+pub const DATASET_NAMES: [&str; 8] =
+    ["lm1b", "gptprompt", "webqa", "piqa", "sharegpt", "xsum", "gsm8k", "wmt"];
+
+/// Human-readable mapping to the paper's datasets (the substitution).
+pub fn paper_name(ds: &str) -> &'static str {
+    match ds {
+        "lm1b" => "LM1B",
+        "gptprompt" => "GPT Prompt",
+        "webqa" => "WebQA",
+        "piqa" => "PIQA",
+        "sharegpt" => "ShareGPT",
+        "xsum" => "XSum",
+        "gsm8k" => "GSM8K",
+        "wmt" => "WMT-DeEn",
+        _ => "?",
+    }
+}
+
+/// A loaded prompt set.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub prompts: Vec<Vec<u32>>,
+}
+
+impl Dataset {
+    pub fn load(artifacts_dir: &Path, name: &str) -> anyhow::Result<Self> {
+        let path = artifacts_dir.join(format!("prompts_{name}.json"));
+        let raw = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&raw).with_context(|| format!("parsing {}", path.display()))?;
+        let prompts: Vec<Vec<u32>> = v
+            .as_arr()
+            .ok_or_else(|| anyhow!("prompts file is not an array"))?
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .ok_or_else(|| anyhow!("prompt is not an array"))
+                    .map(|toks| {
+                        toks.iter().map(|t| t.as_u64().unwrap_or(0) as u32).collect()
+                    })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        if prompts.is_empty() {
+            return Err(anyhow!("dataset {name} has no prompts"));
+        }
+        Ok(Dataset { name: name.to_string(), prompts })
+    }
+
+    pub fn load_all(artifacts_dir: &Path) -> anyhow::Result<Vec<Dataset>> {
+        DATASET_NAMES.iter().map(|n| Dataset::load(artifacts_dir, n)).collect()
+    }
+
+    /// First `n` prompts (the paper decodes "the first 1000 prompts").
+    pub fn take(&self, n: usize) -> Vec<Vec<u32>> {
+        self.prompts.iter().take(n).cloned().collect()
+    }
+
+    /// A seeded shuffle-sample for load tests / the HTTP demo.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed ^ 0x5eed_da7a);
+        (0..n).map(|_| self.prompts[rng.below(self.prompts.len())].clone()).collect()
+    }
+
+    pub fn mean_prompt_len(&self) -> f64 {
+        self.prompts.iter().map(|p| p.len() as f64).sum::<f64>() / self.prompts.len() as f64
+    }
+}
+
+/// Manifest-declared dataset info (for validation).
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub file: String,
+    pub marker: u32,
+    pub count: usize,
+    pub mean_len: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_names_cover_all() {
+        for ds in DATASET_NAMES {
+            assert_ne!(paper_name(ds), "?");
+        }
+        assert_eq!(paper_name("nope"), "?");
+    }
+
+    #[test]
+    fn take_and_sample() {
+        let ds = Dataset {
+            name: "t".into(),
+            prompts: vec![vec![1, 3, 20], vec![1, 3, 21], vec![1, 3, 22]],
+        };
+        assert_eq!(ds.take(2).len(), 2);
+        let s1 = ds.sample(5, 9);
+        let s2 = ds.sample(5, 9);
+        assert_eq!(s1, s2, "sampling must be deterministic per seed");
+        assert!((ds.mean_prompt_len() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Cross-layer agreement: replay the golden verification vectors produced
+//! by the python oracle (artifacts/golden_verify.json) through the rust
+//! implementations.  Same explicit uniforms ⇒ identical discrete outcomes
+//! and matching acceptance chains.
+
+use specd::util::json;
+use specd::verify::{self, GreedyState, ProbMatrix};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    p.join("golden_verify.json").exists().then_some(p)
+}
+
+#[test]
+fn golden_vectors_replay_exactly() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let raw = std::fs::read_to_string(dir.join("golden_verify.json")).unwrap();
+    let cases = json::parse(&raw).unwrap();
+    let cases = cases.as_arr().unwrap();
+    assert!(cases.len() >= 32, "expected a full golden set");
+    for (idx, c) in cases.iter().enumerate() {
+        let gamma = c.usize_field("gamma").unwrap();
+        let vocab = c.usize_field("vocab").unwrap();
+        let ps = ProbMatrix::from_flat(gamma + 1, vocab, c.f64_vec("ps").unwrap());
+        let qs = ProbMatrix::from_flat(gamma, vocab, c.f64_vec("qs").unwrap());
+        let drafts: Vec<u32> =
+            c.usize_vec("drafts").unwrap().into_iter().map(|x| x as u32).collect();
+        let etas = c.f64_vec("etas").unwrap();
+        let u = c.f64_field("u").unwrap();
+
+        // token
+        let want = c.field("token").unwrap();
+        let got = verify::token_verify(&ps, &qs, &drafts, &etas, u);
+        assert_eq!(got.tau, want.usize_field("tau").unwrap(), "case {idx} token tau");
+        let want_em: Vec<u32> =
+            want.usize_vec("emitted").unwrap().into_iter().map(|x| x as u32).collect();
+        assert_eq!(got.emitted, want_em, "case {idx} token emitted");
+
+        // block + chain
+        let want = c.field("block").unwrap();
+        let got = verify::block_verify(&ps, &qs, &drafts, &etas, u);
+        assert_eq!(got.tau, want.usize_field("tau").unwrap(), "case {idx} block tau");
+        let want_em: Vec<u32> =
+            want.usize_vec("emitted").unwrap().into_iter().map(|x| x as u32).collect();
+        assert_eq!(got.emitted, want_em, "case {idx} block emitted");
+        let (p, h) = verify::block_chain(&ps, &qs, &drafts);
+        for (a, b) in p.iter().zip(want.f64_vec("p").unwrap()) {
+            assert!((a - b).abs() < 1e-9, "case {idx} p chain: {a} vs {b}");
+        }
+        for (a, b) in h.iter().zip(want.f64_vec("h").unwrap()) {
+            assert!((a - b).abs() < 1e-9, "case {idx} h chain: {a} vs {b}");
+        }
+
+        // greedy with window layers
+        let want = c.field("greedy").unwrap();
+        let layers_in = want.arr_field("layers_in").unwrap();
+        let st = GreedyState {
+            layers: layers_in
+                .iter()
+                .map(|l| {
+                    let a = l.as_arr().unwrap();
+                    specd::verify::greedy::Layer {
+                        remaining: a[0].as_usize().unwrap(),
+                        ratio: a[1].as_f64().unwrap(),
+                    }
+                })
+                .collect(),
+        };
+        let (got, st2) = verify::greedy_verify(&ps, &qs, &drafts, &etas, u, &st);
+        assert_eq!(got.tau, want.usize_field("tau").unwrap(), "case {idx} greedy tau");
+        let want_em: Vec<u32> =
+            want.usize_vec("emitted").unwrap().into_iter().map(|x| x as u32).collect();
+        assert_eq!(got.emitted, want_em, "case {idx} greedy emitted");
+        let want_layers = want.arr_field("layers_out").unwrap();
+        assert_eq!(st2.layers.len(), want_layers.len(), "case {idx} layer count");
+        for (gl, wl) in st2.layers.iter().zip(want_layers) {
+            let a = wl.as_arr().unwrap();
+            assert_eq!(gl.remaining, a[0].as_usize().unwrap(), "case {idx} layer rem");
+            assert!(
+                (gl.ratio - a[1].as_f64().unwrap()).abs() < 1e-9,
+                "case {idx} layer ratio {} vs {}",
+                gl.ratio,
+                a[1].as_f64().unwrap()
+            );
+        }
+    }
+}

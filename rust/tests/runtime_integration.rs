@@ -1,0 +1,148 @@
+//! Integration over the real AOT bundle: load, compile and run every
+//! serving path, and cross-check the fused in-HLO verification against the
+//! host-verify path.  Skips (with a message) when artifacts are missing.
+
+use std::sync::Arc;
+
+use specd::config::EngineConfig;
+use specd::engine::baseline::run_baseline_prompts;
+use specd::engine::host::HostVerifyEngine;
+use specd::engine::spec::SpecEngine;
+use specd::engine::FinishReason;
+use specd::models::vocab;
+use specd::runtime::Runtime;
+use specd::verify::Algo;
+use specd::workload::Dataset;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(&p).expect("runtime loads")))
+}
+
+fn cfg(algo: Algo, gamma: usize) -> EngineConfig {
+    EngineConfig {
+        gamma,
+        algo,
+        drafter: "xxs".into(),
+        max_new_tokens: 16,
+        host_verify: !algo.fused(),
+        seed: 0,
+    }
+}
+
+#[test]
+fn fused_engine_generates_valid_tokens() {
+    let Some(rt) = runtime() else { return };
+    let ds = Dataset::load(rt.artifacts_dir(), "gsm8k").unwrap();
+    let eng = SpecEngine::new(rt.clone(), cfg(Algo::Block, 8)).unwrap();
+    let report = eng.run_batch(&ds.take(3), 7).unwrap();
+    assert_eq!(report.rows.len(), 3);
+    for row in &report.rows {
+        assert!(!row.tokens.is_empty());
+        assert!(row.tokens.iter().all(|&t| t < vocab::SIZE && t != vocab::PAD));
+        assert!(row.iterations >= 1);
+        assert_eq!(
+            row.emitted >= row.tokens.len(),
+            true,
+            "emitted counts EOS/overflow tokens too"
+        );
+        assert!(row.block_efficiency() >= 1.0);
+        assert!(matches!(
+            row.finish,
+            FinishReason::Eos | FinishReason::Length | FinishReason::OutOfRoom
+        ));
+    }
+}
+
+#[test]
+fn fused_paths_work_for_all_gammas_and_algos() {
+    let Some(rt) = runtime() else { return };
+    let ds = Dataset::load(rt.artifacts_dir(), "lm1b").unwrap();
+    let prompts = ds.take(2);
+    for gamma in [4, 6, 8] {
+        for algo in [Algo::Token, Algo::Block] {
+            let eng = SpecEngine::new(rt.clone(), cfg(algo, gamma)).unwrap();
+            let rep = eng.run_batch(&prompts, 1).unwrap();
+            assert!(rep.rows[0].iterations >= 1, "{algo} g{gamma}");
+        }
+    }
+}
+
+#[test]
+fn host_verify_close_to_fused() {
+    // Independent implementations of the same algorithm on the same model
+    // pair must produce statistically similar block efficiencies.
+    let Some(rt) = runtime() else { return };
+    let ds = Dataset::load(rt.artifacts_dir(), "xsum").unwrap();
+    let prompts = ds.take(12);
+    let mut be_fused = 0.0;
+    let mut be_host = 0.0;
+    for seed in 0..2 {
+        let f = SpecEngine::new(rt.clone(), cfg(Algo::Block, 8)).unwrap();
+        let reps = f.run_prompts(&prompts, seed).unwrap();
+        be_fused += reps.iter().map(|r| r.block_efficiency()).sum::<f64>()
+            / reps.len() as f64;
+        let h = HostVerifyEngine::new(rt.clone(), cfg(Algo::Block, 8)).unwrap();
+        let reps = h.run_prompts(&prompts, seed).unwrap();
+        be_host +=
+            reps.iter().map(|r| r.block_efficiency()).sum::<f64>() / reps.len() as f64;
+    }
+    let (f, h) = (be_fused / 2.0, be_host / 2.0);
+    assert!((f - h).abs() / f < 0.15, "fused {f} vs host {h}");
+}
+
+#[test]
+fn greedy_runs_on_host_path() {
+    let Some(rt) = runtime() else { return };
+    let ds = Dataset::load(rt.artifacts_dir(), "piqa").unwrap();
+    let eng = HostVerifyEngine::new(rt.clone(), cfg(Algo::Greedy, 8)).unwrap();
+    let rep = eng.run_batch(&ds.take(3), 3).unwrap();
+    assert!(rep.rows.iter().all(|r| r.block_efficiency() >= 1.0));
+}
+
+#[test]
+fn baseline_emits_one_token_per_call() {
+    let Some(rt) = runtime() else { return };
+    let ds = Dataset::load(rt.artifacts_dir(), "webqa").unwrap();
+    let reps = run_baseline_prompts(&rt, &ds.take(3), 12, 0).unwrap();
+    for row in reps.iter().flat_map(|r| &r.rows) {
+        assert_eq!(row.emitted, row.iterations, "baseline BE is exactly 1");
+        assert!(!row.tokens.is_empty());
+    }
+}
+
+#[test]
+fn manifest_catalogue_is_complete() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    assert_eq!(m.batch, 4);
+    for g in &m.gammas {
+        for d in &m.drafters {
+            for a in ["token", "block"] {
+                assert!(
+                    m.programs.contains_key(&m.spec_iter_name(a, d, *g)),
+                    "missing spec_iter_{a}_{d}_g{g}"
+                );
+            }
+            assert!(m.programs.contains_key(&format!("draft_block_{d}_g{g}")));
+        }
+        assert!(m.programs.contains_key(&format!("target_score_g{g}")));
+    }
+    assert!(m.programs.contains_key("baseline_step"));
+    // weight files exist and sizes match declared entries
+    for (name, model) in &m.models {
+        let path = rt.artifacts_dir().join(&model.weights_file);
+        let n = std::fs::metadata(&path).unwrap().len() as usize / 4;
+        let declared: usize = model
+            .weights
+            .iter()
+            .map(|w| w.shape.iter().product::<usize>().max(1))
+            .sum();
+        assert_eq!(n, declared, "weights file mismatch for {name}");
+    }
+}

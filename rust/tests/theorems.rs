@@ -1,0 +1,138 @@
+//! Property tests for the paper's theorems on the distribution-level
+//! substrate (no artifacts needed): Theorem 1 (losslessness), Theorem 2
+//! (block optimality/dominance), Theorem 3 (greedy per-iteration gain),
+//! and the Lemma 8 full-information bound.
+
+use specd::sim::{self, MarkovPair};
+use specd::stats::empirical::SeqDist;
+use specd::util::proptest::{check, rand_instance};
+use specd::verify::{self, Algo, GreedyState, Rng};
+
+/// Theorem 1: SpecDec output prefixes are distributed as target-chain
+/// ancestral samples, for all three verification algorithms.
+#[test]
+fn lossless_all_algorithms() {
+    for algo in [Algo::Token, Algo::Block, Algo::Greedy] {
+        let pair = MarkovPair::random(3, 0.5, 11);
+        let h = 3;
+        let n = 30_000;
+        let mut spec = SeqDist::default();
+        let mut anc = SeqDist::default();
+        let mut rng_s = Rng::new(7);
+        let mut rng_a = Rng::new(8);
+        for _ in 0..n {
+            spec.add(&sim::specdec_prefix(&pair, 2, algo, h, &mut rng_s));
+            anc.add(&sim::sample_target(&pair, h, &mut rng_a));
+        }
+        let tv = spec.tv(&anc);
+        assert!(tv < 0.03, "{algo}: TV {tv}");
+    }
+}
+
+/// Theorem 2 ordering on many random pairs via exact enumeration:
+/// E[tau_token] <= E[tau_block] <= full-information bound.
+#[test]
+fn block_dominates_token_exactly() {
+    check("thm2 ordering", 40, |rng| {
+        let vocab = 2 + rng.below(4);
+        let mix = 0.1 + 0.8 * rng.uniform();
+        let pair = MarkovPair::random(vocab, mix, rng.next_u64());
+        for gamma in 1..=3 {
+            let t = sim::exact::expected_tau_token(&pair, gamma);
+            let b = sim::exact::expected_tau_block(&pair, gamma);
+            let f = sim::exact::fullinfo_bound(&pair, gamma);
+            if b < t - 1e-12 {
+                return Err(format!("block {b} < token {t} at gamma {gamma}"));
+            }
+            if f < b - 1e-12 {
+                return Err(format!("bound {f} < block {b} at gamma {gamma}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The emitted block always has length tau + 1 and stays inside the vocab,
+/// for any random instance and any algorithm.
+#[test]
+fn verify_output_invariants() {
+    check("emitted invariants", 300, |rng| {
+        let gamma = 1 + rng.below(8);
+        let vocab = 2 + rng.below(30);
+        let conc = [0.3, 1.0, 3.0][rng.below(3)];
+        let (ps, qs, drafts) = rand_instance(rng, gamma, vocab, conc);
+        let etas: Vec<f64> = (0..gamma).map(|_| rng.uniform()).collect();
+        let u = rng.uniform();
+        for algo in [Algo::Token, Algo::Block, Algo::Greedy] {
+            let out = verify::verify(algo, &ps, &qs, &drafts, &etas, u);
+            if out.emitted.len() != out.tau + 1 {
+                return Err(format!("{algo}: len {} tau {}", out.emitted.len(), out.tau));
+            }
+            if out.emitted.iter().any(|&t| t as usize >= vocab) {
+                return Err(format!("{algo}: token out of vocab"));
+            }
+            if &out.emitted[..out.tau] != &drafts[..out.tau] {
+                return Err(format!("{algo}: accepted prefix differs from drafts"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Accepted prefixes must be prefixes of the draft; the block chain is in
+/// [0, 1] and h_gamma == p_gamma (Eq. 4 boundary case).
+#[test]
+fn block_chain_invariants() {
+    check("block chain bounds", 300, |rng| {
+        let gamma = 1 + rng.below(8);
+        let vocab = 2 + rng.below(20);
+        let (ps, qs, drafts) = rand_instance(rng, gamma, vocab, 0.8);
+        let (p, h) = verify::block_chain(&ps, &qs, &drafts);
+        if p[0] != 1.0 {
+            return Err("p0 != 1".into());
+        }
+        for i in 0..=gamma {
+            if !(0.0..=1.0 + 1e-12).contains(&p[i]) {
+                return Err(format!("p[{i}] = {}", p[i]));
+            }
+            if !(0.0..=1.0 + 1e-12).contains(&h[i]) {
+                return Err(format!("h[{i}] = {}", h[i]));
+            }
+        }
+        if (h[gamma] - p[gamma]).abs() > 1e-12 {
+            return Err("h_gamma != p_gamma".into());
+        }
+        Ok(())
+    });
+}
+
+/// Theorem 3: from a fresh state, greedy accepts at least as many tokens
+/// per iteration as block verification (in expectation).
+#[test]
+fn greedy_gains_per_iteration() {
+    let pair = MarkovPair::random(6, 0.55, 13);
+    let gamma = 4;
+    let fresh = GreedyState::new(gamma);
+    let (mut acc_b, mut acc_g) = (0usize, 0usize);
+    let mut rng_b = Rng::new(5);
+    let mut rng_g = Rng::new(5);
+    for _ in 0..40_000 {
+        acc_b += sim::specdec::run_iteration(&pair, None, gamma, Algo::Block, &mut rng_b, &fresh).1;
+        acc_g += sim::specdec::run_iteration(&pair, None, gamma, Algo::Greedy, &mut rng_g, &fresh).1;
+    }
+    assert!(
+        acc_g as f64 >= acc_b as f64 * 0.995,
+        "greedy {acc_g} < block {acc_b} per fresh iteration"
+    );
+}
+
+/// The §2 example end-to-end (E0 in DESIGN.md): exact 10/9, 11/9, 12/9.
+#[test]
+fn motivating_example_numbers() {
+    let r = sim::motivating_example(150_000, 3);
+    assert!((r.exact_token - 10.0 / 9.0).abs() < 1e-12);
+    assert!((r.exact_block - 11.0 / 9.0).abs() < 1e-12);
+    assert!((r.exact_ideal - 12.0 / 9.0).abs() < 1e-12);
+    assert!((r.mc_token - r.exact_token).abs() < 0.02);
+    assert!((r.mc_block - r.exact_block).abs() < 0.02);
+}
