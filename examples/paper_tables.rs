@@ -11,9 +11,9 @@
 
 use std::sync::Arc;
 
+use specd::backend::NativeBackend;
 use specd::config::ExperimentConfig;
 use specd::experiments::{motivating_table, Harness};
-use specd::runtime::Runtime;
 use specd::util::argparse::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -28,7 +28,8 @@ fn main() -> anyhow::Result<()> {
         .map(String::from)
         .or_else(|| std::env::var("SPECD_ARTIFACTS").ok())
         .unwrap_or_else(|| "artifacts".into());
-    let rt = Arc::new(Runtime::load(std::path::Path::new(&dir))?);
+    let backend =
+        Arc::new(NativeBackend::from_artifacts_or_seeded(std::path::Path::new(&dir), 0)?);
     let cfg = ExperimentConfig {
         prompts_per_dataset: args.usize_or("prompts", 32)?,
         seeds: (0..args.u64_or("seeds", 3)?).collect(),
@@ -40,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         cfg.seeds.len(),
         cfg.max_new_tokens
     );
-    let h = Harness::new(rt, cfg)?;
+    let h = Harness::new(backend, cfg)?;
     let t0 = std::time::Instant::now();
     match table.as_str() {
         "1" => println!("{}", h.table1()?),

@@ -1,25 +1,27 @@
 //! End-to-end serving demo: starts the coordinator + HTTP server on a
-//! loopback port, fires a small batched workload from several client
-//! threads, and reports latency/throughput — the serving-paper E2E driver
-//! (EXPERIMENTS.md records a run).
+//! loopback port over the native backend (hermetic — trained weights only
+//! if an artifact bundle exists), fires a small batched workload from
+//! several client threads, and reports latency/throughput — the
+//! serving-paper E2E driver (EXPERIMENTS.md records a run).
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use specd::backend::{Backend, NativeBackend};
 use specd::config::{Config, EngineConfig};
 use specd::coordinator::Coordinator;
-use specd::runtime::Runtime;
 use specd::server::{client, serve, ServerState};
 use specd::stats::mean_std;
 use specd::workload::Dataset;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let rt = Arc::new(Runtime::load(std::path::Path::new(&dir))?);
-    let datasets = Dataset::load_all(rt.artifacts_dir())?;
+    let backend =
+        Arc::new(NativeBackend::from_artifacts_or_seeded(std::path::Path::new(&dir), 0)?);
+    let datasets = Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref())?;
     let cfg = Config::default();
     let engine_cfg = EngineConfig { max_new_tokens: 32, ..Default::default() };
-    let coordinator = Coordinator::spawn(rt, engine_cfg, &cfg.server)?;
+    let coordinator = Coordinator::spawn(backend, engine_cfg, &cfg.server)?;
     let state = Arc::new(ServerState { coordinator, datasets });
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -32,10 +34,11 @@ fn main() -> anyhow::Result<()> {
     }
     println!("serving on http://{addr}");
 
-    // Warm up (compiles the programs on first use).
+    // Warm up (first batch pays allocator/cache warmup; on PJRT-style
+    // backends this is where program compilation would land).
     let t0 = Instant::now();
     client::generate(&addr, "gsm8k", 8, 99)?;
-    println!("warmup (incl. program compilation): {:?}", t0.elapsed());
+    println!("warmup: {:?}", t0.elapsed());
 
     // 4 client threads x 4 requests, mixed datasets -> continuous batching.
     let n_clients = 4;

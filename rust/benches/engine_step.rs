@@ -1,29 +1,30 @@
-//! End-to-end engine benchmarks over the real AOT bundle: per-iteration
-//! latency of the fused spec_iter path vs the baseline step vs the
-//! host-verify path, plus prefill cost.  The paper's wall-clock speedup
-//! claims rest on these (EXPERIMENTS.md §Perf).
+//! End-to-end engine benchmarks over the hermetic native backend:
+//! per-iteration latency of the fused spec path vs the baseline step vs
+//! the host-verify path.  The paper's wall-clock speedup claims rest on
+//! these (EXPERIMENTS.md §Perf).  Set SPECD_ARTIFACTS to bench trained
+//! weights instead of the seeded fallback.
 
 use std::sync::Arc;
 
+use specd::backend::{Backend, NativeBackend};
 use specd::bench::{fmt_dur, Bench};
 use specd::config::EngineConfig;
 use specd::engine::baseline::run_baseline_prompts;
 use specd::engine::host::HostVerifyEngine;
 use specd::engine::spec::SpecEngine;
-use specd::runtime::Runtime;
 use specd::verify::Algo;
 use specd::workload::Dataset;
 
 fn main() {
     let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if !p.join("manifest.json").exists() {
-        eprintln!("skipping engine benches: artifacts not built");
-        return;
-    }
-    let rt = Arc::new(Runtime::load(&p).unwrap());
-    let ds = Dataset::load(rt.artifacts_dir(), "gsm8k").unwrap();
-    let prompts = ds.take(4);
+    let backend = Arc::new(
+        NativeBackend::from_artifacts_or_seeded(std::path::Path::new(&dir), 0).unwrap(),
+    );
+    // Canonical bundle prompts when trained weights are in play, synthetic
+    // otherwise — keeps the measurement in-distribution either way.
+    let datasets =
+        Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref()).unwrap();
+    let prompts = datasets.iter().find(|d| d.name == "gsm8k").unwrap().take(4);
     let b = Bench::new(1, 5);
 
     let mk = |algo: Algo| EngineConfig {
@@ -35,12 +36,12 @@ fn main() {
         seed: 0,
     };
 
-    // warm up compiles so the timed runs measure execution only
-    let eng = SpecEngine::new(rt.clone(), mk(Algo::Block)).unwrap();
+    // warm up caches/allocators so the timed runs are steady
+    let eng = SpecEngine::new(backend.clone(), mk(Algo::Block)).unwrap();
     let _ = eng.run_batch(&prompts, 0).unwrap();
 
     for algo in [Algo::Token, Algo::Block] {
-        let eng = SpecEngine::new(rt.clone(), mk(algo)).unwrap();
+        let eng = SpecEngine::new(backend.clone(), mk(algo)).unwrap();
         let mut iters = 0usize;
         let mut toks = 0usize;
         let s = b.run(&format!("engine/fused_{algo}_batch4_32tok"), || {
@@ -57,7 +58,7 @@ fn main() {
     }
 
     {
-        let eng = HostVerifyEngine::new(rt.clone(), mk(Algo::Greedy)).unwrap();
+        let eng = HostVerifyEngine::new(backend.clone(), mk(Algo::Greedy)).unwrap();
         let _ = eng.run_batch(&prompts, 0).unwrap();
         b.run("engine/host_greedy_batch4_32tok", || {
             let rep = eng.run_batch(&prompts, 1).unwrap();
@@ -66,9 +67,9 @@ fn main() {
     }
 
     {
-        let _ = run_baseline_prompts(&rt, &prompts, 32, 0).unwrap();
+        let _ = run_baseline_prompts(&*backend, &prompts, 32, 0).unwrap();
         b.run("engine/baseline_batch4_32tok", || {
-            let rep = run_baseline_prompts(&rt, &prompts, 32, 1).unwrap();
+            let rep = run_baseline_prompts(&*backend, &prompts, 32, 1).unwrap();
             std::hint::black_box(rep[0].total_tokens());
         });
     }

@@ -1,17 +1,18 @@
 //! Regenerates paper Table 3 (token vs block vs greedy block efficiency,
-//! gamma=8, xxs drafter) at bench scale (E4 in DESIGN.md), plus the
-//! simulator-level comparison across drafter quality.
+//! gamma=8, xxs drafter) at bench scale over the native backend (E4 in
+//! DESIGN.md), plus the simulator-level comparison across drafter
+//! quality.  Runs hermetically; set SPECD_ARTIFACTS for trained weights.
 
 use std::sync::Arc;
 
+use specd::backend::NativeBackend;
 use specd::config::ExperimentConfig;
 use specd::experiments::Harness;
-use specd::runtime::Runtime;
 use specd::sim::{self, MarkovPair};
 use specd::verify::Algo;
 
 fn main() {
-    // Simulator side first (always available).
+    // Simulator side first (no model forward passes at all).
     println!("Simulator: per-iteration vs end-to-end greedy behaviour (gamma=4):");
     for mix in [0.4, 0.7, 0.9] {
         let pair = MarkovPair::random(8, mix, 7);
@@ -22,19 +23,16 @@ fn main() {
     }
 
     let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if !p.join("manifest.json").exists() {
-        eprintln!("skipping table3 bench: artifacts not built");
-        return;
-    }
+    let backend = Arc::new(
+        NativeBackend::from_artifacts_or_seeded(std::path::Path::new(&dir), 0).unwrap(),
+    );
     let prompts = std::env::var("SPECD_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
-    let rt = Arc::new(Runtime::load(&p).unwrap());
     let cfg = ExperimentConfig {
         prompts_per_dataset: prompts,
         seeds: vec![0],
         max_new_tokens: 32,
     };
-    let h = Harness::new(rt, cfg).unwrap().quiet();
+    let h = Harness::new(backend, cfg).unwrap().quiet();
     let t0 = std::time::Instant::now();
     println!("{}", h.table3().unwrap());
     println!("bench greedy: table3 regenerated in {:.1}s", t0.elapsed().as_secs_f64());

@@ -1,29 +1,28 @@
 //! Regenerates paper Figures 3 and 4 (gamma × drafter sweep of average BE
 //! and wall-clock speedup + relative-improvement series) at bench scale
-//! (E2/E3 in DESIGN.md).  Knobs: SPECD_BENCH_PROMPTS / SPECD_BENCH_SEEDS.
+//! over the native backend (E2/E3 in DESIGN.md).  Runs hermetically; set
+//! SPECD_ARTIFACTS for trained weights.  Knobs: SPECD_BENCH_PROMPTS /
+//! SPECD_BENCH_SEEDS.
 
 use std::sync::Arc;
 
+use specd::backend::NativeBackend;
 use specd::config::ExperimentConfig;
 use specd::experiments::Harness;
-use specd::runtime::Runtime;
 
 fn main() {
     let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if !p.join("manifest.json").exists() {
-        eprintln!("skipping sweep bench: artifacts not built");
-        return;
-    }
+    let backend = Arc::new(
+        NativeBackend::from_artifacts_or_seeded(std::path::Path::new(&dir), 0).unwrap(),
+    );
     let prompts = std::env::var("SPECD_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
     let seeds = std::env::var("SPECD_BENCH_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(1u64);
-    let rt = Arc::new(Runtime::load(&p).unwrap());
     let cfg = ExperimentConfig {
         prompts_per_dataset: prompts,
         seeds: (0..seeds).collect(),
         max_new_tokens: 32,
     };
-    let h = Harness::new(rt, cfg).unwrap().quiet();
+    let h = Harness::new(backend, cfg).unwrap().quiet();
     let t0 = std::time::Instant::now();
     println!("{}", h.fig3().unwrap());
     println!("{}", h.fig4().unwrap());

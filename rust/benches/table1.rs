@@ -1,31 +1,30 @@
 //! Regenerates paper Table 1 (gamma=8, xxs drafter, 8 datasets, TokenV vs
-//! BlockV, block efficiency + wall-clock speedup) at bench scale and
-//! reports the wall time of the whole harness (E1 in DESIGN.md).
+//! BlockV, block efficiency + wall-clock speedup) at bench scale over the
+//! native backend and reports the wall time of the whole harness (E1 in
+//! DESIGN.md).  Runs hermetically; set SPECD_ARTIFACTS for trained
+//! weights.
 //!
-//! Scale knobs: SPECD_BENCH_PROMPTS (default 16), SPECD_BENCH_SEEDS (2).
+//! Scale knobs: SPECD_BENCH_PROMPTS (default 8), SPECD_BENCH_SEEDS (1).
 
 use std::sync::Arc;
 
+use specd::backend::NativeBackend;
 use specd::config::ExperimentConfig;
 use specd::experiments::Harness;
-use specd::runtime::Runtime;
 
 fn main() {
     let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if !p.join("manifest.json").exists() {
-        eprintln!("skipping table1 bench: artifacts not built");
-        return;
-    }
+    let backend = Arc::new(
+        NativeBackend::from_artifacts_or_seeded(std::path::Path::new(&dir), 0).unwrap(),
+    );
     let prompts = std::env::var("SPECD_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
     let seeds = std::env::var("SPECD_BENCH_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(1u64);
-    let rt = Arc::new(Runtime::load(&p).unwrap());
     let cfg = ExperimentConfig {
         prompts_per_dataset: prompts,
         seeds: (0..seeds).collect(),
         max_new_tokens: 32,
     };
-    let h = Harness::new(rt, cfg).unwrap().quiet();
+    let h = Harness::new(backend, cfg).unwrap().quiet();
     let t0 = std::time::Instant::now();
     let table = h.table1().unwrap();
     println!("{table}");

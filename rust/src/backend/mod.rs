@@ -1,0 +1,221 @@
+//! Execution backends: the device abstraction the engine layer runs on.
+//!
+//! The [`Backend`] trait is the contract extracted from the original
+//! PJRT-only runtime (DESIGN.md §5): five operations — `prefill`,
+//! `spec_iter`, `draft_block`, `target_score`, `baseline_step` — expressed
+//! over *plain host tensors* (`tokens (B, L) i32`, `length (B,) i32`, flat
+//! `f32`/`i32` readbacks) plus an opaque per-model KV-cache handle
+//! ([`Backend::Kv`]) that each backend represents however it likes
+//! (device-resident buffers on PJRT, flat `Vec<f32>` on the native CPU
+//! backend).  Engines ([`crate::engine`]), the coordinator, the experiment
+//! harness and the benches are generic over `B: Backend` and never name a
+//! concrete runtime type.
+//!
+//! Implementations:
+//! * [`NativeBackend`] — pure-Rust CPU transformer forward pass mirroring
+//!   `python/compile/model.py`; hermetic (seeded weights) or loaded from an
+//!   artifact bundle.  Always available.
+//! * `PjrtBackend` (behind the `pjrt` cargo feature) — the AOT HLO / PJRT
+//!   path over [`crate::runtime::Runtime`].
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::path::PathBuf;
+
+use crate::verify::Algo;
+
+pub use native::{NativeBackend, NativeKv};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// Static facts about a backend instance: the fixed serving shapes the
+/// engine lays batches out against (what the PJRT path reads from
+/// `manifest.json` and the native path takes from [`crate::models`]).
+#[derive(Clone, Debug)]
+pub struct BackendInfo {
+    /// Backend family name ("native" | "pjrt") for logs and reports.
+    pub name: String,
+    /// Engine slot count `B` per batch.
+    pub batch: usize,
+    /// Sequence ring length `L` (prompt + generation + draft scratch).
+    pub max_len: usize,
+    /// Vocabulary size `V`.
+    pub vocab_size: usize,
+    /// Advertised draft lengths (the paper's sweep grid).
+    pub gammas: Vec<usize>,
+    /// Whether gammas outside [`BackendInfo::gammas`] also work (true for
+    /// the native backend; PJRT only has programs for the exported grid).
+    pub open_gamma: bool,
+    /// Drafter model names servable next to the target.
+    pub drafters: Vec<String>,
+    /// Artifact bundle directory, when the backend was loaded from one
+    /// (used to locate the canonical prompt sets; `None` ⇒ synthetic
+    /// prompts, see [`crate::workload::Dataset::load_or_synthetic`]).
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl BackendInfo {
+    /// Can this backend run draft blocks of length `gamma`?  Even on
+    /// open-gamma backends the block must leave decode room in the
+    /// sequence ring: a prompt may occupy up to `L/2` positions
+    /// ([`crate::engine`]'s layout guard), so gammas are capped at `L/4`.
+    pub fn supports_gamma(&self, gamma: usize) -> bool {
+        gamma >= 1
+            && gamma <= self.max_len / 4
+            && (self.open_gamma || self.gammas.contains(&gamma))
+    }
+
+    /// Does this backend serve the named drafter?
+    pub fn has_drafter(&self, drafter: &str) -> bool {
+        self.drafters.iter().any(|d| d == drafter)
+    }
+}
+
+/// Output of one fused SpecDec iteration over the whole batch.
+#[derive(Clone, Debug)]
+pub struct SpecIterOut {
+    /// Accepted draft tokens per row, `(B,)`.
+    pub tau: Vec<i32>,
+    /// Emitted tokens per row, row-major `(B, gamma + 1)`; entries past
+    /// `tau[i]` are padding.
+    pub emitted: Vec<i32>,
+    /// Per-row done flag (EOS emitted within the accepted prefix, or the
+    /// sequence ring is out of room), `(B,)`.
+    pub done: Vec<i32>,
+}
+
+/// Output of one drafting call on the host-verify path.
+#[derive(Clone, Debug)]
+pub struct DraftOut {
+    /// Draft tokens, row-major `(B, gamma)`.
+    pub drafts: Vec<i32>,
+    /// Drafter next-token distributions along the draft path, row-major
+    /// `(B, gamma, V)`: `qs[b, j] = M_s(. | c, X^j)`.
+    pub qs: Vec<f32>,
+}
+
+/// Output of one autoregressive baseline step.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Sampled next token per row, `(B,)`.
+    pub next: Vec<i32>,
+    /// Per-row done flag, `(B,)`.
+    pub done: Vec<i32>,
+}
+
+/// An execution backend: everything the engine layer needs from a device.
+///
+/// Tensor layout contract (shared with `python/compile/model.py`):
+/// * `tokens` is a row-major `(B, L)` i32 ring of the full sequence;
+///   `length` holds the current per-row sequence length.  The *pending*
+///   token `tokens[b][length[b] - 1]` has not been fed through the models.
+/// * KV caches cover positions `0..length-2` plus junk above; every
+///   operation consumes a contiguous run of positions starting at
+///   `length - 1` and rewrites exactly those cache rows.
+/// * `seed` feeds the backend's per-call sampling randomness; identical
+///   seeds on identical state must reproduce identical outputs.
+pub trait Backend: Send + Sync + 'static {
+    /// Opaque per-model KV-cache state carried across calls.  Only ever
+    /// handed back to the backend that produced it.
+    type Kv;
+
+    /// Fixed shapes and capabilities of this backend instance.
+    fn info(&self) -> &BackendInfo;
+
+    /// Ingest a padded prompt batch through `model` ("target" or a drafter
+    /// name), returning its KV cache with rows `0..L-1` written.
+    fn prefill(&self, model: &str, tokens: &[i32], length: &[i32]) -> anyhow::Result<Self::Kv>;
+
+    /// One fused SpecDec iteration (paper Algorithm 3): draft `gamma`
+    /// tokens with `drafter`, score with the target, verify with `algo`,
+    /// and apply the accepted block — updating `tokens`/`length` in place
+    /// and both KV caches.  Only stateless algorithms (`algo.fused()`)
+    /// are accepted; greedy verification needs the host-verify path.
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter(
+        &self,
+        algo: Algo,
+        drafter: &str,
+        gamma: usize,
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut Self::Kv,
+        kv_drafter: &mut Self::Kv,
+        seed: i32,
+    ) -> anyhow::Result<SpecIterOut>;
+
+    /// `gamma` autoregressive draft steps from the pending token
+    /// (host-verify path).  Advances `kv` by `gamma` cache rows; does not
+    /// touch `tokens`/`length` (the host engine owns sequence state).
+    #[allow(clippy::too_many_arguments)]
+    fn draft_block(
+        &self,
+        drafter: &str,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &mut Self::Kv,
+        seed: i32,
+    ) -> anyhow::Result<DraftOut>;
+
+    /// Parallel target scoring of the `gamma + 1` draft prefixes
+    /// (host-verify path).  Returns `ps` row-major `(B, gamma + 1, V)`
+    /// with `ps[b, i] = M_b(. | c, X^i)`; advances `kv`.
+    fn target_score(
+        &self,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &mut Self::Kv,
+        drafts: &[i32],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// One autoregressive target step (the paper's 1x wall-clock
+    /// baseline): sample the next token per row and apply it, updating
+    /// `tokens`/`length` in place and the target KV cache.
+    fn baseline_step(
+        &self,
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv: &mut Self::Kv,
+        seed: i32,
+    ) -> anyhow::Result<StepOut>;
+
+    /// Batch-boundary hook, called once after a batch fully drains.  The
+    /// PJRT backend releases pinned host literals here; the native backend
+    /// has nothing to do.
+    fn end_batch(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_gamma_and_drafter_queries() {
+        let info = BackendInfo {
+            name: "test".into(),
+            batch: 4,
+            max_len: 96,
+            vocab_size: 256,
+            gammas: vec![4, 6, 8],
+            open_gamma: false,
+            drafters: vec!["xxs".into()],
+            artifacts_dir: None,
+        };
+        assert!(info.supports_gamma(6));
+        assert!(!info.supports_gamma(5));
+        assert!(!info.supports_gamma(0));
+        let mut open = info.clone();
+        open.open_gamma = true;
+        assert!(open.supports_gamma(5));
+        assert!(!open.supports_gamma(0));
+        // Even open-gamma backends cap at L/4 to leave decode room.
+        assert!(open.supports_gamma(24));
+        assert!(!open.supports_gamma(25));
+        assert!(info.has_drafter("xxs"));
+        assert!(!info.has_drafter("xl"));
+    }
+}

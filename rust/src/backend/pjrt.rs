@@ -1,0 +1,280 @@
+//! PJRT implementation of [`Backend`]: thin adapter from the host-tensor
+//! trait contract onto the AOT HLO programs executed by
+//! [`crate::runtime::Runtime`].  Compiled only with the `pjrt` cargo
+//! feature (the `xla` dependency).
+//!
+//! KV caches stay device-resident between calls whenever the PJRT build
+//! untuples outputs ([`StateHandle`] hides the tuple-layout fallback);
+//! the small `tokens`/`length`/`tau` tensors round-trip through the host
+//! every call, which is what lets the engine layer stay backend-agnostic.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use super::{Backend, BackendInfo, DraftOut, SpecIterOut, StepOut};
+use crate::runtime::{literal, Runtime, StateHandle};
+use crate::verify::Algo;
+
+/// Device-resident KV cache handles for one model.  The options are only
+/// `None` transiently inside a call (or permanently after a failed one, in
+/// which case the engine aborts the batch anyway).
+pub struct PjrtKv {
+    k: Option<StateHandle>,
+    v: Option<StateHandle>,
+}
+
+impl PjrtKv {
+    fn take(&mut self) -> anyhow::Result<(StateHandle, StateHandle)> {
+        match (self.k.take(), self.v.take()) {
+            (Some(k), Some(v)) => Ok((k, v)),
+            _ => Err(anyhow!("KV state consumed by a previously failed call")),
+        }
+    }
+
+    fn put(&mut self, k: StateHandle, v: StateHandle) {
+        self.k = Some(k);
+        self.v = Some(v);
+    }
+}
+
+/// The PJRT backend: compiled HLO programs + uploaded weights.
+pub struct PjrtBackend {
+    rt: Arc<Runtime>,
+    info: BackendInfo,
+}
+
+impl PjrtBackend {
+    /// Wrap an already-loaded runtime.
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        let m = &rt.manifest;
+        let info = BackendInfo {
+            name: "pjrt".into(),
+            batch: m.batch,
+            max_len: m.max_len,
+            vocab_size: m.vocab_size,
+            gammas: m.gammas.clone(),
+            // Only the exported program grid exists on this backend.
+            open_gamma: false,
+            drafters: m.drafters.clone(),
+            artifacts_dir: Some(rt.artifacts_dir().to_path_buf()),
+        };
+        PjrtBackend { rt, info }
+    }
+
+    /// Load the artifact bundle and stand up the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        Ok(Self::new(Arc::new(Runtime::load(artifacts_dir)?)))
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    fn upload_state(
+        &self,
+        tokens: &[i32],
+        length: &[i32],
+    ) -> anyhow::Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let (b, l) = (self.info.batch, self.info.max_len);
+        if tokens.len() != b * l || length.len() != b {
+            return Err(anyhow!(
+                "state shape mismatch: tokens {} (want {}), length {} (want {b})",
+                tokens.len(),
+                b * l,
+                length.len()
+            ));
+        }
+        let tok_buf = self.rt.upload(literal::i32_literal(tokens, &[b, l])?)?;
+        let len_buf = self.rt.upload(literal::i32_literal(length, &[b])?)?;
+        Ok((tok_buf, len_buf))
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Kv = PjrtKv;
+
+    fn info(&self) -> &BackendInfo {
+        &self.info
+    }
+
+    fn prefill(&self, model: &str, tokens: &[i32], length: &[i32]) -> anyhow::Result<PjrtKv> {
+        let rt = &*self.rt;
+        let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
+        let weights = rt.weights(model)?;
+        let prog = rt.program(&format!("prefill_{model}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let handles = rt.execute(prog, &args)?.into_handles();
+        let [k, v] = <[StateHandle; 2]>::try_from(handles)
+            .map_err(|_| anyhow!("prefill_{model}: expected 2 outputs"))?;
+        Ok(PjrtKv { k: Some(k), v: Some(v) })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter(
+        &self,
+        algo: Algo,
+        drafter: &str,
+        gamma: usize,
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut PjrtKv,
+        kv_drafter: &mut PjrtKv,
+        seed: i32,
+    ) -> anyhow::Result<SpecIterOut> {
+        if !algo.fused() {
+            return Err(anyhow!("algo {algo} requires the host-verify path"));
+        }
+        let rt = &*self.rt;
+        let prog = rt.program(&rt.manifest.spec_iter_name(algo.name(), drafter, gamma))?;
+        let w_t = rt.weights("target")?;
+        let w_d = rt.weights(drafter)?;
+        let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
+        let seed_buf = rt.upload(literal::i32_scalar(seed)?)?;
+        let (kvt_k, kvt_v) = kv_target.take()?;
+        let (kvd_k, kvd_v) = kv_drafter.take()?;
+        let kvt_k = kvt_k.ensure_buffer(rt)?;
+        let kvt_v = kvt_v.ensure_buffer(rt)?;
+        let kvd_k = kvd_k.ensure_buffer(rt)?;
+        let kvd_v = kvd_v.ensure_buffer(rt)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
+        args.extend(w_d.iter());
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.push(&kvt_k);
+        args.push(&kvt_v);
+        args.push(&kvd_k);
+        args.push(&kvd_v);
+        args.push(&seed_buf);
+        let out = rt.execute(prog, &args)?;
+
+        // outs: tokens, length, kvt_k, kvt_v, kvd_k, kvd_v, tau, emitted, done
+        tokens.copy_from_slice(&out.i32s(0)?);
+        length.copy_from_slice(&out.i32s(1)?);
+        let tau = out.i32s(6)?;
+        let emitted = out.i32s(7)?;
+        let done = out.i32s(8)?;
+        let mut handles = out.into_handles();
+        let _ = handles.split_off(6); // small outputs already on the host
+        let h_kvd_v = handles.pop().unwrap();
+        let h_kvd_k = handles.pop().unwrap();
+        let h_kvt_v = handles.pop().unwrap();
+        let h_kvt_k = handles.pop().unwrap();
+        kv_target.put(h_kvt_k, h_kvt_v);
+        kv_drafter.put(h_kvd_k, h_kvd_v);
+        Ok(SpecIterOut { tau, emitted, done })
+    }
+
+    fn draft_block(
+        &self,
+        drafter: &str,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &mut PjrtKv,
+        seed: i32,
+    ) -> anyhow::Result<DraftOut> {
+        let rt = &*self.rt;
+        let prog = rt.program(&format!("draft_block_{drafter}_g{gamma}"))?;
+        let weights = rt.weights(drafter)?;
+        let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
+        let seed_buf = rt.upload(literal::i32_scalar(seed)?)?;
+        let (kv_k, kv_v) = kv.take()?;
+        let kv_k = kv_k.ensure_buffer(rt)?;
+        let kv_v = kv_v.ensure_buffer(rt)?;
+        let mut args: Vec<&xla::PjRtBuffer> = weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.push(&kv_k);
+        args.push(&kv_v);
+        args.push(&seed_buf);
+        let out = rt.execute(prog, &args)?;
+        // outs: drafts (B, g) i32, qs (B, g, V) f32, kv_k, kv_v
+        let drafts = out.i32s(0)?;
+        let qs = out.f32s(1)?;
+        let mut handles = out.into_handles();
+        let h_v = handles.pop().unwrap();
+        let h_k = handles.pop().unwrap();
+        kv.put(h_k, h_v);
+        Ok(DraftOut { drafts, qs })
+    }
+
+    fn target_score(
+        &self,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &mut PjrtKv,
+        drafts: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let rt = &*self.rt;
+        let b = self.info.batch;
+        let prog = rt.program(&format!("target_score_g{gamma}"))?;
+        let weights = rt.weights("target")?;
+        let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
+        let drafts_buf = rt.upload(literal::i32_literal(drafts, &[b, gamma])?)?;
+        let (kv_k, kv_v) = kv.take()?;
+        let kv_k = kv_k.ensure_buffer(rt)?;
+        let kv_v = kv_v.ensure_buffer(rt)?;
+        let mut args: Vec<&xla::PjRtBuffer> = weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.push(&kv_k);
+        args.push(&kv_v);
+        args.push(&drafts_buf);
+        let out = rt.execute(prog, &args)?;
+        // outs: ps (B, g+1, V) f32, kv_k, kv_v
+        let ps = out.f32s(0)?;
+        let mut handles = out.into_handles();
+        let h_v = handles.pop().unwrap();
+        let h_k = handles.pop().unwrap();
+        kv.put(h_k, h_v);
+        Ok(ps)
+    }
+
+    fn baseline_step(
+        &self,
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv: &mut PjrtKv,
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let rt = &*self.rt;
+        let prog = rt.program("baseline_step")?;
+        let weights = rt.weights("target")?;
+        let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
+        let seed_buf = rt.upload(literal::i32_scalar(seed)?)?;
+        let (kv_k, kv_v) = kv.take()?;
+        let kv_k = kv_k.ensure_buffer(rt)?;
+        let kv_v = kv_v.ensure_buffer(rt)?;
+        let mut args: Vec<&xla::PjRtBuffer> = weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.push(&kv_k);
+        args.push(&kv_v);
+        args.push(&seed_buf);
+        let out = rt.execute(prog, &args)?;
+        // outs: tokens, length, kv_k, kv_v, next, done
+        tokens.copy_from_slice(&out.i32s(0)?);
+        length.copy_from_slice(&out.i32s(1)?);
+        let next = out.i32s(4)?;
+        let done = out.i32s(5)?;
+        let mut handles = out.into_handles();
+        let _ = handles.split_off(4);
+        let h_v = handles.pop().unwrap();
+        let h_k = handles.pop().unwrap();
+        kv.put(h_k, h_v);
+        Ok(StepOut { next, done })
+    }
+
+    /// Release pinned upload literals: every output of the batch's final
+    /// execution has been read back by now, which forces completion of all
+    /// outstanding host-to-device copies.
+    fn end_batch(&self) {
+        self.rt.clear_pinned();
+    }
+}

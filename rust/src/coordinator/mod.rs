@@ -1,13 +1,18 @@
 //! L3 coordinator: request queue, admission control and the continuous
 //! batcher that feeds the engine.
 //!
-//! Architecture (vLLM-router-like, scaled to a single-process CPU PJRT
+//! Architecture (vLLM-router-like, scaled to a single-process CPU
 //! backend): front-end threads enqueue [`GenRequest`]s into a bounded
 //! channel; a dedicated worker thread drains the queue into batches of the
 //! engine's slot count `B` and runs each batch to completion ("batch
-//! drain" — per-slot refill requires a KV-merge program, listed as future
-//! work in DESIGN.md).  Responses flow back through per-request oneshot
-//! channels.  Everything is std-only: the offline image has no tokio.
+//! drain" — per-slot refill requires a KV-merge operation on the backend,
+//! listed as future work in DESIGN.md §7).  Responses flow back through
+//! per-request oneshot channels.  Everything is std-only: the offline
+//! image has no tokio.
+//!
+//! [`Coordinator::spawn`] is generic over [`Backend`]; the handle itself
+//! is type-erased (the worker thread owns the engine), so the HTTP server
+//! layer stays backend-agnostic without generics.
 
 pub mod queue;
 
@@ -18,11 +23,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::Backend;
 use crate::config::{EngineConfig, ServerConfig};
 use crate::engine::spec::SpecEngine;
 use crate::engine::RowResult;
 use crate::metrics::EngineMetrics;
-use crate::runtime::Runtime;
 
 pub use queue::{AdmissionError, RequestQueue};
 
@@ -46,13 +51,13 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn the coordinator worker thread.
-    pub fn spawn(
-        rt: Arc<Runtime>,
+    /// Spawn the coordinator worker thread over any execution backend.
+    pub fn spawn<B: Backend>(
+        backend: Arc<B>,
         engine_cfg: EngineConfig,
         server_cfg: &ServerConfig,
     ) -> Result<Coordinator> {
-        let engine = SpecEngine::new(rt, engine_cfg)?;
+        let engine = SpecEngine::new(backend, engine_cfg)?;
         let metrics = engine.metrics.clone();
         let limit = server_cfg.queue_limit.max(1);
         let (tx, rx) = sync_channel(limit);
@@ -91,13 +96,13 @@ impl Coordinator {
 
 /// Batch formation loop: greedily drain up to `B` requests, waiting at most
 /// `batch_wait` for stragglers after the first arrival.
-fn batch_worker(
-    engine: SpecEngine,
+fn batch_worker<B: Backend>(
+    engine: SpecEngine<B>,
     rx: Receiver<(GenRequest, Reply)>,
     batch_wait: Duration,
     metrics: Arc<EngineMetrics>,
 ) {
-    let b = engine.runtime().manifest.batch;
+    let b = engine.backend().info().batch;
     let mut seed: u64 = 0xc0ffee0;
     loop {
         let first = match rx.recv() {

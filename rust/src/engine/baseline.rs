@@ -1,98 +1,65 @@
 //! Autoregressive baseline decoding — the "1x" reference the paper's
 //! wall-clock speedups are measured against (one target call per token).
+//! Backend-generic like the spec engines: no device types appear here.
 
 use std::time::Instant;
 
-use anyhow::anyhow;
-
-use crate::runtime::{literal, Runtime, StateHandle};
+use crate::backend::Backend;
 use crate::verify::Rng;
 
-use super::{pad_prompts, BatchReport, RowTracker};
+use super::{layout_prompts, pad_prompts, BatchReport, RowTracker};
 
-/// Decode a padded batch autoregressive with the target model only.
-pub fn run_baseline(
-    rt: &Runtime,
+/// Decode a padded batch autoregressively with the target model only.
+pub fn run_baseline<B: Backend>(
+    backend: &B,
     prompts: &[Vec<u32>],
     max_new_tokens: usize,
     seed: u64,
 ) -> anyhow::Result<BatchReport> {
-    let b = rt.manifest.batch;
+    let info = backend.info();
+    let b = info.batch;
     let t_start = Instant::now();
     let n_real = prompts.len();
     let padded = pad_prompts(prompts, b);
-    let (tok_lit, len_lit, _) =
-        super::spec::SpecEngine::prompt_literals(rt, &padded)?;
+    let (mut tokens, mut length) = layout_prompts(info, &padded);
 
-    let w_t = rt.weights("target")?;
-    let tok_buf = rt.upload(tok_lit)?;
-    let len_buf = rt.upload(len_lit)?;
-    let prefill = rt.program("prefill_target")?;
-    let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
-    args.push(&tok_buf);
-    args.push(&len_buf);
-    let kv = rt.execute(prefill, &args)?.into_handles();
-    let [mut kv_k, mut kv_v] =
-        <[StateHandle; 2]>::try_from(kv).map_err(|_| anyhow!("prefill: expected 2 outputs"))?;
-
-    let step = rt.program("baseline_step")?;
+    let mut kv = backend.prefill("target", &tokens, &length)?;
     let mut trackers: Vec<RowTracker> =
         (0..b).map(|i| RowTracker::new(i < n_real, max_new_tokens)).collect();
-    let mut tokens = StateHandle::Buf(tok_buf);
-    let mut length = StateHandle::Buf(len_buf);
     let mut seed_rng = Rng::new(seed ^ 0xba5e11e);
     let mut device_iterations = 0usize;
     let max_iters = max_new_tokens + 4;
 
     while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
-        let seed_lit = literal::i32_scalar(seed_rng.next_u64() as i32)?;
-        let seed_buf = rt.upload(seed_lit)?;
-        let tok_b = tokens.ensure_buffer(rt)?;
-        let len_b = length.ensure_buffer(rt)?;
-        let kv_k_b = kv_k.ensure_buffer(rt)?;
-        let kv_v_b = kv_v.ensure_buffer(rt)?;
-        let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
-        args.push(&tok_b);
-        args.push(&len_b);
-        args.push(&kv_k_b);
-        args.push(&kv_v_b);
-        args.push(&seed_buf);
-        let out = rt.execute(step, &args)?;
-        // outs: tokens, length, kv_k, kv_v, next, done
-        let next = out.i32s(4)?;
-        let done = out.i32s(5)?;
-        let mut handles = out.into_handles();
-        let _ = handles.split_off(4);
-        kv_v = handles.pop().unwrap();
-        kv_k = handles.pop().unwrap();
-        length = handles.pop().unwrap();
-        tokens = handles.pop().unwrap();
-
+        let iter_seed = seed_rng.next_u64() as i32;
+        let out = backend.baseline_step(&mut tokens, &mut length, &mut kv, iter_seed)?;
         for (i, tr) in trackers.iter_mut().enumerate() {
             if !tr.active() {
                 continue;
             }
-            tr.absorb(&[next[i] as u32], 0, done[i] != 0);
+            tr.absorb(&[out.next[i] as u32], 0, out.done[i] != 0);
         }
         device_iterations += 1;
     }
 
-    rt.clear_pinned();
+    backend.end_batch();
     let rows = trackers.into_iter().take(n_real).map(|t| t.into_result()).collect();
     Ok(BatchReport { rows, device_iterations, wall: t_start.elapsed() })
 }
 
 /// Run many prompts through the baseline in batches of `B`.
-pub fn run_baseline_prompts(
-    rt: &Runtime,
+pub fn run_baseline_prompts<B: Backend>(
+    backend: &B,
     prompts: &[Vec<u32>],
     max_new_tokens: usize,
     seed: u64,
 ) -> anyhow::Result<Vec<BatchReport>> {
-    let b = rt.manifest.batch;
+    let b = backend.info().batch;
     prompts
         .chunks(b)
         .enumerate()
-        .map(|(i, c)| run_baseline(rt, c, max_new_tokens, seed.wrapping_add(i as u64 * 104729)))
+        .map(|(i, c)| {
+            run_baseline(backend, c, max_new_tokens, seed.wrapping_add(i as u64 * 104729))
+        })
         .collect()
 }

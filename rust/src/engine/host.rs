@@ -1,85 +1,62 @@
-//! Host-verify engine: draft and score on device (`draft_block_*`,
-//! `target_score_*` programs), verify in rust.
+//! Host-verify engine: draft and score through the backend
+//! ([`Backend::draft_block`] / [`Backend::target_score`]), verify in rust.
 //!
 //! This path exists because greedy block verification (Appendix C) threads
 //! the distribution-modification state across iterations (Algorithm 6),
-//! which cannot live inside a stateless fused program.  It also serves as
-//! the cross-check harness for the in-HLO Pallas verify kernels: identical
-//! math, independent implementation.
+//! which cannot live inside a stateless fused call.  It also serves as the
+//! cross-check harness for the fused verification kernels: identical math,
+//! independent implementation.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::anyhow;
 
+use crate::backend::Backend;
 use crate::config::EngineConfig;
 use crate::metrics::EngineMetrics;
-use crate::models::vocab;
-use crate::runtime::{literal, Runtime, StateHandle};
 use crate::verify::{self, Algo, GreedyState, ProbMatrix, Rng};
 
-use super::{pad_prompts, BatchReport, RowTracker};
+use super::{layout_prompts, pad_prompts, BatchReport, RowTracker};
 
-pub struct HostVerifyEngine {
-    rt: Arc<Runtime>,
+pub struct HostVerifyEngine<B: Backend> {
+    backend: Arc<B>,
     pub cfg: EngineConfig,
     pub metrics: Arc<EngineMetrics>,
 }
 
-impl HostVerifyEngine {
-    pub fn new(rt: Arc<Runtime>, cfg: EngineConfig) -> anyhow::Result<Self> {
-        if !rt.manifest.gammas.contains(&cfg.gamma) {
-            return Err(anyhow!("gamma {} not exported", cfg.gamma));
+impl<B: Backend> HostVerifyEngine<B> {
+    pub fn new(backend: Arc<B>, cfg: EngineConfig) -> anyhow::Result<Self> {
+        let info = backend.info();
+        if !info.supports_gamma(cfg.gamma) {
+            return Err(anyhow!("gamma {} not supported", cfg.gamma));
         }
-        Ok(HostVerifyEngine { rt, cfg, metrics: Arc::new(EngineMetrics::default()) })
+        if !info.has_drafter(&cfg.drafter) {
+            return Err(anyhow!("drafter '{}' not served", cfg.drafter));
+        }
+        Ok(HostVerifyEngine { backend, cfg, metrics: Arc::new(EngineMetrics::default()) })
+    }
+
+    pub fn backend(&self) -> &Arc<B> {
+        &self.backend
     }
 
     pub fn run_batch(&self, prompts: &[Vec<u32>], seed: u64) -> anyhow::Result<BatchReport> {
-        let rt = &*self.rt;
-        let b = rt.manifest.batch;
-        let l = rt.manifest.max_len;
-        let v = rt.manifest.vocab_size;
+        let backend = &*self.backend;
+        let info = backend.info();
+        let b = info.batch;
+        let l = info.max_len;
+        let v = info.vocab_size;
         let gamma = self.cfg.gamma;
         let t_start = Instant::now();
 
         let n_real = prompts.len();
         let padded = pad_prompts(prompts, b);
-
         // Host-owned token/length state.
-        let mut toks = vec![vocab::PAD as i32; b * l];
-        let mut lens = vec![0i32; b];
-        for (i, p) in padded.iter().enumerate() {
-            for (j, &t) in p.iter().enumerate() {
-                toks[i * l + j] = t as i32;
-            }
-            lens[i] = p.len() as i32;
-        }
+        let (mut toks, mut lens) = layout_prompts(info, &padded);
 
-        let w_t = rt.weights("target")?;
-        let w_d = rt.weights(&self.cfg.drafter)?;
-        let tok_lit = literal::i32_literal(&toks, &[b, l])?;
-        let len_lit = literal::i32_literal(&lens, &[b])?;
-        let tok_buf = rt.upload(tok_lit)?;
-        let len_buf = rt.upload(len_lit)?;
-
-        let prefill_t = rt.program("prefill_target")?;
-        let prefill_d = rt.program(&format!("prefill_{}", self.cfg.drafter))?;
-        let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let kvt = rt.execute(prefill_t, &args)?.into_handles();
-        let mut args: Vec<&xla::PjRtBuffer> = w_d.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let kvd = rt.execute(prefill_d, &args)?.into_handles();
-        let [mut kvt_k, mut kvt_v] =
-            <[StateHandle; 2]>::try_from(kvt).map_err(|_| anyhow!("prefill: 2 outs"))?;
-        let [mut kvd_k, mut kvd_v] =
-            <[StateHandle; 2]>::try_from(kvd).map_err(|_| anyhow!("prefill: 2 outs"))?;
-
-        let draft_prog =
-            rt.program(&format!("draft_block_{}_g{gamma}", self.cfg.drafter))?;
-        let score_prog = rt.program(&format!("target_score_g{gamma}"))?;
+        let mut kv_t = backend.prefill("target", &toks, &lens)?;
+        let mut kv_d = backend.prefill(&self.cfg.drafter, &toks, &lens)?;
 
         let mut trackers: Vec<RowTracker> =
             (0..b).map(|i| RowTracker::new(i < n_real, self.cfg.max_new_tokens)).collect();
@@ -90,48 +67,16 @@ impl HostVerifyEngine {
         let max_iters = self.cfg.max_new_tokens + l;
 
         while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
-            // --- draft on device --------------------------------------------------
-            let tok_lit = literal::i32_literal(&toks, &[b, l])?;
-            let len_lit = literal::i32_literal(&lens, &[b])?;
-            let tok_buf = rt.upload(tok_lit)?;
-            let len_buf = rt.upload(len_lit)?;
-            let seed_lit = literal::i32_scalar(seed_rng.next_u64() as i32)?;
-            let seed_buf = rt.upload(seed_lit)?;
-            let kvd_k_b = kvd_k.ensure_buffer(rt)?;
-            let kvd_v_b = kvd_v.ensure_buffer(rt)?;
-            let mut args: Vec<&xla::PjRtBuffer> = w_d.iter().collect();
-            args.push(&tok_buf);
-            args.push(&len_buf);
-            args.push(&kvd_k_b);
-            args.push(&kvd_v_b);
-            args.push(&seed_buf);
-            let out = rt.execute(draft_prog, &args)?;
-            // outs: drafts (B,g) i32, qs (B,g,V) f32, kvd_k, kvd_v
-            let drafts = out.i32s(0)?;
-            let qs_flat = out.f32s(1)?;
-            let mut handles = out.into_handles();
-            kvd_v = handles.pop().unwrap();
-            kvd_k = handles.pop().unwrap();
+            // --- draft + score through the backend ---------------------------
+            let iter_seed = seed_rng.next_u64() as i32;
+            let draft =
+                backend.draft_block(&self.cfg.drafter, gamma, &toks, &lens, &mut kv_d, iter_seed)?;
+            let ps_flat =
+                backend.target_score(gamma, &toks, &lens, &mut kv_t, &draft.drafts)?;
+            let qs_flat = &draft.qs;
+            let drafts = &draft.drafts;
 
-            // --- score on device --------------------------------------------------
-            let drafts_lit = literal::i32_literal(&drafts, &[b, gamma])?;
-            let drafts_buf = rt.upload(drafts_lit)?;
-            let kvt_k_b = kvt_k.ensure_buffer(rt)?;
-            let kvt_v_b = kvt_v.ensure_buffer(rt)?;
-            let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
-            args.push(&tok_buf);
-            args.push(&len_buf);
-            args.push(&kvt_k_b);
-            args.push(&kvt_v_b);
-            args.push(&drafts_buf);
-            let out = rt.execute(score_prog, &args)?;
-            // outs: ps (B,g+1,V) f32, kvt_k, kvt_v
-            let ps_flat = out.f32s(0)?;
-            let mut handles = out.into_handles();
-            kvt_v = handles.pop().unwrap();
-            kvt_k = handles.pop().unwrap();
-
-            // --- verify on host ---------------------------------------------------
+            // --- verify on host ----------------------------------------------
             for (i, tr) in trackers.iter_mut().enumerate() {
                 if !tr.active() {
                     continue;
@@ -175,7 +120,7 @@ impl HostVerifyEngine {
         }
 
         self.metrics.batches.inc();
-        rt.clear_pinned();
+        backend.end_batch();
         let rows = trackers.into_iter().take(n_real).map(|t| t.into_result()).collect();
         Ok(BatchReport { rows, device_iterations, wall: t_start.elapsed() })
     }
@@ -185,7 +130,7 @@ impl HostVerifyEngine {
         prompts: &[Vec<u32>],
         seed: u64,
     ) -> anyhow::Result<Vec<BatchReport>> {
-        let b = self.rt.manifest.batch;
+        let b = self.backend.info().batch;
         prompts
             .chunks(b)
             .enumerate()

@@ -1,14 +1,18 @@
-//! The speculative-decoding engine: drives the AOT programs through whole
-//! request batches.
+//! The speculative-decoding engine: drives whole request batches through
+//! an execution backend.  Every engine is generic over
+//! [`crate::backend::Backend`] and works identically on the pure-Rust
+//! native backend and (with the `pjrt` feature) the AOT HLO/PJRT backend.
 //!
 //! Three execution paths:
-//! * [`spec::SpecEngine::run_batch`] — fused path: one `spec_iter_*` PJRT
-//!   call per iteration (draft scan + target score + L1 verify kernel all
-//!   inside the program).  Used for token/block verification.
-//! * [`host::HostVerifyEngine`] — host-verify path: `draft_block` +
-//!   `target_score` programs plus rust-side verification.  Required for
-//!   greedy verification (Appendix C threads state across iterations) and
-//!   used to cross-check the in-HLO kernels.
+//! * [`spec::SpecEngine::run_batch`] — fused path: one
+//!   [`crate::backend::Backend::spec_iter`] call per iteration (draft
+//!   block + target score + verification all inside the backend).  Used
+//!   for token/block verification.
+//! * [`host::HostVerifyEngine`] — host-verify path:
+//!   [`crate::backend::Backend::draft_block`] +
+//!   [`crate::backend::Backend::target_score`] plus rust-side
+//!   verification.  Required for greedy verification (Appendix C threads
+//!   state across iterations) and used to cross-check the fused kernels.
 //! * [`baseline::run_baseline`] — plain autoregressive target decoding, the
 //!   1x reference for wall-clock speedups.
 
@@ -16,6 +20,7 @@ pub mod baseline;
 pub mod host;
 pub mod spec;
 
+use crate::backend::BackendInfo;
 use crate::models::vocab;
 
 /// Why a row stopped generating.
@@ -153,6 +158,24 @@ pub(crate) fn pad_prompts(prompts: &[Vec<u32>], batch: usize) -> Vec<Vec<u32>> {
     out
 }
 
+/// Lay a padded prompt batch out as the backend's host state tensors:
+/// `tokens` row-major `(B, L)` (PAD-filled) and `length (B,)`.
+pub(crate) fn layout_prompts(info: &BackendInfo, prompts: &[Vec<u32>]) -> (Vec<i32>, Vec<i32>) {
+    let (b, l) = (info.batch, info.max_len);
+    assert_eq!(prompts.len(), b, "layout_prompts expects a padded batch");
+    let mut tokens = vec![vocab::PAD as i32; b * l];
+    let mut length = vec![0i32; b];
+    for (i, p) in prompts.iter().enumerate() {
+        assert!(p.len() >= 2, "prompts need >= 2 tokens (BOS + marker)");
+        assert!(p.len() < l / 2, "prompt too long for max_len {l}");
+        for (j, &t) in p.iter().enumerate() {
+            tokens[i * l + j] = t as i32;
+        }
+        length[i] = p.len() as i32;
+    }
+    (tokens, length)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +219,24 @@ mod tests {
     fn pad_prompts_rejects_overflow() {
         let five: Vec<Vec<u32>> = (0..5).map(|_| vec![1u32]).collect();
         pad_prompts(&five, 4);
+    }
+
+    #[test]
+    fn layout_fills_tokens_and_lengths() {
+        let info = BackendInfo {
+            name: "test".into(),
+            batch: 2,
+            max_len: 16,
+            vocab_size: 256,
+            gammas: vec![4],
+            open_gamma: true,
+            drafters: vec!["xxs".into()],
+            artifacts_dir: None,
+        };
+        let padded = pad_prompts(&[vec![1, 3, 20, 21]], 2);
+        let (toks, lens) = layout_prompts(&info, &padded);
+        assert_eq!(toks.len(), 32);
+        assert_eq!(&toks[..5], &[1, 3, 20, 21, vocab::PAD as i32]);
+        assert_eq!(lens, vec![4, 3]);
     }
 }

@@ -1,177 +1,113 @@
-//! Fused-path engine: one PJRT call per SpecDec iteration.
+//! Fused-path engine: one [`Backend::spec_iter`] call per SpecDec
+//! iteration.
 //!
 //! State layout (see python/compile/model.py docstring for the contract):
-//! `tokens (B, L) i32`, `length (B,) i32`, KV caches for target + drafter.
-//! All five state tensors stay device-resident between iterations when the
-//! PJRT build unтuples outputs; otherwise they round-trip as literals
-//! (handled transparently by [`StateHandle`]).
+//! `tokens (B, L) i32`, `length (B,) i32`, plus the two opaque per-model
+//! KV caches the backend carries between iterations.  On PJRT the KV
+//! tensors stay device-resident whenever the build untuples outputs; on
+//! the native backend everything lives in host memory.  The engine only
+//! ever sees host tensors and the backend trait.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::anyhow;
 
+use crate::backend::Backend;
 use crate::config::EngineConfig;
 use crate::metrics::EngineMetrics;
-use crate::models::vocab;
-use crate::runtime::{literal, Runtime, StateHandle};
 use crate::verify::Rng;
 
-use super::{pad_prompts, BatchReport, RowTracker};
+use super::{layout_prompts, pad_prompts, BatchReport, RowTracker};
 
-/// The fused speculative-decoding engine.
-pub struct SpecEngine {
-    rt: Arc<Runtime>,
+/// The fused speculative-decoding engine, generic over the execution
+/// backend.
+pub struct SpecEngine<B: Backend> {
+    backend: Arc<B>,
     pub cfg: EngineConfig,
     pub metrics: Arc<EngineMetrics>,
 }
 
-impl SpecEngine {
-    pub fn new(rt: Arc<Runtime>, cfg: EngineConfig) -> anyhow::Result<Self> {
+impl<B: Backend> SpecEngine<B> {
+    pub fn new(backend: Arc<B>, cfg: EngineConfig) -> anyhow::Result<Self> {
         if !cfg.algo.fused() {
             return Err(anyhow!(
                 "algo {} requires the host-verify engine (engine::host)",
                 cfg.algo
             ));
         }
-        if !rt.manifest.gammas.contains(&cfg.gamma) {
+        let info = backend.info();
+        if !info.supports_gamma(cfg.gamma) {
             return Err(anyhow!(
-                "gamma {} not exported (available: {:?}) — re-run make artifacts",
+                "gamma {} not supported by the {} backend (available: {:?})",
                 cfg.gamma,
-                rt.manifest.gammas
+                info.name,
+                info.gammas
             ));
         }
-        Ok(SpecEngine { rt, cfg, metrics: Arc::new(EngineMetrics::default()) })
-    }
-
-    pub fn runtime(&self) -> &Arc<Runtime> {
-        &self.rt
-    }
-
-    /// Build the (tokens, length) literals for a padded prompt batch.
-    pub(crate) fn prompt_literals(
-        rt: &Runtime,
-        prompts: &[Vec<u32>],
-    ) -> anyhow::Result<(xla::Literal, xla::Literal, Vec<usize>)> {
-        let b = rt.manifest.batch;
-        let l = rt.manifest.max_len;
-        let mut toks = vec![vocab::PAD as i32; b * l];
-        let mut lens = vec![0i32; b];
-        let mut prompt_lens = Vec::with_capacity(b);
-        for (i, p) in prompts.iter().enumerate() {
-            assert!(p.len() >= 2, "prompts need >= 2 tokens (BOS + marker)");
-            assert!(p.len() < l / 2, "prompt too long for max_len {l}");
-            for (j, &t) in p.iter().enumerate() {
-                toks[i * l + j] = t as i32;
-            }
-            lens[i] = p.len() as i32;
-            prompt_lens.push(p.len());
+        if !info.has_drafter(&cfg.drafter) {
+            return Err(anyhow!(
+                "drafter '{}' not served (available: {:?})",
+                cfg.drafter,
+                info.drafters
+            ));
         }
-        Ok((
-            literal::i32_literal(&toks, &[b, l])?,
-            literal::i32_literal(&lens, &[b])?,
-            prompt_lens,
-        ))
+        Ok(SpecEngine { backend, cfg, metrics: Arc::new(EngineMetrics::default()) })
+    }
+
+    pub fn backend(&self) -> &Arc<B> {
+        &self.backend
     }
 
     /// Run one padded batch of prompts to completion (batch drain).
     pub fn run_batch(&self, prompts: &[Vec<u32>], seed: u64) -> anyhow::Result<BatchReport> {
-        let rt = &*self.rt;
-        let b = rt.manifest.batch;
+        let backend = &*self.backend;
+        let info = backend.info();
+        let b = info.batch;
         let gamma = self.cfg.gamma;
         let t_start = Instant::now();
 
         let n_real = prompts.len();
         let padded = pad_prompts(prompts, b);
-        let (tok_lit, len_lit, _) = Self::prompt_literals(rt, &padded)?;
+        let (mut tokens, mut length) = layout_prompts(info, &padded);
 
-        // --- prefill both models -------------------------------------------------
-        let w_t = rt.weights("target")?;
-        let w_d = rt.weights(&self.cfg.drafter)?;
-        let tok_buf = rt.upload(tok_lit)?;
-        let len_buf = rt.upload(len_lit)?;
+        // --- prefill both models ---------------------------------------------
+        let mut kv_t = backend.prefill("target", &tokens, &length)?;
+        let mut kv_d = backend.prefill(&self.cfg.drafter, &tokens, &length)?;
 
-        let prefill_t = rt.program("prefill_target")?;
-        let prefill_d = rt.program(&format!("prefill_{}", self.cfg.drafter))?;
-        let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let kv_t = rt.execute(prefill_t, &args)?.into_handles();
-        let mut args: Vec<&xla::PjRtBuffer> = w_d.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let kv_d = rt.execute(prefill_d, &args)?.into_handles();
-        let [kvt_k, kvt_v] = <[StateHandle; 2]>::try_from(kv_t)
-            .map_err(|_| anyhow!("prefill target: expected 2 outputs"))?;
-        let [kvd_k, kvd_v] = <[StateHandle; 2]>::try_from(kv_d)
-            .map_err(|_| anyhow!("prefill drafter: expected 2 outputs"))?;
-
-        // --- iterate --------------------------------------------------------------
-        let iter_prog = rt.program(&rt.manifest.spec_iter_name(
-            self.cfg.algo.name(),
-            &self.cfg.drafter,
-            gamma,
-        ))?;
-
+        // --- iterate ----------------------------------------------------------
         let mut trackers: Vec<RowTracker> = (0..b)
             .map(|i| RowTracker::new(i < n_real, self.cfg.max_new_tokens))
             .collect();
-        let mut state = SpecState {
-            tokens: StateHandle::Buf(tok_buf),
-            length: StateHandle::Buf(len_buf),
-            kvt_k,
-            kvt_v,
-            kvd_k,
-            kvd_v,
-        };
         let mut seed_rng = Rng::new(seed ^ SEED_DOMAIN);
         let mut device_iterations = 0usize;
         // Hard cap: every row emits >= 1 token per iteration.
-        let max_iters = self.cfg.max_new_tokens + rt.manifest.max_len;
+        let max_iters = self.cfg.max_new_tokens + info.max_len;
 
         while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
             let t_iter = Instant::now();
-            let seed_lit = literal::i32_scalar(seed_rng.next_u64() as i32)?;
-            let seed_buf = rt.upload(seed_lit)?;
-
-            // Materialise state buffers (no-op on the untupled layout).
-            let bufs = state.into_buffers(rt)?;
-            let mut args: Vec<&xla::PjRtBuffer> = w_t.iter().collect();
-            args.extend(w_d.iter());
-            args.push(&bufs.tokens);
-            args.push(&bufs.length);
-            args.push(&bufs.kvt_k);
-            args.push(&bufs.kvt_v);
-            args.push(&bufs.kvd_k);
-            args.push(&bufs.kvd_v);
-            args.push(&seed_buf);
-            let out = rt.execute(iter_prog, &args)?;
-
-            // outs: tokens, length, kvt_k, kvt_v, kvd_k, kvd_v, tau, emitted, done
-            let tau = out.i32s(6)?;
-            let emitted = out.i32s(7)?;
-            let done = out.i32s(8)?;
-            let mut handles = out.into_handles();
-            // drain order: reverse-pop to move out without clones
-            let _ = handles.split_off(6); // small outputs already read
-            let kvd_v = handles.pop().unwrap();
-            let kvd_k = handles.pop().unwrap();
-            let kvt_v = handles.pop().unwrap();
-            let kvt_k = handles.pop().unwrap();
-            let length = handles.pop().unwrap();
-            let tokens = handles.pop().unwrap();
-            state = SpecState { tokens, length, kvt_k, kvt_v, kvd_k, kvd_v };
+            let iter_seed = seed_rng.next_u64() as i32;
+            let out = backend.spec_iter(
+                self.cfg.algo,
+                &self.cfg.drafter,
+                gamma,
+                &mut tokens,
+                &mut length,
+                &mut kv_t,
+                &mut kv_d,
+                iter_seed,
+            )?;
 
             for (i, tr) in trackers.iter_mut().enumerate() {
                 if !tr.active() {
                     continue;
                 }
-                let t_i = tau[i] as usize;
-                let row: Vec<u32> = emitted[i * (gamma + 1)..i * (gamma + 1) + t_i + 1]
+                let t_i = out.tau[i] as usize;
+                let row: Vec<u32> = out.emitted[i * (gamma + 1)..i * (gamma + 1) + t_i + 1]
                     .iter()
                     .map(|&x| x as u32)
                     .collect();
-                tr.absorb(&row, t_i, done[i] != 0);
+                tr.absorb(&row, t_i, out.done[i] != 0);
                 self.metrics.tokens_emitted.add(row.len() as u64);
                 self.metrics.drafts_accepted.add(t_i as u64);
                 self.metrics.iterations.inc();
@@ -181,9 +117,7 @@ impl SpecEngine {
         }
 
         self.metrics.batches.inc();
-        // All outputs of the final iteration were read back above, so every
-        // outstanding upload copy has completed — safe to release the pins.
-        rt.clear_pinned();
+        backend.end_batch();
         let rows = trackers
             .into_iter()
             .take(n_real)
@@ -198,43 +132,12 @@ impl SpecEngine {
         prompts: &[Vec<u32>],
         seed: u64,
     ) -> anyhow::Result<Vec<BatchReport>> {
-        let b = self.rt.manifest.batch;
+        let b = self.backend.info().batch;
         prompts
             .chunks(b)
             .enumerate()
             .map(|(i, chunk)| self.run_batch(chunk, seed.wrapping_add(i as u64 * 7919)))
             .collect()
-    }
-}
-
-struct SpecState {
-    tokens: StateHandle,
-    length: StateHandle,
-    kvt_k: StateHandle,
-    kvt_v: StateHandle,
-    kvd_k: StateHandle,
-    kvd_v: StateHandle,
-}
-
-struct SpecBuffers {
-    tokens: xla::PjRtBuffer,
-    length: xla::PjRtBuffer,
-    kvt_k: xla::PjRtBuffer,
-    kvt_v: xla::PjRtBuffer,
-    kvd_k: xla::PjRtBuffer,
-    kvd_v: xla::PjRtBuffer,
-}
-
-impl SpecState {
-    fn into_buffers(self, rt: &Runtime) -> anyhow::Result<SpecBuffers> {
-        Ok(SpecBuffers {
-            tokens: self.tokens.ensure_buffer(rt)?,
-            length: self.length.ensure_buffer(rt)?,
-            kvt_k: self.kvt_k.ensure_buffer(rt)?,
-            kvt_v: self.kvt_v.ensure_buffer(rt)?,
-            kvd_k: self.kvd_k.ensure_buffer(rt)?,
-            kvd_v: self.kvd_v.ensure_buffer(rt)?,
-        })
     }
 }
 

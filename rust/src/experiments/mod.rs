@@ -18,12 +18,12 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::ExperimentConfig;
 use crate::engine::baseline::run_baseline_prompts;
 use crate::engine::host::HostVerifyEngine;
 use crate::engine::spec::SpecEngine;
 use crate::engine::BatchReport;
-use crate::runtime::Runtime;
 use crate::sim;
 use crate::stats::{paired_improvement, Cell};
 use crate::verify::Algo;
@@ -42,20 +42,27 @@ impl Measurement {
     }
 }
 
-/// Experiment driver; caches baseline throughputs per (dataset, seed).
-pub struct Harness {
-    pub rt: Arc<Runtime>,
+/// Experiment driver, generic over the execution backend; caches baseline
+/// throughputs per (dataset, seed).
+pub struct Harness<B: Backend> {
+    pub backend: Arc<B>,
     pub cfg: ExperimentConfig,
     pub datasets: Vec<Dataset>,
     baseline_cache: Mutex<HashMap<(String, u64), f64>>,
-    /// Engine cache keyed by (algo, drafter, gamma) — avoids recompiling.
     quiet: bool,
 }
 
-impl Harness {
-    pub fn new(rt: Arc<Runtime>, cfg: ExperimentConfig) -> Result<Self> {
-        let datasets = Dataset::load_all(rt.artifacts_dir())?;
-        Ok(Harness { rt, cfg, datasets, baseline_cache: Mutex::new(HashMap::new()), quiet: false })
+impl<B: Backend> Harness<B> {
+    pub fn new(backend: Arc<B>, cfg: ExperimentConfig) -> Result<Self> {
+        let datasets =
+            Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref())?;
+        Ok(Harness {
+            backend,
+            cfg,
+            datasets,
+            baseline_cache: Mutex::new(HashMap::new()),
+            quiet: false,
+        })
     }
 
     pub fn quiet(mut self) -> Self {
@@ -91,7 +98,7 @@ impl Harness {
         }
         let prompts = self.dataset(ds_name).take(self.cfg.prompts_per_dataset);
         let reports =
-            run_baseline_prompts(&self.rt, &prompts, self.cfg.max_new_tokens, seed)?;
+            run_baseline_prompts(&*self.backend, &prompts, self.cfg.max_new_tokens, seed)?;
         let (_, tps) = Self::agg(&reports);
         self.baseline_cache.lock().unwrap().insert((ds_name.into(), seed), tps);
         Ok(tps)
@@ -117,9 +124,9 @@ impl Harness {
                 seed,
             };
             let reports = if algo.fused() {
-                SpecEngine::new(self.rt.clone(), cfg)?.run_prompts(&prompts, seed)?
+                SpecEngine::new(self.backend.clone(), cfg)?.run_prompts(&prompts, seed)?
             } else {
-                HostVerifyEngine::new(self.rt.clone(), cfg)?.run_prompts(&prompts, seed)?
+                HostVerifyEngine::new(self.backend.clone(), cfg)?.run_prompts(&prompts, seed)?
             };
             let (be, tps) = Self::agg(&reports);
             m.be.push(be);
@@ -224,7 +231,7 @@ impl Harness {
         let mut out = String::from(
             "Figure 3: average BE / WS across datasets\n  γ  drafter |  TokenV BE  TokenV WS |  BlockV BE  BlockV WS\n",
         );
-        for &gamma in &self.rt.manifest.gammas.clone() {
+        for &gamma in &self.backend.info().gammas.clone() {
             for drafter in ["xxs", "xxxs"] {
                 let (bt, wt) = self.averages(drafter, gamma, Algo::Token)?;
                 let (bb, wb) = self.averages(drafter, gamma, Algo::Block)?;
@@ -243,7 +250,7 @@ impl Harness {
             String::from("Figure 4: relative improvement of BlockV over TokenV (%)\n");
         for drafter in ["xxs", "xxxs"] {
             out.push_str(&format!("  drafter {drafter}:\n"));
-            for &gamma in &self.rt.manifest.gammas.clone() {
+            for &gamma in &self.backend.info().gammas.clone() {
                 let (bt, wt) = self.averages(drafter, gamma, Algo::Token)?;
                 let (bb, wb) = self.averages(drafter, gamma, Algo::Block)?;
                 let ibe = (bb - bt) / bt * 100.0;

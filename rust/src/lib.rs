@@ -1,18 +1,32 @@
 //! `specd` — a speculative-decoding serving stack reproducing
 //! *Block Verification Accelerates Speculative Decoding* (ICLR 2025).
 //!
-//! Three-layer architecture:
+//! Three-layer architecture (DESIGN.md):
 //! * L3 (this crate): request routing, continuous batching, KV-slot
 //!   management, spec-dec scheduling, metrics, CLI.
-//! * L2 (python/compile/model.py): JAX transformer LMs, AOT-lowered to HLO
-//!   text programs loaded by [`runtime`].
-//! * L1 (python/compile/kernels/): Pallas verification + attention kernels,
-//!   lowered into the same HLO programs.
+//! * L2: the model forward passes, behind the [`backend::Backend`] trait —
+//!   either the pure-Rust CPU transformer ([`backend::NativeBackend`],
+//!   always available, hermetic) or AOT-lowered HLO programs from
+//!   `python/compile/model.py` executed via PJRT
+//!   (`backend::PjrtBackend`, behind the `pjrt` cargo feature).
+//! * L1: the verification + attention kernels — host implementations in
+//!   [`verify`] (used directly by the native backend and the host-verify
+//!   engine), Pallas-lowered twins inside the HLO programs on PJRT.
 //!
-//! Python never runs on the request path: `make artifacts` produces
-//! `artifacts/*.hlo.txt` plus weights, and the rust binary is self-contained
-//! afterwards.
+//! Feature flags:
+//! * default — no external dependencies, no artifacts required: the
+//!   native backend initialises deterministic seeded weights
+//!   ([`verify::Rng`]) and the whole stack (engines, HTTP serving,
+//!   benches, paper tables) runs hermetically.  When an `artifacts/`
+//!   bundle exists (`make artifacts`), the native backend loads its
+//!   trained weights instead.
+//! * `pjrt` — additionally compiles [`runtime::pjrt`] and
+//!   `backend::pjrt` against the `xla` crate (vendored as an API stub;
+//!   swap in the real crate to execute HLO).
+//!
+//! Python never runs on the request path: it only produces artifacts.
 
+pub mod backend;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

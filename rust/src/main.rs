@@ -4,19 +4,25 @@
 //! * `serve`  — start the HTTP serving front-end (coordinator + engine).
 //! * `run`    — one-off batch decode of a dataset, printing stats.
 //! * `tables` — regenerate the paper's tables/figures (see DESIGN.md §4).
-//! * `sim`    — distribution-level simulator studies (no artifacts needed).
+//! * `sim`    — distribution-level simulator studies (no backend needed).
+//!
+//! `--backend native` (default) runs the pure-Rust CPU transformer —
+//! trained weights when `artifacts/` exists, deterministic seeded weights
+//! otherwise, so every subcommand works out of the box.  `--backend pjrt`
+//! selects the AOT HLO/PJRT path (requires building with
+//! `--features pjrt` and a full artifact bundle).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use specd::backend::{Backend, NativeBackend};
 use specd::config::{Config, EngineConfig, ExperimentConfig};
 use specd::coordinator::Coordinator;
 use specd::engine::host::HostVerifyEngine;
 use specd::engine::spec::SpecEngine;
 use specd::experiments::{motivating_table, Harness};
-use specd::runtime::Runtime;
 use specd::server::{serve, ServerState};
 use specd::sim::{self, MarkovPair};
 use specd::util::argparse::Args;
@@ -27,7 +33,7 @@ const USAGE: &str = "\
 specd — block-verification speculative decoding server
 
 USAGE: specd <serve|run|tables|sim> [options]
-  common:   --config <file.json>  --artifacts <dir>
+  common:   --config <file.json>  --artifacts <dir>  --backend native|pjrt
   serve:    --addr <ip:port>
   run:      --dataset gsm8k --algo block --gamma 8 --drafter xxs
             --prompts 16 --seed 0
@@ -46,9 +52,7 @@ fn main() -> Result<()> {
         cfg.artifacts = Some(PathBuf::from(a));
     }
     match args.subcommand.as_deref() {
-        Some("serve") => cmd_serve(&cfg, &args),
-        Some("run") => cmd_run(&cfg, &args),
-        Some("tables") => cmd_tables(&cfg, &args),
+        Some(cmd @ ("serve" | "run" | "tables")) => dispatch(cmd, &cfg, &args),
         Some("sim") => cmd_sim(&args),
         _ => {
             eprint!("{USAGE}");
@@ -57,18 +61,58 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
-    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir())?);
-    let datasets = Dataset::load_all(rt.artifacts_dir())?;
+/// Instantiate the selected backend and run the subcommand over it.
+fn dispatch(cmd: &str, cfg: &Config, args: &Args) -> Result<()> {
+    match args.get_or("backend", "native") {
+        "native" => {
+            let backend = Arc::new(NativeBackend::from_artifacts_or_seeded(
+                &cfg.artifacts_dir(),
+                cfg.engine.seed,
+            )?);
+            if backend.info().artifacts_dir.is_none() {
+                eprintln!(
+                    "[specd] no artifact bundle at {} — using deterministic seeded weights",
+                    cfg.artifacts_dir().display()
+                );
+            }
+            run_cmd(cmd, backend, cfg, args)
+        }
+        "pjrt" => dispatch_pjrt(cmd, cfg, args),
+        other => bail!("unknown backend '{other}' (expected native|pjrt)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn dispatch_pjrt(cmd: &str, cfg: &Config, args: &Args) -> Result<()> {
+    let backend = Arc::new(specd::backend::PjrtBackend::load(&cfg.artifacts_dir())?);
+    run_cmd(cmd, backend, cfg, args)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn dispatch_pjrt(_cmd: &str, _cfg: &Config, _args: &Args) -> Result<()> {
+    bail!("this binary was built without the `pjrt` feature; rebuild with --features pjrt")
+}
+
+fn run_cmd<B: Backend>(cmd: &str, backend: Arc<B>, cfg: &Config, args: &Args) -> Result<()> {
+    match cmd {
+        "serve" => cmd_serve(backend, cfg, args),
+        "run" => cmd_run(backend, cfg, args),
+        "tables" => cmd_tables(backend, cfg, args),
+        _ => unreachable!("dispatch() only routes engine subcommands"),
+    }
+}
+
+fn cmd_serve<B: Backend>(backend: Arc<B>, cfg: &Config, args: &Args) -> Result<()> {
+    let datasets = Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref())?;
     let addr = args.get_or("addr", &cfg.server.addr).to_string();
-    let coordinator = Coordinator::spawn(rt, cfg.engine.clone(), &cfg.server)?;
+    let coordinator = Coordinator::spawn(backend, cfg.engine.clone(), &cfg.server)?;
     let state = Arc::new(ServerState { coordinator, datasets });
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("specd serving on http://{addr}  (POST /v1/generate)");
     serve(listener, state)
 }
 
-fn cmd_run(cfg: &Config, args: &Args) -> Result<()> {
+fn cmd_run<B: Backend>(backend: Arc<B>, cfg: &Config, args: &Args) -> Result<()> {
     let algo_s = args.get_or("algo", "block");
     let algo = Algo::parse(algo_s).ok_or_else(|| anyhow::anyhow!("unknown algo {algo_s}"))?;
     let gamma = args.usize_or("gamma", 8)?;
@@ -77,8 +121,11 @@ fn cmd_run(cfg: &Config, args: &Args) -> Result<()> {
     let n_prompts = args.usize_or("prompts", 16)?;
     let seed = args.u64_or("seed", 0)?;
 
-    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir())?);
-    let ds = Dataset::load(rt.artifacts_dir(), dataset)?;
+    let datasets = Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref())?;
+    let ds = datasets
+        .iter()
+        .find(|d| d.name == dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
     let engine_cfg = EngineConfig {
         gamma,
         algo,
@@ -89,9 +136,9 @@ fn cmd_run(cfg: &Config, args: &Args) -> Result<()> {
     };
     let prompts = ds.take(n_prompts);
     let reports = if algo.fused() {
-        SpecEngine::new(rt.clone(), engine_cfg)?.run_prompts(&prompts, seed)?
+        SpecEngine::new(backend, engine_cfg)?.run_prompts(&prompts, seed)?
     } else {
-        HostVerifyEngine::new(rt.clone(), engine_cfg)?.run_prompts(&prompts, seed)?
+        HostVerifyEngine::new(backend, engine_cfg)?.run_prompts(&prompts, seed)?
     };
     let mut iters = 0usize;
     let mut emitted = 0usize;
@@ -117,13 +164,12 @@ fn cmd_run(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_tables(cfg: &Config, args: &Args) -> Result<()> {
+fn cmd_tables<B: Backend>(backend: Arc<B>, cfg: &Config, args: &Args) -> Result<()> {
     let table = args.get_or("table", "1");
     if table == "motivating" {
         println!("{}", motivating_table());
         return Ok(());
     }
-    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir())?);
     let mut exp_cfg: ExperimentConfig = cfg.experiments.clone();
     if let Some(p) = args.get("prompts") {
         exp_cfg.prompts_per_dataset = p.parse()?;
@@ -131,7 +177,7 @@ fn cmd_tables(cfg: &Config, args: &Args) -> Result<()> {
     if let Some(s) = args.get("seeds") {
         exp_cfg.seeds = (0..s.parse::<u64>()?).collect();
     }
-    let h = Harness::new(rt, exp_cfg)?;
+    let h = Harness::new(backend, exp_cfg)?;
     let text = match table {
         "1" => h.table1()?,
         "3" => h.table3()?,

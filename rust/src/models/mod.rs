@@ -43,6 +43,68 @@ pub const XXXS: Variant = Variant { name: "xxxs", role: Role::Drafter };
 
 pub const DRAFTERS: [&str; 2] = ["xxs", "xxxs"];
 
+/// Architecture dimensions of a family variant — the same values
+/// `python/compile/common.py` bakes into the AOT programs.  The native
+/// backend builds its transformers from these; the PJRT backend reads them
+/// back from `manifest.json` and validates against the vocab constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab_size: usize,
+    pub max_len: usize,
+}
+
+impl ModelDims {
+    pub const fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub const fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+}
+
+/// Default sequence ring length (prompt + generation + draft scratch).
+pub const MAX_LEN: usize = 96;
+/// Default engine slot count per batch.
+pub const BATCH: usize = 4;
+
+pub const TARGET_DIMS: ModelDims = ModelDims {
+    n_layers: 3,
+    d_model: 128,
+    n_heads: 4,
+    vocab_size: vocab::SIZE as usize,
+    max_len: MAX_LEN,
+};
+
+pub const XXS_DIMS: ModelDims = ModelDims {
+    n_layers: 2,
+    d_model: 64,
+    n_heads: 4,
+    vocab_size: vocab::SIZE as usize,
+    max_len: MAX_LEN,
+};
+
+pub const XXXS_DIMS: ModelDims = ModelDims {
+    n_layers: 1,
+    d_model: 32,
+    n_heads: 2,
+    vocab_size: vocab::SIZE as usize,
+    max_len: MAX_LEN,
+};
+
+/// Dimensions for a variant by name.
+pub fn dims_for(name: &str) -> Option<ModelDims> {
+    match name {
+        "target" => Some(TARGET_DIMS),
+        "xxs" => Some(XXS_DIMS),
+        "xxxs" => Some(XXXS_DIMS),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +121,19 @@ mod tests {
     #[should_panic]
     fn marker_out_of_range_panics() {
         vocab::marker_for(8);
+    }
+
+    #[test]
+    fn dims_match_common_py() {
+        let t = dims_for("target").unwrap();
+        assert_eq!((t.n_layers, t.d_model, t.n_heads), (3, 128, 4));
+        assert_eq!(t.head_dim(), 32);
+        assert_eq!(t.d_ff(), 512);
+        let xxxs = dims_for("xxxs").unwrap();
+        assert_eq!(xxxs.head_dim(), 16);
+        assert!(dims_for("xl").is_none());
+        for d in DRAFTERS {
+            assert!(dims_for(d).is_some());
+        }
     }
 }

@@ -1,10 +1,27 @@
-//! Runtime layer: loads and executes the AOT-compiled HLO programs via the
-//! `xla` crate's PJRT CPU client.  See DESIGN.md §2.1 for the program
-//! catalogue and pjrt.rs for the execution model.
+//! Artifact-bundle runtime layer.
+//!
+//! [`manifest`] (always compiled) is the typed contract between the python
+//! build path (`aot.py`) and every backend: fixed serving shapes, program
+//! signatures, weight layouts and dataset metadata.  Both the native
+//! backend's artifact loader and the PJRT program catalogue read it.
+//!
+//! [`pjrt`] and [`literal`] exist only under the `pjrt` cargo feature:
+//! they load `artifacts/*.hlo.txt`, compile them on the PJRT CPU client
+//! via the `xla` crate and execute them with device-resident state.  The
+//! engine layer never touches these types directly — all device
+//! interaction goes through [`crate::backend::Backend`], whose PJRT
+//! implementation ([`crate::backend::pjrt`]) wraps [`pjrt::Runtime`].
+//! With default features the build ships the pure-Rust native backend
+//! only and needs neither the `xla` crate nor an artifacts directory.
 
-pub mod literal;
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod literal;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use manifest::{Manifest, ModelMeta, ProgramMeta};
+
+#[cfg(feature = "pjrt")]
 pub use pjrt::{ExecOutput, Program, Runtime, StateHandle};

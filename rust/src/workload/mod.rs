@@ -3,11 +3,18 @@
 //! python/compile/corpus.py and shipped as `artifacts/prompts_<ds>.json`
 //! so the serving workload is guaranteed in-distribution for the trained
 //! models; this module loads them and hands out deterministic slices.
+//!
+//! When no artifact bundle exists (the hermetic native-backend mode),
+//! [`Dataset::synthetic`] generates deterministic in-layout prompts —
+//! `[BOS, domain marker, content...]` with per-dataset length profiles
+//! mirroring `corpus.PROFILES` — so every engine path and the HTTP demo
+//! run without python having ever executed.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context};
 
+use crate::models::vocab;
 use crate::util::json;
 use crate::verify::Rng;
 
@@ -65,6 +72,50 @@ impl Dataset {
         DATASET_NAMES.iter().map(|n| Dataset::load(artifacts_dir, n)).collect()
     }
 
+    /// Deterministic synthetic prompt set for one dataset: `[BOS, marker,
+    /// content...]` rows with the dataset's corpus length profile.
+    ///
+    /// Lengths target the standard serving ring (`L = 96`): the longest
+    /// prompt is 34 tokens, comfortably under the engine's `len < L/2`
+    /// layout guard.  Tests running on smaller custom rings build their
+    /// own prompts instead.
+    pub fn synthetic(name: &str, count: usize, seed: u64) -> anyhow::Result<Dataset> {
+        let idx = DATASET_NAMES
+            .iter()
+            .position(|&n| n == name)
+            .ok_or_else(|| anyhow!("unknown dataset '{name}'"))? as u32;
+        // (min, max) content-token counts, mirroring corpus.PROFILES.
+        let (lo, hi) = [(8, 28), (10, 30), (6, 20), (8, 24), (12, 32), (14, 32), (10, 26), (10, 28)]
+            [idx as usize];
+        let mut rng = Rng::new(seed ^ 0x5f17_7e71c ^ ((idx as u64) << 32));
+        let span = (vocab::SIZE - vocab::CONTENT_BASE) as usize;
+        let prompts = (0..count.max(1))
+            .map(|_| {
+                let n = lo + rng.below(hi - lo + 1);
+                let mut p = vec![vocab::BOS, vocab::marker_for(idx)];
+                for _ in 0..n {
+                    p.push(vocab::CONTENT_BASE + rng.below(span) as u32);
+                }
+                p
+            })
+            .collect();
+        Ok(Dataset { name: name.to_string(), prompts })
+    }
+
+    /// Canonical prompt sets from the artifact bundle when one is present,
+    /// synthetic prompts otherwise (the hermetic native-backend mode).
+    pub fn load_or_synthetic(artifacts_dir: Option<&Path>) -> anyhow::Result<Vec<Dataset>> {
+        match artifacts_dir {
+            Some(dir) if dir.join(format!("prompts_{}.json", DATASET_NAMES[0])).exists() => {
+                Self::load_all(dir)
+            }
+            _ => DATASET_NAMES
+                .iter()
+                .map(|n| Dataset::synthetic(n, 256, 0x5eed))
+                .collect(),
+        }
+    }
+
     /// First `n` prompts (the paper decodes "the first 1000 prompts").
     pub fn take(&self, n: usize) -> Vec<Vec<u32>> {
         self.prompts.iter().take(n).cloned().collect()
@@ -100,6 +151,28 @@ mod tests {
             assert_ne!(paper_name(ds), "?");
         }
         assert_eq!(paper_name("nope"), "?");
+    }
+
+    #[test]
+    fn synthetic_prompts_are_well_formed_and_deterministic() {
+        for name in DATASET_NAMES {
+            let a = Dataset::synthetic(name, 32, 1).unwrap();
+            let b = Dataset::synthetic(name, 32, 1).unwrap();
+            assert_eq!(a.prompts, b.prompts, "{name} must be seed-deterministic");
+            let c = Dataset::synthetic(name, 32, 2).unwrap();
+            assert_ne!(a.prompts, c.prompts, "{name} must vary with the seed");
+            for p in &a.prompts {
+                // 2 control tokens + the profile's (lo, hi) content range;
+                // must stay under the L/2 = 48 layout guard.
+                assert!(p.len() >= 8 && p.len() <= 34);
+                assert_eq!(p[0], vocab::BOS);
+                assert!(vocab::is_control(p[1]) && p[1] >= vocab::MARKER_BASE);
+                assert!(p[2..].iter().all(|&t| t >= vocab::CONTENT_BASE && t < vocab::SIZE));
+            }
+        }
+        assert!(Dataset::synthetic("nope", 4, 0).is_err());
+        let all = Dataset::load_or_synthetic(None).unwrap();
+        assert_eq!(all.len(), DATASET_NAMES.len());
     }
 
     #[test]

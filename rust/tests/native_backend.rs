@@ -1,0 +1,152 @@
+//! Cross-backend losslessness properties of the native backend.
+//!
+//! 1. The fused path is the host path: for identical seeds and prompts,
+//!    every `spec_iter` call's `(tau, emitted)` must equal replaying the
+//!    same state through `draft_block` + `target_score` + the host-side
+//!    `verify::verify` dispatch with the backend's published verification
+//!    uniforms ([`specd::backend::native::verify_uniforms`]) — for both
+//!    token and block verification, draw for draw.
+//! 2. The paper's never-worse guarantee: on aggregate over seeds, prompts
+//!    and gammas, block verification's block efficiency is at least token
+//!    verification's (small slack for finite-sample noise).
+
+use std::sync::Arc;
+
+use specd::backend::native::verify_uniforms;
+use specd::backend::{Backend, NativeBackend};
+use specd::config::EngineConfig;
+use specd::engine::spec::SpecEngine;
+use specd::models::vocab;
+use specd::verify::{self, Algo, ProbMatrix};
+use specd::workload::Dataset;
+
+/// A deterministic 4-row prompt state on the given backend.
+fn prompt_state(be: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
+    let info = be.info();
+    let (b, l) = (info.batch, info.max_len);
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        let mut p = vec![vocab::BOS as i32, vocab::marker_for(bi as u32 % 8) as i32];
+        for j in 0..6 {
+            p.push((vocab::CONTENT_BASE + ((bi * 31 + j * 7) % 200) as u32) as i32);
+        }
+        for (j, &t) in p.iter().enumerate() {
+            toks[bi * l + j] = t;
+        }
+        lens[bi] = p.len() as i32;
+    }
+    (toks, lens)
+}
+
+#[test]
+fn fused_iterations_match_host_verify_dispatch() {
+    let gamma = 4;
+    for algo in [Algo::Token, Algo::Block] {
+        let be = NativeBackend::seeded_with_shapes(4, 64, 0xc0de);
+        let info = be.info().clone();
+        let (mut toks, mut lens) = prompt_state(&be);
+        let mut kv_t = be.prefill("target", &toks, &lens).unwrap();
+        let mut kv_d = be.prefill("xxs", &toks, &lens).unwrap();
+
+        for iter in 0..6 {
+            let seed = iter * 977 + 13;
+            // --- replay path on clones of the exact same state -----------
+            let mut kv_t2 = kv_t.clone();
+            let mut kv_d2 = kv_d.clone();
+            let d = be
+                .draft_block("xxs", gamma, &toks, &lens, &mut kv_d2, seed)
+                .unwrap();
+            let ps = be
+                .target_score(gamma, &toks, &lens, &mut kv_t2, &d.drafts)
+                .unwrap();
+            let (etas, us) = verify_uniforms(seed, info.batch, gamma);
+            let v = info.vocab_size;
+            let expected: Vec<verify::VerifyOutcome> = (0..info.batch)
+                .map(|bi| {
+                    let ps_m = ProbMatrix::from_f32(
+                        gamma + 1,
+                        v,
+                        &ps[bi * (gamma + 1) * v..(bi + 1) * (gamma + 1) * v],
+                    );
+                    let qs_m = ProbMatrix::from_f32(
+                        gamma,
+                        v,
+                        &d.qs[bi * gamma * v..(bi + 1) * gamma * v],
+                    );
+                    let drafts: Vec<u32> = d.drafts[bi * gamma..(bi + 1) * gamma]
+                        .iter()
+                        .map(|&x| x as u32)
+                        .collect();
+                    verify::verify(
+                        algo,
+                        &ps_m,
+                        &qs_m,
+                        &drafts,
+                        &etas[bi * gamma..(bi + 1) * gamma],
+                        us[bi],
+                    )
+                })
+                .collect();
+
+            // --- fused path ----------------------------------------------
+            let out = be
+                .spec_iter(
+                    algo, "xxs", gamma, &mut toks, &mut lens, &mut kv_t, &mut kv_d, seed,
+                )
+                .unwrap();
+
+            for (bi, want) in expected.iter().enumerate() {
+                assert_eq!(
+                    out.tau[bi] as usize, want.tau,
+                    "{algo} iter {iter} row {bi}: tau"
+                );
+                let got: Vec<u32> = out.emitted
+                    [bi * (gamma + 1)..bi * (gamma + 1) + want.tau + 1]
+                    .iter()
+                    .map(|&x| x as u32)
+                    .collect();
+                assert_eq!(got, want.emitted, "{algo} iter {iter} row {bi}: emitted");
+            }
+        }
+    }
+}
+
+#[test]
+fn block_never_worse_than_token_on_aggregate() {
+    let be = Arc::new(NativeBackend::seeded(42));
+    let prompts = Dataset::synthetic("gsm8k", 8, 0xabc).unwrap().take(8);
+    let mut be_by_algo = Vec::new();
+    for algo in [Algo::Token, Algo::Block] {
+        let mut emitted = 0usize;
+        let mut iters = 0usize;
+        for gamma in [4usize, 8] {
+            for seed in 0..3u64 {
+                let cfg = EngineConfig {
+                    gamma,
+                    algo,
+                    drafter: "xxs".into(),
+                    max_new_tokens: 16,
+                    host_verify: false,
+                    seed,
+                };
+                let eng = SpecEngine::new(be.clone(), cfg).unwrap();
+                for rep in eng.run_prompts(&prompts, seed).unwrap() {
+                    for row in &rep.rows {
+                        emitted += row.emitted;
+                        iters += row.iterations;
+                    }
+                }
+            }
+        }
+        be_by_algo.push(emitted as f64 / iters.max(1) as f64);
+    }
+    let (tok, blk) = (be_by_algo[0], be_by_algo[1]);
+    assert!(tok >= 1.0 && blk >= 1.0, "BE is at least 1 by construction");
+    // Theorem 2 guarantees E[BE_block] >= E[BE_token]; the 0.1 slack
+    // covers finite-sample noise on this aggregate (~1k iterations).
+    assert!(
+        blk >= tok - 0.1,
+        "block verification must not be worse: token {tok:.3} vs block {blk:.3}"
+    );
+}

@@ -1,27 +1,29 @@
-//! Integration over the real AOT bundle: load, compile and run every
-//! serving path, and cross-check the fused in-HLO verification against the
-//! host-verify path.  Skips (with a message) when artifacts are missing.
+//! Integration over the execution-backend abstraction: load a hermetic
+//! native backend (seeded weights, no artifacts needed) and run every
+//! serving path — fused spec engine, host-verify engine, greedy, baseline
+//! — end to end.  The manifest-catalogue check at the bottom still runs
+//! against a real AOT bundle and skips (with a message) when artifacts are
+//! missing.
 
 use std::sync::Arc;
 
+use specd::backend::{Backend, NativeBackend};
 use specd::config::EngineConfig;
 use specd::engine::baseline::run_baseline_prompts;
 use specd::engine::host::HostVerifyEngine;
 use specd::engine::spec::SpecEngine;
 use specd::engine::FinishReason;
 use specd::models::vocab;
-use specd::runtime::Runtime;
+use specd::runtime::Manifest;
 use specd::verify::Algo;
 use specd::workload::Dataset;
 
-fn runtime() -> Option<Arc<Runtime>> {
-    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if !p.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Runtime::load(&p).expect("runtime loads")))
+fn backend() -> Arc<NativeBackend> {
+    Arc::new(NativeBackend::seeded(0xbea7))
+}
+
+fn dataset(name: &str) -> Dataset {
+    Dataset::synthetic(name, 32, 0x1e57).unwrap()
 }
 
 fn cfg(algo: Algo, gamma: usize) -> EngineConfig {
@@ -37,18 +39,17 @@ fn cfg(algo: Algo, gamma: usize) -> EngineConfig {
 
 #[test]
 fn fused_engine_generates_valid_tokens() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.artifacts_dir(), "gsm8k").unwrap();
-    let eng = SpecEngine::new(rt.clone(), cfg(Algo::Block, 8)).unwrap();
+    let be = backend();
+    let ds = dataset("gsm8k");
+    let eng = SpecEngine::new(be, cfg(Algo::Block, 8)).unwrap();
     let report = eng.run_batch(&ds.take(3), 7).unwrap();
     assert_eq!(report.rows.len(), 3);
     for row in &report.rows {
         assert!(!row.tokens.is_empty());
         assert!(row.tokens.iter().all(|&t| t < vocab::SIZE && t != vocab::PAD));
         assert!(row.iterations >= 1);
-        assert_eq!(
+        assert!(
             row.emitted >= row.tokens.len(),
-            true,
             "emitted counts EOS/overflow tokens too"
         );
         assert!(row.block_efficiency() >= 1.0);
@@ -61,12 +62,12 @@ fn fused_engine_generates_valid_tokens() {
 
 #[test]
 fn fused_paths_work_for_all_gammas_and_algos() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.artifacts_dir(), "lm1b").unwrap();
+    let be = backend();
+    let ds = dataset("lm1b");
     let prompts = ds.take(2);
     for gamma in [4, 6, 8] {
         for algo in [Algo::Token, Algo::Block] {
-            let eng = SpecEngine::new(rt.clone(), cfg(algo, gamma)).unwrap();
+            let eng = SpecEngine::new(be.clone(), cfg(algo, gamma)).unwrap();
             let rep = eng.run_batch(&prompts, 1).unwrap();
             assert!(rep.rows[0].iterations >= 1, "{algo} g{gamma}");
         }
@@ -77,39 +78,45 @@ fn fused_paths_work_for_all_gammas_and_algos() {
 fn host_verify_close_to_fused() {
     // Independent implementations of the same algorithm on the same model
     // pair must produce statistically similar block efficiencies.
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.artifacts_dir(), "xsum").unwrap();
+    let be = backend();
+    let ds = dataset("xsum");
     let prompts = ds.take(12);
     let mut be_fused = 0.0;
     let mut be_host = 0.0;
     for seed in 0..2 {
-        let f = SpecEngine::new(rt.clone(), cfg(Algo::Block, 8)).unwrap();
+        let f = SpecEngine::new(be.clone(), cfg(Algo::Block, 8)).unwrap();
         let reps = f.run_prompts(&prompts, seed).unwrap();
         be_fused += reps.iter().map(|r| r.block_efficiency()).sum::<f64>()
             / reps.len() as f64;
-        let h = HostVerifyEngine::new(rt.clone(), cfg(Algo::Block, 8)).unwrap();
+        let h = HostVerifyEngine::new(be.clone(), cfg(Algo::Block, 8)).unwrap();
         let reps = h.run_prompts(&prompts, seed).unwrap();
         be_host +=
             reps.iter().map(|r| r.block_efficiency()).sum::<f64>() / reps.len() as f64;
     }
     let (f, h) = (be_fused / 2.0, be_host / 2.0);
-    assert!((f - h).abs() / f < 0.15, "fused {f} vs host {h}");
+    assert!((f - h).abs() / f < 0.2, "fused {f} vs host {h}");
 }
 
 #[test]
 fn greedy_runs_on_host_path() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.artifacts_dir(), "piqa").unwrap();
-    let eng = HostVerifyEngine::new(rt.clone(), cfg(Algo::Greedy, 8)).unwrap();
+    let be = backend();
+    let ds = dataset("piqa");
+    let eng = HostVerifyEngine::new(be, cfg(Algo::Greedy, 8)).unwrap();
     let rep = eng.run_batch(&ds.take(3), 3).unwrap();
     assert!(rep.rows.iter().all(|r| r.block_efficiency() >= 1.0));
 }
 
 #[test]
+fn fused_greedy_is_rejected() {
+    let be = backend();
+    assert!(SpecEngine::new(be, cfg(Algo::Greedy, 8)).is_err());
+}
+
+#[test]
 fn baseline_emits_one_token_per_call() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.artifacts_dir(), "webqa").unwrap();
-    let reps = run_baseline_prompts(&rt, &ds.take(3), 12, 0).unwrap();
+    let be = backend();
+    let ds = dataset("webqa");
+    let reps = run_baseline_prompts(&*be, &ds.take(3), 12, 0).unwrap();
     for row in reps.iter().flat_map(|r| &r.rows) {
         assert_eq!(row.emitted, row.iterations, "baseline BE is exactly 1");
         assert!(!row.tokens.is_empty());
@@ -117,9 +124,38 @@ fn baseline_emits_one_token_per_call() {
 }
 
 #[test]
+fn out_of_range_gammas_rejected() {
+    let be = backend();
+    // gamma = 0 is invalid everywhere.
+    assert!(SpecEngine::new(be.clone(), cfg(Algo::Block, 0)).is_err());
+    // Open-gamma backends still cap blocks at L/4 to leave decode room in
+    // the ring; an oversized block must fail at engine build time rather
+    // than corrupt the KV cache.
+    let cap = be.info().max_len / 4;
+    assert!(SpecEngine::new(be.clone(), cfg(Algo::Block, cap)).is_ok());
+    assert!(SpecEngine::new(be.clone(), cfg(Algo::Block, cap + 1)).is_err());
+    // And a direct backend call with a bad gamma errors instead of
+    // panicking.
+    let ds = dataset("lm1b");
+    let prompts = ds.take(1);
+    let eng = SpecEngine::new(be.clone(), cfg(Algo::Block, 4)).unwrap();
+    let _ = eng.run_batch(&prompts, 0).unwrap();
+    let info = be.info();
+    let toks = vec![1i32; info.batch * info.max_len];
+    let lens = vec![2i32; info.batch];
+    let mut kv = be.prefill("xxs", &toks, &lens).unwrap();
+    assert!(be.draft_block("xxs", info.max_len, &toks, &lens, &mut kv, 0).is_err());
+}
+
+#[test]
 fn manifest_catalogue_is_complete() {
-    let Some(rt) = runtime() else { return };
-    let m = &rt.manifest;
+    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let m = Manifest::load(&p).expect("manifest loads");
     assert_eq!(m.batch, 4);
     for g in &m.gammas {
         for d in &m.drafters {
@@ -136,7 +172,7 @@ fn manifest_catalogue_is_complete() {
     assert!(m.programs.contains_key("baseline_step"));
     // weight files exist and sizes match declared entries
     for (name, model) in &m.models {
-        let path = rt.artifacts_dir().join(&model.weights_file);
+        let path = p.join(&model.weights_file);
         let n = std::fs::metadata(&path).unwrap().len() as usize / 4;
         let declared: usize = model
             .weights

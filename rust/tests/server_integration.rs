@@ -1,32 +1,22 @@
-//! End-to-end serving: coordinator + HTTP server + client against the real
-//! artifact bundle on a loopback socket.
+//! End-to-end serving: coordinator + HTTP server + client over the
+//! hermetic native backend on a loopback socket — the full request path
+//! with zero external dependencies and no artifact bundle.
 
 use std::sync::Arc;
 
+use specd::backend::NativeBackend;
 use specd::config::{Config, EngineConfig};
 use specd::coordinator::Coordinator;
-use specd::runtime::Runtime;
 use specd::server::{client, serve, ServerState};
 use specd::workload::Dataset;
 
-fn runtime() -> Option<Arc<Runtime>> {
-    let dir = std::env::var("SPECD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if !p.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Runtime::load(&p).expect("runtime loads")))
-}
-
 #[test]
 fn http_generate_roundtrip() {
-    let Some(rt) = runtime() else { return };
-    let datasets = Dataset::load_all(rt.artifacts_dir()).unwrap();
+    let backend = Arc::new(NativeBackend::seeded(0x5e4e));
+    let datasets = Dataset::load_or_synthetic(None).unwrap();
     let cfg = Config::default();
-    let mut ecfg = EngineConfig::default();
-    ecfg.max_new_tokens = 12;
-    let coordinator = Coordinator::spawn(rt, ecfg, &cfg.server).unwrap();
+    let ecfg = EngineConfig { max_new_tokens: 12, ..Default::default() };
+    let coordinator = Coordinator::spawn(backend, ecfg, &cfg.server).unwrap();
     let state = Arc::new(ServerState { coordinator, datasets });
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();

@@ -1,0 +1,247 @@
+//! Offline API stub of the `xla` crate (PJRT bindings).
+//!
+//! The real crate needs network access and the native XLA/PJRT toolchain,
+//! neither of which exists in the build image.  This stub reproduces the
+//! exact API surface `specd::runtime::pjrt` uses so that
+//! `cargo check --features pjrt` type-checks offline:
+//!
+//! * [`Literal`] is fully functional — a host tensor container (f32/i32
+//!   data + dims + tuple nesting), so `runtime::literal` works for real.
+//! * The PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`PjRtBuffer`], [`HloModuleProto`], [`XlaComputation`]) carry no
+//!   backing implementation: constructors and executions return
+//!   [`Error::Unimplemented`] at runtime.
+//!
+//! To run the PJRT path for real, replace this path dependency in
+//! `rust/Cargo.toml` with the actual `xla` crate; no `specd` source changes
+//! are required (the surface below is signature-compatible).
+
+use std::fmt;
+
+/// Stub error type (the real crate's error also implements
+/// `std::error::Error`, which `?`-conversion in specd relies on).
+#[derive(Debug)]
+pub enum Error {
+    Unimplemented(&'static str),
+    Shape(String),
+    Type(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unimplemented(what) => write!(
+                f,
+                "{what}: built against the vendored xla stub — replace \
+                 rust/vendor/xla with the real xla crate to use the PJRT backend"
+            ),
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::Type(msg) => write!(f, "element type error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// Literal: a working host tensor container.
+// ---------------------------------------------------------------------------
+
+/// Storage for [`Literal`] payloads.  Public only because the
+/// [`ArrayElement`] trait names it in its methods; not part of the real
+/// crate's API surface.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: typed flat data plus dimensions (or a tuple of literals).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types storable in a [`Literal`].
+pub trait ArrayElement: Copy + Sized {
+    fn wrap(values: Vec<Self>) -> Data;
+    fn extract(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl ArrayElement for f32 {
+    fn wrap(values: Vec<Self>) -> Data {
+        Data::F32(values)
+    }
+
+    fn extract(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl ArrayElement for i32 {
+    fn wrap(values: Vec<Self>) -> Data {
+        Data::I32(values)
+    }
+
+    fn extract(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: ArrayElement>(values: &[T]) -> Literal {
+        let n = values.len() as i64;
+        Literal { data: T::wrap(values.to_vec()), dims: vec![n] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match; `&[]`
+    /// produces a rank-0 scalar from a 1-element literal).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::Shape("cannot reshape a tuple literal".into()));
+        }
+        if want.max(1) != have {
+            return Err(Error::Shape(format!("reshape {have} elements to {dims:?}")));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the flat data back as a typed vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data)
+            .ok_or_else(|| Error::Type("literal holds a different element type".into()))
+    }
+
+    /// Decompose a tuple literal into its leaves.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error::Shape("literal is not a tuple".into())),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface: signature-compatible, unimplemented at runtime.
+// ---------------------------------------------------------------------------
+
+/// Stub PJRT client.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+/// Stub PJRT device handle.
+pub struct PjRtDevice {
+    _priv: (),
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unimplemented("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unimplemented("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unimplemented("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unimplemented("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unimplemented("HloModuleProto::from_text_file"))
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.dims(), &[2, 2]);
+        assert!(lit.reshape(&[3]).is_err());
+        let scalar = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(scalar.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(scalar.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_reports_stub() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+    }
+}
