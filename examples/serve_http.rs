@@ -1,8 +1,12 @@
 //! End-to-end serving demo: starts the coordinator + HTTP server on a
 //! loopback port over the native backend (hermetic — trained weights only
-//! if an artifact bundle exists), fires a small batched workload from
+//! if an artifact bundle exists), fires a small mixed-length workload from
 //! several client threads, and reports latency/throughput — the
-//! serving-paper E2E driver (EXPERIMENTS.md records a run).
+//! serving-paper E2E driver (EXPERIMENTS.md records a run).  Short
+//! requests complete and their slots are refilled while long ones are
+//! still decoding (continuous batching, DESIGN.md §7) — visible in the
+//! `specd_slot_occupancy` / `specd_slots_refilled` metrics printed at the
+//! end.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -40,7 +44,8 @@ fn main() -> anyhow::Result<()> {
     client::generate(&addr, "gsm8k", 8, 99)?;
     println!("warmup: {:?}", t0.elapsed());
 
-    // 4 client threads x 4 requests, mixed datasets -> continuous batching.
+    // 4 client threads x 4 requests, mixed datasets and mixed lengths ->
+    // the continuous batcher refills short rows' slots mid-decode.
     let n_clients = 4;
     let per_client = 4;
     let t0 = Instant::now();
@@ -51,8 +56,10 @@ fn main() -> anyhow::Result<()> {
             let mut lat = Vec::new();
             let mut toks = 0usize;
             let ds = ["gsm8k", "wmt", "xsum", "sharegpt"][c % 4];
+            let max_new = [32, 4, 16, 8][c % 4];
             for r in 0..per_client {
-                let resp = client::generate(&addr, ds, 32, (c * 100 + r) as u64).unwrap();
+                let resp =
+                    client::generate(&addr, ds, max_new, (c * 100 + r) as u64).unwrap();
                 lat.push(resp.latency_ms);
                 toks += resp.n_tokens;
             }

@@ -1,0 +1,133 @@
+//! Serving soak (CI gate): boot the full HTTP stack on the hermetic
+//! native backend, fire ~200 mixed-length concurrent requests from many
+//! client threads, and require every response to be 200 or 429 with no
+//! hangs — this hammers the continuous batcher's admit/step/release path
+//! end to end (DESIGN.md §7).
+//!
+//! ```sh
+//! cargo run --release --example soak            # 200 requests
+//! cargo run --release --example soak -- --requests=50
+//! ```
+//!
+//! Exit codes: 0 pass, 1 bad responses, 2 watchdog timeout (hang).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use specd::backend::NativeBackend;
+use specd::config::{Config, EngineConfig};
+use specd::coordinator::Coordinator;
+use specd::server::{client, serve, ServerState};
+use specd::util::json;
+use specd::workload::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let total: usize = std::env::args()
+        .find_map(|a| a.strip_prefix("--requests=").and_then(|v| v.parse().ok()))
+        .unwrap_or(200);
+
+    let backend = Arc::new(NativeBackend::seeded(0x50a4));
+    let datasets = Dataset::load_or_synthetic(None)?;
+    let mut cfg = Config::default();
+    // The in-flight limit must sit BELOW the client concurrency (16
+    // threads) or the 429 admission-rejection path would be unreachable:
+    // blocking clients can never hold more requests in flight than there
+    // are threads.
+    cfg.server.queue_limit = 8;
+    let ecfg = EngineConfig { max_new_tokens: 24, ..Default::default() };
+    let coordinator = Coordinator::spawn(backend, ecfg, &cfg.server)?;
+    let metrics = coordinator.metrics.clone();
+    let state = Arc::new(ServerState { coordinator, datasets });
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    {
+        let st = state.clone();
+        std::thread::spawn(move || {
+            let _ = serve(listener, st);
+        });
+    }
+    println!("soak: {total} requests against http://{addr}");
+
+    // Watchdog: a hang anywhere in the serving stack must fail the run,
+    // not stall CI until the job-level timeout.
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(600);
+            while Instant::now() < deadline {
+                if done.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            eprintln!("soak: watchdog deadline exceeded — serving stack hung");
+            std::process::exit(2);
+        });
+    }
+
+    let n_clients = 16;
+    let per_client = total.div_ceil(n_clients);
+    let ok = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let bad = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let (ok, rejected, bad) = (ok.clone(), rejected.clone(), bad.clone());
+        handles.push(std::thread::spawn(move || {
+            for r in 0..per_client {
+                let ds = ["gsm8k", "wmt", "xsum", "sharegpt"][(c + r) % 4];
+                let max_new = [1, 2, 4, 8, 16, 24][(c * per_client + r) % 6];
+                let body = json::to_string(&json::obj(vec![
+                    ("dataset", json::str_v(ds)),
+                    ("max_new_tokens", json::num(max_new as f64)),
+                    ("seed", json::num((c * 1000 + r) as f64)),
+                ]));
+                match client::post_json(&addr, "/v1/generate", &body) {
+                    Ok((200, _)) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok((429, _)) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok((status, resp)) => {
+                        eprintln!("soak: unexpected status {status}: {resp}");
+                        bad.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        eprintln!("soak: transport error: {e:#}");
+                        bad.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    done.store(true, Ordering::Release);
+
+    let wall = t0.elapsed().as_secs_f64();
+    let (ok, rejected, bad) =
+        (ok.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed), bad.load(Ordering::Relaxed));
+    let sent = n_clients * per_client;
+    println!(
+        "soak: {sent} requests in {wall:.1}s — {ok} ok, {rejected} rejected (429), {bad} bad"
+    );
+    println!(
+        "soak: slot occupancy {:.2}, refills {}, tokens {}",
+        metrics.slot_occupancy(),
+        metrics.slots_refilled.get(),
+        metrics.tokens_emitted.get()
+    );
+    if bad != 0 || ok == 0 || ok + rejected != sent {
+        eprintln!("soak FAILED");
+        std::process::exit(1);
+    }
+    println!("soak passed: all responses 2xx/429, no hangs");
+    Ok(())
+}

@@ -1,0 +1,202 @@
+//! Serving-path benchmark and CI perf-regression gate.
+//!
+//! Measures (1) token- vs block-verification throughput/block-efficiency
+//! on the fused engine and (2) mixed-length serving throughput under the
+//! continuous batcher versus an emulated batch-drain scheduler, then
+//! writes `BENCH_ci.json` for CI to archive.  Exit code is non-zero when
+//! a perf invariant regresses:
+//!
+//! * block-verification BE must not drop below token-level BE (the
+//!   paper's never-worse guarantee, Theorem 2; 0.05 finite-sample slack);
+//! * the continuous batcher must never need more engine iterations than
+//!   batch drain on the mixed-length profile (per-row decodes are
+//!   identical under both policies, so earlier admission can only shrink
+//!   the makespan; iteration counts are deterministic, so this cannot
+//!   flake).
+//!
+//! `--smoke` shrinks the workload for CI; `cargo bench --bench serving --
+//! --smoke`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use specd::backend::{Backend, NativeBackend};
+use specd::config::EngineConfig;
+use specd::engine::spec::SpecEngine;
+use specd::models::vocab;
+use specd::util::json;
+use specd::verify::Algo;
+use specd::workload::Dataset;
+
+/// One mixed-length request: a prompt plus its own generation cap.
+struct Req {
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// Decode `reqs` through the continuous-stream engine API under one of
+/// two scheduling policies, returning (generated tokens, engine
+/// iterations).  `drain == true` emulates the retired batch-drain
+/// coordinator: admissions only happen when every slot is free.
+fn run_policy(engine: &SpecEngine<NativeBackend>, reqs: &[Req], drain: bool) -> (usize, usize) {
+    let gamma = engine.cfg.gamma;
+    let b = engine.backend().info().batch;
+    let mut st = engine.begin_stream().unwrap();
+    // Per-slot remaining budget; None = slot free.
+    let mut budget: Vec<Option<usize>> = vec![None; b];
+    let mut next = 0usize;
+    let mut tokens = 0usize;
+    let mut iters = 0usize;
+    loop {
+        let all_free = budget.iter().all(|s| s.is_none());
+        if (!drain || all_free) && next < reqs.len() {
+            for slot in 0..b {
+                if budget[slot].is_none() && next < reqs.len() {
+                    let r = &reqs[next];
+                    engine.admit_row(&mut st, slot, &r.prompt, 0xbe9c4 + next as u64).unwrap();
+                    budget[slot] = Some(r.max_new);
+                    next += 1;
+                }
+            }
+        }
+        if budget.iter().all(|s| s.is_none()) {
+            break;
+        }
+        let out = engine.step_stream(&mut st).unwrap();
+        iters += 1;
+        for slot in 0..b {
+            let Some(remaining) = budget[slot] else { continue };
+            let tau = out.tau[slot] as usize;
+            let emitted = &out.emitted[slot * (gamma + 1)..slot * (gamma + 1) + tau + 1];
+            let mut left = remaining;
+            let mut finished = out.done[slot] != 0;
+            for &t in emitted {
+                if t as u32 == vocab::EOS {
+                    finished = true;
+                    break;
+                }
+                tokens += 1;
+                left -= 1;
+                if left == 0 {
+                    finished = true;
+                    break;
+                }
+            }
+            if finished {
+                engine.release_row(&mut st, slot);
+                budget[slot] = None;
+            } else {
+                budget[slot] = Some(left);
+            }
+        }
+    }
+    (tokens, iters)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_prompts, max_new, n_seeds) = if smoke { (8, 16, 1u64) } else { (24, 32, 2u64) };
+    let backend = Arc::new(NativeBackend::seeded(0xbe9c4));
+    let datasets = Dataset::load_or_synthetic(None)?;
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    for name in ["gsm8k", "wmt", "xsum"] {
+        let ds = datasets.iter().find(|d| d.name == name).expect("dataset");
+        prompts.extend(ds.take(n_prompts / 3 + 1));
+    }
+    prompts.truncate(n_prompts);
+
+    // ---- 1) token vs block verification: BE + tokens/sec ----------------
+    let mut be_results: Vec<(f64, f64)> = Vec::new(); // (BE, tok/s)
+    for algo in [Algo::Token, Algo::Block] {
+        let cfg = EngineConfig { algo, max_new_tokens: max_new, ..Default::default() };
+        let engine = SpecEngine::new(backend.clone(), cfg)?;
+        // Warm-up pass, then timed seeds.
+        let _ = engine.run_prompts(&prompts[..prompts.len().min(4)], 0)?;
+        let (mut emitted, mut iters, mut toks) = (0usize, 0usize, 0usize);
+        let t0 = Instant::now();
+        for seed in 0..n_seeds {
+            for rep in engine.run_prompts(&prompts, seed)? {
+                toks += rep.total_tokens();
+                for row in &rep.rows {
+                    emitted += row.emitted;
+                    iters += row.iterations;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let be = emitted as f64 / iters.max(1) as f64;
+        let tps = toks as f64 / wall.max(1e-9);
+        println!("verify/{algo:<6}  BE {be:>6.3}   {tps:>9.1} tok/s");
+        be_results.push((be, tps));
+    }
+    let (token_be, token_tps) = be_results[0];
+    let (block_be, block_tps) = be_results[1];
+
+    // ---- 2) mixed-length serving: continuous vs emulated batch drain ----
+    // Caps cycle short/medium/long so freed slots matter.
+    let caps = [4usize, max_new, 4, 8, 4, max_new / 2];
+    let reqs: Vec<Req> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Req { prompt: p.clone(), max_new: caps[i % caps.len()] })
+        .collect();
+    let cfg = EngineConfig { algo: Algo::Block, max_new_tokens: max_new, ..Default::default() };
+    let engine = SpecEngine::new(backend.clone(), cfg)?;
+    let _ = run_policy(&engine, &reqs[..reqs.len().min(4)], false); // warm-up
+    let t0 = Instant::now();
+    let (drain_tokens, drain_iters) = run_policy(&engine, &reqs, true);
+    let drain_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (cont_tokens, cont_iters) = run_policy(&engine, &reqs, false);
+    let cont_wall = t0.elapsed().as_secs_f64();
+    let drain_tps = drain_tokens as f64 / drain_wall.max(1e-9);
+    let cont_tps = cont_tokens as f64 / cont_wall.max(1e-9);
+    println!(
+        "serving/drain       {drain_tps:>9.1} tok/s  ({drain_tokens} tokens, {drain_iters} iters)"
+    );
+    println!(
+        "serving/continuous  {cont_tps:>9.1} tok/s  ({cont_tokens} tokens, {cont_iters} iters)"
+    );
+    println!(
+        "serving/speedup     {:.2}x wall, {:.2}x fewer iterations",
+        cont_tps / drain_tps.max(1e-9),
+        drain_iters as f64 / cont_iters.max(1) as f64
+    );
+
+    // ---- write BENCH_ci.json --------------------------------------------
+    let report = json::obj(vec![
+        ("smoke", json::Value::Bool(smoke)),
+        ("token_be", json::num(token_be)),
+        ("block_be", json::num(block_be)),
+        ("token_tps", json::num(token_tps)),
+        ("block_tps", json::num(block_tps)),
+        ("drain_tps", json::num(drain_tps)),
+        ("continuous_tps", json::num(cont_tps)),
+        ("drain_iters", json::num(drain_iters as f64)),
+        ("continuous_iters", json::num(cont_iters as f64)),
+    ]);
+    std::fs::write("BENCH_ci.json", json::to_string(&report))?;
+    println!("wrote BENCH_ci.json");
+
+    // ---- CI gates --------------------------------------------------------
+    let mut failed = false;
+    if block_be < token_be - 0.05 {
+        eprintln!(
+            "PERF REGRESSION: block-verification BE {block_be:.3} fell below \
+             token-level BE {token_be:.3}"
+        );
+        failed = true;
+    }
+    if cont_iters > drain_iters {
+        eprintln!(
+            "PERF REGRESSION: continuous batching used {cont_iters} iterations, \
+             batch drain only {drain_iters} — slot refill is hurting"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("perf gates passed: block BE >= token BE, continuous <= drain iterations");
+    Ok(())
+}

@@ -1,15 +1,15 @@
 //! Execution backends: the device abstraction the engine layer runs on.
 //!
 //! The [`Backend`] trait is the contract extracted from the original
-//! PJRT-only runtime (DESIGN.md §5): five operations — `prefill`,
-//! `spec_iter`, `draft_block`, `target_score`, `baseline_step` — expressed
-//! over *plain host tensors* (`tokens (B, L) i32`, `length (B,) i32`, flat
-//! `f32`/`i32` readbacks) plus an opaque per-model KV-cache handle
-//! ([`Backend::Kv`]) that each backend represents however it likes
-//! (device-resident buffers on PJRT, flat `Vec<f32>` on the native CPU
-//! backend).  Engines ([`crate::engine`]), the coordinator, the experiment
-//! harness and the benches are generic over `B: Backend` and never name a
-//! concrete runtime type.
+//! PJRT-only runtime (DESIGN.md §5): six operations — `prefill`,
+//! `spec_iter`, `draft_block`, `target_score`, `baseline_step`,
+//! `kv_splice` — expressed over *plain host tensors* (`tokens (B, L) i32`,
+//! `length (B,) i32`, flat `f32`/`i32` readbacks) plus an opaque per-model
+//! KV-cache handle ([`Backend::Kv`]) that each backend represents however
+//! it likes (device-resident buffers on PJRT, flat `Vec<f32>` on the
+//! native CPU backend).  Engines ([`crate::engine`]), the coordinator, the
+//! experiment harness and the benches are generic over `B: Backend` and
+//! never name a concrete runtime type.
 //!
 //! Implementations:
 //! * [`NativeBackend`] — pure-Rust CPU transformer forward pass mirroring
@@ -114,8 +114,14 @@ pub struct StepOut {
 /// * KV caches cover positions `0..length-2` plus junk above; every
 ///   operation consumes a contiguous run of positions starting at
 ///   `length - 1` and rewrites exactly those cache rows.
-/// * `seed` feeds the backend's per-call sampling randomness; identical
-///   seeds on identical state must reproduce identical outputs.
+/// * Sampling randomness is seeded **per row**: `seeds (B,)` feeds one
+///   independent stream per batch row, and row `b`'s outputs must be a
+///   pure function of `(row b state, seeds[b])` — independent of the slot
+///   index and of every other row.  That slot-independence is what makes
+///   continuous batching lossless: a row admitted mid-decode via
+///   [`Backend::kv_splice`] replays exactly the tokens it would have
+///   produced in a fresh batch (DESIGN.md §7).  Identical seeds on
+///   identical state must reproduce identical outputs.
 pub trait Backend: Send + Sync + 'static {
     /// Opaque per-model KV-cache state carried across calls.  Only ever
     /// handed back to the backend that produced it.
@@ -131,8 +137,10 @@ pub trait Backend: Send + Sync + 'static {
     /// One fused SpecDec iteration (paper Algorithm 3): draft `gamma`
     /// tokens with `drafter`, score with the target, verify with `algo`,
     /// and apply the accepted block — updating `tokens`/`length` in place
-    /// and both KV caches.  Only stateless algorithms (`algo.fused()`)
-    /// are accepted; greedy verification needs the host-verify path.
+    /// and both KV caches.  `seeds (B,)` carries one sampling seed per
+    /// row (see the trait docs' per-row determinism contract).  Only
+    /// stateless algorithms (`algo.fused()`) are accepted; greedy
+    /// verification needs the host-verify path.
     #[allow(clippy::too_many_arguments)]
     fn spec_iter(
         &self,
@@ -143,12 +151,13 @@ pub trait Backend: Send + Sync + 'static {
         length: &mut [i32],
         kv_target: &mut Self::Kv,
         kv_drafter: &mut Self::Kv,
-        seed: i32,
+        seeds: &[i32],
     ) -> anyhow::Result<SpecIterOut>;
 
     /// `gamma` autoregressive draft steps from the pending token
-    /// (host-verify path).  Advances `kv` by `gamma` cache rows; does not
-    /// touch `tokens`/`length` (the host engine owns sequence state).
+    /// (host-verify path), drawing row `b`'s samples from `seeds[b]`.
+    /// Advances `kv` by `gamma` cache rows; does not touch
+    /// `tokens`/`length` (the host engine owns sequence state).
     #[allow(clippy::too_many_arguments)]
     fn draft_block(
         &self,
@@ -157,7 +166,7 @@ pub trait Backend: Send + Sync + 'static {
         tokens: &[i32],
         length: &[i32],
         kv: &mut Self::Kv,
-        seed: i32,
+        seeds: &[i32],
     ) -> anyhow::Result<DraftOut>;
 
     /// Parallel target scoring of the `gamma + 1` draft prefixes
@@ -183,9 +192,30 @@ pub trait Backend: Send + Sync + 'static {
         seed: i32,
     ) -> anyhow::Result<StepOut>;
 
-    /// Batch-boundary hook, called once after a batch fully drains.  The
-    /// PJRT backend releases pinned host literals here; the native backend
-    /// has nothing to do.
+    /// Splice one prefilled row's KV cache into a live batch: copy cache
+    /// positions `0..len` of `src`'s model-`model` cache row `src_row`
+    /// over row `dst_slot` of `dst`.  This is the continuous batcher's
+    /// refill primitive (DESIGN.md §7): a freshly prefilled prompt enters
+    /// a freed slot of a mid-decode batch without disturbing any other
+    /// row.  Both caches must belong to `model` and share serving shapes;
+    /// positions `len..` of the destination row are left as-is (they are
+    /// rewritten before ever being attended, per the layout contract
+    /// above).
+    fn kv_splice(
+        &self,
+        model: &str,
+        dst: &mut Self::Kv,
+        dst_slot: usize,
+        src: &Self::Kv,
+        src_row: usize,
+        len: usize,
+    ) -> anyhow::Result<()>;
+
+    /// Drain-boundary hook: called after a batch fully drains, and by the
+    /// continuous batcher after any step in which a row completed (the
+    /// step's outputs have been read back by then, so all outstanding
+    /// uploads are complete).  The PJRT backend releases pinned host
+    /// literals here; the native backend has nothing to do.
     fn end_batch(&self) {}
 }
 

@@ -191,16 +191,18 @@ fn sample_row(probs: &[f32], u: f64) -> usize {
     dist::inv_cdf(&w, u)
 }
 
-/// The per-iteration verification uniforms for a given device seed:
-/// `etas` row-major `(B, gamma)` and `us (B,)`.  Public so the
-/// cross-backend losslessness tests can replay the fused path's
-/// randomness through the host `verify::verify` dispatch draw-for-draw.
-pub fn verify_uniforms(seed: i32, batch: usize, gamma: usize) -> (Vec<f64>, Vec<f64>) {
+/// The verification uniforms one row draws from its per-row seed: `etas
+/// (gamma,)` and the residual-sampling uniform `u`.  A pure function of
+/// `(seed, gamma)` — no batch or slot index enters, which is what makes
+/// a row's verification stream slot-independent (the continuous-batching
+/// losslessness contract, DESIGN.md §7).  Public so the cross-backend
+/// losslessness tests can replay the fused path's randomness through the
+/// host `verify::verify` dispatch draw-for-draw.
+pub fn verify_uniforms(seed: i32, gamma: usize) -> (Vec<f64>, f64) {
     let mut eta_rng = Rng::new(seed64(seed) ^ DOM_ETA);
-    let etas: Vec<f64> = (0..batch * gamma).map(|_| eta_rng.uniform()).collect();
+    let etas: Vec<f64> = (0..gamma).map(|_| eta_rng.uniform()).collect();
     let mut u_rng = Rng::new(seed64(seed) ^ DOM_RESIDUAL);
-    let us: Vec<f64> = (0..batch).map(|_| u_rng.uniform()).collect();
-    (etas, us)
+    (etas, u_rng.uniform())
 }
 
 // ---------------------------------------------------------------------------
@@ -631,7 +633,9 @@ impl NativeBackend {
             .collect()
     }
 
-    /// `gamma` autoregressive draft steps (`model.py::draft_scan`).
+    /// `gamma` autoregressive draft steps (`model.py::draft_scan`).  Row
+    /// `b` samples from its own stream keyed on `seeds[b]` alone, so a
+    /// row's draft trajectory is independent of its slot and neighbours.
     fn draft_scan(
         &self,
         model: &NativeModel,
@@ -639,10 +643,11 @@ impl NativeBackend {
         tokens: &[i32],
         length: &[i32],
         gamma: usize,
-        seed: i32,
+        seeds: &[i32],
     ) -> (Vec<i32>, Vec<f32>) {
         let (b, vcb) = (self.info.batch, self.info.vocab_size);
-        let mut rng = Rng::new(seed64(seed) ^ DOM_DRAFT);
+        let mut rngs: Vec<Rng> =
+            seeds.iter().map(|&s| Rng::new(seed64(s) ^ DOM_DRAFT)).collect();
         let mut cur = self.gather_pending(tokens, length);
         let mut drafts = vec![0i32; b * gamma];
         let mut qs = vec![0.0f32; b * gamma * vcb];
@@ -652,13 +657,25 @@ impl NativeBackend {
             for bi in 0..b {
                 let prow = &probs[bi * vcb..(bi + 1) * vcb];
                 qs[(bi * gamma + j) * vcb..(bi * gamma + j + 1) * vcb].copy_from_slice(prow);
-                let u = rng.uniform();
+                let u = rngs[bi].uniform();
                 let next = sample_row(prow, u) as i32;
                 drafts[bi * gamma + j] = next;
                 cur[bi] = next;
             }
         }
         (drafts, qs)
+    }
+
+    /// Per-row seed count must match the serving batch.
+    fn check_seeds(&self, seeds: &[i32]) -> anyhow::Result<()> {
+        if seeds.len() != self.info.batch {
+            return Err(anyhow!(
+                "seeds shape {} != batch {}",
+                seeds.len(),
+                self.info.batch
+            ));
+        }
+        Ok(())
     }
 
     /// Parallel scoring of the `gamma + 1` prefixes
@@ -726,25 +743,26 @@ impl Backend for NativeBackend {
         length: &mut [i32],
         kv_target: &mut NativeKv,
         kv_drafter: &mut NativeKv,
-        seed: i32,
+        seeds: &[i32],
     ) -> anyhow::Result<SpecIterOut> {
         if !algo.fused() {
             return Err(anyhow!("algo {algo} requires the host-verify engine"));
         }
         self.check_shapes(tokens, length)?;
         self.check_gamma(gamma)?;
+        self.check_seeds(seeds)?;
         let (b, l, vcb) = (self.info.batch, self.info.max_len, self.info.vocab_size);
         let m_d = self.model(drafter)?;
         let m_t = self.model("target")?;
 
-        let (drafts, qs) = self.draft_scan(m_d, kv_drafter, tokens, length, gamma, seed);
+        let (drafts, qs) = self.draft_scan(m_d, kv_drafter, tokens, length, gamma, seeds);
         let ps = self.score(m_t, kv_target, tokens, length, &drafts, gamma);
-        let (etas, us) = verify_uniforms(seed, b, gamma);
 
         let mut tau = vec![0i32; b];
         let mut emitted = vec![vocab::PAD as i32; b * (gamma + 1)];
         let mut done = vec![0i32; b];
         for bi in 0..b {
+            let (etas, u_res) = verify_uniforms(seeds[bi], gamma);
             let ps_m = ProbMatrix::from_f32(
                 gamma + 1,
                 vcb,
@@ -754,14 +772,7 @@ impl Backend for NativeBackend {
                 ProbMatrix::from_f32(gamma, vcb, &qs[bi * gamma * vcb..(bi + 1) * gamma * vcb]);
             let row_drafts: Vec<u32> =
                 drafts[bi * gamma..(bi + 1) * gamma].iter().map(|&x| x as u32).collect();
-            let outcome = verify::verify(
-                algo,
-                &ps_m,
-                &qs_m,
-                &row_drafts,
-                &etas[bi * gamma..(bi + 1) * gamma],
-                us[bi],
-            );
+            let outcome = verify::verify(algo, &ps_m, &qs_m, &row_drafts, &etas, u_res);
             let len = length[bi].max(0) as usize;
             for (j, &t) in outcome.emitted.iter().enumerate() {
                 if len + j < l {
@@ -786,13 +797,54 @@ impl Backend for NativeBackend {
         tokens: &[i32],
         length: &[i32],
         kv: &mut NativeKv,
-        seed: i32,
+        seeds: &[i32],
     ) -> anyhow::Result<DraftOut> {
         self.check_shapes(tokens, length)?;
         self.check_gamma(gamma)?;
+        self.check_seeds(seeds)?;
         let m = self.model(drafter)?;
-        let (drafts, qs) = self.draft_scan(m, kv, tokens, length, gamma, seed);
+        let (drafts, qs) = self.draft_scan(m, kv, tokens, length, gamma, seeds);
         Ok(DraftOut { drafts, qs })
+    }
+
+    /// Host-memory splice: copy `len` leading cache rows of `src` row
+    /// `src_row` over `dst` row `dst_slot`, for every layer of `model`'s
+    /// cache.  O(len · layers · d_model) copies, no model evaluation.
+    fn kv_splice(
+        &self,
+        model: &str,
+        dst: &mut NativeKv,
+        dst_slot: usize,
+        src: &NativeKv,
+        src_row: usize,
+        len: usize,
+    ) -> anyhow::Result<()> {
+        let m = self.model(model)?;
+        let geom = (m.dims.n_layers, m.dims.n_heads, m.dims.head_dim());
+        for (who, kv) in [("dst", &*dst), ("src", src)] {
+            if (kv.n_layers, kv.n_heads, kv.head_dim) != geom || kv.max_len != self.info.max_len
+            {
+                return Err(anyhow!("kv_splice: {who} cache does not belong to '{model}'"));
+            }
+        }
+        if dst_slot >= dst.batch || src_row >= src.batch {
+            return Err(anyhow!(
+                "kv_splice: row out of range (dst {dst_slot}/{}, src {src_row}/{})",
+                dst.batch,
+                src.batch
+            ));
+        }
+        if len > self.info.max_len {
+            return Err(anyhow!("kv_splice: len {len} exceeds ring {}", self.info.max_len));
+        }
+        let chunk = len * geom.1 * geom.2;
+        for li in 0..geom.0 {
+            let d0 = dst.row(li, dst_slot, 0);
+            let s0 = src.row(li, src_row, 0);
+            dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
+            dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+        }
+        Ok(())
     }
 
     fn target_score(
@@ -871,7 +923,7 @@ mod tests {
         let be = tiny();
         let (toks, lens) = prompt_state(&be);
         let mut kv = be.prefill("xxs", &toks, &lens).unwrap();
-        let out = be.draft_block("xxs", 3, &toks, &lens, &mut kv, 5).unwrap();
+        let out = be.draft_block("xxs", 3, &toks, &lens, &mut kv, &[5, 6]).unwrap();
         let v = be.info().vocab_size;
         assert_eq!(out.drafts.len(), 2 * 3);
         assert_eq!(out.qs.len(), 2 * 3 * v);
@@ -903,7 +955,7 @@ mod tests {
         let mut kvd = be.prefill("xxs", &toks, &lens).unwrap();
         let len0 = lens.clone();
         let out = be
-            .spec_iter(Algo::Block, "xxs", 4, &mut toks, &mut lens, &mut kvt, &mut kvd, 3)
+            .spec_iter(Algo::Block, "xxs", 4, &mut toks, &mut lens, &mut kvt, &mut kvd, &[3, 4])
             .unwrap();
         for b in 0..be.info().batch {
             let t = out.tau[b] as usize;
@@ -926,21 +978,49 @@ mod tests {
         let mut kvt = be.prefill("target", &toks, &lens).unwrap();
         let mut kvd = be.prefill("xxs", &toks, &lens).unwrap();
         assert!(be
-            .spec_iter(Algo::Greedy, "xxs", 4, &mut toks, &mut lens, &mut kvt, &mut kvd, 0)
+            .spec_iter(Algo::Greedy, "xxs", 4, &mut toks, &mut lens, &mut kvt, &mut kvd, &[0, 0])
             .is_err());
     }
 
     #[test]
     fn verify_uniforms_are_stable_and_in_range() {
-        let (e1, u1) = verify_uniforms(42, 4, 8);
-        let (e2, u2) = verify_uniforms(42, 4, 8);
+        let (e1, u1) = verify_uniforms(42, 8);
+        let (e2, u2) = verify_uniforms(42, 8);
         assert_eq!(e1, e2);
         assert_eq!(u1, u2);
-        assert_eq!(e1.len(), 32);
-        assert_eq!(u1.len(), 4);
-        assert!(e1.iter().chain(u1.iter()).all(|&x| (0.0..1.0).contains(&x)));
-        let (e3, _) = verify_uniforms(43, 4, 8);
+        assert_eq!(e1.len(), 8);
+        assert!(e1.iter().all(|&x| (0.0..1.0).contains(&x)));
+        assert!((0.0..1.0).contains(&u1));
+        let (e3, _) = verify_uniforms(43, 8);
         assert_ne!(e1, e3);
+    }
+
+    #[test]
+    fn kv_splice_copies_exactly_one_row() {
+        let be = tiny();
+        let (toks, lens) = prompt_state(&be);
+        let src = be.prefill("target", &toks, &lens).unwrap();
+        // A differently prefilled destination cache.
+        let mut toks2 = toks.clone();
+        toks2[2] = 60;
+        let mut dst = be.prefill("target", &toks2, &lens).unwrap();
+        let before_row0 = dst.k[dst.row(0, 0, 0)..dst.row(0, 1, 0)].to_vec();
+        let len = lens[0] as usize;
+        be.kv_splice("target", &mut dst, 1, &src, 0, len).unwrap();
+        // Destination row 1 now equals source row 0 on the spliced span...
+        let chunk = len * dst.n_heads * dst.head_dim;
+        for li in 0..dst.n_layers {
+            let d0 = dst.row(li, 1, 0);
+            let s0 = src.row(li, 0, 0);
+            assert_eq!(&dst.k[d0..d0 + chunk], &src.k[s0..s0 + chunk]);
+            assert_eq!(&dst.v[d0..d0 + chunk], &src.v[s0..s0 + chunk]);
+        }
+        // ...and row 0 was left untouched.
+        assert_eq!(before_row0, dst.k[dst.row(0, 0, 0)..dst.row(0, 1, 0)].to_vec());
+        // Bad geometry / bounds are rejected.
+        assert!(be.kv_splice("target", &mut dst, 9, &src, 0, len).is_err());
+        let xxs = be.prefill("xxs", &toks, &lens).unwrap();
+        assert!(be.kv_splice("target", &mut dst, 1, &xxs, 0, len).is_err());
     }
 
     #[test]
@@ -965,7 +1045,8 @@ mod tests {
         for name in ["xxs", "xxxs"] {
             let mut kv_d = be.prefill(name, &toks, &lens).unwrap();
             let mut kv_t = be.prefill("target", &toks, &lens).unwrap();
-            let d = be.draft_block(name, gamma, &toks, &lens, &mut kv_d, 9).unwrap();
+            let seeds: Vec<i32> = (0..info.batch as i32).map(|b| 9 + 7 * b).collect();
+            let d = be.draft_block(name, gamma, &toks, &lens, &mut kv_d, &seeds).unwrap();
             let ps = be.target_score(gamma, &toks, &lens, &mut kv_t, &d.drafts).unwrap();
             let v = info.vocab_size;
             let mut sum = 0.0;

@@ -72,6 +72,24 @@ impl PjrtBackend {
         &self.rt
     }
 
+    /// Fold per-row seeds into the single scalar the AOT program grid
+    /// takes.  The compiled HLO derives its threefry streams from this
+    /// scalar with row-index fold-ins, so batch-level determinism is
+    /// preserved; *per-row* admission-order determinism (DESIGN.md §7)
+    /// additionally needs programs regenerated with a `(B,)` seed input —
+    /// tracked in ROADMAP.md, irrelevant until the real `xla` crate is
+    /// vendored in.
+    fn mix_seeds(&self, seeds: &[i32]) -> anyhow::Result<i32> {
+        if seeds.len() != self.info.batch {
+            return Err(anyhow!("seeds shape {} != batch {}", seeds.len(), self.info.batch));
+        }
+        let mut mixed: i64 = 0x5eed;
+        for &s in seeds {
+            mixed = mixed.wrapping_mul(0x0100_0000_01b3).wrapping_add(s as i64);
+        }
+        Ok(mixed as i32)
+    }
+
     fn upload_state(
         &self,
         tokens: &[i32],
@@ -123,7 +141,7 @@ impl Backend for PjrtBackend {
         length: &mut [i32],
         kv_target: &mut PjrtKv,
         kv_drafter: &mut PjrtKv,
-        seed: i32,
+        seeds: &[i32],
     ) -> anyhow::Result<SpecIterOut> {
         if !algo.fused() {
             return Err(anyhow!("algo {algo} requires the host-verify path"));
@@ -133,7 +151,7 @@ impl Backend for PjrtBackend {
         let w_t = rt.weights("target")?;
         let w_d = rt.weights(drafter)?;
         let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
-        let seed_buf = rt.upload(literal::i32_scalar(seed)?)?;
+        let seed_buf = rt.upload(literal::i32_scalar(self.mix_seeds(seeds)?)?)?;
         let (kvt_k, kvt_v) = kv_target.take()?;
         let (kvd_k, kvd_v) = kv_drafter.take()?;
         let kvt_k = kvt_k.ensure_buffer(rt)?;
@@ -176,13 +194,13 @@ impl Backend for PjrtBackend {
         tokens: &[i32],
         length: &[i32],
         kv: &mut PjrtKv,
-        seed: i32,
+        seeds: &[i32],
     ) -> anyhow::Result<DraftOut> {
         let rt = &*self.rt;
         let prog = rt.program(&format!("draft_block_{drafter}_g{gamma}"))?;
         let weights = rt.weights(drafter)?;
         let (tok_buf, len_buf) = self.upload_state(tokens, length)?;
-        let seed_buf = rt.upload(literal::i32_scalar(seed)?)?;
+        let seed_buf = rt.upload(literal::i32_scalar(self.mix_seeds(seeds)?)?)?;
         let (kv_k, kv_v) = kv.take()?;
         let kv_k = kv_k.ensure_buffer(rt)?;
         let kv_v = kv_v.ensure_buffer(rt)?;
@@ -271,10 +289,86 @@ impl Backend for PjrtBackend {
         Ok(StepOut { next, done })
     }
 
+    /// Host-roundtrip splice: read both caches back as literals, copy the
+    /// row span, re-upload lazily (the rebuilt handles are
+    /// [`StateHandle::Lit`]s that `ensure_buffer` uploads on the next
+    /// call).  A device-side KV-merge program would avoid the readback;
+    /// until the AOT grid grows one (ROADMAP.md), refill admissions on
+    /// PJRT pay one KV round-trip each — correct, just not resident.
+    fn kv_splice(
+        &self,
+        model: &str,
+        dst: &mut PjrtKv,
+        dst_slot: usize,
+        src: &PjrtKv,
+        src_row: usize,
+        len: usize,
+    ) -> anyhow::Result<()> {
+        let meta = self.rt.manifest.model(model)?;
+        let (b, l) = (self.info.batch, self.info.max_len);
+        if dst_slot >= b || src_row >= b {
+            return Err(anyhow!("kv_splice: row out of range (dst {dst_slot}, src {src_row})"));
+        }
+        if len > l {
+            return Err(anyhow!("kv_splice: len {len} exceeds ring {l}"));
+        }
+        let row_elems = l * meta.d_model; // L positions x (H, hd) blocks
+        let chunk = len * meta.d_model;
+        // Everything below reads through shared references and validates
+        // before the final `put`, so a failed splice leaves the live
+        // destination cache exactly as it was (the per-request admission
+        // error must not poison the whole batch).
+        let sk = src.k.as_ref().ok_or_else(|| anyhow!("source KV consumed"))?;
+        let sv = src.v.as_ref().ok_or_else(|| anyhow!("source KV consumed"))?;
+        let (sk, _) = handle_to_host(sk)?;
+        let (sv, _) = handle_to_host(sv)?;
+        let dk_h = dst.k.as_ref().ok_or_else(|| anyhow!("destination KV consumed"))?;
+        let dv_h = dst.v.as_ref().ok_or_else(|| anyhow!("destination KV consumed"))?;
+        let (mut dk, dk_dims) = handle_to_host(dk_h)?;
+        let (mut dv, dv_dims) = handle_to_host(dv_h)?;
+        let want = meta.n_layers * b * row_elems;
+        if sk.len() != want || dk.len() != want {
+            return Err(anyhow!(
+                "kv_splice: cache size mismatch for '{model}' (src {}, dst {}, want {want})",
+                sk.len(),
+                dk.len()
+            ));
+        }
+        for li in 0..meta.n_layers {
+            let d0 = (li * b + dst_slot) * row_elems;
+            let s0 = (li * b + src_row) * row_elems;
+            dk[d0..d0 + chunk].copy_from_slice(&sk[s0..s0 + chunk]);
+            dv[d0..d0 + chunk].copy_from_slice(&sv[s0..s0 + chunk]);
+        }
+        let k_lit = xla::Literal::vec1(&dk)
+            .reshape(&dk_dims)
+            .map_err(|e| anyhow!("kv_splice reshape: {e}"))?;
+        let v_lit = xla::Literal::vec1(&dv)
+            .reshape(&dv_dims)
+            .map_err(|e| anyhow!("kv_splice reshape: {e}"))?;
+        dst.put(StateHandle::Lit(k_lit), StateHandle::Lit(v_lit));
+        Ok(())
+    }
+
     /// Release pinned upload literals: every output of the batch's final
     /// execution has been read back by now, which forces completion of all
     /// outstanding host-to-device copies.
     fn end_batch(&self) {
         self.rt.clear_pinned();
     }
+}
+
+/// Materialise a carried state tensor on the host as `(flat f32 data,
+/// dims)` without consuming the handle.
+fn handle_to_host(h: &StateHandle) -> anyhow::Result<(Vec<f32>, Vec<i64>)> {
+    let lit_owned;
+    let lit = match h {
+        StateHandle::Buf(buf) => {
+            lit_owned = buf.to_literal_sync().map_err(|e| anyhow!("kv readback: {e}"))?;
+            &lit_owned
+        }
+        StateHandle::Lit(l) => l,
+    };
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("kv to_vec: {e}"))?;
+    Ok((data, lit.dims().to_vec()))
 }

@@ -3,12 +3,14 @@
 //!
 //! Architecture (vLLM-router-like, scaled to a single-process CPU
 //! backend): front-end threads enqueue [`GenRequest`]s into a bounded
-//! channel; a dedicated worker thread drains the queue into batches of the
-//! engine's slot count `B` and runs each batch to completion ("batch
-//! drain" — per-slot refill requires a KV-merge operation on the backend,
-//! listed as future work in DESIGN.md §7).  Responses flow back through
-//! per-request oneshot channels.  Everything is std-only: the offline
-//! image has no tokio.
+//! channel guarded by an atomic [`AdmissionGate`]; a dedicated worker
+//! thread runs a **continuous batcher** over the engine's `B` slots
+//! (DESIGN.md §7) — queued requests are spliced into freed slots
+//! mid-decode via [`crate::backend::Backend::kv_splice`], every slot
+//! replies the moment its own row finishes, and mixed-length traffic no
+//! longer decodes at the speed of the slowest row in a batch.  Responses
+//! flow back through per-request oneshot channels.  Everything is
+//! std-only: the offline image has no tokio.
 //!
 //! [`Coordinator::spawn`] is generic over [`Backend`]; the handle itself
 //! is type-erased (the worker thread owns the engine), so the HTTP server
@@ -16,8 +18,7 @@
 
 pub mod queue;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -25,17 +26,24 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, ServerConfig};
-use crate::engine::spec::SpecEngine;
-use crate::engine::RowResult;
+use crate::engine::spec::{DecodeState, SpecEngine};
+use crate::engine::{RowResult, RowTracker};
 use crate::metrics::EngineMetrics;
+use crate::verify::Rng;
 
-pub use queue::{AdmissionError, RequestQueue};
+pub use queue::{AdmissionError, AdmissionGate, RequestQueue, SlotTable};
 
 /// A generation request as accepted by the coordinator.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub prompt: Vec<u32>,
     pub max_new_tokens: Option<usize>,
+    /// Per-request sampling seed.  When set, the row's draft and
+    /// verification randomness is a pure function of this value — the
+    /// generation reproduces exactly regardless of which slot it lands in
+    /// or what else is being served (DESIGN.md §7).  `None` draws a fresh
+    /// seed from the worker's admission stream.
+    pub seed: Option<u64>,
     pub enqueued: Instant,
 }
 
@@ -46,8 +54,7 @@ type Reply = std::sync::mpsc::SyncSender<Result<RowResult>>;
 pub struct Coordinator {
     tx: SyncSender<(GenRequest, Reply)>,
     pub metrics: Arc<EngineMetrics>,
-    inflight: Arc<AtomicUsize>,
-    queue_limit: usize,
+    gate: Arc<AdmissionGate>,
 }
 
 impl Coordinator {
@@ -67,35 +74,39 @@ impl Coordinator {
             .name("specd-batcher".into())
             .spawn(move || batch_worker(engine, rx, batch_wait, m2))
             .map_err(|e| anyhow!("spawning batcher: {e}"))?;
-        Ok(Coordinator {
-            tx,
-            metrics,
-            inflight: Arc::new(AtomicUsize::new(0)),
-            queue_limit: limit,
-        })
+        Ok(Coordinator { tx, metrics, gate: Arc::new(AdmissionGate::new(limit)) })
     }
 
-    /// Enqueue a request and block until its batch completes.
+    /// Enqueue a request and block until its row completes.
     pub fn generate(&self, req: GenRequest) -> Result<RowResult> {
-        if self.inflight.load(Ordering::Relaxed) >= self.queue_limit {
+        // Single atomic check-and-increment: concurrent callers can never
+        // exceed `queue_limit` (see AdmissionGate).
+        if !self.gate.try_acquire() {
             return Err(anyhow!("queue full — admission rejected"));
         }
         let (otx, orx) = sync_channel(1);
         self.metrics.requests_enqueued.inc();
-        self.inflight.fetch_add(1, Ordering::Relaxed);
         let res = (|| {
             self.tx
                 .try_send((req, otx))
                 .map_err(|_| anyhow!("queue full — admission rejected"))?;
             orx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
         })();
-        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.gate.release();
         res
     }
 }
 
-/// Batch formation loop: greedily drain up to `B` requests, waiting at most
-/// `batch_wait` for stragglers after the first arrival.
+/// Per-slot request bookkeeping held by the worker.
+struct SlotReq {
+    tracker: RowTracker,
+    reply: Reply,
+    enqueued: Instant,
+}
+
+/// Continuous batching loop: admit queued requests into free engine slots
+/// the moment they open (including mid-decode), step the fused engine over
+/// the live batch, and reply per row as it finishes.
 fn batch_worker<B: Backend>(
     engine: SpecEngine<B>,
     rx: Receiver<(GenRequest, Reply)>,
@@ -103,44 +114,149 @@ fn batch_worker<B: Backend>(
     metrics: Arc<EngineMetrics>,
 ) {
     let b = engine.backend().info().batch;
-    let mut seed: u64 = 0xc0ffee0;
-    loop {
-        let first = match rx.recv() {
-            Ok(x) => x,
-            Err(_) => return, // all senders dropped: shut down
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + batch_wait;
-        while batch.len() < b {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+    let gamma = engine.cfg.gamma;
+    let default_max_new = engine.cfg.max_new_tokens;
+    // Admission seeds for requests that do not pin their own; requests
+    // that need reproducibility set `GenRequest::seed`.
+    let mut seed_rng = Rng::new(0xc0ffee0 ^ 0x9E3779B97F4A7C15);
+    // The decode stream is built lazily (first admission) and rebuilt
+    // after a device-level failure.
+    let mut state: Option<DecodeState<B>> = None;
+    let mut slots: SlotTable<SlotReq> = SlotTable::new(b);
+    'serve: loop {
+        // --- gather incoming requests, bounded by free slots --------------
+        let mut incoming: Vec<(GenRequest, Reply)> = Vec::new();
+        if slots.is_empty() {
+            // Idle: block for the next request, then give stragglers
+            // `batch_wait` to land so bursts start as one batch.
+            match rx.recv() {
+                Ok(x) => incoming.push(x),
+                Err(_) => return, // all senders dropped: shut down
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(x) => batch.push(x),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            let deadline = Instant::now() + batch_wait;
+            while incoming.len() < b {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(x) => incoming.push(x),
+                    Err(_) => break,
+                }
+            }
+        } else {
+            // Mid-decode: non-blocking refill of freed slots only — the
+            // live rows must not wait on the queue.
+            while incoming.len() < slots.free() {
+                match rx.try_recv() {
+                    Ok(x) => incoming.push(x),
+                    Err(_) => break,
+                }
             }
         }
-        for (req, _) in &batch {
+
+        // --- admit into free slots ----------------------------------------
+        for (req, reply) in incoming {
+            let st = match ensure_stream(&engine, &mut state) {
+                Ok(st) => st,
+                Err(e) => {
+                    let _ = reply.send(Err(anyhow!("{e:#}")));
+                    continue;
+                }
+            };
+            let slot = slots.first_free().expect("admissions bounded by free slots");
+            let row_seed = req.seed.unwrap_or_else(|| seed_rng.next_u64());
             metrics.queue_wait.observe(req.enqueued.elapsed());
+            match engine.admit_row(st, slot, &req.prompt, row_seed) {
+                Ok(()) => {
+                    let max_new = req.max_new_tokens.unwrap_or(default_max_new).max(1);
+                    slots.occupy(
+                        slot,
+                        SlotReq {
+                            tracker: RowTracker::new(true, max_new),
+                            reply,
+                            enqueued: req.enqueued,
+                        },
+                    );
+                }
+                // Admission errors (over-long prompt, bad state) reject
+                // just this request; the live batch is untouched.
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                }
+            }
         }
-        seed = seed.wrapping_add(0x9E3779B97F4A7C15);
-        let prompts: Vec<Vec<u32>> = batch.iter().map(|(r, _)| r.prompt.clone()).collect();
-        match engine.run_batch(&prompts, seed) {
-            Ok(rep) => {
-                for ((req, otx), row) in batch.into_iter().zip(rep.rows.into_iter()) {
-                    metrics.requests_completed.inc();
-                    metrics.request_latency.observe(req.enqueued.elapsed());
-                    let _ = otx.send(Ok(row));
-                }
-            }
+        if slots.is_empty() {
+            continue 'serve;
+        }
+
+        // --- one fused engine step over the live batch --------------------
+        let st = state.as_mut().expect("occupied slots imply a live stream");
+        let out = match engine.step_stream(st) {
+            Ok(out) => out,
             Err(e) => {
+                // Device-level failure: fail every in-flight request and
+                // rebuild the stream on the next admission.
                 let msg = format!("{e:#}");
-                for (_, otx) in batch {
-                    let _ = otx.send(Err(anyhow!("{msg}")));
+                for (_, sr) in slots.drain() {
+                    let _ = sr.reply.send(Err(anyhow!("{msg}")));
                 }
+                state = None;
+                continue 'serve;
             }
+        };
+
+        // --- absorb per-row outcomes; reply and free rows as they finish --
+        metrics.slot_iters_total.add(b as u64);
+        metrics.slot_iters_busy.add(slots.occupied() as u64);
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, sr) in slots.iter_occupied_mut() {
+            let tau = out.tau[i] as usize;
+            let row: Vec<u32> = out.emitted[i * (gamma + 1)..i * (gamma + 1) + tau + 1]
+                .iter()
+                .map(|&x| x as u32)
+                .collect();
+            sr.tracker.absorb(&row, tau, out.done[i] != 0);
+            metrics.tokens_emitted.add(row.len() as u64);
+            metrics.drafts_accepted.add(tau as u64);
+            metrics.iterations.inc();
+            if !sr.tracker.active() {
+                finished.push(i);
+            }
+        }
+        let any_finished = !finished.is_empty();
+        for i in finished {
+            let sr = slots.release(i).expect("finished slot was occupied");
+            metrics.requests_completed.inc();
+            metrics.request_latency.observe(sr.enqueued.elapsed());
+            let result = sr.tracker.into_result();
+            let _ = sr.reply.send(Ok(result));
+            engine.release_row(st, i);
+        }
+        if slots.is_empty() {
+            metrics.batches.inc();
+        }
+        if any_finished {
+            // Per-row drain boundary: the step's outputs were read back
+            // above, so every outstanding upload is complete and the
+            // backend can release per-batch resources (pinned literals on
+            // PJRT).  Keyed on row completion — not on the batch emptying
+            // — so sustained traffic that never idles the batcher cannot
+            // grow the pinned set without bound.  (Deliberately skipped on
+            // the step-error path above: a failed execution may not have
+            // read its uploads back.)
+            engine.backend().end_batch();
         }
     }
+}
+
+/// Lazily build (or rebuild after failure) the worker's decode stream.
+fn ensure_stream<'a, B: Backend>(
+    engine: &SpecEngine<B>,
+    state: &'a mut Option<DecodeState<B>>,
+) -> Result<&'a mut DecodeState<B>> {
+    if state.is_none() {
+        *state = Some(engine.begin_stream()?);
+    }
+    Ok(state.as_mut().expect("just ensured"))
 }

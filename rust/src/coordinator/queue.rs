@@ -1,8 +1,14 @@
-//! Bounded request queue with admission control — a standalone, testable
-//! model of the coordinator's backpressure policy (the async path in
-//! `coordinator::mod` uses tokio's bounded mpsc with the same semantics).
+//! Admission control and slot bookkeeping for the coordinator:
+//!
+//! * [`RequestQueue`] — bounded FIFO with prompt validation, a
+//!   standalone, testable model of the channel-level backpressure policy.
+//! * [`AdmissionGate`] — the atomic in-flight limiter guarding
+//!   [`crate::coordinator::Coordinator::generate`].
+//! * [`SlotTable`] — which engine slots the continuous batcher has
+//!   occupied, and with what (DESIGN.md §7).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Admission failures surfaced to clients as HTTP 429 / 400.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -69,6 +75,112 @@ impl<T> RequestQueue<T> {
     }
 }
 
+/// Atomic in-flight limiter: at most `limit` concurrent holders.  The
+/// check and the increment are one atomic `fetch_update`, so concurrent
+/// callers can never overshoot — unlike the load-then-increment pattern
+/// it replaced, where two threads could both observe `limit - 1` and both
+/// enter.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    inflight: AtomicUsize,
+    limit: usize,
+}
+
+impl AdmissionGate {
+    pub fn new(limit: usize) -> Self {
+        AdmissionGate { inflight: AtomicUsize::new(0), limit: limit.max(1) }
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Try to take a slot; pair every success with exactly one
+    /// [`AdmissionGate::release`].
+    pub fn try_acquire(&self) -> bool {
+        self.inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                if n < self.limit {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+/// Fixed-capacity slot table for the continuous batcher: tracks which
+/// engine slots are owned by an in-flight request and the per-slot
+/// payload (tracker + reply channel in the coordinator; anything in
+/// tests).
+#[derive(Debug)]
+pub struct SlotTable<T> {
+    slots: Vec<Option<T>>,
+}
+
+impl<T> SlotTable<T> {
+    pub fn new(capacity: usize) -> Self {
+        SlotTable { slots: (0..capacity).map(|_| None).collect() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity() - self.occupied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Lowest-index free slot, if any.
+    pub fn first_free(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    pub fn occupy(&mut self, slot: usize, item: T) {
+        debug_assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
+        self.slots[slot] = Some(item);
+    }
+
+    pub fn release(&mut self, slot: usize) -> Option<T> {
+        self.slots[slot].take()
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut T> {
+        self.slots[slot].as_mut()
+    }
+
+    /// Iterate occupied slots as `(slot index, payload)`.
+    pub fn iter_occupied_mut(&mut self) -> impl Iterator<Item = (usize, &mut T)> {
+        self.slots.iter_mut().enumerate().filter_map(|(i, s)| s.as_mut().map(|t| (i, t)))
+    }
+
+    /// Take every occupied slot (worker teardown / device failure).
+    pub fn drain(&mut self) -> Vec<(usize, T)> {
+        self.slots
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, s)| s.take().map(|t| (i, t)))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +214,66 @@ mod tests {
         q.push(vec![1, 3], 0u32).unwrap();
         assert_eq!(q.take_batch(8).len(), 1);
         assert!(q.is_empty());
+    }
+
+    /// Regression test for the racy admission check: the old coordinator
+    /// loaded `inflight` and incremented it in two steps, so concurrent
+    /// callers could exceed `queue_limit`.  With the gate's single
+    /// `fetch_update`, the observed concurrency can never overshoot.
+    #[test]
+    fn admission_gate_never_exceeds_limit_under_contention() {
+        use std::sync::Arc;
+
+        let limit = 4;
+        let gate = Arc::new(AdmissionGate::new(limit));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let (gate, live, peak) = (gate.clone(), live.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                let mut admitted = 0usize;
+                for _ in 0..2000 {
+                    if gate.try_acquire() {
+                        let now = live.fetch_add(1, Ordering::AcqRel) + 1;
+                        peak.fetch_max(now, Ordering::AcqRel);
+                        std::thread::yield_now();
+                        live.fetch_sub(1, Ordering::AcqRel);
+                        gate.release();
+                        admitted += 1;
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                admitted
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0, "some admissions must succeed");
+        let peak = peak.load(Ordering::Acquire);
+        assert!(peak <= limit, "admission exceeded the limit: peak {peak} > {limit}");
+        assert_eq!(gate.inflight(), 0, "acquire/release must balance");
+    }
+
+    #[test]
+    fn slot_table_lifecycle() {
+        let mut t: SlotTable<&'static str> = SlotTable::new(3);
+        assert!(t.is_empty());
+        assert_eq!((t.capacity(), t.free()), (3, 3));
+        assert_eq!(t.first_free(), Some(0));
+        t.occupy(0, "a");
+        t.occupy(2, "c");
+        assert_eq!(t.occupied(), 2);
+        assert_eq!(t.first_free(), Some(1));
+        assert_eq!(
+            t.iter_occupied_mut().map(|(i, s)| (i, *s)).collect::<Vec<_>>(),
+            vec![(0, "a"), (2, "c")]
+        );
+        assert_eq!(t.release(0), Some("a"));
+        assert_eq!(t.release(0), None);
+        assert_eq!(t.first_free(), Some(0));
+        *t.get_mut(2).unwrap() = "c2";
+        assert_eq!(t.drain(), vec![(2, "c2")]);
+        assert!(t.is_empty());
     }
 }

@@ -68,9 +68,11 @@ impl<B: Backend> HostVerifyEngine<B> {
 
         while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
             // --- draft + score through the backend ---------------------------
-            let iter_seed = seed_rng.next_u64() as i32;
-            let draft =
-                backend.draft_block(&self.cfg.drafter, gamma, &toks, &lens, &mut kv_d, iter_seed)?;
+            // One draft seed per row (the backend contract keys sampling
+            // streams per row; see DESIGN.md §5.1).
+            let iter_seeds: Vec<i32> = (0..b).map(|_| seed_rng.next_u64() as i32).collect();
+            let draft = backend
+                .draft_block(&self.cfg.drafter, gamma, &toks, &lens, &mut kv_d, &iter_seeds)?;
             let ps_flat =
                 backend.target_score(gamma, &toks, &lens, &mut kv_t, &draft.drafts)?;
             let qs_flat = &draft.qs;

@@ -7,15 +7,28 @@
 //! tensors stay device-resident whenever the build untuples outputs; on
 //! the native backend everything lives in host memory.  The engine only
 //! ever sees host tensors and the backend trait.
+//!
+//! Two execution modes share the same state layout:
+//! * [`SpecEngine::run_batch`] — batch drain: lay out a prompt batch,
+//!   iterate until every real row finishes (the experiment harness path).
+//! * the continuous stream — [`SpecEngine::begin_stream`] /
+//!   [`SpecEngine::admit_row`] / [`SpecEngine::step_stream`] /
+//!   [`SpecEngine::release_row`]: slots are admitted and released
+//!   individually while decoding proceeds, with each admission splicing a
+//!   freshly prefilled prompt into the live KV caches
+//!   ([`Backend::kv_splice`]).  Per-row seeding ([`row_seed`]) makes the
+//!   two modes produce identical tokens for identical row seeds
+//!   (DESIGN.md §7).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::anyhow;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, SpecIterOut};
 use crate::config::EngineConfig;
 use crate::metrics::EngineMetrics;
+use crate::models::vocab;
 use crate::verify::Rng;
 
 use super::{layout_prompts, pad_prompts, BatchReport, RowTracker};
@@ -79,14 +92,20 @@ impl<B: Backend> SpecEngine<B> {
         let mut trackers: Vec<RowTracker> = (0..b)
             .map(|i| RowTracker::new(i < n_real, self.cfg.max_new_tokens))
             .collect();
-        let mut seed_rng = Rng::new(seed ^ SEED_DOMAIN);
+        // One iteration-seed stream per row, keyed on (batch seed, row):
+        // row i's k-th iteration draws the k-th value of its own stream,
+        // exactly as a continuous-batching admission with
+        // `row_seed(seed, i)` would (the losslessness contract).
+        let mut row_rngs: Vec<Rng> =
+            (0..b).map(|i| Rng::new(row_seed(seed, i) ^ SEED_DOMAIN)).collect();
         let mut device_iterations = 0usize;
         // Hard cap: every row emits >= 1 token per iteration.
         let max_iters = self.cfg.max_new_tokens + info.max_len;
 
         while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
             let t_iter = Instant::now();
-            let iter_seed = seed_rng.next_u64() as i32;
+            let seeds: Vec<i32> =
+                row_rngs.iter_mut().map(|r| r.next_u64() as i32).collect();
             let out = backend.spec_iter(
                 self.cfg.algo,
                 &self.cfg.drafter,
@@ -95,7 +114,7 @@ impl<B: Backend> SpecEngine<B> {
                 &mut length,
                 &mut kv_t,
                 &mut kv_d,
-                iter_seed,
+                &seeds,
             )?;
 
             for (i, tr) in trackers.iter_mut().enumerate() {
@@ -139,7 +158,178 @@ impl<B: Backend> SpecEngine<B> {
             .map(|(i, chunk)| self.run_batch(chunk, seed.wrapping_add(i as u64 * 7919)))
             .collect()
     }
+
+    // ------------------------------------------------------------------
+    // Continuous batching (DESIGN.md §7)
+    // ------------------------------------------------------------------
+
+    /// Start an empty continuous-batching stream: every slot holds the
+    /// inert padding prompt and both KV caches are prefilled once.  Real
+    /// requests enter via [`SpecEngine::admit_row`].
+    pub fn begin_stream(&self) -> anyhow::Result<DecodeState<B>> {
+        let info = self.backend.info();
+        let padded = pad_prompts(&[], info.batch);
+        let (tokens, length) = layout_prompts(info, &padded);
+        let kv_target = self.backend.prefill("target", &tokens, &length)?;
+        let kv_drafter = self.backend.prefill(&self.cfg.drafter, &tokens, &length)?;
+        Ok(DecodeState {
+            tokens,
+            length,
+            kv_target,
+            kv_drafter,
+            row_rngs: vec![None; info.batch],
+        })
+    }
+
+    /// Admit one request into a free slot of a live stream: prefill the
+    /// prompt in a scratch batch, splice its KV rows into the live caches
+    /// ([`Backend::kv_splice`]), reset the slot's token ring, and seed its
+    /// per-row sampling stream from `row_seed`.
+    ///
+    /// `row_seed` fully determines the row's randomness: the same prompt
+    /// admitted with the same seed produces the same tokens regardless of
+    /// slot index, admission time, or what the other slots are decoding —
+    /// in particular, identical to batch-drain row `i` of
+    /// [`SpecEngine::run_batch`] when seeded with [`row_seed`]`(batch_seed,
+    /// i)` (the refill-losslessness contract, DESIGN.md §7).
+    pub fn admit_row(
+        &self,
+        st: &mut DecodeState<B>,
+        slot: usize,
+        prompt: &[u32],
+        row_seed: u64,
+    ) -> anyhow::Result<()> {
+        let info = self.backend.info();
+        let (b, l) = (info.batch, info.max_len);
+        if slot >= b {
+            return Err(anyhow!("slot {slot} out of range (batch {b})"));
+        }
+        if st.row_rngs[slot].is_some() {
+            return Err(anyhow!("slot {slot} is still occupied"));
+        }
+        if prompt.len() < 2 {
+            return Err(anyhow!("prompts need >= 2 tokens (BOS + marker)"));
+        }
+        if prompt.len() >= l / 2 {
+            return Err(anyhow!(
+                "prompt length {} exceeds the ring budget {} (max_len {l})",
+                prompt.len(),
+                l / 2 - 1
+            ));
+        }
+        // Scratch prefill with the prompt in row 0.  Rows are independent
+        // in every backend (per-row causal attention), so splicing row 0
+        // out of the scratch caches yields exactly the rows a full-batch
+        // prefill would have produced for this prompt.
+        let padded = pad_prompts(&[prompt.to_vec()], b);
+        let (scratch_toks, scratch_lens) = layout_prompts(info, &padded);
+        let kv_ts = self.backend.prefill("target", &scratch_toks, &scratch_lens)?;
+        let kv_ds = self.backend.prefill(&self.cfg.drafter, &scratch_toks, &scratch_lens)?;
+        self.backend.kv_splice("target", &mut st.kv_target, slot, &kv_ts, 0, prompt.len())?;
+        self.backend.kv_splice(
+            &self.cfg.drafter,
+            &mut st.kv_drafter,
+            slot,
+            &kv_ds,
+            0,
+            prompt.len(),
+        )?;
+        for j in 0..l {
+            st.tokens[slot * l + j] = vocab::PAD as i32;
+        }
+        for (j, &t) in prompt.iter().enumerate() {
+            st.tokens[slot * l + j] = t as i32;
+        }
+        st.length[slot] = prompt.len() as i32;
+        st.row_rngs[slot] = Some(Rng::new(row_seed ^ SEED_DOMAIN));
+        self.metrics.slots_refilled.inc();
+        Ok(())
+    }
+
+    /// One fused iteration over the live stream.  Every slot advances
+    /// (free slots decode the inert prompt; their outputs are discarded by
+    /// the caller); per-slot `tau`/`emitted`/`done` come back in the
+    /// returned [`SpecIterOut`] at stride `gamma + 1`.
+    pub fn step_stream(&self, st: &mut DecodeState<B>) -> anyhow::Result<SpecIterOut> {
+        let t_iter = Instant::now();
+        let seeds: Vec<i32> = st
+            .row_rngs
+            .iter_mut()
+            .map(|r| r.as_mut().map_or(0, |rng| rng.next_u64() as i32))
+            .collect();
+        let out = self.backend.spec_iter(
+            self.cfg.algo,
+            &self.cfg.drafter,
+            self.cfg.gamma,
+            &mut st.tokens,
+            &mut st.length,
+            &mut st.kv_target,
+            &mut st.kv_drafter,
+            &seeds,
+        )?;
+        self.metrics.iter_latency.observe(t_iter.elapsed());
+        Ok(out)
+    }
+
+    /// Release a finished slot: clear its seed stream and rewind the row
+    /// to the inert prompt.  The stale KV rows above the inert prompt are
+    /// never attended (queries only look at positions below their own),
+    /// and the next admission splices fresh rows in.
+    pub fn release_row(&self, st: &mut DecodeState<B>, slot: usize) {
+        let l = self.backend.info().max_len;
+        let inert = pad_prompts(&[], 1);
+        for j in 0..l {
+            st.tokens[slot * l + j] = vocab::PAD as i32;
+        }
+        for (j, &t) in inert[0].iter().enumerate() {
+            st.tokens[slot * l + j] = t as i32;
+        }
+        st.length[slot] = inert[0].len() as i32;
+        st.row_rngs[slot] = None;
+    }
+}
+
+/// Live state of a continuously batched decode stream: the host
+/// token/length rings, both KV caches, and one iteration-seed stream per
+/// occupied slot.  Created by [`SpecEngine::begin_stream`]; owned by the
+/// serving worker ([`crate::coordinator`]) which tracks per-slot request
+/// bookkeeping separately.
+pub struct DecodeState<B: Backend> {
+    tokens: Vec<i32>,
+    length: Vec<i32>,
+    kv_target: B::Kv,
+    kv_drafter: B::Kv,
+    /// `Some` while a request owns the slot; drives that row's seeds.
+    row_rngs: Vec<Option<Rng>>,
+}
+
+impl<B: Backend> DecodeState<B> {
+    /// Is this slot currently owned by an admitted request?
+    pub fn occupied(&self, slot: usize) -> bool {
+        self.row_rngs[slot].is_some()
+    }
+
+    /// Number of slots currently owned by requests.
+    pub fn occupied_count(&self) -> usize {
+        self.row_rngs.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Current ring length (prompt + generated + pending) of a slot.
+    pub fn row_length(&self, slot: usize) -> usize {
+        self.length[slot].max(0) as usize
+    }
+}
+
+/// The per-row seed [`SpecEngine::run_batch`] derives for batch row `row`
+/// from its batch seed.  Passing the same value to
+/// [`SpecEngine::admit_row`] reproduces that row's decode token for token
+/// in a continuous stream, whatever slot it lands in.
+pub fn row_seed(batch_seed: u64, row: usize) -> u64 {
+    let mut r = Rng::new(batch_seed ^ ROW_SEED_DOMAIN).fold_in(row as u64);
+    r.next_u64()
 }
 
 /// Domain separator for the per-iteration device seeds.
 const SEED_DOMAIN: u64 = 0x5bec_dec0de;
+/// Domain separator for deriving per-row seeds from a batch seed.
+const ROW_SEED_DOMAIN: u64 = 0x510_75eed;

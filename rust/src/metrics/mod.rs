@@ -93,6 +93,14 @@ pub struct EngineMetrics {
     pub drafts_accepted: Counter,
     pub iterations: Counter,
     pub batches: Counter,
+    /// Admissions spliced into a live decode stream (continuous batching;
+    /// every admission is a per-slot KV refill, DESIGN.md §7).
+    pub slots_refilled: Counter,
+    /// Slot-iterations spent decoding a real request...
+    pub slot_iters_busy: Counter,
+    /// ...out of slot-iterations available (`B` per engine step); the
+    /// ratio is the batcher's slot occupancy.
+    pub slot_iters_total: Counter,
     pub queue_wait: LatencyHist,
     pub iter_latency: LatencyHist,
     pub request_latency: LatencyHist,
@@ -108,6 +116,16 @@ impl EngineMetrics {
         self.tokens_emitted.get() as f64 / it as f64
     }
 
+    /// Fraction of slot-iterations that decoded a real request (1.0 =
+    /// every slot busy on every step the batcher ran).
+    pub fn slot_occupancy(&self) -> f64 {
+        let total = self.slot_iters_total.get();
+        if total == 0 {
+            return 0.0;
+        }
+        self.slot_iters_busy.get() as f64 / total as f64
+    }
+
     /// Render in a Prometheus-ish plain-text exposition format.
     pub fn render(&self) -> String {
         let mut s = String::new();
@@ -118,6 +136,8 @@ impl EngineMetrics {
         put("drafts_accepted", self.drafts_accepted.get() as f64);
         put("iterations", self.iterations.get() as f64);
         put("batches", self.batches.get() as f64);
+        put("slots_refilled", self.slots_refilled.get() as f64);
+        put("slot_occupancy", self.slot_occupancy());
         put("block_efficiency", self.block_efficiency());
         put("iter_latency_mean_us", self.iter_latency.mean_us());
         put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
@@ -158,6 +178,16 @@ mod tests {
         m.tokens_emitted.add(14);
         assert!((m.block_efficiency() - 3.5).abs() < 1e-12);
         assert!(m.render().contains("specd_block_efficiency 3.5"));
+    }
+
+    #[test]
+    fn slot_occupancy_ratio() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.slot_occupancy(), 0.0);
+        m.slot_iters_total.add(8);
+        m.slot_iters_busy.add(6);
+        assert!((m.slot_occupancy() - 0.75).abs() < 1e-12);
+        assert!(m.render().contains("specd_slot_occupancy 0.75"));
     }
 
     #[test]

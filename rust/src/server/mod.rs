@@ -96,7 +96,14 @@ fn generate(state: &ServerState, body: &[u8]) -> (u16, String, String) {
         }
     };
     let t0 = Instant::now();
-    let gen = GenRequest { prompt, max_new_tokens: req.max_new_tokens, enqueued: t0 };
+    let gen = GenRequest {
+        prompt,
+        max_new_tokens: req.max_new_tokens,
+        // The request seed also pins the row's sampling stream, making
+        // generations reproducible under any batching (DESIGN.md §7).
+        seed: req.seed,
+        enqueued: t0,
+    };
     match state.coordinator.generate(gen) {
         Ok(row) => {
             let resp = json::obj(vec![

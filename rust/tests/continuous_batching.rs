@@ -1,0 +1,223 @@
+//! Continuous batching over per-slot KV splice (DESIGN.md §7):
+//!
+//! 1. Refill losslessness: a prompt admitted into a live mid-decode batch
+//!    via `kv_splice` produces token-for-token the same output as the
+//!    same prompt run in a fresh batch with the same (row) seed.
+//! 2. Slot reuse before batch drain: a short request completes and its
+//!    slot is re-admitted while a long request is still decoding.
+//! 3. Coordinator end-to-end: under mixed-length concurrent traffic,
+//!    every short request completes before the long one — impossible
+//!    under the old batch-drain scheduling once the queue overflows the
+//!    slot count.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use specd::backend::NativeBackend;
+use specd::config::{Config, EngineConfig};
+use specd::coordinator::{Coordinator, GenRequest};
+use specd::engine::spec::{row_seed, DecodeState, SpecEngine};
+use specd::models::vocab;
+
+fn prompt(tail: &[u32]) -> Vec<u32> {
+    let mut p = vec![vocab::BOS, vocab::marker_for(1)];
+    p.extend_from_slice(tail);
+    p
+}
+
+/// Step the stream until `slot`'s row finishes, reproducing the
+/// coordinator's absorb rules (EOS stops, `max_new` caps, device `done`
+/// ends the row), and return the generated tokens.
+fn collect_row(
+    engine: &SpecEngine<NativeBackend>,
+    st: &mut DecodeState<NativeBackend>,
+    slot: usize,
+    max_new: usize,
+) -> Vec<u32> {
+    let gamma = engine.cfg.gamma;
+    let mut gen: Vec<u32> = Vec::new();
+    for _ in 0..(max_new + 200) {
+        let out = engine.step_stream(st).unwrap();
+        let tau = out.tau[slot] as usize;
+        let emitted = &out.emitted[slot * (gamma + 1)..slot * (gamma + 1) + tau + 1];
+        for &t in emitted {
+            if t as u32 == vocab::EOS {
+                return gen;
+            }
+            gen.push(t as u32);
+            if gen.len() >= max_new {
+                return gen;
+            }
+        }
+        if out.done[slot] != 0 {
+            return gen;
+        }
+    }
+    panic!("row {slot} never finished");
+}
+
+#[test]
+fn refill_admission_is_lossless() {
+    let batch_seed = 0x5eed_cafe;
+    let max_new = 12;
+    let be = Arc::new(NativeBackend::seeded_with_shapes(2, 64, 7));
+    let cfg = EngineConfig { gamma: 4, max_new_tokens: max_new, ..Default::default() };
+    let engine = SpecEngine::new(be, cfg).unwrap();
+    let p = prompt(&[30, 31, 32, 33]);
+
+    // Reference: the prompt as row 0 of a fresh batch-drain run.
+    let reference = engine.run_batch(&[p.clone()], batch_seed).unwrap().rows[0].tokens.clone();
+
+    // Continuous: occupy slot 0 with a decoy, decode a while, then admit
+    // the prompt mid-decode into the *other* slot with row 0's seed.
+    let mut st = engine.begin_stream().unwrap();
+    engine.admit_row(&mut st, 0, &prompt(&[40, 41]), 0xdec0).unwrap();
+    for _ in 0..3 {
+        engine.step_stream(&mut st).unwrap();
+    }
+    assert!(st.occupied(0));
+    engine.admit_row(&mut st, 1, &p, row_seed(batch_seed, 0)).unwrap();
+    let got = collect_row(&engine, &mut st, 1, max_new);
+
+    assert_eq!(
+        got, reference,
+        "a spliced-in row must reproduce the fresh-batch decode token for token"
+    );
+}
+
+#[test]
+fn slot_reused_before_batch_drain() {
+    let be = Arc::new(NativeBackend::seeded_with_shapes(2, 96, 3));
+    let cfg = EngineConfig { gamma: 4, max_new_tokens: 40, ..Default::default() };
+    let engine = SpecEngine::new(be, cfg).unwrap();
+    let mut st = engine.begin_stream().unwrap();
+
+    // Long request in slot 0 (cap 40 ⇒ ≥ 8 iterations at gamma 4); a
+    // 1-token request in slot 1 finishes after the first step.
+    engine.admit_row(&mut st, 0, &prompt(&[20, 21, 22]), 11).unwrap();
+    engine.admit_row(&mut st, 1, &prompt(&[50, 51]), 22).unwrap();
+    let long_len_before = st.row_length(0);
+    let out = engine.step_stream(&mut st).unwrap();
+    // The short row emitted ≥ 1 token: its request (cap 1) is done.
+    let tau1 = out.tau[1] as usize;
+    assert!(tau1 <= 4);
+    // The long row cannot have finished its 40-token budget in one step
+    // (≤ gamma + 1 = 5 tokens/iteration; EOS is ~impossible under the
+    // seeded control-token bias).
+    assert!(st.row_length(0) > long_len_before);
+    assert!(st.row_length(0) - long_len_before <= 5);
+
+    // Free the short slot and admit a new request into it mid-decode —
+    // the batch never drained.
+    engine.release_row(&mut st, 1);
+    assert!(!st.occupied(1));
+    assert!(st.occupied(0), "long row still live when slot 1 is reused");
+    engine.admit_row(&mut st, 1, &prompt(&[60, 61, 62]), 33).unwrap();
+    assert_eq!(st.occupied_count(), 2);
+
+    // Both rows run to completion with valid tokens.
+    let second = collect_row(&engine, &mut st, 1, 6);
+    assert!(second.iter().all(|&t| t < vocab::SIZE && t != vocab::PAD));
+    let long = collect_row(&engine, &mut st, 0, 40);
+    assert!(!long.is_empty());
+    assert!(long.iter().all(|&t| t < vocab::SIZE && t != vocab::PAD));
+}
+
+#[test]
+fn coordinator_completes_shorts_before_long_under_mixed_load() {
+    let backend = Arc::new(NativeBackend::seeded(0x7e57));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 48, ..Default::default() };
+    let coordinator = Coordinator::spawn(backend, ecfg, &cfg.server).unwrap();
+    let metrics = coordinator.metrics.clone();
+
+    let mk = |tail: Vec<u32>, max_new: usize, seed: u64| GenRequest {
+        prompt: prompt(&tail),
+        max_new_tokens: Some(max_new),
+        seed: Some(seed),
+        enqueued: Instant::now(),
+    };
+
+    // One long request first, then more shorts than the remaining slots
+    // (batch B = 4 ⇒ at least 3 shorts must be admitted into slots freed
+    // mid-decode).  The long row needs ≥ 8 engine iterations (64 tokens,
+    // ≤ 9 per iteration); every short needs exactly 1 after admission.
+    let long_coord = coordinator.clone();
+    let long_req = mk(vec![20, 21, 22], 64, 1);
+    let long_handle = std::thread::spawn(move || {
+        let row = long_coord.generate(long_req).unwrap();
+        (Instant::now(), row)
+    });
+    // Wait until the long request has actually been admitted (its splice
+    // bumps the refill counter) before firing the shorts, so it is
+    // decoding while they arrive.
+    let t0 = Instant::now();
+    while metrics.slots_refilled.get() < 1 {
+        assert!(t0.elapsed().as_secs() < 10, "long request never admitted");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+
+    let mut short_handles = Vec::new();
+    for i in 0..6u32 {
+        let c = coordinator.clone();
+        let req = mk(vec![30 + i, 40 + i], 1, 100 + i as u64);
+        short_handles.push(std::thread::spawn(move || {
+            let row = c.generate(req).unwrap();
+            (Instant::now(), row)
+        }));
+    }
+
+    let mut latest_short = None::<Instant>;
+    for h in short_handles {
+        let (done_at, row) = h.join().unwrap();
+        assert!(row.tokens.len() <= 1);
+        latest_short = Some(match latest_short {
+            Some(t) if t > done_at => t,
+            _ => done_at,
+        });
+    }
+    let (long_done, long_row) = long_handle.join().unwrap();
+    assert!(!long_row.tokens.is_empty());
+
+    // Continuous batching: every short (including the ≥ 3 that overflowed
+    // the first admission wave) finishes while the long row is still
+    // decoding.  Under batch drain the overflow shorts would have waited
+    // for the long row's batch to fully complete.
+    assert!(
+        latest_short.unwrap() < long_done,
+        "shorts must complete before the long request under continuous batching"
+    );
+    // Every admission goes through the splice path, and all 7 requests
+    // completed.
+    assert!(metrics.slots_refilled.get() >= 7);
+    assert_eq!(metrics.requests_completed.get(), 7);
+}
+
+#[test]
+fn oversized_prompt_is_rejected_not_hung() {
+    let backend = Arc::new(NativeBackend::seeded(0xbad));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 4, ..Default::default() };
+    let coordinator = Coordinator::spawn(backend, ecfg, &cfg.server).unwrap();
+    // max_len is 96 ⇒ the ring budget is < 48 prompt tokens; the old
+    // batch-drain worker would have panicked (and hung every caller) on
+    // the layout assert instead of replying with an error.
+    let req = GenRequest {
+        prompt: prompt(&vec![25u32; 60]),
+        max_new_tokens: Some(4),
+        seed: Some(0),
+        enqueued: Instant::now(),
+    };
+    let err = coordinator.generate(req).expect_err("oversized prompt must be rejected");
+    assert!(format!("{err:#}").contains("ring budget"), "unexpected error: {err:#}");
+    // The worker survived: a well-formed request still succeeds.
+    let ok = coordinator
+        .generate(GenRequest {
+            prompt: prompt(&[20, 21]),
+            max_new_tokens: Some(2),
+            seed: Some(0),
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+    assert!(ok.tokens.len() <= 2);
+}

@@ -1,11 +1,11 @@
 //! Cross-backend losslessness properties of the native backend.
 //!
-//! 1. The fused path is the host path: for identical seeds and prompts,
-//!    every `spec_iter` call's `(tau, emitted)` must equal replaying the
-//!    same state through `draft_block` + `target_score` + the host-side
-//!    `verify::verify` dispatch with the backend's published verification
-//!    uniforms ([`specd::backend::native::verify_uniforms`]) — for both
-//!    token and block verification, draw for draw.
+//! 1. The fused path is the host path: for identical per-row seeds and
+//!    prompts, every `spec_iter` call's `(tau, emitted)` must equal
+//!    replaying the same state through `draft_block` + `target_score` +
+//!    the host-side `verify::verify` dispatch with each row's published
+//!    verification uniforms ([`specd::backend::native::verify_uniforms`])
+//!    — for both token and block verification, draw for draw.
 //! 2. The paper's never-worse guarantee: on aggregate over seeds, prompts
 //!    and gammas, block verification's block efficiency is at least token
 //!    verification's (small slack for finite-sample noise).
@@ -50,20 +50,22 @@ fn fused_iterations_match_host_verify_dispatch() {
         let mut kv_d = be.prefill("xxs", &toks, &lens).unwrap();
 
         for iter in 0..6 {
-            let seed = iter * 977 + 13;
+            // Distinct seed per row, as the continuous batcher supplies.
+            let seeds: Vec<i32> =
+                (0..info.batch as i32).map(|bi| iter * 977 + 13 + bi * 131).collect();
             // --- replay path on clones of the exact same state -----------
             let mut kv_t2 = kv_t.clone();
             let mut kv_d2 = kv_d.clone();
             let d = be
-                .draft_block("xxs", gamma, &toks, &lens, &mut kv_d2, seed)
+                .draft_block("xxs", gamma, &toks, &lens, &mut kv_d2, &seeds)
                 .unwrap();
             let ps = be
                 .target_score(gamma, &toks, &lens, &mut kv_t2, &d.drafts)
                 .unwrap();
-            let (etas, us) = verify_uniforms(seed, info.batch, gamma);
             let v = info.vocab_size;
             let expected: Vec<verify::VerifyOutcome> = (0..info.batch)
                 .map(|bi| {
+                    let (etas, u_res) = verify_uniforms(seeds[bi], gamma);
                     let ps_m = ProbMatrix::from_f32(
                         gamma + 1,
                         v,
@@ -78,21 +80,14 @@ fn fused_iterations_match_host_verify_dispatch() {
                         .iter()
                         .map(|&x| x as u32)
                         .collect();
-                    verify::verify(
-                        algo,
-                        &ps_m,
-                        &qs_m,
-                        &drafts,
-                        &etas[bi * gamma..(bi + 1) * gamma],
-                        us[bi],
-                    )
+                    verify::verify(algo, &ps_m, &qs_m, &drafts, &etas, u_res)
                 })
                 .collect();
 
             // --- fused path ----------------------------------------------
             let out = be
                 .spec_iter(
-                    algo, "xxs", gamma, &mut toks, &mut lens, &mut kv_t, &mut kv_d, seed,
+                    algo, "xxs", gamma, &mut toks, &mut lens, &mut kv_t, &mut kv_d, &seeds,
                 )
                 .unwrap();
 

@@ -144,7 +144,8 @@ fn out_of_range_gammas_rejected() {
     let toks = vec![1i32; info.batch * info.max_len];
     let lens = vec![2i32; info.batch];
     let mut kv = be.prefill("xxs", &toks, &lens).unwrap();
-    assert!(be.draft_block("xxs", info.max_len, &toks, &lens, &mut kv, 0).is_err());
+    let seeds = vec![0i32; info.batch];
+    assert!(be.draft_block("xxs", info.max_len, &toks, &lens, &mut kv, &seeds).is_err());
 }
 
 #[test]
