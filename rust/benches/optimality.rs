@@ -24,6 +24,15 @@ fn main() {
         });
     }
 
+    for k in [2usize, 4] {
+        b.run(&format!("exact/multipath_v4_g4_k{k}"), || {
+            std::hint::black_box(sim::exact::expected_tau_multipath(&pair, 4, k));
+        });
+        b.run(&format!("mc/simulate_multipath_k{k}_20k_tokens"), || {
+            std::hint::black_box(sim::simulate_multi(&pair, 4, k, 20_000, 1).mean_tau());
+        });
+    }
+
     b.run("motivating_example_100k", || {
         let r = sim::motivating_example(100_000, 3);
         std::hint::black_box(r.mc_block);
@@ -40,6 +49,19 @@ fn main() {
         println!(
             "  mix {mix:.2}: token {t:.4}  block {bl:.4}  bound {f:.4}  gain {:+.2}%",
             (bl - t) / t * 100.0
+        );
+    }
+
+    // Multi-draft dimension: the tau-vs-K curve (exact), K = 1 being
+    // plain block verification.  Note K > 1 may exceed the Lemma 8 bound
+    // — that bound is per *single* draft.
+    println!("\nMulti-draft tau vs K (exact), vocab=4, gamma=4:");
+    let blk = sim::exact::expected_tau_block(&pair, 4);
+    for k in [1usize, 2, 4, 8] {
+        let m = sim::exact::expected_tau_multipath(&pair, 4, k);
+        println!(
+            "  K {k}: multipath {m:.4}  (block {blk:.4}, gain {:+.2}%)",
+            (m - blk) / blk * 100.0
         );
     }
 }

@@ -8,6 +8,9 @@
 //!
 //! * block-verification BE must not drop below token-level BE (the
 //!   paper's never-worse guarantee, Theorem 2; 0.05 finite-sample slack);
+//! * multipath accepted tokens per target call must not drop below
+//!   block's at K in {2, 4} (stage 1 of multipath *is* block
+//!   verification, so extra paths can only add; same 0.05 slack);
 //! * the continuous batcher must never need more engine iterations than
 //!   batch drain on the mixed-length profile (per-row decodes are
 //!   identical under both policies, so earlier admission can only shrink
@@ -105,14 +108,16 @@ fn main() -> anyhow::Result<()> {
     }
     prompts.truncate(n_prompts);
 
-    // ---- 1) token vs block verification: BE + tokens/sec ----------------
-    let mut be_results: Vec<(f64, f64)> = Vec::new(); // (BE, tok/s)
-    for algo in [Algo::Token, Algo::Block] {
+    // ---- 1) verification algorithms: BE + accepted/iter + tokens/sec ----
+    // (BE, tok/s, mean accepted tau per target call)
+    let algos = [Algo::Token, Algo::Block, Algo::MultiPath { k: 2 }, Algo::MultiPath { k: 4 }];
+    let mut stats: Vec<(f64, f64, f64)> = Vec::new();
+    for algo in algos {
         let cfg = EngineConfig { algo, max_new_tokens: max_new, ..Default::default() };
         let engine = SpecEngine::new(backend.clone(), cfg)?;
         // Warm-up pass, then timed seeds.
         let _ = engine.run_prompts(&prompts[..prompts.len().min(4)], 0)?;
-        let (mut emitted, mut iters, mut toks) = (0usize, 0usize, 0usize);
+        let (mut emitted, mut iters, mut toks, mut accepted) = (0usize, 0usize, 0usize, 0usize);
         let t0 = Instant::now();
         for seed in 0..n_seeds {
             for rep in engine.run_prompts(&prompts, seed)? {
@@ -120,17 +125,22 @@ fn main() -> anyhow::Result<()> {
                 for row in &rep.rows {
                     emitted += row.emitted;
                     iters += row.iterations;
+                    accepted += row.accepted;
                 }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
         let be = emitted as f64 / iters.max(1) as f64;
+        let tau = accepted as f64 / iters.max(1) as f64;
         let tps = toks as f64 / wall.max(1e-9);
-        println!("verify/{algo:<6}  BE {be:>6.3}   {tps:>9.1} tok/s");
-        be_results.push((be, tps));
+        let label = algo.to_string();
+        println!("verify/{label:<12}  BE {be:>6.3}  tau {tau:>6.3}   {tps:>9.1} tok/s");
+        stats.push((be, tps, tau));
     }
-    let (token_be, token_tps) = be_results[0];
-    let (block_be, block_tps) = be_results[1];
+    let (token_be, token_tps, _) = stats[0];
+    let (block_be, block_tps, block_tau) = stats[1];
+    let (mp2_be, _, mp2_tau) = stats[2];
+    let (mp4_be, _, mp4_tau) = stats[3];
 
     // ---- 2) mixed-length serving: continuous vs emulated batch drain ----
     // Caps cycle short/medium/long so freed slots matter.
@@ -170,6 +180,11 @@ fn main() -> anyhow::Result<()> {
         ("block_be", json::num(block_be)),
         ("token_tps", json::num(token_tps)),
         ("block_tps", json::num(block_tps)),
+        ("block_tau", json::num(block_tau)),
+        ("multipath2_be", json::num(mp2_be)),
+        ("multipath2_tau", json::num(mp2_tau)),
+        ("multipath4_be", json::num(mp4_be)),
+        ("multipath4_tau", json::num(mp4_tau)),
         ("drain_tps", json::num(drain_tps)),
         ("continuous_tps", json::num(cont_tps)),
         ("drain_iters", json::num(drain_iters as f64)),
@@ -187,6 +202,15 @@ fn main() -> anyhow::Result<()> {
         );
         failed = true;
     }
+    for (label, tau) in [("multipath:2", mp2_tau), ("multipath:4", mp4_tau)] {
+        if tau < block_tau - 0.05 {
+            eprintln!(
+                "PERF REGRESSION: {label} accepted/iter {tau:.3} fell below \
+                 block's {block_tau:.3} — extra draft paths must never hurt"
+            );
+            failed = true;
+        }
+    }
     if cont_iters > drain_iters {
         eprintln!(
             "PERF REGRESSION: continuous batching used {cont_iters} iterations, \
@@ -197,6 +221,9 @@ fn main() -> anyhow::Result<()> {
     if failed {
         std::process::exit(1);
     }
-    println!("perf gates passed: block BE >= token BE, continuous <= drain iterations");
+    println!(
+        "perf gates passed: block BE >= token BE, multipath tau >= block tau (K=2,4), \
+         continuous <= drain iterations"
+    );
     Ok(())
 }

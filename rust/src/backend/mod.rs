@@ -1,9 +1,10 @@
 //! Execution backends: the device abstraction the engine layer runs on.
 //!
 //! The [`Backend`] trait is the contract extracted from the original
-//! PJRT-only runtime (DESIGN.md §5): six operations — `prefill`,
-//! `spec_iter`, `draft_block`, `target_score`, `baseline_step`,
-//! `kv_splice` — expressed over *plain host tensors* (`tokens (B, L) i32`,
+//! PJRT-only runtime (DESIGN.md §5): `prefill`, `spec_iter`,
+//! `draft_block`, `target_score`, `baseline_step`, `kv_splice`, plus the
+//! multi-draft pair `draft_multi` / `target_score_multi` (DESIGN.md §9)
+//! — expressed over *plain host tensors* (`tokens (B, L) i32`,
 //! `length (B,) i32`, flat `f32`/`i32` readbacks) plus an opaque per-model
 //! KV-cache handle ([`Backend::Kv`]) that each backend represents however
 //! it likes (device-resident buffers on PJRT, flat `Vec<f32>` on the
@@ -24,6 +25,7 @@ pub mod pjrt;
 
 use std::path::PathBuf;
 
+use crate::draftset::DraftSet;
 use crate::verify::Algo;
 
 pub use native::{NativeBackend, NativeKv};
@@ -180,6 +182,43 @@ pub trait Backend: Send + Sync + 'static {
         kv: &mut Self::Kv,
         drafts: &[i32],
     ) -> anyhow::Result<Vec<f32>>;
+
+    /// Draft `k` independent candidate paths of length `gamma` per row —
+    /// the multi-draft analogue of [`Backend::draft_block`]
+    /// (DESIGN.md §9).  Path 0 of every row replays exactly the
+    /// single-path draft stream for the row's seed (the `k == 1`
+    /// degradation); paths `1..k` draw from per-path fold-ins of the
+    /// same seed.  Unlike `draft_block`, the live cache is **not**
+    /// advanced: every path is drafted against a scratch copy of the
+    /// row's shared prefix, and only the winning path's cache rows are
+    /// committed (the fused multipath `spec_iter` does this internally
+    /// via `kv_splice`-style row copies).
+    #[allow(clippy::too_many_arguments)]
+    fn draft_multi(
+        &self,
+        drafter: &str,
+        k: usize,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &Self::Kv,
+        seeds: &[i32],
+    ) -> anyhow::Result<DraftSet>;
+
+    /// Score every path of a draft set with the target over the
+    /// flattened `(B·K)` layout, filling [`DraftSet::ps`] with
+    /// `(B, K, gamma + 1, V)` row-major distributions.  Like
+    /// [`Backend::draft_multi`] this leaves the live cache untouched —
+    /// the native backend runs one batched forward over all `B·K` path
+    /// rows sharing each row's prefix KV; the PJRT backend falls back to
+    /// one host-composed `target_score` per path.
+    fn target_score_multi(
+        &self,
+        set: &mut DraftSet,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &Self::Kv,
+    ) -> anyhow::Result<()>;
 
     /// One autoregressive target step (the paper's 1x wall-clock
     /// baseline): sample the next token per row and apply it, updating

@@ -24,6 +24,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context};
 
 use super::{Backend, BackendInfo, DraftOut, SpecIterOut, StepOut};
+use crate::draftset::DraftSet;
 use crate::models::{self, vocab, ModelDims};
 use crate::runtime::Manifest;
 use crate::verify::{self, dist, Algo, ProbMatrix, Rng};
@@ -125,6 +126,26 @@ impl NativeKv {
     }
 }
 
+/// Copy cache positions `0..len` of `src` row `src_row` over `dst` row
+/// `dst_row`, for every layer.  The raw copy behind
+/// [`Backend::kv_splice`] and the multipath scratch/commit paths
+/// (geometries must already be validated by the caller).
+fn copy_kv_rows(dst: &mut NativeKv, dst_row: usize, src: &NativeKv, src_row: usize, len: usize) {
+    debug_assert_eq!(
+        (dst.n_layers, dst.n_heads, dst.head_dim, dst.max_len),
+        (src.n_layers, src.n_heads, src.head_dim, src.max_len),
+        "KV geometry mismatch"
+    );
+    debug_assert!(dst_row < dst.batch && src_row < src.batch && len <= src.max_len);
+    let chunk = len * src.n_heads * src.head_dim;
+    for li in 0..src.n_layers {
+        let d0 = dst.row(li, dst_row, 0);
+        let s0 = src.row(li, src_row, 0);
+        dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
+        dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Math helpers
 // ---------------------------------------------------------------------------
@@ -201,6 +222,37 @@ fn sample_row(probs: &[f32], u: f64) -> usize {
 pub fn verify_uniforms(seed: i32, gamma: usize) -> (Vec<f64>, f64) {
     let mut eta_rng = Rng::new(seed64(seed) ^ DOM_ETA);
     let etas: Vec<f64> = (0..gamma).map(|_| eta_rng.uniform()).collect();
+    let mut u_rng = Rng::new(seed64(seed) ^ DOM_RESIDUAL);
+    (etas, u_rng.uniform())
+}
+
+/// Per-path stream under a domain separator: path 0 is the plain
+/// single-draft stream for the seed (so `k = 1` multipath replays
+/// single-path behaviour draw for draw), and each later path folds its
+/// index into an independent stream.
+fn path_rng(seed: i32, dom: u64, path: usize) -> Rng {
+    let base = Rng::new(seed64(seed) ^ dom);
+    if path == 0 {
+        base
+    } else {
+        base.fold_in(path as u64)
+    }
+}
+
+/// The verification uniforms one row draws for a `k`-path draft set:
+/// `gamma` acceptance etas per path plus the shared residual uniform
+/// (only the winning stage consumes it — see
+/// [`crate::verify::multipath_verify`]).  Path 0's etas and the residual
+/// uniform replay [`verify_uniforms`] exactly, which is what makes
+/// `Algo::MultiPath { k: 1 }` bit-identical to `Algo::Block`
+/// (test-enforced).  Public for the same draw-for-draw replay tests.
+pub fn multipath_uniforms(seed: i32, gamma: usize, k: usize) -> (Vec<Vec<f64>>, f64) {
+    let etas: Vec<Vec<f64>> = (0..k)
+        .map(|path| {
+            let mut rng = path_rng(seed, DOM_ETA, path);
+            (0..gamma).map(|_| rng.uniform()).collect()
+        })
+        .collect();
     let mut u_rng = Rng::new(seed64(seed) ^ DOM_RESIDUAL);
     (etas, u_rng.uniform())
 }
@@ -494,12 +546,16 @@ impl NativeBackend {
         want_probs: bool,
     ) -> Vec<f32> {
         let dims = &model.dims;
-        let (b, l) = (self.info.batch, self.info.max_len);
+        // Rows come from the cache, not the serving batch: the multipath
+        // scratch caches run this very forward over `B * K` flattened
+        // path rows (DESIGN.md §9), everything else over the `B` serving
+        // rows.
+        let (b, l) = (kv.batch, kv.max_len);
         let (d, h, hd, vcb) = (dims.d_model, dims.n_heads, dims.head_dim(), dims.vocab_size);
         let scale = (hd as f32).powf(-0.5);
         debug_assert_eq!(tokens_t.len(), b * t);
-        debug_assert_eq!(kv.max_len, l);
-        debug_assert_eq!(kv.batch, b);
+        debug_assert_eq!(start_pos.len(), b);
+        debug_assert_eq!(l, self.info.max_len);
         debug_assert_eq!(
             (kv.n_layers, kv.n_heads, kv.head_dim),
             (dims.n_layers, h, hd),
@@ -633,6 +689,40 @@ impl NativeBackend {
             .collect()
     }
 
+    /// Allocation core of the draft scan, over however many rows `kv`
+    /// carries (`B` serving rows, or `B * K` flattened path rows on the
+    /// multipath scratch): `gamma` autoregressive steps from the per-row
+    /// pending token `cur`, each row sampling from its own `rngs` stream.
+    fn draft_scan_flat(
+        &self,
+        model: &NativeModel,
+        kv: &mut NativeKv,
+        mut cur: Vec<i32>,
+        start0: &[i32],
+        gamma: usize,
+        rngs: &mut [Rng],
+    ) -> (Vec<i32>, Vec<f32>) {
+        let (rows, vcb) = (kv.batch, self.info.vocab_size);
+        debug_assert_eq!(cur.len(), rows);
+        debug_assert_eq!(start0.len(), rows);
+        debug_assert_eq!(rngs.len(), rows);
+        let mut drafts = vec![0i32; rows * gamma];
+        let mut qs = vec![0.0f32; rows * gamma * vcb];
+        for j in 0..gamma {
+            let start: Vec<i32> = start0.iter().map(|&s| s + j as i32).collect();
+            let probs = self.forward_block(model, kv, &cur, 1, &start, true);
+            for r in 0..rows {
+                let prow = &probs[r * vcb..(r + 1) * vcb];
+                qs[(r * gamma + j) * vcb..(r * gamma + j + 1) * vcb].copy_from_slice(prow);
+                let u = rngs[r].uniform();
+                let next = sample_row(prow, u) as i32;
+                drafts[r * gamma + j] = next;
+                cur[r] = next;
+            }
+        }
+        (drafts, qs)
+    }
+
     /// `gamma` autoregressive draft steps (`model.py::draft_scan`).  Row
     /// `b` samples from its own stream keyed on `seeds[b]` alone, so a
     /// row's draft trajectory is independent of its slot and neighbours.
@@ -645,25 +735,11 @@ impl NativeBackend {
         gamma: usize,
         seeds: &[i32],
     ) -> (Vec<i32>, Vec<f32>) {
-        let (b, vcb) = (self.info.batch, self.info.vocab_size);
         let mut rngs: Vec<Rng> =
             seeds.iter().map(|&s| Rng::new(seed64(s) ^ DOM_DRAFT)).collect();
-        let mut cur = self.gather_pending(tokens, length);
-        let mut drafts = vec![0i32; b * gamma];
-        let mut qs = vec![0.0f32; b * gamma * vcb];
-        for j in 0..gamma {
-            let start: Vec<i32> = length.iter().map(|&len| len - 1 + j as i32).collect();
-            let probs = self.forward_block(model, kv, &cur, 1, &start, true);
-            for bi in 0..b {
-                let prow = &probs[bi * vcb..(bi + 1) * vcb];
-                qs[(bi * gamma + j) * vcb..(bi * gamma + j + 1) * vcb].copy_from_slice(prow);
-                let u = rngs[bi].uniform();
-                let next = sample_row(prow, u) as i32;
-                drafts[bi * gamma + j] = next;
-                cur[bi] = next;
-            }
-        }
-        (drafts, qs)
+        let cur = self.gather_pending(tokens, length);
+        let start0: Vec<i32> = length.iter().map(|&len| len - 1).collect();
+        self.draft_scan_flat(model, kv, cur, &start0, gamma, &mut rngs)
     }
 
     /// Per-row seed count must match the serving batch.
@@ -699,6 +775,167 @@ impl NativeBackend {
         }
         let start: Vec<i32> = length.iter().map(|&len| len - 1).collect();
         self.forward_block(model, kv, &inp, gamma + 1, &start, true)
+    }
+
+    // ------------------------------------------------------------------
+    // Multi-draft speculation (DESIGN.md §9)
+    // ------------------------------------------------------------------
+
+    /// Build the flattened `(B·K)`-row scratch cache for one model,
+    /// splicing each serving row's shared prefix (its `length - 1` valid
+    /// cache rows) into all `k` of that row's path rows.
+    fn multi_prefix_scratch(
+        &self,
+        model: &NativeModel,
+        k: usize,
+        length: &[i32],
+        kv: &NativeKv,
+    ) -> NativeKv {
+        let (b, l) = (self.info.batch, self.info.max_len);
+        let mut scratch = NativeKv::zeros(&model.dims, b * k, l);
+        for bi in 0..b {
+            let prefix = (length[bi].max(1) as usize - 1).min(l);
+            for path in 0..k {
+                copy_kv_rows(&mut scratch, bi * k + path, kv, bi, prefix);
+            }
+        }
+        scratch
+    }
+
+    /// [`Backend::draft_multi`] plus the drafter scratch cache, which the
+    /// fused multipath iteration keeps so it can commit the winning
+    /// path's rows after verification.
+    #[allow(clippy::too_many_arguments)]
+    fn draft_multi_scratch(
+        &self,
+        drafter: &str,
+        k: usize,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<(DraftSet, NativeKv)> {
+        self.check_shapes(tokens, length)?;
+        self.check_gamma(gamma)?;
+        self.check_seeds(seeds)?;
+        if k == 0 {
+            return Err(anyhow!("multipath draft set needs k >= 1"));
+        }
+        let m = self.model(drafter)?;
+        let b = self.info.batch;
+        let mut scratch = self.multi_prefix_scratch(m, k, length, kv);
+        let pending = self.gather_pending(tokens, length);
+        // Flat layout: path rows of serving row `bi` are `bi*k..bi*k+k`
+        // (the DraftSet::flat_row contract); every path starts from the
+        // row's pending token, with its own draft stream.
+        let mut cur = Vec::with_capacity(b * k);
+        let mut start0 = Vec::with_capacity(b * k);
+        let mut rngs = Vec::with_capacity(b * k);
+        for bi in 0..b {
+            for path in 0..k {
+                cur.push(pending[bi]);
+                start0.push(length[bi] - 1);
+                rngs.push(path_rng(seeds[bi], DOM_DRAFT, path));
+            }
+        }
+        let (drafts, qs) = self.draft_scan_flat(m, &mut scratch, cur, &start0, gamma, &mut rngs);
+        let set = DraftSet::new(b, k, gamma, self.info.vocab_size, drafts, qs)?;
+        Ok((set, scratch))
+    }
+
+    /// [`Backend::target_score_multi`] plus the target scratch cache (the
+    /// winner-commit twin of [`NativeBackend::draft_multi_scratch`]).
+    fn target_score_multi_scratch(
+        &self,
+        set: &mut DraftSet,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &NativeKv,
+    ) -> anyhow::Result<NativeKv> {
+        self.check_shapes(tokens, length)?;
+        let (b, gamma) = (self.info.batch, set.gamma);
+        if set.batch != b || set.vocab != self.info.vocab_size {
+            return Err(anyhow!(
+                "draft set shape mismatch: batch {} (want {b}), vocab {} (want {})",
+                set.batch,
+                set.vocab,
+                self.info.vocab_size
+            ));
+        }
+        self.check_gamma(gamma)?;
+        let m = self.model("target")?;
+        let mut scratch = self.multi_prefix_scratch(m, set.k, length, kv);
+        let pending = self.gather_pending(tokens, length);
+        let rows = set.flat_rows();
+        let mut inp = vec![0i32; rows * (gamma + 1)];
+        let mut start = Vec::with_capacity(rows);
+        for bi in 0..b {
+            for path in 0..set.k {
+                let r = set.flat_row(bi, path);
+                inp[r * (gamma + 1)] = pending[bi];
+                inp[r * (gamma + 1) + 1..(r + 1) * (gamma + 1)]
+                    .copy_from_slice(set.path_drafts(bi, path));
+                start.push(length[bi] - 1);
+            }
+        }
+        let ps = self.forward_block(m, &mut scratch, &inp, gamma + 1, &start, true);
+        set.set_ps(ps)?;
+        Ok(scratch)
+    }
+
+    /// One fused multipath iteration: draft `k` paths per row against
+    /// scratch prefix copies, score them all in one batched target pass,
+    /// verify jointly ([`verify::multipath_verify`]) and commit only the
+    /// winning path's cache rows back into the live caches.
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter_multipath(
+        &self,
+        k: usize,
+        drafter: &str,
+        gamma: usize,
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut NativeKv,
+        kv_drafter: &mut NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<SpecIterOut> {
+        let (b, l) = (self.info.batch, self.info.max_len);
+        let (mut set, d_scratch) =
+            self.draft_multi_scratch(drafter, k, gamma, tokens, length, kv_drafter, seeds)?;
+        let t_scratch = self.target_score_multi_scratch(&mut set, tokens, length, kv_target)?;
+
+        let mut tau = vec![0i32; b];
+        let mut emitted = vec![vocab::PAD as i32; b * (gamma + 1)];
+        let mut done = vec![0i32; b];
+        for bi in 0..b {
+            let (etas, u_res) = multipath_uniforms(seeds[bi], gamma, k);
+            let (ps_v, qs_v, drafts_v) = set.row_views(bi)?;
+            let outcome = verify::multipath_verify(&ps_v, &qs_v, &drafts_v, &etas, u_res);
+            // Commit the winner: during this iteration the drafter wrote
+            // scratch rows `len-1 .. len+gamma-2` and the target rows
+            // `len-1 .. len+gamma-1`; copying from position 0 also
+            // rewrites the shared prefix with identical values, so the
+            // live caches end up exactly as a single-path iteration of
+            // the winning path would have left them.
+            let len = length[bi].max(0) as usize;
+            let w = set.flat_row(bi, outcome.path);
+            copy_kv_rows(kv_drafter, bi, &d_scratch, w, (len + gamma).saturating_sub(1).min(l));
+            copy_kv_rows(kv_target, bi, &t_scratch, w, (len + gamma).min(l));
+            for (j, &t) in outcome.emitted.iter().enumerate() {
+                if len + j < l {
+                    tokens[bi * l + len + j] = t as i32;
+                }
+                emitted[bi * (gamma + 1) + j] = t as i32;
+            }
+            let eos_hit = outcome.emitted.iter().any(|&t| t == vocab::EOS);
+            let new_len = length[bi] + outcome.tau as i32 + 1;
+            let out_of_room = new_len > (l as i32) - (gamma as i32 + 2);
+            tau[bi] = outcome.tau as i32;
+            done[bi] = (eos_hit || out_of_room) as i32;
+            length[bi] = new_len.min(l as i32 - 1);
+        }
+        Ok(SpecIterOut { tau, emitted, done })
     }
 }
 
@@ -747,6 +984,11 @@ impl Backend for NativeBackend {
     ) -> anyhow::Result<SpecIterOut> {
         if !algo.fused() {
             return Err(anyhow!("algo {algo} requires the host-verify engine"));
+        }
+        if let Algo::MultiPath { k } = algo {
+            return self.spec_iter_multipath(
+                k, drafter, gamma, tokens, length, kv_target, kv_drafter, seeds,
+            );
         }
         self.check_shapes(tokens, length)?;
         self.check_gamma(gamma)?;
@@ -837,13 +1079,7 @@ impl Backend for NativeBackend {
         if len > self.info.max_len {
             return Err(anyhow!("kv_splice: len {len} exceeds ring {}", self.info.max_len));
         }
-        let chunk = len * geom.1 * geom.2;
-        for li in 0..geom.0 {
-            let d0 = dst.row(li, dst_slot, 0);
-            let s0 = src.row(li, src_row, 0);
-            dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
-            dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
-        }
+        copy_kv_rows(dst, dst_slot, src, src_row, len);
         Ok(())
     }
 
@@ -862,6 +1098,33 @@ impl Backend for NativeBackend {
         }
         let m = self.model("target")?;
         Ok(self.score(m, kv, tokens, length, drafts, gamma))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn draft_multi(
+        &self,
+        drafter: &str,
+        k: usize,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<DraftSet> {
+        let (set, _scratch) =
+            self.draft_multi_scratch(drafter, k, gamma, tokens, length, kv, seeds)?;
+        Ok(set)
+    }
+
+    fn target_score_multi(
+        &self,
+        set: &mut DraftSet,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &NativeKv,
+    ) -> anyhow::Result<()> {
+        let _scratch = self.target_score_multi_scratch(set, tokens, length, kv)?;
+        Ok(())
     }
 
     fn baseline_step(
@@ -1021,6 +1284,137 @@ mod tests {
         assert!(be.kv_splice("target", &mut dst, 9, &src, 0, len).is_err());
         let xxs = be.prefill("xxs", &toks, &lens).unwrap();
         assert!(be.kv_splice("target", &mut dst, 1, &xxs, 0, len).is_err());
+    }
+
+    #[test]
+    fn multipath_uniforms_replay_single_path_at_path_zero() {
+        let (etas1, u1) = verify_uniforms(42, 6);
+        let (etas_k, u_k) = multipath_uniforms(42, 6, 3);
+        assert_eq!(etas_k.len(), 3);
+        assert_eq!(etas_k[0], etas1, "path 0 must replay the single-path eta stream");
+        assert_eq!(u_k, u1, "the residual uniform is shared");
+        assert_ne!(etas_k[1], etas_k[0], "paths draw from distinct streams");
+        assert_ne!(etas_k[2], etas_k[1]);
+        for path in &etas_k {
+            assert!(path.iter().all(|&x| (0.0..1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn draft_multi_path0_replays_single_path() {
+        let be = tiny();
+        let (toks, lens) = prompt_state(&be);
+        let mut kv_single = be.prefill("xxs", &toks, &lens).unwrap();
+        let kv_multi = kv_single.clone();
+        let seeds = [5, 6];
+        let d = be.draft_block("xxs", 3, &toks, &lens, &mut kv_single, &seeds).unwrap();
+        let set = be.draft_multi("xxs", 2, 3, &toks, &lens, &kv_multi, &seeds).unwrap();
+        let v = be.info().vocab_size;
+        let n = 3 * v;
+        for bi in 0..2 {
+            assert_eq!(set.path_drafts(bi, 0), &d.drafts[bi * 3..(bi + 1) * 3]);
+            let r = set.flat_row(bi, 0);
+            assert_eq!(&set.qs[r * n..(r + 1) * n], &d.qs[bi * n..(bi + 1) * n]);
+        }
+        assert!(be.draft_multi("xxs", 0, 3, &toks, &lens, &kv_multi, &seeds).is_err());
+    }
+
+    #[test]
+    fn target_score_multi_agrees_with_single_path_scoring() {
+        let be = tiny();
+        let (toks, lens) = prompt_state(&be);
+        let kv_d = be.prefill("xxs", &toks, &lens).unwrap();
+        let mut kv_t = be.prefill("target", &toks, &lens).unwrap();
+        let kv_t2 = kv_t.clone();
+        let seeds = [3, 9];
+        let mut set = be.draft_multi("xxs", 2, 3, &toks, &lens, &kv_d, &seeds).unwrap();
+        be.target_score_multi(&mut set, &toks, &lens, &kv_t2).unwrap();
+        // Path 0 drafts are the single-path drafts, so single-path target
+        // scoring of them must reproduce the path-0 ps slice bit for bit.
+        let drafts0: Vec<i32> =
+            (0..2).flat_map(|bi| set.path_drafts(bi, 0).to_vec()).collect();
+        let ps = be.target_score(3, &toks, &lens, &mut kv_t, &drafts0).unwrap();
+        let v = be.info().vocab_size;
+        let n = 4 * v;
+        for bi in 0..2 {
+            let r = set.flat_row(bi, 0);
+            assert_eq!(&set.ps[r * n..(r + 1) * n], &ps[bi * n..(bi + 1) * n]);
+        }
+        for row in set.ps.chunks_exact(v) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "scored row sums to {s}");
+        }
+    }
+
+    #[test]
+    fn multipath_k1_spec_iter_is_bit_identical_to_block() {
+        let be = tiny();
+        let (mut t1, mut l1) = prompt_state(&be);
+        let (mut t2, mut l2) = (t1.clone(), l1.clone());
+        let mut kt1 = be.prefill("target", &t1, &l1).unwrap();
+        let mut kd1 = be.prefill("xxs", &t1, &l1).unwrap();
+        let mut kt2 = kt1.clone();
+        let mut kd2 = kd1.clone();
+        for iter in 0..4i32 {
+            let seeds = [11 + iter, 23 + 7 * iter];
+            let a = be
+                .spec_iter(Algo::Block, "xxs", 4, &mut t1, &mut l1, &mut kt1, &mut kd1, &seeds)
+                .unwrap();
+            let b = be
+                .spec_iter(
+                    Algo::MultiPath { k: 1 },
+                    "xxs",
+                    4,
+                    &mut t2,
+                    &mut l2,
+                    &mut kt2,
+                    &mut kd2,
+                    &seeds,
+                )
+                .unwrap();
+            assert_eq!(a.tau, b.tau, "iter {iter}");
+            assert_eq!(a.emitted, b.emitted, "iter {iter}");
+            assert_eq!(a.done, b.done, "iter {iter}");
+            assert_eq!(t1, t2, "iter {iter}: token rings diverged");
+            assert_eq!(l1, l2, "iter {iter}: lengths diverged");
+            assert_eq!(kt1.k, kt2.k, "iter {iter}: target K cache diverged");
+            assert_eq!(kt1.v, kt2.v, "iter {iter}: target V cache diverged");
+            assert_eq!(kd1.k, kd2.k, "iter {iter}: drafter K cache diverged");
+            assert_eq!(kd1.v, kd2.v, "iter {iter}: drafter V cache diverged");
+        }
+    }
+
+    #[test]
+    fn multipath_spec_iter_advances_state_and_respects_contract() {
+        let be = tiny();
+        let (mut toks, mut lens) = prompt_state(&be);
+        let mut kvt = be.prefill("target", &toks, &lens).unwrap();
+        let mut kvd = be.prefill("xxs", &toks, &lens).unwrap();
+        let len0 = lens.clone();
+        let gamma = 4;
+        let out = be
+            .spec_iter(
+                Algo::MultiPath { k: 3 },
+                "xxs",
+                gamma,
+                &mut toks,
+                &mut lens,
+                &mut kvt,
+                &mut kvd,
+                &[3, 4],
+            )
+            .unwrap();
+        for b in 0..be.info().batch {
+            let t = out.tau[b] as usize;
+            assert!(t <= gamma);
+            assert_eq!(lens[b], len0[b] + t as i32 + 1);
+            for j in 0..=t {
+                assert_eq!(
+                    toks[b * be.info().max_len + len0[b] as usize + j],
+                    out.emitted[b * (gamma + 1) + j]
+                );
+            }
+        }
     }
 
     #[test]

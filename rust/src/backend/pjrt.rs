@@ -14,6 +14,7 @@ use std::sync::Arc;
 use anyhow::anyhow;
 
 use super::{Backend, BackendInfo, DraftOut, SpecIterOut, StepOut};
+use crate::draftset::DraftSet;
 use crate::runtime::{literal, Runtime, StateHandle};
 use crate::verify::Algo;
 
@@ -146,6 +147,12 @@ impl Backend for PjrtBackend {
         if !algo.fused() {
             return Err(anyhow!("algo {algo} requires the host-verify path"));
         }
+        if let Algo::MultiPath { .. } = algo {
+            return Err(anyhow!(
+                "algo {algo} has no AOT program yet (ROADMAP: device KV-fork multipath); \
+                 run multipath on the native backend"
+            ));
+        }
         let rt = &*self.rt;
         let prog = rt.program(&rt.manifest.spec_iter_name(algo.name(), drafter, gamma))?;
         let w_t = rt.weights("target")?;
@@ -254,6 +261,83 @@ impl Backend for PjrtBackend {
         Ok(ps)
     }
 
+    /// Host-composed multi-draft fallback: one `draft_block` program run
+    /// per path against a host clone of the live cache (the AOT grid has
+    /// no flattened `(B·K)` program yet — ROADMAP: device KV-fork
+    /// multipath).  The live cache is left untouched, per the trait
+    /// contract.
+    #[allow(clippy::too_many_arguments)]
+    fn draft_multi(
+        &self,
+        drafter: &str,
+        k: usize,
+        gamma: usize,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &PjrtKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<DraftSet> {
+        if k == 0 {
+            return Err(anyhow!("multipath draft set needs k >= 1"));
+        }
+        let (b, v) = (self.info.batch, self.info.vocab_size);
+        let mut drafts = vec![0i32; b * k * gamma];
+        let mut qs = vec![0.0f32; b * k * gamma * v];
+        for path in 0..k {
+            let mut scratch = clone_kv_host(kv)?;
+            let d = self.draft_block(
+                drafter,
+                gamma,
+                tokens,
+                length,
+                &mut scratch,
+                &path_seeds(seeds, path),
+            )?;
+            for bi in 0..b {
+                let r = bi * k + path;
+                drafts[r * gamma..(r + 1) * gamma]
+                    .copy_from_slice(&d.drafts[bi * gamma..(bi + 1) * gamma]);
+                qs[r * gamma * v..(r + 1) * gamma * v]
+                    .copy_from_slice(&d.qs[bi * gamma * v..(bi + 1) * gamma * v]);
+            }
+        }
+        DraftSet::new(b, k, gamma, v, drafts, qs)
+    }
+
+    /// Host-composed scoring fallback: one `target_score` program run per
+    /// path on a host clone of the live cache (see
+    /// [`PjrtBackend::draft_multi`]).
+    fn target_score_multi(
+        &self,
+        set: &mut DraftSet,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &PjrtKv,
+    ) -> anyhow::Result<()> {
+        let (b, v) = (self.info.batch, self.info.vocab_size);
+        if set.batch != b || set.vocab != v {
+            return Err(anyhow!(
+                "draft set shape mismatch: batch {} (want {b}), vocab {} (want {v})",
+                set.batch,
+                set.vocab
+            ));
+        }
+        let gamma = set.gamma;
+        let n = (gamma + 1) * v;
+        let mut ps = vec![0.0f32; set.flat_rows() * n];
+        for path in 0..set.k {
+            let mut scratch = clone_kv_host(kv)?;
+            let drafts_p: Vec<i32> =
+                (0..b).flat_map(|bi| set.path_drafts(bi, path).to_vec()).collect();
+            let ps_p = self.target_score(gamma, tokens, length, &mut scratch, &drafts_p)?;
+            for bi in 0..b {
+                let r = set.flat_row(bi, path);
+                ps[r * n..(r + 1) * n].copy_from_slice(&ps_p[bi * n..(bi + 1) * n]);
+            }
+        }
+        set.set_ps(ps)
+    }
+
     fn baseline_step(
         &self,
         tokens: &mut [i32],
@@ -356,6 +440,35 @@ impl Backend for PjrtBackend {
     fn end_batch(&self) {
         self.rt.clear_pinned();
     }
+}
+
+/// Host clone of a live KV cache as lazily-uploaded literals
+/// ([`StateHandle::Lit`]), leaving the original untouched — the scratch
+/// the host-composed multi-draft fallback drafts and scores against.
+fn clone_kv_host(kv: &PjrtKv) -> anyhow::Result<PjrtKv> {
+    let k = kv.k.as_ref().ok_or_else(|| anyhow!("KV state consumed"))?;
+    let v = kv.v.as_ref().ok_or_else(|| anyhow!("KV state consumed"))?;
+    let (kd, k_dims) = handle_to_host(k)?;
+    let (vd, v_dims) = handle_to_host(v)?;
+    let k_lit = xla::Literal::vec1(&kd)
+        .reshape(&k_dims)
+        .map_err(|e| anyhow!("kv clone reshape: {e}"))?;
+    let v_lit = xla::Literal::vec1(&vd)
+        .reshape(&v_dims)
+        .map_err(|e| anyhow!("kv clone reshape: {e}"))?;
+    Ok(PjrtKv { k: Some(StateHandle::Lit(k_lit)), v: Some(StateHandle::Lit(v_lit)) })
+}
+
+/// Per-path seed derivation on the scalar-seed program grid: path 0 keeps
+/// the row seeds verbatim (the `k == 1` degradation), later paths fold
+/// the path index in (best-effort stream separation, same caveat as
+/// [`PjrtBackend::mix_seeds`]).
+fn path_seeds(seeds: &[i32], path: usize) -> Vec<i32> {
+    if path == 0 {
+        return seeds.to_vec();
+    }
+    let mix = (path as i32).wrapping_mul(0x9E37_79B1u32 as i32);
+    seeds.iter().map(|&s| s ^ mix).collect()
 }
 
 /// Materialise a carried state tensor on the host as `(flat f32 data,

@@ -11,6 +11,10 @@
 //!   "experiments": {"prompts_per_dataset": 64, "seeds": [0, 1, 2]}
 //! }
 //! ```
+//!
+//! Multi-draft speculation selects `"algo": "multipath"` (or
+//! `"multipath:<k>"`); an optional `"paths": <k>` field overrides the
+//! path count and is ignored for single-draft algorithms.
 
 use std::path::{Path, PathBuf};
 
@@ -62,6 +66,14 @@ impl EngineConfig {
         }
         if let Some(x) = v.get("algo").and_then(Value::as_str) {
             self.algo = Algo::parse(x).ok_or_else(|| anyhow!("unknown algo '{x}'"))?;
+        }
+        if let Some(x) = v.get("paths").and_then(Value::as_usize) {
+            if let Algo::MultiPath { .. } = self.algo {
+                if x == 0 {
+                    return Err(anyhow!("paths must be >= 1"));
+                }
+                self.algo = Algo::MultiPath { k: x };
+            }
         }
         if let Some(x) = v.get("drafter").and_then(Value::as_str) {
             self.drafter = x.to_string();
@@ -225,5 +237,23 @@ mod tests {
     #[test]
     fn bad_algo_rejected() {
         assert!(Config::parse(r#"{"engine": {"algo": "bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn multipath_algo_and_paths() {
+        let c = Config::parse(r#"{"engine": {"algo": "multipath"}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::MultiPath { k: 2 });
+        let c = Config::parse(r#"{"engine": {"algo": "multipath", "paths": 4}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::MultiPath { k: 4 });
+        let c = Config::parse(r#"{"engine": {"algo": "multipath:3"}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::MultiPath { k: 3 });
+        // paths is ignored for single-draft algorithms...
+        let c = Config::parse(r#"{"engine": {"algo": "block", "paths": 4}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::Block);
+        // ...and rejected when degenerate for multipath.
+        assert!(Config::parse(r#"{"engine": {"algo": "multipath", "paths": 0}}"#).is_err());
+        // multipath stays on the fused engine path.
+        let c = Config::parse(r#"{"engine": {"algo": "multipath"}}"#).unwrap();
+        assert!(!c.engine.effective_host_verify());
     }
 }

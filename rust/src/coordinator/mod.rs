@@ -219,6 +219,7 @@ fn batch_worker<B: Backend>(
             sr.tracker.absorb(&row, tau, out.done[i] != 0);
             metrics.tokens_emitted.add(row.len() as u64);
             metrics.drafts_accepted.add(tau as u64);
+            metrics.accepted_len_hist.observe(tau);
             metrics.iterations.inc();
             if !sr.tracker.active() {
                 finished.push(i);

@@ -1,0 +1,213 @@
+//! Multi-draft speculation data layout: a [`DraftSet`] holds `K`
+//! independently drafted candidate continuations ("paths") of length
+//! `gamma` for every batch row, flattened to a `(B·K)`-row scratch batch
+//! so a single batched target pass scores every path at once
+//! (DESIGN.md §9).
+//!
+//! Layout contract (shared with the backends' flattened forwards):
+//!
+//! * flat scratch row of `(row, path)` is `row * K + path`
+//!   ([`DraftSet::flat_row`]) — row-major by engine slot, path minor, so
+//!   all of one slot's paths are contiguous;
+//! * `drafts` is row-major `(B, K, gamma)` i32, `qs` is
+//!   `(B, K, gamma, V)` f32 (drafter next-token distributions along each
+//!   path), and `ps` — filled by
+//!   [`crate::backend::Backend::target_score_multi`] — is
+//!   `(B, K, gamma + 1, V)` f32;
+//! * path 0 of every row replays the single-draft stream for the row's
+//!   seed, which is what makes `Algo::MultiPath { k: 1 }` bit-identical
+//!   to `Algo::Block` (test-enforced).
+//!
+//! Verification of a set happens per row through
+//! [`crate::verify::multipath_verify`]; [`DraftSet::row_views`] produces
+//! the per-path matrices that kernel consumes.
+
+use anyhow::anyhow;
+
+use crate::verify::ProbMatrix;
+
+/// `K` candidate draft paths of length `gamma` for each of `B` batch
+/// rows, plus their drafter (and, once scored, target) distributions.
+#[derive(Clone, Debug)]
+pub struct DraftSet {
+    /// Engine batch rows `B`.
+    pub batch: usize,
+    /// Candidate paths per row `K`.
+    pub k: usize,
+    /// Draft block length per path.
+    pub gamma: usize,
+    /// Vocabulary size `V`.
+    pub vocab: usize,
+    /// Draft tokens, row-major `(B, K, gamma)`.
+    pub drafts: Vec<i32>,
+    /// Drafter next-token distributions along each path,
+    /// `(B, K, gamma, V)`: `qs[b, p, j] = M_s(. | c_b, X_p^j)`.
+    pub qs: Vec<f32>,
+    /// Target next-token distributions along each path,
+    /// `(B, K, gamma + 1, V)`; empty until target scoring fills it
+    /// ([`DraftSet::set_ps`]).
+    pub ps: Vec<f32>,
+}
+
+impl DraftSet {
+    /// Wrap freshly drafted paths (target scores still pending).
+    pub fn new(
+        batch: usize,
+        k: usize,
+        gamma: usize,
+        vocab: usize,
+        drafts: Vec<i32>,
+        qs: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        if batch == 0 || k == 0 || gamma == 0 || vocab == 0 {
+            return Err(anyhow!(
+                "degenerate draft set shape (B {batch}, K {k}, gamma {gamma}, V {vocab})"
+            ));
+        }
+        if drafts.len() != batch * k * gamma {
+            return Err(anyhow!(
+                "drafts shape {} != B*K*gamma = {}",
+                drafts.len(),
+                batch * k * gamma
+            ));
+        }
+        if qs.len() != batch * k * gamma * vocab {
+            return Err(anyhow!(
+                "qs shape {} != B*K*gamma*V = {}",
+                qs.len(),
+                batch * k * gamma * vocab
+            ));
+        }
+        Ok(DraftSet { batch, k, gamma, vocab, drafts, qs, ps: Vec::new() })
+    }
+
+    /// Rows of the flattened scratch batch: `B * K`.
+    pub fn flat_rows(&self) -> usize {
+        self.batch * self.k
+    }
+
+    /// Flat scratch-batch row index of `(row, path)`.
+    #[inline]
+    pub fn flat_row(&self, row: usize, path: usize) -> usize {
+        debug_assert!(row < self.batch && path < self.k);
+        row * self.k + path
+    }
+
+    /// Has [`DraftSet::set_ps`] run yet?
+    pub fn scored(&self) -> bool {
+        !self.ps.is_empty()
+    }
+
+    /// Attach the target scores, `(B, K, gamma + 1, V)` row-major.
+    pub fn set_ps(&mut self, ps: Vec<f32>) -> anyhow::Result<()> {
+        let want = self.flat_rows() * (self.gamma + 1) * self.vocab;
+        if ps.len() != want {
+            return Err(anyhow!("ps shape {} != B*K*(gamma+1)*V = {want}", ps.len()));
+        }
+        self.ps = ps;
+        Ok(())
+    }
+
+    /// One path's draft tokens.
+    pub fn path_drafts(&self, row: usize, path: usize) -> &[i32] {
+        let r = self.flat_row(row, path);
+        &self.drafts[r * self.gamma..(r + 1) * self.gamma]
+    }
+
+    /// One path's draft tokens as the `u32` the verify kernels take.
+    pub fn path_drafts_u32(&self, row: usize, path: usize) -> Vec<u32> {
+        self.path_drafts(row, path).iter().map(|&x| x as u32).collect()
+    }
+
+    /// One path's drafter distributions as a `(gamma, V)` matrix.
+    pub fn qs_matrix(&self, row: usize, path: usize) -> ProbMatrix {
+        let r = self.flat_row(row, path);
+        let n = self.gamma * self.vocab;
+        ProbMatrix::from_f32(self.gamma, self.vocab, &self.qs[r * n..(r + 1) * n])
+    }
+
+    /// One path's target distributions as a `(gamma + 1, V)` matrix.
+    /// Errors if the set has not been target-scored yet.
+    pub fn ps_matrix(&self, row: usize, path: usize) -> anyhow::Result<ProbMatrix> {
+        if !self.scored() {
+            return Err(anyhow!("draft set has not been target-scored"));
+        }
+        let r = self.flat_row(row, path);
+        let n = (self.gamma + 1) * self.vocab;
+        Ok(ProbMatrix::from_f32(self.gamma + 1, self.vocab, &self.ps[r * n..(r + 1) * n]))
+    }
+
+    /// All `K` per-path views of one row, in the shape
+    /// [`crate::verify::multipath_verify`] consumes: `(ps, qs, drafts)`
+    /// with one entry per path.
+    #[allow(clippy::type_complexity)]
+    pub fn row_views(
+        &self,
+        row: usize,
+    ) -> anyhow::Result<(Vec<ProbMatrix>, Vec<ProbMatrix>, Vec<Vec<u32>>)> {
+        let mut ps = Vec::with_capacity(self.k);
+        let mut qs = Vec::with_capacity(self.k);
+        let mut drafts = Vec::with_capacity(self.k);
+        for path in 0..self.k {
+            ps.push(self.ps_matrix(row, path)?);
+            qs.push(self.qs_matrix(row, path));
+            drafts.push(self.path_drafts_u32(row, path));
+        }
+        Ok((ps, qs, drafts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_set() -> DraftSet {
+        // B = 2, K = 2, gamma = 2, V = 3; drafts count up so every
+        // (row, path, j) cell is distinguishable.
+        let drafts: Vec<i32> = (0..8).collect();
+        let qs: Vec<f32> = (0..2 * 2 * 2 * 3).map(|i| i as f32).collect();
+        DraftSet::new(2, 2, 2, 3, drafts, qs).unwrap()
+    }
+
+    #[test]
+    fn flat_layout_offsets() {
+        let set = tiny_set();
+        assert_eq!(set.flat_rows(), 4);
+        assert_eq!(set.flat_row(0, 0), 0);
+        assert_eq!(set.flat_row(0, 1), 1);
+        assert_eq!(set.flat_row(1, 0), 2);
+        assert_eq!(set.path_drafts(0, 1), &[2, 3]);
+        assert_eq!(set.path_drafts(1, 0), &[4, 5]);
+        assert_eq!(set.path_drafts_u32(1, 1), vec![6, 7]);
+        // qs rows land at the right per-path offsets.
+        let m = set.qs_matrix(1, 0);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.row(0), &[12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn scoring_lifecycle_and_shape_checks() {
+        let mut set = tiny_set();
+        assert!(!set.scored());
+        assert!(set.ps_matrix(0, 0).is_err());
+        assert!(set.row_views(0).is_err());
+        assert!(set.set_ps(vec![0.0; 5]).is_err());
+        let ps: Vec<f32> = (0..4 * 3 * 3).map(|i| i as f32).collect();
+        set.set_ps(ps).unwrap();
+        assert!(set.scored());
+        let m = set.ps_matrix(0, 1).unwrap();
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.row(0), &[9.0, 10.0, 11.0]);
+        let (ps_v, qs_v, d_v) = set.row_views(1).unwrap();
+        assert_eq!((ps_v.len(), qs_v.len(), d_v.len()), (2, 2, 2));
+        assert_eq!(d_v[1], vec![6, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(DraftSet::new(2, 2, 2, 3, vec![0; 7], vec![0.0; 24]).is_err());
+        assert!(DraftSet::new(2, 2, 2, 3, vec![0; 8], vec![0.0; 23]).is_err());
+        assert!(DraftSet::new(0, 2, 2, 3, vec![], vec![]).is_err());
+        assert!(DraftSet::new(2, 0, 2, 3, vec![], vec![]).is_err());
+    }
+}

@@ -27,6 +27,12 @@ pub struct HostVerifyEngine<B: Backend> {
 
 impl<B: Backend> HostVerifyEngine<B> {
     pub fn new(backend: Arc<B>, cfg: EngineConfig) -> anyhow::Result<Self> {
+        if matches!(cfg.algo, Algo::MultiPath { .. }) {
+            return Err(anyhow!(
+                "multipath verification runs on the fused engine (engine::spec); \
+                 the host-verify path is single-draft"
+            ));
+        }
         let info = backend.info();
         if !info.supports_gamma(cfg.gamma) {
             return Err(anyhow!("gamma {} not supported", cfg.gamma));
@@ -116,6 +122,7 @@ impl<B: Backend> HostVerifyEngine<B> {
                 tr.absorb(&outcome.emitted, outcome.tau, out_of_room);
                 self.metrics.tokens_emitted.add(outcome.emitted.len() as u64);
                 self.metrics.drafts_accepted.add(outcome.tau as u64);
+                self.metrics.accepted_len_hist.observe(outcome.tau);
                 self.metrics.iterations.inc();
             }
             device_iterations += 1;

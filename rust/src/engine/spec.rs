@@ -49,6 +49,9 @@ impl<B: Backend> SpecEngine<B> {
                 cfg.algo
             ));
         }
+        if cfg.algo.paths() == 0 {
+            return Err(anyhow!("multipath needs at least one draft path (k >= 1)"));
+        }
         let info = backend.info();
         if !info.supports_gamma(cfg.gamma) {
             return Err(anyhow!(
@@ -129,6 +132,7 @@ impl<B: Backend> SpecEngine<B> {
                 tr.absorb(&row, t_i, out.done[i] != 0);
                 self.metrics.tokens_emitted.add(row.len() as u64);
                 self.metrics.drafts_accepted.add(t_i as u64);
+                self.metrics.accepted_len_hist.observe(t_i);
                 self.metrics.iterations.inc();
             }
             device_iterations += 1;

@@ -30,6 +30,7 @@ pub mod backend;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod draftset;
 pub mod engine;
 pub mod experiments;
 pub mod util;

@@ -35,8 +35,8 @@ specd — block-verification speculative decoding server
 USAGE: specd <serve|run|tables|sim> [options]
   common:   --config <file.json>  --artifacts <dir>  --backend native|pjrt
   serve:    --addr <ip:port>
-  run:      --dataset gsm8k --algo block --gamma 8 --drafter xxs
-            --prompts 16 --seed 0
+  run:      --dataset gsm8k --algo block|token|greedy|multipath:<k>
+            --gamma 8 --drafter xxs --prompts 16 --seed 0
   tables:   --table 1|3|4..8|fig3|fig4|motivating|all
             --prompts <n> --seeds <n>
   sim:      --vocab 8 --gamma 4 --tokens 200000

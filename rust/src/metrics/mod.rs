@@ -84,6 +84,71 @@ impl LatencyHist {
     }
 }
 
+/// Fixed-bucket histogram over small non-negative integers — the
+/// accepted-prefix-length (`tau`) distribution per engine, one bucket per
+/// length `0..=MAX_VALUE` (larger values clamp into the top bucket).
+/// Each engine runs one verification algorithm, so this is the per-algo
+/// histogram exported next to the slot-occupancy counters.
+#[derive(Debug)]
+pub struct ValueHist {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for ValueHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ValueHist {
+    /// Largest tracked value (gammas are capped at `L/4 = 24` by the
+    /// serving shapes; 32 leaves headroom).
+    pub const MAX_VALUE: usize = 32;
+
+    pub fn new() -> Self {
+        ValueHist { buckets: (0..=Self::MAX_VALUE).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn observe(&self, value: usize) {
+        self.buckets[value.min(Self::MAX_VALUE)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self, value: usize) -> u64 {
+        self.buckets[value.min(Self::MAX_VALUE)].load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            sum += (i as u64 * c) as f64;
+            n += c;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// `(value, count)` for every non-empty bucket, ascending.
+    pub fn nonzero(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then_some((i, c))
+            })
+            .collect()
+    }
+}
+
 /// Engine/coordinator metric bundle.
 #[derive(Default, Debug)]
 pub struct EngineMetrics {
@@ -101,6 +166,9 @@ pub struct EngineMetrics {
     /// ...out of slot-iterations available (`B` per engine step); the
     /// ratio is the batcher's slot occupancy.
     pub slot_iters_total: Counter,
+    /// Accepted-prefix-length (`tau`) distribution across row-iterations
+    /// — per algorithm, since an engine runs exactly one.
+    pub accepted_len_hist: ValueHist,
     pub queue_wait: LatencyHist,
     pub iter_latency: LatencyHist,
     pub request_latency: LatencyHist,
@@ -139,10 +207,14 @@ impl EngineMetrics {
         put("slots_refilled", self.slots_refilled.get() as f64);
         put("slot_occupancy", self.slot_occupancy());
         put("block_efficiency", self.block_efficiency());
+        put("accepted_len_mean", self.accepted_len_hist.mean());
         put("iter_latency_mean_us", self.iter_latency.mean_us());
         put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
         put("request_latency_mean_us", self.request_latency.mean_us());
         put("queue_wait_mean_us", self.queue_wait.mean_us());
+        for (len, n) in self.accepted_len_hist.nonzero() {
+            s.push_str(&format!("specd_accepted_len_hist{{len=\"{len}\"}} {n}\n"));
+        }
         s
     }
 }
@@ -188,6 +260,26 @@ mod tests {
         m.slot_iters_busy.add(6);
         assert!((m.slot_occupancy() - 0.75).abs() < 1e-12);
         assert!(m.render().contains("specd_slot_occupancy 0.75"));
+    }
+
+    #[test]
+    fn accepted_len_hist_buckets_and_render() {
+        let m = EngineMetrics::default();
+        m.accepted_len_hist.observe(0);
+        m.accepted_len_hist.observe(3);
+        m.accepted_len_hist.observe(3);
+        m.accepted_len_hist.observe(999); // clamps into the top bucket
+        assert_eq!(m.accepted_len_hist.count(3), 2);
+        assert_eq!(m.accepted_len_hist.count(ValueHist::MAX_VALUE), 1);
+        assert_eq!(m.accepted_len_hist.total(), 4);
+        assert!((m.accepted_len_hist.mean() - (0.0 + 3.0 + 3.0 + 32.0) / 4.0).abs() < 1e-12);
+        assert_eq!(
+            m.accepted_len_hist.nonzero(),
+            vec![(0, 1), (3, 2), (ValueHist::MAX_VALUE, 1)]
+        );
+        let r = m.render();
+        assert!(r.contains("specd_accepted_len_hist{len=\"3\"} 2"));
+        assert!(r.contains("specd_accepted_len_mean"));
     }
 
     #[test]

@@ -10,10 +10,15 @@
 //!   `sum_l sum_{x^l} M_s(x^l) * p_l(x^l)`.
 //! * [`fullinfo_bound`] — the Lemma 8 / full-information upper bound:
 //!   `sum_l sum_{x^l} min(M_s(x^l), M_b(x^l))` over *joint* probabilities.
+//! * [`expected_tau_multipath`] — `E[tau]` for sequential multi-draft
+//!   block verification over `K` i.i.d. draft paths
+//!   ([`crate::verify::multipath`]); note `K > 1` can exceed
+//!   [`fullinfo_bound`], which bounds *single-draft* schemes only.
 //!
 //! Complexity is `O(V^gamma)` — intended for `V <= 8`, `gamma <= 6`.
 
 use super::chain::MarkovPair;
+use crate::verify::dist::{normalize, pos_diff_sum, EPS};
 
 fn recurse<F: FnMut(usize, f64, f64, f64, f64)>(
     pair: &MarkovPair,
@@ -75,6 +80,110 @@ pub fn fullinfo_bound(pair: &MarkovPair, gamma: usize) -> f64 {
     total
 }
 
+/// One multipath stage, exactly: `(E[tau], P(tau = 0))` for block
+/// verification of a single draft path whose position-0 target row is
+/// `d` (positions `>= 1` use the pair's target conditionals), with the
+/// path drawn from the pair's draft chain.  Works off the per-path
+/// acceptance probabilities: conditioned on the path, `tau = max{i :
+/// eta_i <= h_i}` over independent uniforms, so `P(tau >= l) = 1 -
+/// prod_{i>=l}(1 - h_i)` and `E[tau] = sum_l P(tau >= l)`.
+fn stage_stats(pair: &MarkovPair, gamma: usize, d: &[f64]) -> (f64, f64) {
+    let mut hs = vec![0.0; gamma + 1];
+    let mut m = 0.0;
+    let mut z = 0.0;
+    stage_rec(pair, 0, gamma, None, 1.0, 1.0, d, &mut hs, &mut m, &mut z);
+    (m, z)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage_rec(
+    pair: &MarkovPair,
+    depth: usize,
+    gamma: usize,
+    last: Option<u32>,
+    q_joint: f64,
+    p_chain: f64,
+    d: &[f64],
+    hs: &mut [f64],
+    m: &mut f64,
+    z: &mut f64,
+) {
+    if depth >= gamma {
+        return;
+    }
+    let drow = pair.draft_row(last);
+    for x in 0..pair.vocab {
+        let q = drow[x];
+        if q <= 0.0 {
+            // Zero draft probability: the path never occurs.
+            continue;
+        }
+        let t = if depth == 0 { d[x] } else { pair.target_row(last)[x] };
+        let pch = (p_chain * t / q).min(1.0);
+        let i = depth + 1;
+        hs[i] = if i == gamma {
+            pch
+        } else {
+            // Eq. 4 with the *next* position's rows, as in block_chain.
+            let nxt = Some(x as u32);
+            let s = pos_diff_sum(pch, pair.target_row(nxt), pair.draft_row(nxt));
+            let denom = s + 1.0 - pch;
+            if denom <= EPS {
+                1.0
+            } else {
+                s / denom
+            }
+        };
+        if i == gamma {
+            let mut prod = 1.0;
+            let mut etau = 0.0;
+            for l in (1..=gamma).rev() {
+                prod *= 1.0 - hs[l];
+                etau += 1.0 - prod;
+            }
+            let w = q_joint * q;
+            *m += w * etau;
+            *z += w * prod;
+        } else {
+            stage_rec(pair, i, gamma, Some(x as u32), q_joint * q, pch, d, hs, m, z);
+        }
+    }
+}
+
+/// `E[tau]` for sequential multi-draft block verification over `k`
+/// i.i.d. draft paths ([`crate::verify::multipath_verify`]), exact.
+/// Stage `i` block-verifies one path against the remaining position-0
+/// target `d_i` (`d_1 = M_b(.|c)`); with probability `P(tau = 0)` it
+/// defers to stage `i + 1` with `d_{i+1} = norm(max(d_i - M_s(.|c), 0))`
+/// (the Eq. 3 residual at `tau = 0`).  At `k = 1` this equals
+/// [`expected_tau_block`] (test-enforced, to 1e-9: the two formulas walk
+/// the same chain by different routes).
+pub fn expected_tau_multipath(pair: &MarkovPair, gamma: usize, k: usize) -> f64 {
+    assert!(k >= 1, "multipath needs k >= 1");
+    let q0 = pair.draft_row(None);
+    let mut d = pair.target_row(None).to_vec();
+    let mut total = 0.0;
+    let mut reach = 1.0;
+    for stage in 0..k {
+        let (m, z) = stage_stats(pair, gamma, &d);
+        total += reach * m;
+        reach *= z;
+        if reach <= 0.0 {
+            break;
+        }
+        if stage + 1 < k {
+            let mut res: Vec<f64> = d.iter().zip(q0).map(|(a, b)| (a - b).max(0.0)).collect();
+            if !normalize(&mut res) {
+                // Remaining target equals the drafter row: later stages
+                // cannot reject at position 0, so nothing more accrues.
+                break;
+            }
+            d = res;
+        }
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +236,56 @@ mod tests {
             assert!((expected_tau_block(&pair, gamma) - gamma as f64).abs() < 1e-9);
             assert!((expected_tau_token(&pair, gamma) - gamma as f64).abs() < 1e-9);
         }
+    }
+
+    /// The multipath recursion at K = 1 is block verification computed by
+    /// a different route (per-path h-products vs the Lemma 3 sum); the
+    /// two must agree to float precision.
+    #[test]
+    fn multipath_k1_equals_block() {
+        let b = bernoulli_example();
+        assert!((expected_tau_multipath(&b, 2, 1) - 11.0 / 9.0).abs() < 1e-12);
+        for seed in 0..10 {
+            let mix = 0.15 + 0.07 * seed as f64;
+            let pair = MarkovPair::random(4, mix, seed);
+            for gamma in 1..=3 {
+                let blk = expected_tau_block(&pair, gamma);
+                let mp = expected_tau_multipath(&pair, gamma, 1);
+                assert!(
+                    (blk - mp).abs() < 1e-9,
+                    "seed {seed} gamma {gamma}: block {blk} vs multipath(1) {mp}"
+                );
+            }
+        }
+    }
+
+    /// More paths never hurt: E[tau] is nondecreasing in K, always at
+    /// least the single-draft block value, and capped by gamma.
+    #[test]
+    fn multipath_monotone_in_k() {
+        for seed in 0..8 {
+            let mix = 0.2 + 0.08 * seed as f64;
+            let pair = MarkovPair::random(4, mix, seed + 100);
+            let gamma = 3;
+            let blk = expected_tau_block(&pair, gamma);
+            let mut prev = 0.0;
+            for k in [1usize, 2, 4, 8] {
+                let e = expected_tau_multipath(&pair, gamma, k);
+                assert!(e >= prev - 1e-12, "seed {seed} K {k}: {e} < {prev}");
+                assert!(e >= blk - 1e-12, "seed {seed} K {k}: {e} < block {blk}");
+                assert!(e <= gamma as f64 + 1e-9);
+                prev = e;
+            }
+        }
+    }
+
+    /// An imperfect drafter leaves P(tau = 0) > 0, so a second path must
+    /// strictly help on the Bernoulli example.
+    #[test]
+    fn second_path_strictly_helps_on_bernoulli() {
+        let pair = bernoulli_example();
+        let one = expected_tau_multipath(&pair, 2, 1);
+        let two = expected_tau_multipath(&pair, 2, 2);
+        assert!(two > one + 1e-6, "K=2 {two} should beat K=1 {one}");
     }
 }

@@ -12,7 +12,10 @@ pub mod exact;
 pub mod specdec;
 
 pub use chain::{bernoulli_example, MarkovPair};
-pub use specdec::{sample_target, simulate, specdec_prefix, SimStats};
+pub use specdec::{
+    run_iteration_multi, sample_target, simulate, simulate_multi, specdec_prefix,
+    specdec_prefix_multi, SimStats,
+};
 
 /// The §2 motivating-example report (E0 in DESIGN.md): exact values for
 /// token / block / full-information at gamma = 2 plus MC confirmation.

@@ -6,7 +6,7 @@
 //! the `simulate` example; the real serving numbers come from the engine.
 
 use crate::verify::dist::inv_cdf;
-use crate::verify::{self, Algo, GreedyState, ProbMatrix, Rng};
+use crate::verify::{self, Algo, GreedyState, MultipathOutcome, ProbMatrix, Rng};
 
 use super::chain::MarkovPair;
 
@@ -105,6 +105,88 @@ pub fn simulate(
     stats
 }
 
+/// One multipath iteration at the distribution level: draft `k` i.i.d.
+/// candidate paths from the draft chain, score both chains along every
+/// path, verify jointly ([`verify::multipath_verify`]).  Draw order is
+/// fixed (path-major: each path's `gamma` draft uniforms, then each
+/// path's `gamma` etas, then the shared residual uniform) so runs are
+/// replayable draw for draw.
+pub fn run_iteration_multi(
+    pair: &MarkovPair,
+    last: Option<u32>,
+    gamma: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> MultipathOutcome {
+    let mut ps_l = Vec::with_capacity(k);
+    let mut qs_l = Vec::with_capacity(k);
+    let mut drafts_l = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut ps_rows: Vec<Vec<f64>> = Vec::with_capacity(gamma + 1);
+        let mut qs_rows: Vec<Vec<f64>> = Vec::with_capacity(gamma);
+        let mut drafts: Vec<u32> = Vec::with_capacity(gamma);
+        let mut cur = last;
+        for _ in 0..gamma {
+            let q = pair.draft_row(cur).to_vec();
+            let p = pair.target_row(cur).to_vec();
+            let x = inv_cdf(&q, rng.uniform()) as u32;
+            drafts.push(x);
+            qs_rows.push(q);
+            ps_rows.push(p);
+            cur = Some(x);
+        }
+        ps_rows.push(pair.target_row(cur).to_vec());
+        ps_l.push(ProbMatrix::from_rows(ps_rows));
+        qs_l.push(ProbMatrix::from_rows(qs_rows));
+        drafts_l.push(drafts);
+    }
+    let etas: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..gamma).map(|_| rng.uniform()).collect()).collect();
+    let u = rng.uniform();
+    verify::multipath_verify(&ps_l, &qs_l, &drafts_l, &etas, u)
+}
+
+/// Decode `n_tokens` tokens via `k`-path multipath speculative decoding.
+pub fn simulate_multi(
+    pair: &MarkovPair,
+    gamma: usize,
+    k: usize,
+    n_tokens: usize,
+    seed: u64,
+) -> SimStats {
+    let mut rng = Rng::new(seed);
+    let mut stats = SimStats { tau_hist: vec![0; gamma + 1], ..Default::default() };
+    let mut last: Option<u32> = None;
+    while stats.tokens_emitted < n_tokens {
+        let out = run_iteration_multi(pair, last, gamma, k, &mut rng);
+        stats.iterations += 1;
+        stats.tokens_emitted += out.emitted.len();
+        stats.accepted_total += out.tau;
+        stats.tau_hist[out.tau] += 1;
+        last = out.emitted.last().copied().or(last);
+    }
+    stats
+}
+
+/// Decode a fixed-length prefix with multipath speculative decoding (for
+/// empirical distribution comparison against [`sample_target`] — the
+/// losslessness check).
+pub fn specdec_prefix_multi(
+    pair: &MarkovPair,
+    gamma: usize,
+    k: usize,
+    n_tokens: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let mut out: Vec<u32> = Vec::with_capacity(n_tokens + gamma + 1);
+    while out.len() < n_tokens {
+        let res = run_iteration_multi(pair, out.last().copied(), gamma, k, rng);
+        out.extend_from_slice(&res.emitted);
+    }
+    out.truncate(n_tokens);
+    out
+}
+
 /// Ancestral sampling from the *target* chain only — ground truth for
 /// losslessness checks.
 pub fn sample_target(pair: &MarkovPair, n_tokens: usize, rng: &mut Rng) -> Vec<u32> {
@@ -179,6 +261,38 @@ mod tests {
         let got_b = tot_b as f64 / n as f64;
         assert!((got_t - want_t).abs() < 0.02, "token {got_t} vs {want_t}");
         assert!((got_b - want_b).abs() < 0.02, "block {got_b} vs {want_b}");
+    }
+
+    /// Per-iteration multipath E[tau] from a fresh context matches the
+    /// exact stage recursion, and stage-1 of multipath is block (k = 1).
+    #[test]
+    fn mc_multipath_matches_exact() {
+        let pair = MarkovPair::random(4, 0.6, 5);
+        let gamma = 3;
+        for k in [1usize, 2, 4] {
+            let want = exact::expected_tau_multipath(&pair, gamma, k);
+            let n = 60_000;
+            let mut rng = Rng::new(33);
+            let mut tot = 0usize;
+            for _ in 0..n {
+                tot += run_iteration_multi(&pair, None, gamma, k, &mut rng).tau;
+            }
+            let got = tot as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "k={k}: mc {got} vs exact {want}");
+        }
+    }
+
+    /// Multipath outcome invariants on the simulator substrate.
+    #[test]
+    fn multipath_iteration_invariants() {
+        let pair = MarkovPair::random(5, 0.4, 21);
+        let mut rng = Rng::new(9);
+        for _ in 0..2000 {
+            let out = run_iteration_multi(&pair, None, 3, 3, &mut rng);
+            assert!(out.path < 3);
+            assert_eq!(out.emitted.len(), out.tau + 1);
+            assert!(out.emitted.iter().all(|&t| (t as usize) < pair.vocab));
+        }
     }
 
     /// Greedy accepts at least as much as block *per iteration* from a

@@ -11,13 +11,25 @@
 use super::dist::{pos_diff_sum, residual_pick, ProbMatrix, EPS};
 use super::VerifyOutcome;
 
-/// The coupled acceptance chain: returns `(p, h)` with `p[0] = 1` and, for
-/// `i` in `1..=gamma`, `p[i]` per Eq. 8 and `h[i]` per Eq. 4
-/// (`h[gamma] = p[gamma]`).  `h[0]` is an unused sentinel (1.0).
-pub fn block_chain(ps: &ProbMatrix, qs: &ProbMatrix, drafts: &[u32]) -> (Vec<f64>, Vec<f64>) {
+/// Allocation-free core of the coupled acceptance chain: fills the
+/// caller-provided `p`/`h` buffers (each at least `gamma + 1` long) with
+/// `p[0] = 1` and, for `i` in `1..=gamma`, `p[i]` per Eq. 8 and `h[i]`
+/// per Eq. 4 (`h[gamma] = p[gamma]`).  `h[0]` is an unused sentinel
+/// (1.0).  This is the one copy of the chain math, shared by
+/// [`block_chain`], [`block_verify`] and [`BlockScratch::verify`] — the
+/// engine hot path routes through [`BlockScratch`] buffers instead of
+/// allocating two fresh `Vec<f64>` per call.
+pub fn block_chain_into(
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    p: &mut [f64],
+    h: &mut [f64],
+) {
     let gamma = drafts.len();
-    let mut p = vec![1.0; gamma + 1];
-    let mut h = vec![1.0; gamma + 1];
+    debug_assert!(p.len() > gamma && h.len() > gamma, "chain buffers too short");
+    p[0] = 1.0;
+    h[0] = 1.0;
     for i in 1..=gamma {
         let x = drafts[i - 1] as usize;
         let ratio = ps.row(i - 1)[x] / qs.row(i - 1)[x].max(EPS);
@@ -30,6 +42,16 @@ pub fn block_chain(ps: &ProbMatrix, qs: &ProbMatrix, drafts: &[u32]) -> (Vec<f64
             h[i] = if denom <= EPS { 1.0 } else { s_i / denom };
         }
     }
+}
+
+/// The coupled acceptance chain as freshly allocated vectors — the
+/// convenience wrapper over [`block_chain_into`] used by tests and the
+/// golden-vector harness.
+pub fn block_chain(ps: &ProbMatrix, qs: &ProbMatrix, drafts: &[u32]) -> (Vec<f64>, Vec<f64>) {
+    let gamma = drafts.len();
+    let mut p = vec![1.0; gamma + 1];
+    let mut h = vec![1.0; gamma + 1];
+    block_chain_into(ps, qs, drafts, &mut p, &mut h);
     (p, h)
 }
 
@@ -94,24 +116,7 @@ impl BlockScratch {
         emitted: &mut Vec<u32>,
     ) -> usize {
         let gamma = drafts.len();
-        self.p[0] = 1.0;
-        self.h[0] = 1.0;
-        for i in 1..=gamma {
-            let x = drafts[i - 1] as usize;
-            let ratio = ps.row(i - 1)[x] / qs.row(i - 1)[x].max(EPS);
-            self.p[i] = (self.p[i - 1] * ratio).min(1.0);
-            self.h[i] = if i == gamma {
-                self.p[i]
-            } else {
-                let s_i = pos_diff_sum(self.p[i], ps.row(i), qs.row(i));
-                let denom = s_i + 1.0 - self.p[i];
-                if denom <= EPS {
-                    1.0
-                } else {
-                    s_i / denom
-                }
-            };
-        }
+        block_chain_into(ps, qs, drafts, &mut self.p, &mut self.h);
         let mut tau = 0;
         for i in 1..=gamma {
             if etas[i - 1] <= self.h[i] {

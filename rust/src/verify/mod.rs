@@ -10,13 +10,15 @@
 pub mod block;
 pub mod dist;
 pub mod greedy;
+pub mod multipath;
 pub mod rng;
 pub mod token;
 
-pub use block::{block_chain, block_verify, BlockScratch};
+pub use block::{block_chain, block_chain_into, block_verify, BlockScratch};
 pub use dist::ProbMatrix;
 pub use greedy::{greedy_verify, GreedyState};
 pub use greedy::Layer;
+pub use multipath::{multipath_verify, MultipathOutcome};
 pub use rng::Rng;
 pub use token::token_verify;
 
@@ -28,7 +30,8 @@ pub struct VerifyOutcome {
     pub emitted: Vec<u32>,
 }
 
-/// Which verification algorithm to run (paper Algorithms 1, 2, 4).
+/// Which verification algorithm to run (paper Algorithms 1, 2, 4, plus
+/// the multi-draft extension).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// Algorithm 1 — standard token verification (Leviathan et al. 2022).
@@ -37,6 +40,10 @@ pub enum Algo {
     Block,
     /// Algorithm 4 + 5/6 — greedy block verification (Appendix C).
     Greedy,
+    /// Joint block verification over `k` independently drafted candidate
+    /// paths ([`multipath`], DESIGN.md §9); bit-identical to
+    /// [`Algo::Block`] at `k == 1` (test-enforced).
+    MultiPath { k: usize },
 }
 
 impl Algo {
@@ -45,19 +52,36 @@ impl Algo {
             Algo::Token => "token",
             Algo::Block => "block",
             Algo::Greedy => "greedy",
+            Algo::MultiPath { .. } => "multipath",
         }
     }
 
+    /// Parse an algorithm name; multipath takes an optional path count
+    /// (`"multipath"` = 2 paths, `"multipath:4"` = 4).
     pub fn parse(s: &str) -> Option<Algo> {
+        if let Some(ks) = s.strip_prefix("multipath:") {
+            return ks.parse::<usize>().ok().filter(|&k| k >= 1).map(|k| Algo::MultiPath { k });
+        }
         match s {
             "token" => Some(Algo::Token),
             "block" => Some(Algo::Block),
             "greedy" => Some(Algo::Greedy),
+            "multipath" => Some(Algo::MultiPath { k: 2 }),
             _ => None,
         }
     }
 
-    /// The two fused in-HLO variants; greedy requires host verification.
+    /// Candidate draft paths per iteration (1 for the single-draft
+    /// algorithms).
+    pub fn paths(self) -> usize {
+        match self {
+            Algo::MultiPath { k } => k,
+            _ => 1,
+        }
+    }
+
+    /// The fused in-backend variants; greedy requires host verification
+    /// (it threads distribution-modification state across iterations).
     pub fn fused(self) -> bool {
         !matches!(self, Algo::Greedy)
     }
@@ -65,12 +89,17 @@ impl Algo {
 
 impl std::fmt::Display for Algo {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.name())
+        match self {
+            Algo::MultiPath { k } => write!(f, "multipath:{k}"),
+            _ => f.write_str(self.name()),
+        }
     }
 }
 
-/// Dispatch on a stateless algorithm (token/block).  Greedy needs
-/// [`GreedyState`]; use [`greedy_verify`] directly.
+/// Dispatch on a stateless algorithm over a *single* draft path.  Greedy
+/// needs [`GreedyState`]; use [`greedy_verify`] directly.  A lone path of
+/// a multipath set is verified by the block rule (the `k = 1`
+/// degradation); joint `K`-path verification is [`multipath_verify`].
 pub fn verify(
     algo: Algo,
     ps: &ProbMatrix,
@@ -81,7 +110,7 @@ pub fn verify(
 ) -> VerifyOutcome {
     match algo {
         Algo::Token => token_verify(ps, qs, drafts, etas, u_final),
-        Algo::Block => block_verify(ps, qs, drafts, etas, u_final),
+        Algo::Block | Algo::MultiPath { .. } => block_verify(ps, qs, drafts, etas, u_final),
         Algo::Greedy => {
             greedy_verify(ps, qs, drafts, etas, u_final, &GreedyState::new(drafts.len())).0
         }
@@ -99,6 +128,23 @@ mod tests {
         }
         assert_eq!(Algo::parse("bogus"), None);
         assert!(Algo::Token.fused() && Algo::Block.fused() && !Algo::Greedy.fused());
+    }
+
+    #[test]
+    fn multipath_parse_display_paths() {
+        assert_eq!(Algo::parse("multipath"), Some(Algo::MultiPath { k: 2 }));
+        assert_eq!(Algo::parse("multipath:4"), Some(Algo::MultiPath { k: 4 }));
+        assert_eq!(Algo::parse("multipath:1"), Some(Algo::MultiPath { k: 1 }));
+        assert_eq!(Algo::parse("multipath:0"), None);
+        assert_eq!(Algo::parse("multipath:x"), None);
+        let a = Algo::MultiPath { k: 4 };
+        assert_eq!(a.to_string(), "multipath:4");
+        assert_eq!(a.name(), "multipath");
+        assert_eq!(a.paths(), 4);
+        assert_eq!(Algo::Block.paths(), 1);
+        assert!(a.fused());
+        // Display round-trips through parse for any k.
+        assert_eq!(Algo::parse(&a.to_string()), Some(a));
     }
 
     /// gamma = 1 block verification degenerates to token verification

@@ -1,0 +1,240 @@
+//! Joint block verification across `K` candidate draft paths
+//! (DESIGN.md §9) — the multi-draft extension of Algorithm 2 in the
+//! spirit of SpecTr-GBV / greedy multi-path block verification
+//! (PAPERS.md).
+//!
+//! All `K` paths are drafted i.i.d. from the drafter chain out of the
+//! *same* context, so every path's position-0 rows (`ps[k].row(0)`,
+//! `qs[k].row(0)`) coincide.  The joint rule is **sequential
+//! residual-chained block verification**: maintain a "remaining"
+//! position-0 target `D` (initially `M_b(.|c)`), and for each stage `k`
+//! run ordinary block verification of path `k` with `D` substituted for
+//! the position-0 target row.
+//!
+//! * If the stage accepts a non-empty prefix (`tau >= 1`), it wins
+//!   greedily: its accepted prefix plus the Eq. 3 residual correction is
+//!   emitted and the remaining paths are discarded.
+//! * If the stage rejects everything (`tau = 0`), the single-path
+//!   algorithm would emit one token from the Eq. 3 residual at position
+//!   0, `norm(max(D - M_s(.|c), 0))`.  Instead of emitting, that
+//!   residual *becomes* the next stage's `D`: path `k + 1` gets a chance
+//!   to place a whole accepted prefix where a lone correction token
+//!   would have gone.  The last stage emits its correction as usual.
+//!
+//! Losslessness (proof sketch, DESIGN.md §9.3): each stage is exactly
+//! single-path block verification for the modified target process "first
+//! token ~ `D`, then `M_b` conditionals", which Theorem 1 makes a valid
+//! sampler of that process; delegating the `tau = 0` correction draw to
+//! the next stage replaces "sample `y ~ D'`" by "emit a valid sample of
+//! the process starting from `D'`" — the same marginal for the first
+//! emitted token, with any further tokens distributed as the target
+//! conditionals.  By induction over stages the emitted block composes
+//! with the outer decode loop into exact target ancestral sampling.  At
+//! `K = 1` the loop body is literally [`block_verify`], so
+//! `Algo::MultiPath { k: 1 }` is bit-identical to `Algo::Block`
+//! (test-enforced).
+
+use super::block::block_verify;
+use super::dist::{normalize, ProbMatrix};
+use super::VerifyOutcome;
+
+/// Result of jointly verifying a `K`-path draft set for one sequence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MultipathOutcome {
+    /// Accepted draft tokens of the winning path.
+    pub tau: usize,
+    /// Index of the winning path within the draft set (the stage that
+    /// emitted).
+    pub path: usize,
+    /// Accepted prefix of the winning path plus the bonus/correction
+    /// token; `emitted.len() == tau + 1` always.
+    pub emitted: Vec<u32>,
+}
+
+impl MultipathOutcome {
+    /// Drop the path index, keeping the single-sequence outcome shape.
+    pub fn into_outcome(self) -> VerifyOutcome {
+        VerifyOutcome { tau: self.tau, emitted: self.emitted }
+    }
+}
+
+/// Jointly verify `K` candidate draft paths (one entry per path in every
+/// slice; `ps[k]` is `(gamma + 1, V)`, `qs[k]` is `(gamma, V)`,
+/// `etas[k]` carries path `k`'s `gamma` acceptance uniforms).  `u_final`
+/// is the residual-sampling uniform — only the winning stage consumes
+/// it, so a single draw suffices for any `K`.
+pub fn multipath_verify(
+    ps: &[ProbMatrix],
+    qs: &[ProbMatrix],
+    drafts: &[Vec<u32>],
+    etas: &[Vec<f64>],
+    u_final: f64,
+) -> MultipathOutcome {
+    let k = drafts.len();
+    assert!(k >= 1, "multipath needs at least one path");
+    assert!(
+        ps.len() == k && qs.len() == k && etas.len() == k,
+        "ragged multipath set: {} ps, {} qs, {} drafts, {} etas",
+        ps.len(),
+        qs.len(),
+        k,
+        etas.len()
+    );
+    let gamma = drafts[0].len();
+    assert!(gamma >= 1, "multipath needs gamma >= 1");
+
+    // Remaining position-0 target: starts at M_b(.|c) (row 0 is the same
+    // on every path — the paths share the context) and loses one drafter
+    // row of mass per fully-rejected stage.  Allocated lazily: the
+    // common stage-0-wins case never touches it.
+    let mut d: Vec<f64> = Vec::new();
+    for stage in 0..k {
+        debug_assert_eq!(drafts[stage].len(), gamma, "ragged path lengths");
+        debug_assert_eq!(ps[stage].rows, gamma + 1);
+        debug_assert_eq!(qs[stage].rows, gamma);
+        // One stage = single-path block verification with the remaining
+        // target substituted at position 0 (stage 0 substitutes D = row 0
+        // itself, so it calls straight through — the k = 1 degradation).
+        let out = if stage == 0 {
+            block_verify(&ps[0], &qs[0], &drafts[0], &etas[0], u_final)
+        } else {
+            let mut ps_mod = ps[stage].clone();
+            ps_mod.row_mut(0).copy_from_slice(&d);
+            block_verify(&ps_mod, &qs[stage], &drafts[stage], &etas[stage], u_final)
+        };
+        if out.tau >= 1 || stage == k - 1 {
+            return MultipathOutcome { tau: out.tau, path: stage, emitted: out.emitted };
+        }
+        // tau = 0 with paths to spare: fold this stage's position-0
+        // drafter row out of the remaining target (Eq. 3 residual at
+        // tau = 0) and hand the correction draw to the next path.
+        if stage == 0 {
+            d = ps[0].row(0).to_vec();
+        }
+        for (dv, qv) in d.iter_mut().zip(qs[stage].row(0)) {
+            *dv = (*dv - qv).max(0.0);
+        }
+        if !normalize(&mut d) {
+            // Degenerate: the remaining target equals the drafter row (up
+            // to float dust), so this stage's correction already fell
+            // back to sampling D itself — emit it.
+            return MultipathOutcome { tau: 0, path: stage, emitted: out.emitted };
+        }
+    }
+    unreachable!("the last stage always returns");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, rand_instance};
+    use crate::verify::Rng;
+
+    #[test]
+    fn k1_is_block_verification_bit_for_bit() {
+        check("multipath k=1 == block", 200, |rng| {
+            let gamma = 1 + rng.below(6);
+            let vocab = 2 + rng.below(12);
+            let (ps, qs, drafts) = rand_instance(rng, gamma, vocab, 0.8);
+            let etas: Vec<f64> = (0..gamma).map(|_| rng.uniform()).collect();
+            let u = rng.uniform();
+            let want = block_verify(&ps, &qs, &drafts, &etas, u);
+            let got = multipath_verify(
+                std::slice::from_ref(&ps),
+                std::slice::from_ref(&qs),
+                std::slice::from_ref(&drafts),
+                std::slice::from_ref(&etas),
+                u,
+            );
+            if got.path != 0 || got.tau != want.tau || got.emitted != want.emitted {
+                return Err(format!("{got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn later_path_wins_when_first_rejects() {
+        // Path 0 drafts token 0, which the target gives zero mass: the
+        // chain dies (p_1 = 0, h = 0) and stage 0 rejects everything.
+        // Path 1 drafts token 1 with target mass ~1: always accepted.
+        let ps0 = ProbMatrix::from_rows(vec![vec![0.0, 1.0]; 2]);
+        let qs0 = ProbMatrix::from_rows(vec![vec![0.9, 0.1]]);
+        let ps1 = ProbMatrix::from_rows(vec![vec![0.0, 1.0], vec![0.5, 0.5]]);
+        let qs1 = ProbMatrix::from_rows(vec![vec![0.9, 0.1]]);
+        let out = multipath_verify(
+            &[ps0, ps1],
+            &[qs0, qs1],
+            &[vec![0], vec![1]],
+            &[vec![0.5], vec![0.5]],
+            0.3,
+        );
+        assert_eq!(out.path, 1);
+        assert_eq!(out.tau, 1);
+        assert_eq!(out.emitted[0], 1);
+        assert_eq!(out.emitted.len(), 2);
+    }
+
+    #[test]
+    fn output_invariants_hold_for_any_k() {
+        check("multipath invariants", 200, |rng| {
+            let gamma = 1 + rng.below(5);
+            let vocab = 2 + rng.below(10);
+            let k = 1 + rng.below(4);
+            let mut ps = Vec::new();
+            let mut qs = Vec::new();
+            let mut drafts = Vec::new();
+            let mut etas: Vec<Vec<f64>> = Vec::new();
+            // Same position-0 rows across paths (the shared-context
+            // contract): reuse path 0's rows there.
+            for path in 0..k {
+                let (mut p, mut q, d) = rand_instance(rng, gamma, vocab, 0.8);
+                if path > 0 {
+                    p.row_mut(0).copy_from_slice(ps[0].row(0));
+                    q.row_mut(0).copy_from_slice(qs[0].row(0));
+                }
+                ps.push(p);
+                qs.push(q);
+                drafts.push(d);
+                etas.push((0..gamma).map(|_| rng.uniform()).collect());
+            }
+            let out = multipath_verify(&ps, &qs, &drafts, &etas, rng.uniform());
+            if out.path >= k {
+                return Err(format!("path {} out of range", out.path));
+            }
+            if out.emitted.len() != out.tau + 1 {
+                return Err(format!("len {} tau {}", out.emitted.len(), out.tau));
+            }
+            if out.emitted[..out.tau] != drafts[out.path][..out.tau] {
+                return Err("accepted prefix differs from the winning path".into());
+            }
+            if out.emitted.iter().any(|&t| t as usize >= vocab) {
+                return Err("token out of vocab".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identical_models_accept_path_zero_fully() {
+        // ps == qs everywhere: the chain stays at 1, stage 0 accepts the
+        // whole block for any etas < 1.
+        let row = vec![0.25; 4];
+        let ps = ProbMatrix::from_rows(vec![row.clone(); 3]);
+        let qs = ProbMatrix::from_rows(vec![row; 2]);
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let etas = vec![rng.uniform(), rng.uniform()];
+            let out = multipath_verify(
+                &[ps.clone(), ps.clone()],
+                &[qs.clone(), qs.clone()],
+                &[vec![1, 2], vec![3, 0]],
+                &[etas.clone(), etas],
+                rng.uniform(),
+            );
+            assert_eq!(out.path, 0);
+            assert_eq!(out.tau, 2);
+            assert_eq!(&out.emitted[..2], &[1, 2]);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Multi-draft speculation (DraftSet / `Algo::MultiPath`) properties:
+//!
+//! 1. `Algo::MultiPath { k: 1 }` reproduces `Algo::Block` token for token
+//!    and draw for draw — at the kernel level against the native
+//!    backend's published `verify_uniforms` / `multipath_uniforms`
+//!    streams, and end to end through the fused engine.
+//! 2. Losslessness: the multipath output distribution over the
+//!    `sim::chain` Markov pair matches exact target ancestral sampling
+//!    within the tolerance `tests/theorems.rs` uses.
+//! 3. `sim::exact::expected_tau_multipath(k = 1)` equals
+//!    `expected_tau_block`, and more paths never hurt.
+//! 4. On the seeded native model, multipath accepts at least as many
+//!    draft tokens per target call as block verification on aggregate.
+
+use std::sync::Arc;
+
+use specd::backend::native::{multipath_uniforms, verify_uniforms};
+use specd::backend::NativeBackend;
+use specd::config::EngineConfig;
+use specd::engine::host::HostVerifyEngine;
+use specd::engine::spec::SpecEngine;
+use specd::models::vocab;
+use specd::sim::{self, MarkovPair};
+use specd::stats::empirical::SeqDist;
+use specd::util::proptest::{check, rand_instance};
+use specd::verify::{self, Algo, Rng};
+use specd::workload::Dataset;
+
+/// Satellite property test: `MultiPath { k: 1 }` reproduces `Block`
+/// token for token and draw for draw on the native backend's published
+/// verification uniforms.
+#[test]
+fn multipath_k1_reproduces_block_on_published_uniforms() {
+    check("multipath k=1 == block (native uniforms)", 300, |rng| {
+        let gamma = 1 + rng.below(8);
+        let vocab = 2 + rng.below(30);
+        let (ps, qs, drafts) = rand_instance(rng, gamma, vocab, 0.8);
+        let seed = rng.next_u64() as i32;
+        let (etas, u) = verify_uniforms(seed, gamma);
+        let (etas_k, u_k) = multipath_uniforms(seed, gamma, 1);
+        if etas_k.len() != 1 || etas_k[0] != etas || u_k != u {
+            return Err("k=1 multipath uniforms must replay the single-path stream".into());
+        }
+        let want = verify::verify(Algo::Block, &ps, &qs, &drafts, &etas, u);
+        let got = verify::multipath_verify(
+            std::slice::from_ref(&ps),
+            std::slice::from_ref(&qs),
+            std::slice::from_ref(&drafts),
+            &etas_k,
+            u_k,
+        );
+        if got.path != 0 || got.tau != want.tau || got.emitted != want.emitted {
+            return Err(format!("seed {seed}: {got:?} vs {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end `k = 1` degradation: whole fused-engine decodes agree
+/// token for token across seeds and prompts.
+#[test]
+fn multipath_k1_bit_identical_to_block_end_to_end() {
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|i| {
+            vec![
+                vocab::BOS,
+                vocab::marker_for(i as u32 % 8),
+                vocab::CONTENT_BASE + 5 + i as u32,
+                vocab::CONTENT_BASE + 90,
+                vocab::CONTENT_BASE + 17 + 3 * i as u32,
+            ]
+        })
+        .collect();
+    for seed in [0u64, 7, 0xbeef] {
+        let run = |algo: Algo| {
+            let be = Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0xcafe));
+            let cfg = EngineConfig { algo, gamma: 4, max_new_tokens: 20, ..Default::default() };
+            let eng = SpecEngine::new(be, cfg).unwrap();
+            eng.run_batch(&prompts, seed).unwrap()
+        };
+        let a = run(Algo::Block);
+        let b = run(Algo::MultiPath { k: 1 });
+        assert_eq!(a.device_iterations, b.device_iterations, "seed {seed}: iteration counts");
+        for (i, (ra, rb)) in a.rows.iter().zip(&b.rows).enumerate() {
+            assert_eq!(ra.tokens, rb.tokens, "seed {seed} row {i}: tokens diverged");
+            assert_eq!(ra.accepted, rb.accepted, "seed {seed} row {i}: accepted");
+            assert_eq!(ra.iterations, rb.iterations, "seed {seed} row {i}: iterations");
+            assert_eq!(ra.finish, rb.finish, "seed {seed} row {i}: finish reason");
+        }
+    }
+}
+
+/// Theorem-1-style losslessness for the joint K-path rule: multipath
+/// output prefixes are distributed as target-chain ancestral samples
+/// (same tolerance as tests/theorems.rs).
+#[test]
+fn multipath_lossless_on_markov_pair() {
+    let pair = MarkovPair::random(3, 0.5, 11);
+    let h = 3;
+    let n = 30_000;
+    for k in [2usize, 3] {
+        let mut spec = SeqDist::default();
+        let mut anc = SeqDist::default();
+        let mut rng_s = Rng::new(7);
+        let mut rng_a = Rng::new(8);
+        for _ in 0..n {
+            spec.add(&sim::specdec_prefix_multi(&pair, 2, k, h, &mut rng_s));
+            anc.add(&sim::sample_target(&pair, h, &mut rng_a));
+        }
+        let tv = spec.tv(&anc);
+        assert!(tv < 0.03, "multipath k={k}: TV {tv}");
+    }
+}
+
+/// Satellite: the exact multipath expectation at k = 1 equals the
+/// Lemma 3 block expectation, on many random pairs.
+#[test]
+fn expected_tau_multipath_k1_equals_expected_tau_block() {
+    check("exact multipath k=1 == block", 30, |rng| {
+        let vocab = 2 + rng.below(4);
+        let mix = 0.1 + 0.8 * rng.uniform();
+        let pair = MarkovPair::random(vocab, mix, rng.next_u64());
+        for gamma in 1..=3 {
+            let b = sim::exact::expected_tau_block(&pair, gamma);
+            let m = sim::exact::expected_tau_multipath(&pair, gamma, 1);
+            if (b - m).abs() > 1e-9 {
+                return Err(format!("gamma {gamma}: block {b} vs multipath(1) {m}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The tau-vs-K curve is nondecreasing and dominated by gamma; MC
+/// simulation of the full decode agrees with the per-iteration picture
+/// qualitatively (block efficiency >= block's within noise).
+#[test]
+fn multipath_tau_curve_dominates_block() {
+    let pair = MarkovPair::random(4, 0.55, 17);
+    let gamma = 3;
+    let blk = sim::exact::expected_tau_block(&pair, gamma);
+    let mut prev = 0.0;
+    for k in [1usize, 2, 4, 8] {
+        let e = sim::exact::expected_tau_multipath(&pair, gamma, k);
+        assert!(e >= prev - 1e-12, "K {k}: {e} < {prev}");
+        assert!(e >= blk - 1e-12, "K {k}: {e} < block {blk}");
+        assert!(e <= gamma as f64 + 1e-9);
+        prev = e;
+    }
+    let mc_block = sim::simulate(&pair, gamma, Algo::Block, 60_000, 3).mean_tau();
+    let mc_mp = sim::simulate_multi(&pair, gamma, 4, 60_000, 3).mean_tau();
+    assert!(
+        mc_mp >= mc_block - 0.05,
+        "full-decode MC: multipath {mc_mp:.3} vs block {mc_block:.3}"
+    );
+}
+
+/// On the seeded native model, multipath accepts at least as many draft
+/// tokens per target call as block on aggregate (finite-sample slack as
+/// in tests/native_backend.rs).
+#[test]
+fn multipath_not_worse_than_block_on_native_aggregate() {
+    let be = Arc::new(NativeBackend::seeded(42));
+    let prompts = Dataset::synthetic("gsm8k", 6, 0xabc).unwrap().take(6);
+    let mut tau_by_algo = Vec::new();
+    for algo in [Algo::Block, Algo::MultiPath { k: 2 }] {
+        let (mut accepted, mut iters) = (0usize, 0usize);
+        for seed in 0..2u64 {
+            let cfg = EngineConfig { gamma: 4, algo, max_new_tokens: 16, ..Default::default() };
+            let eng = SpecEngine::new(be.clone(), cfg).unwrap();
+            for rep in eng.run_prompts(&prompts, seed).unwrap() {
+                for row in &rep.rows {
+                    accepted += row.accepted;
+                    iters += row.iterations;
+                }
+            }
+        }
+        tau_by_algo.push(accepted as f64 / iters.max(1) as f64);
+    }
+    let (blk, mp) = (tau_by_algo[0], tau_by_algo[1]);
+    assert!(
+        mp >= blk - 0.1,
+        "multipath accepted/iter {mp:.3} must not fall below block {blk:.3}"
+    );
+}
+
+/// Engine-layer wiring: multipath is fused-only and k must be >= 1.
+#[test]
+fn multipath_engine_validation() {
+    let be = Arc::new(NativeBackend::seeded_with_shapes(2, 32, 5));
+    let good = EngineConfig {
+        algo: Algo::MultiPath { k: 2 },
+        gamma: 4,
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    assert!(SpecEngine::new(be.clone(), good.clone()).is_ok());
+    let zero = EngineConfig { algo: Algo::MultiPath { k: 0 }, ..good.clone() };
+    assert!(SpecEngine::new(be.clone(), zero).is_err());
+    // The host-verify engine is single-draft.
+    assert!(HostVerifyEngine::new(be, good).is_err());
+}
