@@ -1,0 +1,166 @@
+//! Native fast-path benchmark and CI wall-clock perf gate (DESIGN.md
+//! §10).
+//!
+//! Measures end-to-end engine tokens/sec on two configurations of the
+//! native backend decoding the same prompts with the same seeds:
+//!
+//! * **scalar reference** — the pre-fast-path configuration: scalar
+//!   matmul kernel, single-threaded forward, per-iteration multipath
+//!   scratch allocation;
+//! * **fast path** — blocked register-tiled matmul, row-parallel forward
+//!   on the fixed thread pool, persistent `(B·K)`-row multipath scratch.
+//!
+//! Both are swept over token/block verification and multipath K in
+//! {1, 2, 4}; every cell decodes bit-identical tokens (the two
+//! configurations differ only in wall-clock — test-enforced by
+//! `tests/native_fast.rs`), so the throughput ratio isolates exactly the
+//! kernel + threading + scratch delta.  Results land in
+//! `BENCH_native.json` for CI to archive.  Exit code is non-zero when a
+//! perf invariant regresses:
+//!
+//! * fast-path block-verification throughput must be at least 1.5x the
+//!   scalar reference (the tentpole's headline gate);
+//! * block-verification BE must not drop below token-level BE on the
+//!   fast path (the paper's never-worse guarantee; 0.05 finite-sample
+//!   slack).
+//!
+//! `--smoke` shrinks the workload for CI: `cargo bench --bench
+//! native_fast -- --smoke`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use specd::backend::NativeBackend;
+use specd::config::EngineConfig;
+use specd::engine::spec::SpecEngine;
+use specd::util::json;
+use specd::verify::Algo;
+use specd::workload::Dataset;
+
+/// One measured cell: throughput and block efficiency.
+struct Meas {
+    tps: f64,
+    be: f64,
+}
+
+fn measure(
+    backend: Arc<NativeBackend>,
+    algo: Algo,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    n_seeds: u64,
+) -> anyhow::Result<Meas> {
+    let cfg = EngineConfig { algo, max_new_tokens: max_new, ..Default::default() };
+    let engine = SpecEngine::new(backend, cfg)?;
+    // Warm-up pass (thread pool, scratch, caches), then timed seeds.
+    let _ = engine.run_prompts(&prompts[..prompts.len().min(4)], 7)?;
+    let (mut toks, mut emitted, mut iters) = (0usize, 0usize, 0usize);
+    let t0 = Instant::now();
+    for seed in 0..n_seeds {
+        for rep in engine.run_prompts(prompts, seed)? {
+            toks += rep.total_tokens();
+            for row in &rep.rows {
+                emitted += row.emitted;
+                iters += row.iterations;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(Meas {
+        tps: toks as f64 / wall.max(1e-9),
+        be: emitted as f64 / iters.max(1) as f64,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_prompts, max_new, n_seeds) = if smoke { (6, 16, 1u64) } else { (18, 32, 2u64) };
+    let datasets = Dataset::load_or_synthetic(None)?;
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    for name in ["gsm8k", "wmt", "xsum"] {
+        let ds = datasets.iter().find(|d| d.name == name).expect("dataset");
+        prompts.extend(ds.take(n_prompts / 3 + 1));
+    }
+    prompts.truncate(n_prompts);
+
+    let seed = 0xfa57;
+    let reference = Arc::new(
+        NativeBackend::seeded(seed)
+            .with_threads(1)
+            .with_reference_kernel(true)
+            .with_persistent_scratch(false),
+    );
+    let fast = Arc::new(NativeBackend::seeded(seed));
+    let threads = fast.threads();
+    println!("native_fast: fast path runs {threads} forward threads");
+
+    let algos = [
+        Algo::Token,
+        Algo::Block,
+        Algo::MultiPath { k: 1 },
+        Algo::MultiPath { k: 2 },
+        Algo::MultiPath { k: 4 },
+    ];
+    let mut ref_m: Vec<Meas> = Vec::new();
+    let mut fast_m: Vec<Meas> = Vec::new();
+    for algo in algos {
+        let r = measure(reference.clone(), algo, &prompts, max_new, n_seeds)?;
+        let f = measure(fast.clone(), algo, &prompts, max_new, n_seeds)?;
+        let label = algo.to_string();
+        let speedup = f.tps / r.tps.max(1e-9);
+        println!(
+            "native/{label:<12}  ref {:>9.1} tok/s   fast {:>9.1} tok/s   {speedup:>5.2}x   \
+             BE {:.3}",
+            r.tps, f.tps, f.be
+        );
+        ref_m.push(r);
+        fast_m.push(f);
+    }
+    let block_speedup = fast_m[1].tps / ref_m[1].tps.max(1e-9);
+
+    // ---- write BENCH_native.json ----------------------------------------
+    let report = json::obj(vec![
+        ("smoke", json::Value::Bool(smoke)),
+        ("threads", json::num(threads as f64)),
+        ("ref_token_tps", json::num(ref_m[0].tps)),
+        ("ref_block_tps", json::num(ref_m[1].tps)),
+        ("ref_multipath1_tps", json::num(ref_m[2].tps)),
+        ("ref_multipath2_tps", json::num(ref_m[3].tps)),
+        ("ref_multipath4_tps", json::num(ref_m[4].tps)),
+        ("fast_token_tps", json::num(fast_m[0].tps)),
+        ("fast_block_tps", json::num(fast_m[1].tps)),
+        ("fast_multipath1_tps", json::num(fast_m[2].tps)),
+        ("fast_multipath2_tps", json::num(fast_m[3].tps)),
+        ("fast_multipath4_tps", json::num(fast_m[4].tps)),
+        ("fast_token_be", json::num(fast_m[0].be)),
+        ("fast_block_be", json::num(fast_m[1].be)),
+        ("block_speedup", json::num(block_speedup)),
+    ]);
+    std::fs::write("BENCH_native.json", json::to_string(&report))?;
+    println!("wrote BENCH_native.json");
+
+    // ---- CI gates --------------------------------------------------------
+    let mut failed = false;
+    if block_speedup < 1.5 {
+        eprintln!(
+            "PERF REGRESSION: fast-path block throughput is only {block_speedup:.2}x the \
+             scalar reference (gate: >= 1.5x)"
+        );
+        failed = true;
+    }
+    if fast_m[1].be < fast_m[0].be - 0.05 {
+        eprintln!(
+            "PERF REGRESSION: block-verification BE {:.3} fell below token-level BE {:.3}",
+            fast_m[1].be, fast_m[0].be
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "perf gates passed: fast block {block_speedup:.2}x >= 1.5x scalar reference, \
+         block BE >= token BE"
+    );
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! CPU matmul/dot kernels for the native backend (DESIGN.md §10).
+//!
+//! Two implementations of the same `out (t, d_out) += x (t, d_in) @
+//! w (d_in, d_out)` contract:
+//!
+//! * [`matmul_ref`] — the scalar reference: the plain broadcast-row
+//!   triple loop, with **no** skip-zero branch (the old kernel skipped
+//!   `x == 0.0` rows, which silently changed the FLOP count between
+//!   weight initialisations and made scalar-vs-blocked comparisons
+//!   apples-to-oranges).  This is the baseline the `native_fast` bench
+//!   gate measures against.
+//! * [`matmul_blocked`] — the fast path: tiled over `d_out` in
+//!   [`TILE`]-wide register blocks so each output lane accumulates in a
+//!   register across the whole `d_in` loop (the reference re-loads and
+//!   re-stores the output row once per input element), with an
+//!   `f32x8`-style unrolled inner loop the autovectorizer maps onto SIMD
+//!   lanes.  Independent output lanes need no reduction reordering, so
+//!   vectorisation requires no fast-math relaxation.
+//!
+//! Bit-identity contract: for a zero-filled `out`, both kernels add each
+//! output element's partial products in the same (input-index) order, so
+//! their results are bit-identical — `tests/native_fast.rs` enforces it.
+//! That is what lets the backend switch kernels per
+//! [`super::NativeBackend::with_reference_kernel`] without perturbing a
+//! single sampled token.
+
+/// Register-tile width of the blocked kernel: 16 f32 lanes (two AVX or
+/// four SSE registers) held live across the `d_in` loop.
+pub const TILE: usize = 16;
+
+/// Scalar reference kernel: `out (t, d_out) += x (t, d_in) @ w (d_in,
+/// d_out)`.  Loop order keeps `w` and `out` accesses sequential; every
+/// input element contributes exactly one multiply-add per output lane
+/// (no skip-zero branch).
+pub fn matmul_ref(x: &[f32], w: &[f32], out: &mut [f32], t: usize, d_in: usize, d_out: usize) {
+    debug_assert_eq!(x.len(), t * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), t * d_out);
+    for ti in 0..t {
+        let xrow = &x[ti * d_in..(ti + 1) * d_in];
+        let orow = &mut out[ti * d_out..(ti + 1) * d_out];
+        for (i, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Cache-blocked register-tiled kernel; bit-identical to [`matmul_ref`]
+/// on a zero-filled `out` (see module docs).
+pub fn matmul_blocked(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    t: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(x.len(), t * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), t * d_out);
+    for ti in 0..t {
+        let xrow = &x[ti * d_in..(ti + 1) * d_in];
+        let orow = &mut out[ti * d_out..(ti + 1) * d_out];
+        let mut o0 = 0;
+        while o0 + TILE <= d_out {
+            let mut acc = [0.0f32; TILE];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wtile = &w[i * d_out + o0..i * d_out + o0 + TILE];
+                for (a, &wv) in acc.iter_mut().zip(wtile.iter()) {
+                    *a += xv * wv;
+                }
+            }
+            for (o, &a) in orow[o0..o0 + TILE].iter_mut().zip(acc.iter()) {
+                *o += a;
+            }
+            o0 += TILE;
+        }
+        if o0 < d_out {
+            // Remainder lanes (d_out not a multiple of TILE): reference
+            // order, still branch-free.
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[i * d_out + o0..(i + 1) * d_out];
+                for (o, &wv) in orow[o0..].iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// Dot product with an 8-lane unrolled partial-sum accumulator.  Strict
+/// IEEE reductions defeat the autovectorizer (reassociation changes
+/// rounding), so the lanes are split manually; the final combine order is
+/// fixed (tail, then lanes 0..8), keeping the result deterministic and
+/// platform-independent for a given input.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for ((l, &va), &vb) in acc.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+            *l += va * vb;
+        }
+    }
+    let mut sum = 0.0f32;
+    for (&va, &vb) in ca.remainder().iter().zip(cb.remainder().iter()) {
+        sum += va * vb;
+    }
+    for &l in &acc {
+        sum += l;
+    }
+    sum
+}
+
+/// Which matmul kernel a forward pass runs with — the only thing the
+/// backend's `reference_kernel` benchmarking switch toggles (everything
+/// else in the forward is shared, so the `native_fast` bench isolates
+/// exactly the kernel + threading + scratch delta).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatKernel {
+    /// [`matmul_ref`] — scalar baseline for perf comparisons.
+    Reference,
+    /// [`matmul_blocked`] — the production fast path.
+    Blocked,
+}
+
+impl MatKernel {
+    /// `out (t, d_out) += x (t, d_in) @ w (d_in, d_out)`.
+    #[inline]
+    pub fn matmul_acc(
+        self,
+        x: &[f32],
+        w: &[f32],
+        out: &mut [f32],
+        t: usize,
+        d_in: usize,
+        d_out: usize,
+    ) {
+        match self {
+            MatKernel::Reference => matmul_ref(x, w, out, t, d_in, d_out),
+            MatKernel::Blocked => matmul_blocked(x, w, out, t, d_in, d_out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn blocked_matches_reference_bitwise() {
+        let mut rng = Rng::new(0xb10c);
+        for &(t, d_in, d_out) in
+            &[(1usize, 32usize, 32usize), (5, 128, 512), (3, 64, 40), (2, 17, 23), (4, 96, 16)]
+        {
+            let x = rand_vec(&mut rng, t * d_in);
+            let w = rand_vec(&mut rng, d_in * d_out);
+            let mut a = vec![0.0f32; t * d_out];
+            let mut b = vec![0.0f32; t * d_out];
+            matmul_ref(&x, &w, &mut a, t, d_in, d_out);
+            matmul_blocked(&x, &w, &mut b, t, d_in, d_out);
+            assert_eq!(a, b, "kernels diverge at t={t} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    #[test]
+    fn zero_inputs_contribute_nothing() {
+        // The bugfixed contract: x == 0.0 rows multiply through instead of
+        // branching, and the result is unchanged.
+        let x = [0.0f32, 2.0, 0.0];
+        let w = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let mut out = vec![0.0f32; 2];
+        matmul_ref(&x, &w, &mut out, 1, 3, 2);
+        assert_eq!(out, vec![4.0, 40.0]);
+        let mut out_b = vec![0.0f32; 2];
+        matmul_blocked(&x, &w, &mut out_b, 1, 3, 2);
+        assert_eq!(out_b, vec![4.0, 40.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive_order_free_sum() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 7, 8, 9, 16, 31, 64, 100] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let got = dot_f32(&a, &b) as f64;
+            let want: f64 = a.iter().zip(b.iter()).map(|(&x, &y)| (x * y) as f64).sum();
+            assert!((got - want).abs() < 1e-4, "n={n}: {got} vs {want}");
+        }
+    }
+}

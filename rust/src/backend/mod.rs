@@ -19,9 +19,11 @@
 //! * `PjrtBackend` (behind the `pjrt` cargo feature) — the AOT HLO / PJRT
 //!   path over [`crate::runtime::Runtime`].
 
+pub mod kernels;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 
 use std::path::PathBuf;
 
@@ -131,6 +133,16 @@ pub trait Backend: Send + Sync + 'static {
 
     /// Fixed shapes and capabilities of this backend instance.
     fn info(&self) -> &BackendInfo;
+
+    /// Warm-up hook, called by engine constructors with the configured
+    /// algorithm and drafter so a backend can pre-size internal scratch
+    /// before the first iteration (the native backend pre-allocates its
+    /// persistent `(B·K)`-row multipath KV scratch here, DESIGN.md §10).
+    /// Must be cheap and idempotent.  Default: no-op.
+    fn prepare(&self, algo: Algo, drafter: &str) -> anyhow::Result<()> {
+        let _ = (algo, drafter);
+        Ok(())
+    }
 
     /// Ingest a padded prompt batch through `model` ("target" or a drafter
     /// name), returning its KV cache with rows `0..L-1` written.

@@ -20,11 +20,14 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::{anyhow, Context};
 
+use super::kernels::{dot_f32, MatKernel};
+use super::pool::{ScopedJob, ThreadPool};
 use super::{Backend, BackendInfo, DraftOut, SpecIterOut, StepOut};
-use crate::draftset::DraftSet;
+use crate::draftset::{DraftSet, RowViews};
 use crate::models::{self, vocab, ModelDims};
 use crate::runtime::Manifest;
 use crate::verify::{self, dist, Algo, ProbMatrix, Rng};
@@ -93,7 +96,13 @@ pub struct NativeModel {
     control_logit_bias: f32,
 }
 
-/// KV cache for one model over one batch: `(n_layers, B, L, H, hd)` flat.
+/// KV cache for one model over one batch: `(B, n_layers, L, H, hd)` flat.
+///
+/// Batch-major layout: one serving row's entire cache (all layers) is a
+/// single contiguous [`NativeKv::row_stride`]-sized slice, which is what
+/// lets `forward_block` hand disjoint `&mut` row views to the thread
+/// pool via `chunks_mut` — safe row parallelism with no interior
+/// aliasing (DESIGN.md §10).
 #[derive(Clone, Debug)]
 pub struct NativeKv {
     k: Vec<f32>,
@@ -119,10 +128,16 @@ impl NativeKv {
         }
     }
 
+    /// Flat length of one batch row's cache: `(n_layers, L, H, hd)`.
+    #[inline]
+    fn row_stride(&self) -> usize {
+        self.n_layers * self.max_len * self.n_heads * self.head_dim
+    }
+
     /// Flat offset of cache row `(layer, b, pos)` (a `(H, hd)` block).
     #[inline]
     fn row(&self, layer: usize, b: usize, pos: usize) -> usize {
-        ((layer * self.batch + b) * self.max_len + pos) * self.n_heads * self.head_dim
+        ((b * self.n_layers + layer) * self.max_len + pos) * self.n_heads * self.head_dim
     }
 }
 
@@ -147,29 +162,8 @@ fn copy_kv_rows(dst: &mut NativeKv, dst_row: usize, src: &NativeKv, src_row: usi
 }
 
 // ---------------------------------------------------------------------------
-// Math helpers
+// Math helpers (the matmul/dot kernels live in `super::kernels`)
 // ---------------------------------------------------------------------------
-
-/// `out (t, d_out) += x (t, d_in) @ w (d_in, d_out)`, `out` zero-filled by
-/// the caller.  Loop order keeps `w` and `out` accesses sequential.
-fn matmul_acc(x: &[f32], w: &[f32], out: &mut [f32], t: usize, d_in: usize, d_out: usize) {
-    debug_assert_eq!(x.len(), t * d_in);
-    debug_assert_eq!(w.len(), d_in * d_out);
-    debug_assert_eq!(out.len(), t * d_out);
-    for ti in 0..t {
-        let xrow = &x[ti * d_in..(ti + 1) * d_in];
-        let orow = &mut out[ti * d_out..(ti + 1) * d_out];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[i * d_out..(i + 1) * d_out];
-            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                *o += xv * wv;
-            }
-        }
-    }
-}
 
 /// tanh-approximated GELU (`jax.nn.gelu`'s default).
 #[inline]
@@ -210,6 +204,162 @@ fn seed64(seed: i32) -> u64 {
 fn sample_row(probs: &[f32], u: f64) -> usize {
     let w: Vec<f64> = probs.iter().map(|&p| p.max(0.0) as f64).collect();
     dist::inv_cdf(&w, u)
+}
+
+// ---------------------------------------------------------------------------
+// Row-parallel forward pass (DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// Per-thread forward scratch: every intermediate buffer one row of
+/// `forward_block` needs.  Allocated once per worker chunk per call, not
+/// per row.
+struct RowScratch {
+    x: Vec<f32>,
+    y: Vec<f32>,
+    q: Vec<f32>,
+    kx: Vec<f32>,
+    vx: Vec<f32>,
+    o: Vec<f32>,
+    ff: Vec<f32>,
+    att: Vec<f32>,
+}
+
+impl RowScratch {
+    fn new(dims: &ModelDims, t: usize, l: usize) -> Self {
+        let d = dims.d_model;
+        RowScratch {
+            x: vec![0.0; t * d],
+            y: vec![0.0; t * d],
+            q: vec![0.0; t * d],
+            kx: vec![0.0; t * d],
+            vx: vec![0.0; t * d],
+            o: vec![0.0; t * d],
+            ff: vec![0.0; t * dims.d_ff()],
+            att: vec![0.0; l],
+        }
+    }
+}
+
+/// One batch row's inputs and disjoint mutable outputs — the unit of
+/// work handed to the thread pool.  The `k`/`v` slices are that row's
+/// contiguous `(n_layers, L, H, hd)` cache block (the batch-major
+/// [`NativeKv`] layout), so rows never alias.
+struct RowSlot<'a> {
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+    probs: Option<&'a mut [f32]>,
+    toks: &'a [i32],
+    start: i32,
+}
+
+/// Forward `t` tokens of one row through `model`, mirroring the per-row
+/// body of `model.py::forward_block`: embeds, runs every transformer
+/// layer (rewriting the row's cache positions `ws..ws+t`), and — when
+/// the slot carries a probs slice — applies the final norm + tied
+/// unembedding + softmax.  Pure function of `(model, slot, t, l)`; the
+/// scratch is write-before-read throughout, so results are independent
+/// of which thread runs the row and of whatever a previous row left in
+/// the buffers (the threading determinism contract).
+fn forward_row(
+    model: &NativeModel,
+    kernel: MatKernel,
+    slot: RowSlot<'_>,
+    t: usize,
+    l: usize,
+    s: &mut RowScratch,
+) {
+    let dims = &model.dims;
+    let (d, h, hd, vcb) = (dims.d_model, dims.n_heads, dims.head_dim(), dims.vocab_size);
+    let hhd = h * hd;
+    let scale = (hd as f32).powf(-0.5);
+    let start = slot.start.max(0) as usize;
+    // Clamped write origin, as jax.lax.dynamic_update_slice does.
+    let ws = start.min(l.saturating_sub(t));
+    let RowSlot { k: krow, v: vrow, probs, toks, .. } = slot;
+    // Embed + positions (positions clamped for lookup only).
+    for j in 0..t {
+        let tok = (toks[j].max(0) as usize).min(vcb - 1);
+        let p = (start + j).min(l - 1);
+        for di in 0..d {
+            s.x[j * d + di] = model.embed[tok * d + di] + model.pos[p * d + di];
+        }
+    }
+    for (li, layer) in model.layers.iter().enumerate() {
+        layer.ln1.apply(&s.x, &mut s.y, d);
+        s.q.iter_mut().for_each(|z| *z = 0.0);
+        s.kx.iter_mut().for_each(|z| *z = 0.0);
+        s.vx.iter_mut().for_each(|z| *z = 0.0);
+        kernel.matmul_acc(&s.y, &layer.wq, &mut s.q, t, d, d);
+        kernel.matmul_acc(&s.y, &layer.wk, &mut s.kx, t, d, d);
+        kernel.matmul_acc(&s.y, &layer.wv, &mut s.vx, t, d, d);
+        // Write the new K/V rows into the cache at ws..ws+t.
+        for j in 0..t {
+            let row = (li * l + ws + j) * hhd;
+            krow[row..row + hhd].copy_from_slice(&s.kx[j * d..(j + 1) * d]);
+            vrow[row..row + hhd].copy_from_slice(&s.vx[j * d..(j + 1) * d]);
+        }
+        // Causal attention over the cache: key_pos <= query_pos.
+        s.o.iter_mut().for_each(|z| *z = 0.0);
+        for j in 0..t {
+            let qpos = start + j;
+            let hi = qpos.min(l - 1); // attend keys 0..=hi
+            for hh in 0..h {
+                let qv = &s.q[j * d + hh * hd..j * d + (hh + 1) * hd];
+                let mut mx = f32::NEG_INFINITY;
+                for (sp, a) in s.att[..=hi].iter_mut().enumerate() {
+                    let row = (li * l + sp) * hhd + hh * hd;
+                    *a = dot_f32(qv, &krow[row..row + hd]) * scale;
+                    mx = mx.max(*a);
+                }
+                let mut sum = 0.0f32;
+                for a in s.att[..=hi].iter_mut() {
+                    *a = (*a - mx).exp();
+                    sum += *a;
+                }
+                let inv = 1.0 / sum.max(1e-30);
+                let orow = &mut s.o[j * d + hh * hd..j * d + (hh + 1) * hd];
+                for (sp, &a) in s.att[..=hi].iter().enumerate() {
+                    let w = a * inv;
+                    let row = (li * l + sp) * hhd + hh * hd;
+                    let vr = &vrow[row..row + hd];
+                    for (ov, &vv) in orow.iter_mut().zip(vr.iter()) {
+                        *ov += w * vv;
+                    }
+                }
+            }
+        }
+        // x += o @ wo
+        s.y.iter_mut().for_each(|z| *z = 0.0);
+        kernel.matmul_acc(&s.o, &layer.wo, &mut s.y, t, d, d);
+        for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
+            *xv += *yv;
+        }
+        // MLP: x += gelu(ln2(x) @ w1) @ w2
+        layer.ln2.apply(&s.x, &mut s.y, d);
+        s.ff.iter_mut().for_each(|z| *z = 0.0);
+        kernel.matmul_acc(&s.y, &layer.w1, &mut s.ff, t, d, dims.d_ff());
+        s.ff.iter_mut().for_each(|z| *z = gelu(*z));
+        s.y.iter_mut().for_each(|z| *z = 0.0);
+        kernel.matmul_acc(&s.ff, &layer.w2, &mut s.y, t, dims.d_ff(), d);
+        for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
+            *xv += *yv;
+        }
+    }
+    let Some(probs) = probs else { return };
+    // Final norm + tied unembedding + softmax.
+    model.ln_f.apply(&s.x, &mut s.y, d);
+    for j in 0..t {
+        let xrow = &s.y[j * d..(j + 1) * d];
+        let prow = &mut probs[j * vcb..(j + 1) * vcb];
+        for (tok, pv) in prow.iter_mut().enumerate() {
+            let mut dot = dot_f32(xrow, &model.embed[tok * d..(tok + 1) * d]);
+            if (tok as u32) < vocab::CONTENT_BASE {
+                dot += model.control_logit_bias;
+            }
+            *pv = dot;
+        }
+        softmax_row(prow);
+    }
 }
 
 /// The verification uniforms one row draws from its per-row seed: `etas
@@ -423,9 +573,51 @@ fn model_from_artifacts(
 pub struct NativeBackend {
     info: BackendInfo,
     models: HashMap<String, NativeModel>,
+    /// Forward-pass thread count (callers + pool workers); see
+    /// [`NativeBackend::with_threads`].
+    threads: usize,
+    /// Persistent workers for the batch-parallel forward, spawned on the
+    /// first parallel `forward_block` (a `threads = 1` backend never
+    /// spawns any).
+    pool: OnceLock<ThreadPool>,
+    /// Run the scalar reference matmul kernel instead of the blocked one
+    /// (benchmark baseline; bit-identical outputs either way).
+    reference_kernel: bool,
+    /// Reuse the `(B·K)`-row multipath scratch caches across iterations
+    /// instead of allocating fresh ones per call.
+    persistent_scratch: bool,
+    /// The persistent scratch caches, keyed by `(model name, rows)`.
+    /// Entries are taken out for the duration of a multipath call (so
+    /// concurrent engines never alias one) and returned afterwards; the
+    /// per-key stack holds one cache per concurrently-active engine.
+    scratch: Mutex<HashMap<(String, usize), Vec<NativeKv>>>,
+}
+
+/// Forward-pass thread count default: `SPECD_NATIVE_THREADS` when set,
+/// else the machine's parallelism capped at 4 (the serving batch is
+/// small; more threads than rows just idle).
+fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("SPECD_NATIVE_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
 }
 
 impl NativeBackend {
+    fn with_models(info: BackendInfo, models: HashMap<String, NativeModel>) -> Self {
+        NativeBackend {
+            info,
+            models,
+            threads: default_threads(),
+            pool: OnceLock::new(),
+            reference_kernel: false,
+            persistent_scratch: true,
+            scratch: Mutex::new(HashMap::new()),
+        }
+    }
+
     /// Hermetic backend at the standard serving shapes (`B=4`, `L=96`,
     /// target + xxs + xxxs) with deterministic seeded weights.
     pub fn seeded(seed: u64) -> Self {
@@ -441,8 +633,8 @@ impl NativeBackend {
             let dims = models::dims_for(name).expect("family variant");
             models_map.insert(name.to_string(), seeded_model(name, dims, max_len, seed));
         }
-        NativeBackend {
-            info: BackendInfo {
+        Self::with_models(
+            BackendInfo {
                 name: "native".into(),
                 batch,
                 max_len,
@@ -452,8 +644,8 @@ impl NativeBackend {
                 drafters: models::DRAFTERS.iter().map(|s| s.to_string()).collect(),
                 artifacts_dir: None,
             },
-            models: models_map,
-        }
+            models_map,
+        )
     }
 
     /// Load trained weights from an artifact bundle (`manifest.json` +
@@ -468,8 +660,8 @@ impl NativeBackend {
                     .with_context(|| format!("loading model {name}"))?,
             );
         }
-        Ok(NativeBackend {
-            info: BackendInfo {
+        Ok(Self::with_models(
+            BackendInfo {
                 name: "native".into(),
                 batch: manifest.batch,
                 max_len: manifest.max_len,
@@ -479,8 +671,79 @@ impl NativeBackend {
                 drafters: manifest.drafters.clone(),
                 artifacts_dir: Some(dir.to_path_buf()),
             },
-            models: models_map,
-        })
+            models_map,
+        ))
+    }
+
+    /// Override the forward-pass thread count (1 = fully sequential, the
+    /// reference for the bit-identical-under-threading contract).  Rows
+    /// are split into contiguous chunks across the pool; every row's
+    /// arithmetic is independent of the split, so any `threads` value
+    /// produces identical bits (test-enforced).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self.pool = OnceLock::new();
+        self
+    }
+
+    /// Switch the forward pass to the scalar reference matmul kernel
+    /// (`benches/native_fast.rs`'s baseline).  Outputs are bit-identical
+    /// to the blocked kernel; only wall-clock changes.
+    pub fn with_reference_kernel(mut self, on: bool) -> Self {
+        self.reference_kernel = on;
+        self
+    }
+
+    /// Toggle the persistent multipath scratch (on by default).  Off
+    /// reproduces the old allocate-per-iteration behaviour — outputs are
+    /// bit-identical either way (test-enforced); only allocation traffic
+    /// changes.
+    pub fn with_persistent_scratch(mut self, on: bool) -> Self {
+        self.persistent_scratch = on;
+        self
+    }
+
+    /// Configured forward-pass thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The worker pool, spawned on first parallel use.
+    fn pool(&self) -> &ThreadPool {
+        self.pool.get_or_init(|| ThreadPool::new(self.threads))
+    }
+
+    /// The matmul kernel this backend's forwards run with.
+    fn kernel(&self) -> MatKernel {
+        if self.reference_kernel {
+            MatKernel::Reference
+        } else {
+            MatKernel::Blocked
+        }
+    }
+
+    /// Check out a `(rows,)`-row scratch cache for `model` (persistent
+    /// pool hit, or a fresh zeroed cache).  Stale contents are fine: the
+    /// multipath forwards splice every attended prefix row and rewrite
+    /// every in-flight row before it is read (DESIGN.md §10 scratch
+    /// lifetime), so reuse is bit-identical to a fresh cache.
+    fn take_scratch(&self, model: &NativeModel, name: &str, rows: usize) -> NativeKv {
+        if self.persistent_scratch {
+            let mut cache = self.scratch.lock().unwrap();
+            if let Some(kv) = cache.get_mut(&(name.to_string(), rows)).and_then(Vec::pop) {
+                return kv;
+            }
+        }
+        NativeKv::zeros(&model.dims, rows, self.info.max_len)
+    }
+
+    /// Return a scratch cache to the persistent pool (dropped when the
+    /// backend runs with `persistent_scratch` off).
+    fn put_scratch(&self, name: &str, kv: NativeKv) {
+        if self.persistent_scratch {
+            let mut cache = self.scratch.lock().unwrap();
+            cache.entry((name.to_string(), kv.batch)).or_default().push(kv);
+        }
     }
 
     /// Artifact bundle when present, hermetic seeded weights otherwise —
@@ -535,6 +798,13 @@ impl NativeBackend {
     /// unembedding is skipped and the returned vector is empty — prefill
     /// only needs the KV rows (XLA dead-code-eliminates the same work on
     /// the PJRT path).
+    ///
+    /// Rows come from the cache, not the serving batch: the multipath
+    /// scratch caches run this very forward over `B * K` flattened path
+    /// rows (DESIGN.md §9), everything else over the `B` serving rows.
+    /// Rows are independent, so they are split into contiguous chunks
+    /// across the backend's thread pool ([`NativeBackend::with_threads`])
+    /// — bit-identical to the sequential order for any thread count.
     #[allow(clippy::too_many_arguments)]
     fn forward_block(
         &self,
@@ -546,135 +816,59 @@ impl NativeBackend {
         want_probs: bool,
     ) -> Vec<f32> {
         let dims = &model.dims;
-        // Rows come from the cache, not the serving batch: the multipath
-        // scratch caches run this very forward over `B * K` flattened
-        // path rows (DESIGN.md §9), everything else over the `B` serving
-        // rows.
-        let (b, l) = (kv.batch, kv.max_len);
-        let (d, h, hd, vcb) = (dims.d_model, dims.n_heads, dims.head_dim(), dims.vocab_size);
-        let scale = (hd as f32).powf(-0.5);
-        debug_assert_eq!(tokens_t.len(), b * t);
-        debug_assert_eq!(start_pos.len(), b);
+        let (rows, l) = (kv.batch, kv.max_len);
+        let vcb = dims.vocab_size;
+        debug_assert_eq!(tokens_t.len(), rows * t);
+        debug_assert_eq!(start_pos.len(), rows);
         debug_assert_eq!(l, self.info.max_len);
         debug_assert_eq!(
             (kv.n_layers, kv.n_heads, kv.head_dim),
-            (dims.n_layers, h, hd),
+            (dims.n_layers, dims.n_heads, dims.head_dim()),
             "KV cache belongs to a different model"
         );
 
-        let mut probs = if want_probs { vec![0.0f32; b * t * vcb] } else { Vec::new() };
-        // Per-row scratch (rows are independent; B is small).
-        let mut x = vec![0.0f32; t * d];
-        let mut y = vec![0.0f32; t * d];
-        let mut q = vec![0.0f32; t * d];
-        let mut kx = vec![0.0f32; t * d];
-        let mut vx = vec![0.0f32; t * d];
-        let mut o = vec![0.0f32; t * d];
-        let mut ff = vec![0.0f32; t * dims.d_ff()];
-        let mut att = vec![0.0f32; l];
+        let mut probs = if want_probs { vec![0.0f32; rows * t * vcb] } else { Vec::new() };
+        let kernel = self.kernel();
+        // Disjoint per-row views: the batch-major cache layout makes each
+        // row's K/V a contiguous chunk, and probs splits the same way.
+        let stride = kv.row_stride();
+        let mut kit = kv.k.chunks_mut(stride);
+        let mut vit = kv.v.chunks_mut(stride);
+        let mut pit = probs.chunks_mut(t * vcb);
+        let mut slots = Vec::with_capacity(rows);
+        for bi in 0..rows {
+            slots.push(RowSlot {
+                k: kit.next().expect("kv row chunk"),
+                v: vit.next().expect("kv row chunk"),
+                probs: if want_probs { Some(pit.next().expect("probs row chunk")) } else { None },
+                toks: &tokens_t[bi * t..(bi + 1) * t],
+                start: start_pos[bi],
+            });
+        }
 
-        for bi in 0..b {
-            let start = start_pos[bi].max(0) as usize;
-            // Clamped write origin, as jax.lax.dynamic_update_slice does.
-            let ws = start.min(l.saturating_sub(t));
-            // Embed + positions (positions clamped for lookup only).
-            for j in 0..t {
-                let tok = (tokens_t[bi * t + j].max(0) as usize).min(vcb - 1);
-                let p = (start + j).min(l - 1);
-                for di in 0..d {
-                    x[j * d + di] = model.embed[tok * d + di] + model.pos[p * d + di];
-                }
+        let n_threads = self.threads.min(rows).max(1);
+        if n_threads == 1 {
+            let mut scratch = RowScratch::new(dims, t, l);
+            for slot in slots {
+                forward_row(model, kernel, slot, t, l, &mut scratch);
             }
-            for (li, layer) in model.layers.iter().enumerate() {
-                layer.ln1.apply(&x, &mut y, d);
-                q.iter_mut().for_each(|z| *z = 0.0);
-                kx.iter_mut().for_each(|z| *z = 0.0);
-                vx.iter_mut().for_each(|z| *z = 0.0);
-                matmul_acc(&y, &layer.wq, &mut q, t, d, d);
-                matmul_acc(&y, &layer.wk, &mut kx, t, d, d);
-                matmul_acc(&y, &layer.wv, &mut vx, t, d, d);
-                // Write the new K/V rows into the cache at ws..ws+t.
-                for j in 0..t {
-                    let row = kv.row(li, bi, ws + j);
-                    kv.k[row..row + h * hd].copy_from_slice(&kx[j * d..(j + 1) * d]);
-                    kv.v[row..row + h * hd].copy_from_slice(&vx[j * d..(j + 1) * d]);
+        } else {
+            let chunk = rows.div_ceil(n_threads);
+            let mut it = slots.into_iter();
+            let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(n_threads);
+            loop {
+                let group: Vec<RowSlot<'_>> = it.by_ref().take(chunk).collect();
+                if group.is_empty() {
+                    break;
                 }
-                // Causal attention over the cache: key_pos <= query_pos.
-                o.iter_mut().for_each(|z| *z = 0.0);
-                for j in 0..t {
-                    let qpos = start + j;
-                    let hi = qpos.min(l - 1); // attend keys 0..=hi
-                    for hh in 0..h {
-                        let qv = &q[j * d + hh * hd..j * d + (hh + 1) * hd];
-                        let mut mx = f32::NEG_INFINITY;
-                        for (s, a) in att[..=hi].iter_mut().enumerate() {
-                            let row = kv.row(li, bi, s) + hh * hd;
-                            let kvrow = &kv.k[row..row + hd];
-                            let mut dot = 0.0f32;
-                            for (qi, ki) in qv.iter().zip(kvrow.iter()) {
-                                dot += qi * ki;
-                            }
-                            *a = dot * scale;
-                            mx = mx.max(*a);
-                        }
-                        let mut sum = 0.0f32;
-                        for a in att[..=hi].iter_mut() {
-                            *a = (*a - mx).exp();
-                            sum += *a;
-                        }
-                        let inv = 1.0 / sum.max(1e-30);
-                        let orow = &mut o[j * d + hh * hd..j * d + (hh + 1) * hd];
-                        for (s, &a) in att[..=hi].iter().enumerate() {
-                            let w = a * inv;
-                            if w == 0.0 {
-                                continue;
-                            }
-                            let row = kv.row(li, bi, s) + hh * hd;
-                            let vrow = &kv.v[row..row + hd];
-                            for (ov, &vv) in orow.iter_mut().zip(vrow.iter()) {
-                                *ov += w * vv;
-                            }
-                        }
+                jobs.push(Box::new(move || {
+                    let mut scratch = RowScratch::new(dims, t, l);
+                    for slot in group {
+                        forward_row(model, kernel, slot, t, l, &mut scratch);
                     }
-                }
-                // x += o @ wo
-                y.iter_mut().for_each(|z| *z = 0.0);
-                matmul_acc(&o, &layer.wo, &mut y, t, d, d);
-                for (xv, yv) in x.iter_mut().zip(y.iter()) {
-                    *xv += *yv;
-                }
-                // MLP: x += gelu(ln2(x) @ w1) @ w2
-                layer.ln2.apply(&x, &mut y, d);
-                ff.iter_mut().for_each(|z| *z = 0.0);
-                matmul_acc(&y, &layer.w1, &mut ff, t, d, dims.d_ff());
-                ff.iter_mut().for_each(|z| *z = gelu(*z));
-                y.iter_mut().for_each(|z| *z = 0.0);
-                matmul_acc(&ff, &layer.w2, &mut y, t, dims.d_ff(), d);
-                for (xv, yv) in x.iter_mut().zip(y.iter()) {
-                    *xv += *yv;
-                }
+                }));
             }
-            if !want_probs {
-                continue;
-            }
-            // Final norm + tied unembedding + softmax.
-            model.ln_f.apply(&x, &mut y, d);
-            for j in 0..t {
-                let xrow = &y[j * d..(j + 1) * d];
-                let prow = &mut probs[(bi * t + j) * vcb..(bi * t + j + 1) * vcb];
-                for (tok, pv) in prow.iter_mut().enumerate() {
-                    let erow = &model.embed[tok * d..(tok + 1) * d];
-                    let mut dot = 0.0f32;
-                    for (xv, ev) in xrow.iter().zip(erow.iter()) {
-                        dot += xv * ev;
-                    }
-                    if (tok as u32) < vocab::CONTENT_BASE {
-                        dot += model.control_logit_bias;
-                    }
-                    *pv = dot;
-                }
-                softmax_row(prow);
-            }
+            self.pool().scope(jobs);
         }
         probs
     }
@@ -783,16 +977,20 @@ impl NativeBackend {
 
     /// Build the flattened `(B·K)`-row scratch cache for one model,
     /// splicing each serving row's shared prefix (its `length - 1` valid
-    /// cache rows) into all `k` of that row's path rows.
+    /// cache rows) into all `k` of that row's path rows.  The cache is
+    /// checked out of the persistent scratch pool
+    /// ([`NativeBackend::take_scratch`]); callers return it via
+    /// [`NativeBackend::put_scratch`] when the iteration is done.
     fn multi_prefix_scratch(
         &self,
         model: &NativeModel,
+        name: &str,
         k: usize,
         length: &[i32],
         kv: &NativeKv,
     ) -> NativeKv {
         let (b, l) = (self.info.batch, self.info.max_len);
-        let mut scratch = NativeKv::zeros(&model.dims, b * k, l);
+        let mut scratch = self.take_scratch(model, name, b * k);
         for bi in 0..b {
             let prefix = (length[bi].max(1) as usize - 1).min(l);
             for path in 0..k {
@@ -824,7 +1022,7 @@ impl NativeBackend {
         }
         let m = self.model(drafter)?;
         let b = self.info.batch;
-        let mut scratch = self.multi_prefix_scratch(m, k, length, kv);
+        let mut scratch = self.multi_prefix_scratch(m, drafter, k, length, kv);
         let pending = self.gather_pending(tokens, length);
         // Flat layout: path rows of serving row `bi` are `bi*k..bi*k+k`
         // (the DraftSet::flat_row contract); every path starts from the
@@ -865,7 +1063,7 @@ impl NativeBackend {
         }
         self.check_gamma(gamma)?;
         let m = self.model("target")?;
-        let mut scratch = self.multi_prefix_scratch(m, set.k, length, kv);
+        let mut scratch = self.multi_prefix_scratch(m, "target", set.k, length, kv);
         let pending = self.gather_pending(tokens, length);
         let rows = set.flat_rows();
         let mut inp = vec![0i32; rows * (gamma + 1)];
@@ -908,10 +1106,15 @@ impl NativeBackend {
         let mut tau = vec![0i32; b];
         let mut emitted = vec![vocab::PAD as i32; b * (gamma + 1)];
         let mut done = vec![0i32; b];
+        // One reusable verify-view scratch serves every row (the per-row
+        // `(K, gamma + 1, V)` f64 conversions dominate verify-side
+        // allocation otherwise).
+        let mut views = RowViews::default();
         for bi in 0..b {
             let (etas, u_res) = multipath_uniforms(seeds[bi], gamma, k);
-            let (ps_v, qs_v, drafts_v) = set.row_views(bi)?;
-            let outcome = verify::multipath_verify(&ps_v, &qs_v, &drafts_v, &etas, u_res);
+            set.row_views_into(bi, &mut views)?;
+            let outcome =
+                verify::multipath_verify(&views.ps, &views.qs, &views.drafts, &etas, u_res);
             // Commit the winner: during this iteration the drafter wrote
             // scratch rows `len-1 .. len+gamma-2` and the target rows
             // `len-1 .. len+gamma-1`; copying from position 0 also
@@ -935,6 +1138,8 @@ impl NativeBackend {
             done[bi] = (eos_hit || out_of_room) as i32;
             length[bi] = new_len.min(l as i32 - 1);
         }
+        self.put_scratch(drafter, d_scratch);
+        self.put_scratch("target", t_scratch);
         Ok(SpecIterOut { tau, emitted, done })
     }
 }
@@ -944,6 +1149,31 @@ impl Backend for NativeBackend {
 
     fn info(&self) -> &BackendInfo {
         &self.info
+    }
+
+    /// Pre-size the persistent multipath scratch for the engine's
+    /// configured path count, so the first iteration never pays the
+    /// `(B·K)`-row allocations (they would otherwise be taken lazily on
+    /// first use).
+    fn prepare(&self, algo: Algo, drafter: &str) -> anyhow::Result<()> {
+        if let Algo::MultiPath { k } = algo {
+            if k == 0 {
+                return Err(anyhow!("multipath draft set needs k >= 1"));
+            }
+            if !self.persistent_scratch {
+                return Ok(());
+            }
+            let rows = self.info.batch * k;
+            for name in [drafter, "target"] {
+                let m = self.model(name)?;
+                let mut cache = self.scratch.lock().unwrap();
+                let entry = cache.entry((name.to_string(), rows)).or_default();
+                if entry.is_empty() {
+                    entry.push(NativeKv::zeros(&m.dims, rows, self.info.max_len));
+                }
+            }
+        }
+        Ok(())
     }
 
     fn prefill(&self, model: &str, tokens: &[i32], length: &[i32]) -> anyhow::Result<NativeKv> {
@@ -1111,8 +1341,9 @@ impl Backend for NativeBackend {
         kv: &NativeKv,
         seeds: &[i32],
     ) -> anyhow::Result<DraftSet> {
-        let (set, _scratch) =
+        let (set, scratch) =
             self.draft_multi_scratch(drafter, k, gamma, tokens, length, kv, seeds)?;
+        self.put_scratch(drafter, scratch);
         Ok(set)
     }
 
@@ -1123,7 +1354,8 @@ impl Backend for NativeBackend {
         length: &[i32],
         kv: &NativeKv,
     ) -> anyhow::Result<()> {
-        let _scratch = self.target_score_multi_scratch(set, tokens, length, kv)?;
+        let scratch = self.target_score_multi_scratch(set, tokens, length, kv)?;
+        self.put_scratch("target", scratch);
         Ok(())
     }
 

@@ -1,0 +1,301 @@
+//! A small fixed fork-join thread pool for the native backend's
+//! batch-parallel forward (DESIGN.md §10).
+//!
+//! Workers are spawned once (lazily, on the backend's first parallel
+//! forward) and live for the backend's lifetime, so the per-forward cost
+//! is one queue push + one condvar wake per job instead of a thread
+//! spawn (`forward_block` runs
+//! `gamma + 2` times per SpecDec iteration — spawn latency would rival
+//! the compute at these model sizes).  [`ThreadPool::scope`] provides the
+//! fork-join shape: the caller submits one job per worker chunk, runs the
+//! first job on its own thread, and blocks until a completion latch
+//! counts every submitted job done — which is also what makes handing
+//! the pool borrowed (non-`'static`) closures sound, see the safety
+//! comment in `scope`.
+//!
+//! Determinism contract: the pool only ever carries *row-disjoint* jobs
+//! (each job owns mutable slices of distinct batch rows), every job's
+//! arithmetic is a pure function of its inputs, and no job draws
+//! randomness.  Scheduling order therefore cannot affect any output bit:
+//! `threads = N` is bit-identical to `threads = 1` (test-enforced by
+//! `tests/native_fast.rs`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A borrowed fork-join job: may capture references to the caller's
+/// stack, which [`ThreadPool::scope`]'s latch keeps alive until the job
+/// has finished.
+pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Type-erased job as stored on the shared queue.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue state shared between the submitting thread and the workers.
+struct Shared {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Completion latch for one `scope` call.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// Set when any worker-run job panicked; `scope` re-raises it on the
+    /// calling thread so a failure is never silently swallowed.
+    panicked: AtomicBool,
+}
+
+/// Decrements the latch when dropped, so a panicking job still releases
+/// the waiting caller instead of deadlocking it.
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        let mut rem = self.0.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *rem -= 1;
+        if *rem == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+/// Blocks until the latch reaches zero — **in `Drop`**, so the wait also
+/// happens while the calling thread is unwinding from a panic in its own
+/// job.  That wait is what makes handing the workers stack-borrowing
+/// (`'a`-erased) closures sound: `scope`'s frame cannot be torn down, on
+/// any path, before every queued job has finished with its borrows.
+struct WaitLatch<'a>(&'a Latch);
+
+impl Drop for WaitLatch<'_> {
+    fn drop(&mut self) {
+        let mut rem = self.0.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *rem > 0 {
+            rem = self.0.done.wait(rem).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// The pool: `threads - 1` persistent workers plus the calling thread.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// A pool that runs `scope` jobs across `threads` threads in total
+    /// (the caller participates, so `threads - 1` workers are spawned;
+    /// `threads <= 1` spawns none and `scope` degenerates to a plain
+    /// sequential loop).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Total thread count (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run every job to completion, farming all but the first out to the
+    /// workers while the caller runs the first itself.  Returns (or
+    /// unwinds) only once every job has finished, which is what lets
+    /// jobs borrow from the caller's stack; a panic in any job is
+    /// re-raised on the calling thread after the whole scope has
+    /// drained, never swallowed.
+    pub fn scope<'a>(&self, mut jobs: Vec<ScopedJob<'a>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let mine = jobs.remove(0);
+        if self.workers.is_empty() || jobs.is_empty() {
+            mine();
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for job in jobs {
+                // SAFETY: the `WaitLatch` guard below blocks — in Drop,
+                // so on the panic path too — until the latch has counted
+                // this job complete (its own guard decrements even on
+                // unwind), so the erased borrow never outlives `'a`.
+                let job: Job = unsafe {
+                    std::mem::transmute::<ScopedJob<'a>, Box<dyn FnOnce() + Send + 'static>>(job)
+                };
+                let latch = latch.clone();
+                st.jobs.push_back(Box::new(move || {
+                    let _guard = LatchGuard(latch.clone());
+                    // Keep the worker alive and the failure visible: the
+                    // panic is recorded and re-raised by the caller.
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        latch.panicked.store(true, Ordering::Release);
+                    }
+                }));
+            }
+            self.shared.ready.notify_all();
+        }
+        let wait = WaitLatch(&latch);
+        mine();
+        drop(wait);
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("native thread-pool job panicked (re-raised on the calling thread)");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.closed = true;
+        }
+        self.shared.ready.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    break Some(job);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = shared.ready.wait(st).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_every_job_and_supports_borrows() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let mut data = vec![0usize; 16];
+        {
+            let jobs: Vec<ScopedJob> = data
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    let job: ScopedJob = Box::new(move || {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = i * 4 + j + 1;
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        let want: Vec<usize> = (1..=16).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn single_threaded_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = (0..3)
+            .map(|_| {
+                let job: ScopedJob = Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                job
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn worker_panic_is_reraised_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<ScopedJob> = (0..2)
+                .map(|i| {
+                    let job: ScopedJob = Box::new(move || {
+                        if i == 1 {
+                            panic!("boom");
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+        }));
+        assert!(boom.is_err(), "worker panic must re-raise on the caller");
+        // The worker caught the unwind and still serves later scopes.
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = (0..2)
+            .map(|_| {
+                let hits = &hits;
+                let job: ScopedJob = Box::new(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                job
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn repeated_scopes_reuse_the_workers() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50usize {
+            let counter = AtomicUsize::new(0);
+            let jobs: Vec<ScopedJob> = (0..5)
+                .map(|i| {
+                    let counter = &counter;
+                    let job: ScopedJob = Box::new(move || {
+                        counter.fetch_add(i + 1, Ordering::Relaxed);
+                    });
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+            assert_eq!(counter.load(Ordering::Relaxed), 15, "round {round}");
+        }
+    }
+}

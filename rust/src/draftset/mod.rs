@@ -145,16 +145,48 @@ impl DraftSet {
         &self,
         row: usize,
     ) -> anyhow::Result<(Vec<ProbMatrix>, Vec<ProbMatrix>, Vec<Vec<u32>>)> {
-        let mut ps = Vec::with_capacity(self.k);
-        let mut qs = Vec::with_capacity(self.k);
-        let mut drafts = Vec::with_capacity(self.k);
-        for path in 0..self.k {
-            ps.push(self.ps_matrix(row, path)?);
-            qs.push(self.qs_matrix(row, path));
-            drafts.push(self.path_drafts_u32(row, path));
-        }
-        Ok((ps, qs, drafts))
+        let mut views = RowViews::default();
+        self.row_views_into(row, &mut views)?;
+        Ok((views.ps, views.qs, views.drafts))
     }
+
+    /// Fill a reusable [`RowViews`] with row `row`'s per-path view —
+    /// the allocation-recycling twin of [`DraftSet::row_views`], used by
+    /// the fused multipath iteration so one scratch serves every row of
+    /// every iteration (DESIGN.md §10).
+    pub fn row_views_into(&self, row: usize, out: &mut RowViews) -> anyhow::Result<()> {
+        if !self.scored() {
+            return Err(anyhow!("draft set has not been target-scored"));
+        }
+        out.ps.resize_with(self.k, || ProbMatrix::new(0, 0));
+        out.qs.resize_with(self.k, || ProbMatrix::new(0, 0));
+        out.drafts.resize_with(self.k, Vec::new);
+        let np = (self.gamma + 1) * self.vocab;
+        let nq = self.gamma * self.vocab;
+        for path in 0..self.k {
+            let r = self.flat_row(row, path);
+            out.ps[path].copy_from_f32(self.gamma + 1, self.vocab, &self.ps[r * np..(r + 1) * np]);
+            out.qs[path].copy_from_f32(self.gamma, self.vocab, &self.qs[r * nq..(r + 1) * nq]);
+            out.drafts[path].clear();
+            out.drafts[path].extend(self.path_drafts(row, path).iter().map(|&x| x as u32));
+        }
+        Ok(())
+    }
+}
+
+/// Reusable per-row multipath verify views, in the exact shape
+/// [`crate::verify::multipath_verify`] consumes.  Holding one of these
+/// across rows and iterations avoids re-allocating `K` f64 matrices per
+/// verified row — the verify-side analogue of the backend's persistent
+/// `(B·K)`-row KV scratch.
+#[derive(Default)]
+pub struct RowViews {
+    /// Per-path target matrices, `(gamma + 1, V)` each.
+    pub ps: Vec<ProbMatrix>,
+    /// Per-path drafter matrices, `(gamma, V)` each.
+    pub qs: Vec<ProbMatrix>,
+    /// Per-path draft tokens, `gamma` each.
+    pub drafts: Vec<Vec<u32>>,
 }
 
 #[cfg(test)]
@@ -201,6 +233,30 @@ mod tests {
         let (ps_v, qs_v, d_v) = set.row_views(1).unwrap();
         assert_eq!((ps_v.len(), qs_v.len(), d_v.len()), (2, 2, 2));
         assert_eq!(d_v[1], vec![6, 7]);
+    }
+
+    #[test]
+    fn row_views_into_matches_row_views() {
+        let mut set = tiny_set();
+        let ps: Vec<f32> = (0..4 * 3 * 3).map(|i| i as f32).collect();
+        set.set_ps(ps).unwrap();
+        let mut views = RowViews::default();
+        for row in 0..2 {
+            let (ps_v, qs_v, d_v) = set.row_views(row).unwrap();
+            set.row_views_into(row, &mut views).unwrap();
+            assert_eq!(views.drafts, d_v, "row {row}");
+            for path in 0..2 {
+                for i in 0..3 {
+                    assert_eq!(views.ps[path].row(i), ps_v[path].row(i));
+                }
+                for i in 0..2 {
+                    assert_eq!(views.qs[path].row(i), qs_v[path].row(i));
+                }
+            }
+        }
+        // Unscored sets are rejected.
+        let mut fresh = RowViews::default();
+        assert!(tiny_set().row_views_into(0, &mut fresh).is_err());
     }
 
     #[test]

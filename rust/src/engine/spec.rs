@@ -68,6 +68,10 @@ impl<B: Backend> SpecEngine<B> {
                 info.drafters
             ));
         }
+        // Let the backend size internal scratch for this configuration up
+        // front (the native backend pre-allocates its persistent
+        // `(B·K)`-row multipath KV scratch here, DESIGN.md §10).
+        backend.prepare(cfg.algo, &cfg.drafter)?;
         Ok(SpecEngine { backend, cfg, metrics: Arc::new(EngineMetrics::default()) })
     }
 

@@ -11,6 +11,19 @@
 use super::dist::{pos_diff_sum, residual_pick, ProbMatrix, EPS};
 use super::VerifyOutcome;
 
+/// Target row `i` with an optional position-0 substitute.  The multipath
+/// residual chain (DESIGN.md §9) re-verifies a path against a modified
+/// position-0 target `D`; overriding the row view here lets it run the
+/// block rule without cloning the whole `(gamma + 1, V)` target matrix
+/// to substitute one row.
+#[inline]
+fn ps_row<'a>(ps: &'a ProbMatrix, row0: Option<&'a [f64]>, i: usize) -> &'a [f64] {
+    match row0 {
+        Some(r) if i == 0 => r,
+        _ => ps.row(i),
+    }
+}
+
 /// Allocation-free core of the coupled acceptance chain: fills the
 /// caller-provided `p`/`h` buffers (each at least `gamma + 1` long) with
 /// `p[0] = 1` and, for `i` in `1..=gamma`, `p[i]` per Eq. 8 and `h[i]`
@@ -18,9 +31,11 @@ use super::VerifyOutcome;
 /// (1.0).  This is the one copy of the chain math, shared by
 /// [`block_chain`], [`block_verify`] and [`BlockScratch::verify`] — the
 /// engine hot path routes through [`BlockScratch`] buffers instead of
-/// allocating two fresh `Vec<f64>` per call.
-pub fn block_chain_into(
+/// allocating two fresh `Vec<f64>` per call.  `row0` optionally
+/// substitutes the position-0 target row (see [`block_verify_row0`]).
+pub fn block_chain_into_row0(
     ps: &ProbMatrix,
+    row0: Option<&[f64]>,
     qs: &ProbMatrix,
     drafts: &[u32],
     p: &mut [f64],
@@ -28,11 +43,14 @@ pub fn block_chain_into(
 ) {
     let gamma = drafts.len();
     debug_assert!(p.len() > gamma && h.len() > gamma, "chain buffers too short");
+    if let Some(r) = row0 {
+        debug_assert_eq!(r.len(), ps.vocab, "row0 vocab mismatch");
+    }
     p[0] = 1.0;
     h[0] = 1.0;
     for i in 1..=gamma {
         let x = drafts[i - 1] as usize;
-        let ratio = ps.row(i - 1)[x] / qs.row(i - 1)[x].max(EPS);
+        let ratio = ps_row(ps, row0, i - 1)[x] / qs.row(i - 1)[x].max(EPS);
         p[i] = (p[i - 1] * ratio).min(1.0);
         if i == gamma {
             h[i] = p[i];
@@ -42,6 +60,17 @@ pub fn block_chain_into(
             h[i] = if denom <= EPS { 1.0 } else { s_i / denom };
         }
     }
+}
+
+/// [`block_chain_into_row0`] with the unmodified target matrix.
+pub fn block_chain_into(
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    p: &mut [f64],
+    h: &mut [f64],
+) {
+    block_chain_into_row0(ps, None, qs, drafts, p, h);
 }
 
 /// The coupled acceptance chain as freshly allocated vectors — the
@@ -55,11 +84,16 @@ pub fn block_chain(ps: &ProbMatrix, qs: &ProbMatrix, drafts: &[u32]) -> (Vec<f64
     (p, h)
 }
 
-/// Verify a draft block jointly (Algorithm 2).  Same signature/semantics as
-/// [`super::token::token_verify`] — a drop-in replacement, as the paper
-/// stresses.
-pub fn block_verify(
+/// [`block_verify`] with an optional position-0 target-row override:
+/// `row0 = Some(d)` verifies the block exactly as if `ps.row(0)` were
+/// `d`, without materialising the substituted matrix.  This is the
+/// multipath residual chain's workhorse ([`super::multipath_verify`]):
+/// every rejected stage folds drafter mass out of the remaining
+/// position-0 target and re-runs the block rule against the result —
+/// previously a full `(gamma + 1, V)` clone per stage.
+pub fn block_verify_row0(
     ps: &ProbMatrix,
+    row0: Option<&[f64]>,
     qs: &ProbMatrix,
     drafts: &[u32],
     etas: &[f64],
@@ -68,7 +102,9 @@ pub fn block_verify(
     let gamma = drafts.len();
     debug_assert_eq!(ps.rows, gamma + 1);
     debug_assert_eq!(qs.rows, gamma);
-    let (p, h) = block_chain(ps, qs, drafts);
+    let mut p = vec![1.0; gamma + 1];
+    let mut h = vec![1.0; gamma + 1];
+    block_chain_into_row0(ps, row0, qs, drafts, &mut p, &mut h);
     // Longest accepted sub-block: no break, keep the max accepted index.
     let mut tau = 0;
     for i in 1..=gamma {
@@ -81,7 +117,7 @@ pub fn block_verify(
     } else {
         // Eq. 3: residual ~ norm(max(p_tau * M_b - M_s, 0)).
         let mut res = vec![0.0; ps.vocab];
-        let pr = ps.row(tau);
+        let pr = ps_row(ps, row0, tau);
         let qr = qs.row(tau);
         for v in 0..ps.vocab {
             res[v] = (p[tau] * pr[v] - qr[v]).max(0.0);
@@ -91,6 +127,19 @@ pub fn block_verify(
     let mut emitted: Vec<u32> = drafts[..tau].to_vec();
     emitted.push(y as u32);
     VerifyOutcome { tau, emitted }
+}
+
+/// Verify a draft block jointly (Algorithm 2).  Same signature/semantics as
+/// [`super::token::token_verify`] — a drop-in replacement, as the paper
+/// stresses.
+pub fn block_verify(
+    ps: &ProbMatrix,
+    qs: &ProbMatrix,
+    drafts: &[u32],
+    etas: &[f64],
+    u_final: f64,
+) -> VerifyOutcome {
+    block_verify_row0(ps, None, qs, drafts, etas, u_final)
 }
 
 /// Scratch-buffer variant for the engine hot path: avoids the per-call
@@ -185,6 +234,31 @@ mod tests {
         let out = block_verify(&ps, &qs, &[0, 0], &[0.9, 0.5], 0.2);
         assert_eq!(out.tau, 2);
         assert_eq!(&out.emitted[..2], &[0, 0]);
+    }
+
+    #[test]
+    fn row0_override_matches_cloned_substitution() {
+        let ps = mat(vec![
+            vec![0.2, 0.3, 0.5],
+            vec![0.6, 0.2, 0.2],
+            vec![0.1, 0.1, 0.8],
+        ]);
+        let qs = mat(vec![vec![0.3, 0.3, 0.4], vec![0.2, 0.5, 0.3]]);
+        let drafts = [2u32, 0];
+        let d = vec![0.7, 0.2, 0.1];
+        for seed in 0..50 {
+            let mut rng = crate::verify::rng::Rng::new(seed);
+            let etas = [rng.uniform(), rng.uniform()];
+            let u = rng.uniform();
+            let mut ps_mod = ps.clone();
+            ps_mod.row_mut(0).copy_from_slice(&d);
+            let want = block_verify(&ps_mod, &qs, &drafts, &etas, u);
+            let got = block_verify_row0(&ps, Some(&d), &qs, &drafts, &etas, u);
+            assert_eq!(want, got, "seed {seed}");
+            // And with no override, the plain block rule.
+            let plain = block_verify(&ps, &qs, &drafts, &etas, u);
+            assert_eq!(plain, block_verify_row0(&ps, None, &qs, &drafts, &etas, u));
+        }
     }
 
     #[test]

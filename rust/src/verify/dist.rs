@@ -45,6 +45,18 @@ impl ProbMatrix {
         ProbMatrix { rows, vocab, data: data.iter().map(|&x| x as f64).collect() }
     }
 
+    /// Refill from an f32 slice, reusing the existing allocation — the
+    /// in-place twin of [`ProbMatrix::from_f32`], used by the persistent
+    /// multipath verify scratch ([`crate::draftset::RowViews`]) to avoid
+    /// re-allocating `K` matrices per verified row.
+    pub fn copy_from_f32(&mut self, rows: usize, vocab: usize, data: &[f32]) {
+        assert_eq!(data.len(), rows * vocab);
+        self.rows = rows;
+        self.vocab = vocab;
+        self.data.clear();
+        self.data.extend(data.iter().map(|&x| x as f64));
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.vocab..(i + 1) * self.vocab]

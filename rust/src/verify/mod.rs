@@ -14,7 +14,10 @@ pub mod multipath;
 pub mod rng;
 pub mod token;
 
-pub use block::{block_chain, block_chain_into, block_verify, BlockScratch};
+pub use block::{
+    block_chain, block_chain_into, block_chain_into_row0, block_verify, block_verify_row0,
+    BlockScratch,
+};
 pub use dist::ProbMatrix;
 pub use greedy::{greedy_verify, GreedyState};
 pub use greedy::Layer;

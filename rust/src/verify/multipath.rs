@@ -34,7 +34,7 @@
 //! `Algo::MultiPath { k: 1 }` is bit-identical to `Algo::Block`
 //! (test-enforced).
 
-use super::block::block_verify;
+use super::block::{block_verify, block_verify_row0};
 use super::dist::{normalize, ProbMatrix};
 use super::VerifyOutcome;
 
@@ -95,12 +95,19 @@ pub fn multipath_verify(
         // One stage = single-path block verification with the remaining
         // target substituted at position 0 (stage 0 substitutes D = row 0
         // itself, so it calls straight through — the k = 1 degradation).
+        // The row-0 override variant substitutes without cloning the
+        // `(gamma + 1, V)` target matrix.
         let out = if stage == 0 {
             block_verify(&ps[0], &qs[0], &drafts[0], &etas[0], u_final)
         } else {
-            let mut ps_mod = ps[stage].clone();
-            ps_mod.row_mut(0).copy_from_slice(&d);
-            block_verify(&ps_mod, &qs[stage], &drafts[stage], &etas[stage], u_final)
+            block_verify_row0(
+                &ps[stage],
+                Some(&d),
+                &qs[stage],
+                &drafts[stage],
+                &etas[stage],
+                u_final,
+            )
         };
         if out.tau >= 1 || stage == k - 1 {
             return MultipathOutcome { tau: out.tau, path: stage, emitted: out.emitted };

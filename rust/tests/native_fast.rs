@@ -1,0 +1,145 @@
+//! Determinism contracts of the native fast path (DESIGN.md §10).
+//!
+//! The tentpole perf work — blocked matmul kernel, row-parallel forward
+//! on the fixed thread pool, persistent multipath scratch — must not
+//! perturb a single output bit:
+//!
+//! 1. the blocked kernel is bit-identical to the scalar reference on a
+//!    zero-filled accumulator (same per-lane summation order);
+//! 2. a backend on the reference kernel produces bit-identical scored
+//!    distributions to one on the blocked kernel;
+//! 3. a threaded forward (`threads = N`) is bit-identical to the
+//!    sequential one (`threads = 1`), backend- and engine-level;
+//! 4. the persistent-scratch multipath path is bit-identical to the old
+//!    allocate-per-iteration path, engine-level, for both block and
+//!    multipath verification — including across consecutive batches,
+//!    where the scratch is reused dirty.
+
+use std::sync::Arc;
+
+use specd::backend::kernels::{matmul_blocked, matmul_ref};
+use specd::backend::{Backend, NativeBackend};
+use specd::config::EngineConfig;
+use specd::engine::spec::SpecEngine;
+use specd::models::vocab;
+use specd::verify::{Algo, Rng};
+
+/// Deterministic mixed-length content prompts.
+fn prompts(n: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![vocab::BOS, vocab::marker_for((i % 8) as u32)];
+            for j in 0..(4 + (i * 3) % 7) {
+                p.push(vocab::CONTENT_BASE + ((i * 37 + j * 11) % 200) as u32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// Decode every prompt through a fused engine; returns per-row generated
+/// tokens per batch (the full engine-level observable).
+fn decode(backend: Arc<NativeBackend>, algo: Algo, reqs: &[Vec<u32>], seed: u64) -> Vec<Vec<u32>> {
+    let cfg = EngineConfig { algo, gamma: 4, max_new_tokens: 12, ..Default::default() };
+    let engine = SpecEngine::new(backend, cfg).unwrap();
+    let mut out = Vec::new();
+    for rep in engine.run_prompts(reqs, seed).unwrap() {
+        for row in rep.rows {
+            out.push(row.tokens);
+        }
+    }
+    out
+}
+
+/// A deterministic prompt state at the given backend's shapes.
+fn prompt_state(be: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
+    let info = be.info();
+    let (b, l) = (info.batch, info.max_len);
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        let p = prompts(b)[bi].clone();
+        for (j, &t) in p.iter().enumerate() {
+            toks[bi * l + j] = t as i32;
+        }
+        lens[bi] = p.len() as i32;
+    }
+    (toks, lens)
+}
+
+#[test]
+fn blocked_kernel_is_bit_identical_to_scalar_reference() {
+    let mut rng = Rng::new(0xfa57);
+    // Model shapes plus awkward non-multiple-of-tile remainders.
+    for &(t, d_in, d_out) in
+        &[(1usize, 32usize, 32usize), (5, 128, 512), (9, 64, 256), (3, 64, 40), (2, 17, 23)]
+    {
+        let x: Vec<f32> = (0..t * d_in).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let mut a = vec![0.0f32; t * d_out];
+        let mut b = vec![0.0f32; t * d_out];
+        matmul_ref(&x, &w, &mut a, t, d_in, d_out);
+        matmul_blocked(&x, &w, &mut b, t, d_in, d_out);
+        assert_eq!(a, b, "kernels diverge at t={t} d_in={d_in} d_out={d_out}");
+    }
+}
+
+#[test]
+fn reference_kernel_backend_matches_blocked_backend() {
+    let blocked = NativeBackend::seeded_with_shapes(2, 32, 7).with_threads(1);
+    let reference =
+        NativeBackend::seeded_with_shapes(2, 32, 7).with_threads(1).with_reference_kernel(true);
+    let (toks, lens) = prompt_state(&blocked);
+    let mut kv_b = blocked.prefill("target", &toks, &lens).unwrap();
+    let mut kv_r = reference.prefill("target", &toks, &lens).unwrap();
+    let drafts = vec![20i32, 21, 22, 20, 21, 22];
+    let ps_b = blocked.target_score(3, &toks, &lens, &mut kv_b, &drafts).unwrap();
+    let ps_r = reference.target_score(3, &toks, &lens, &mut kv_r, &drafts).unwrap();
+    assert_eq!(ps_b, ps_r, "kernel choice must not perturb scored distributions");
+}
+
+#[test]
+fn threaded_forward_is_bit_identical_to_single_thread() {
+    let reqs = prompts(8);
+    for threads in [2usize, 4] {
+        let single = Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0xfa57).with_threads(1));
+        let pooled =
+            Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0xfa57).with_threads(threads));
+        // Backend-level: scored distributions bitwise equal.
+        let (toks, lens) = prompt_state(&single);
+        let mut kv_s = single.prefill("target", &toks, &lens).unwrap();
+        let mut kv_p = pooled.prefill("target", &toks, &lens).unwrap();
+        let drafts: Vec<i32> = (0..4 * 3).map(|i| 20 + (i % 5)).collect();
+        let ps_s = single.target_score(3, &toks, &lens, &mut kv_s, &drafts).unwrap();
+        let ps_p = pooled.target_score(3, &toks, &lens, &mut kv_p, &drafts).unwrap();
+        assert_eq!(ps_s, ps_p, "threads={threads}: scored distributions diverged");
+        // Engine-level: every generated token equal, single- and
+        // multi-path.
+        for algo in [Algo::Block, Algo::MultiPath { k: 3 }] {
+            let a = decode(single.clone(), algo, &reqs, 11);
+            let b = decode(pooled.clone(), algo, &reqs, 11);
+            assert_eq!(a, b, "threads={threads} algo={algo}: tokens diverged");
+        }
+    }
+}
+
+#[test]
+fn persistent_scratch_is_bit_identical_to_allocating_path() {
+    // Multiple consecutive batches per engine: from the second batch on,
+    // the persistent path verifies against a *dirty* reused scratch.
+    let reqs = prompts(12);
+    for algo in [Algo::Block, Algo::MultiPath { k: 2 }, Algo::MultiPath { k: 4 }] {
+        let persistent = Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0x5c8a));
+        let allocating = Arc::new(
+            NativeBackend::seeded_with_shapes(4, 64, 0x5c8a).with_persistent_scratch(false),
+        );
+        let a = decode(persistent.clone(), algo, &reqs, 23);
+        let b = decode(allocating.clone(), algo, &reqs, 23);
+        assert_eq!(a, b, "algo={algo}: persistent scratch changed decoded tokens");
+        // And a second engine run on the same backends (scratch carried
+        // over from the previous engine entirely).
+        let a2 = decode(persistent, algo, &reqs, 29);
+        let b2 = decode(allocating, algo, &reqs, 29);
+        assert_eq!(a2, b2, "algo={algo}: dirty scratch reuse changed decoded tokens");
+    }
+}
