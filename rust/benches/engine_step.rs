@@ -34,6 +34,7 @@ fn main() {
         max_new_tokens: 32,
         host_verify: !algo.fused(),
         seed: 0,
+        ..Default::default()
     };
 
     // warm up caches/allocators so the timed runs are steady

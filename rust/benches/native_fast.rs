@@ -1,28 +1,34 @@
 //! Native fast-path benchmark and CI wall-clock perf gate (DESIGN.md
-//! §10).
+//! §10/§11).
 //!
-//! Measures end-to-end engine tokens/sec on two configurations of the
-//! native backend decoding the same prompts with the same seeds:
+//! Two comparisons on the native backend decoding the same prompts with
+//! the same seeds:
 //!
-//! * **scalar reference** — the pre-fast-path configuration: scalar
-//!   matmul kernel, single-threaded forward, per-iteration multipath
-//!   scratch allocation;
-//! * **fast path** — blocked register-tiled matmul, row-parallel forward
-//!   on the fixed thread pool, persistent `(B·K)`-row multipath scratch.
+//! * **scalar reference vs fast path** (both fp32 drafts) — the PR-4
+//!   gate: blocked register-tiled matmul + row-parallel forward +
+//!   persistent multipath scratch against the pre-fast-path
+//!   configuration (scalar kernel, single thread, per-iteration scratch
+//!   allocation).  Every cell decodes bit-identical tokens, so the ratio
+//!   isolates exactly the kernel + threading + scratch delta.
+//! * **int8 vs fp32 draft** (both on the fast path) — the quantised
+//!   draft gate (DESIGN.md §11): drafter-forward throughput, end-to-end
+//!   block-mode throughput, and the acceptance-rate (tau) regression
+//!   guard.  Int8 drafting changes *which* tokens are drafted (not the
+//!   committed-token distribution — verification corrects the drift), so
+//!   these cells compare throughput and mean tau, not bits.
 //!
-//! Both are swept over token/block verification and multipath K in
-//! {1, 2, 4}; every cell decodes bit-identical tokens (the two
-//! configurations differ only in wall-clock — test-enforced by
-//! `tests/native_fast.rs`), so the throughput ratio isolates exactly the
-//! kernel + threading + scratch delta.  Results land in
-//! `BENCH_native.json` for CI to archive.  Exit code is non-zero when a
-//! perf invariant regresses:
+//! Results land in `BENCH_native.json` for CI to archive
+//! (`benches/verify_hot.rs --smoke` appends its microbench numbers to
+//! the same file).  Exit code is non-zero when a perf invariant
+//! regresses:
 //!
-//! * fast-path block-verification throughput must be at least 1.5x the
-//!   scalar reference (the tentpole's headline gate);
-//! * block-verification BE must not drop below token-level BE on the
-//!   fast path (the paper's never-worse guarantee; 0.05 finite-sample
-//!   slack).
+//! * fast-path block-verification throughput >= 1.5x the scalar
+//!   reference (PR-4 headline gate);
+//! * block-verification BE >= token-level BE on the fast path (the
+//!   paper's never-worse guarantee; 0.05 finite-sample slack);
+//! * int8 draft-forward throughput >= 1.3x the fp32 draft;
+//! * int8 end-to-end block throughput strictly above the fp32 number;
+//! * int8 mean tau >= 0.9x the fp32 mean tau (acceptance-rate guard).
 //!
 //! `--smoke` shrinks the workload for CI: `cargo bench --bench
 //! native_fast -- --smoke`.
@@ -30,29 +36,39 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use specd::backend::NativeBackend;
+use specd::backend::{Backend, NativeBackend, Precision};
 use specd::config::EngineConfig;
 use specd::engine::spec::SpecEngine;
+use specd::models::vocab;
 use specd::util::json;
 use specd::verify::Algo;
 use specd::workload::Dataset;
 
-/// One measured cell: throughput and block efficiency.
+/// One measured cell: throughput, block efficiency and mean accepted
+/// prefix length.
 struct Meas {
     tps: f64,
     be: f64,
+    tau: f64,
 }
 
 fn measure(
     backend: Arc<NativeBackend>,
     algo: Algo,
+    prec: Precision,
     prompts: &[Vec<u32>],
     max_new: usize,
     n_seeds: u64,
 ) -> anyhow::Result<Meas> {
-    let cfg = EngineConfig { algo, max_new_tokens: max_new, ..Default::default() };
+    let cfg = EngineConfig {
+        algo,
+        max_new_tokens: max_new,
+        draft_precision: prec,
+        ..Default::default()
+    };
     let engine = SpecEngine::new(backend, cfg)?;
-    // Warm-up pass (thread pool, scratch, caches), then timed seeds.
+    // Warm-up pass (thread pool, scratch, caches, quantised twins), then
+    // timed seeds.
     let _ = engine.run_prompts(&prompts[..prompts.len().min(4)], 7)?;
     let (mut toks, mut emitted, mut iters) = (0usize, 0usize, 0usize);
     let t0 = Instant::now();
@@ -66,15 +82,44 @@ fn measure(
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    Ok(Meas {
-        tps: toks as f64 / wall.max(1e-9),
-        be: emitted as f64 / iters.max(1) as f64,
-    })
+    let be = emitted as f64 / iters.max(1) as f64;
+    Ok(Meas { tps: toks as f64 / wall.max(1e-9), be, tau: (be - 1.0).max(0.0) })
+}
+
+/// Drafter-forward throughput (draft tokens/sec): repeated
+/// `draft_block` calls over a fixed prompt state — the isolated cost of
+/// the precision knob, with scoring and verification excluded.  The
+/// state is not advanced between calls, so every call redrafts the same
+/// positions deterministically.
+fn measure_draft(backend: &NativeBackend, gamma: usize, reps: usize) -> anyhow::Result<f64> {
+    let info = backend.info();
+    let (b, l) = (info.batch, info.max_len);
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        let p = [vocab::BOS, vocab::marker_for((bi % 8) as u32), 20 + bi as u32, 31, 42];
+        for (j, &t) in p.iter().enumerate() {
+            toks[bi * l + j] = t as i32;
+        }
+        lens[bi] = p.len() as i32;
+    }
+    let seeds: Vec<i32> = (0..b as i32).map(|i| 17 + 5 * i).collect();
+    let mut kv = backend.prefill("xxs", &toks, &lens)?;
+    // Warm-up (spawns the pool, builds the quantised twin if any).
+    let _ = backend.draft_block("xxs", gamma, &toks, &lens, &mut kv, &seeds)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let out = backend.draft_block("xxs", gamma, &toks, &lens, &mut kv, &seeds)?;
+        std::hint::black_box(out.drafts.len());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok((reps * b * gamma) as f64 / wall.max(1e-9))
 }
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let (n_prompts, max_new, n_seeds) = if smoke { (6, 16, 1u64) } else { (18, 32, 2u64) };
+    let (n_prompts, max_new, n_seeds, draft_reps) =
+        if smoke { (6, 16, 1u64, 60) } else { (18, 32, 2u64, 300) };
     let datasets = Dataset::load_or_synthetic(None)?;
     let mut prompts: Vec<Vec<u32>> = Vec::new();
     for name in ["gsm8k", "wmt", "xsum"] {
@@ -88,12 +133,15 @@ fn main() -> anyhow::Result<()> {
         NativeBackend::seeded(seed)
             .with_threads(1)
             .with_reference_kernel(true)
-            .with_persistent_scratch(false),
+            .with_persistent_scratch(false)
+            .with_draft_precision(Precision::Fp32),
     );
-    let fast = Arc::new(NativeBackend::seeded(seed));
-    let threads = fast.threads();
+    let fast_fp32 = Arc::new(NativeBackend::seeded(seed).with_draft_precision(Precision::Fp32));
+    let fast_int8 = Arc::new(NativeBackend::seeded(seed).with_draft_precision(Precision::Int8));
+    let threads = fast_fp32.threads();
     println!("native_fast: fast path runs {threads} forward threads");
 
+    // ---- PR-4 cells: scalar reference vs fast path, both fp32 -----------
     let algos = [
         Algo::Token,
         Algo::Block,
@@ -104,8 +152,8 @@ fn main() -> anyhow::Result<()> {
     let mut ref_m: Vec<Meas> = Vec::new();
     let mut fast_m: Vec<Meas> = Vec::new();
     for algo in algos {
-        let r = measure(reference.clone(), algo, &prompts, max_new, n_seeds)?;
-        let f = measure(fast.clone(), algo, &prompts, max_new, n_seeds)?;
+        let r = measure(reference.clone(), algo, Precision::Fp32, &prompts, max_new, n_seeds)?;
+        let f = measure(fast_fp32.clone(), algo, Precision::Fp32, &prompts, max_new, n_seeds)?;
         let label = algo.to_string();
         let speedup = f.tps / r.tps.max(1e-9);
         println!(
@@ -117,6 +165,24 @@ fn main() -> anyhow::Result<()> {
         fast_m.push(f);
     }
     let block_speedup = fast_m[1].tps / ref_m[1].tps.max(1e-9);
+
+    // ---- int8 draft cells: fast path, fp32 vs int8 drafter --------------
+    let draft_fp32_tps = measure_draft(&fast_fp32, 8, draft_reps)?;
+    let draft_int8_tps = measure_draft(&fast_int8, 8, draft_reps)?;
+    let int8_draft_speedup = draft_int8_tps / draft_fp32_tps.max(1e-9);
+    println!(
+        "native/draft_only    fp32 {draft_fp32_tps:>9.1} tok/s   int8 {draft_int8_tps:>9.1} \
+         tok/s   {int8_draft_speedup:>5.2}x"
+    );
+    let block_fp32 = &fast_m[1];
+    let block_int8 =
+        measure(fast_int8.clone(), Algo::Block, Precision::Int8, &prompts, max_new, n_seeds)?;
+    let int8_block_speedup = block_int8.tps / block_fp32.tps.max(1e-9);
+    println!(
+        "native/block_int8    fp32 {:>9.1} tok/s   int8 {:>9.1} tok/s   \
+         {int8_block_speedup:>5.2}x   tau {:.3} vs {:.3}",
+        block_fp32.tps, block_int8.tps, block_int8.tau, block_fp32.tau
+    );
 
     // ---- write BENCH_native.json ----------------------------------------
     let report = json::obj(vec![
@@ -135,6 +201,13 @@ fn main() -> anyhow::Result<()> {
         ("fast_token_be", json::num(fast_m[0].be)),
         ("fast_block_be", json::num(fast_m[1].be)),
         ("block_speedup", json::num(block_speedup)),
+        ("draft_fp32_tps", json::num(draft_fp32_tps)),
+        ("draft_int8_tps", json::num(draft_int8_tps)),
+        ("int8_draft_speedup", json::num(int8_draft_speedup)),
+        ("int8_block_tps", json::num(block_int8.tps)),
+        ("int8_block_speedup", json::num(int8_block_speedup)),
+        ("tau_fp32", json::num(block_fp32.tau)),
+        ("tau_int8", json::num(block_int8.tau)),
     ]);
     std::fs::write("BENCH_native.json", json::to_string(&report))?;
     println!("wrote BENCH_native.json");
@@ -155,12 +228,36 @@ fn main() -> anyhow::Result<()> {
         );
         failed = true;
     }
+    if int8_draft_speedup < 1.3 {
+        eprintln!(
+            "PERF REGRESSION: int8 draft forward is only {int8_draft_speedup:.2}x the fp32 \
+             draft (gate: >= 1.3x)"
+        );
+        failed = true;
+    }
+    if int8_block_speedup <= 1.0 {
+        eprintln!(
+            "PERF REGRESSION: int8-draft end-to-end block throughput {:.1} tok/s is not \
+             above the fp32 number {:.1} tok/s",
+            block_int8.tps, block_fp32.tps
+        );
+        failed = true;
+    }
+    if block_int8.tau < 0.9 * block_fp32.tau {
+        eprintln!(
+            "ACCEPTANCE REGRESSION: int8 mean tau {:.3} fell below 0.9x the fp32 mean tau \
+             {:.3}",
+            block_int8.tau, block_fp32.tau
+        );
+        failed = true;
+    }
     if failed {
         std::process::exit(1);
     }
     println!(
-        "perf gates passed: fast block {block_speedup:.2}x >= 1.5x scalar reference, \
-         block BE >= token BE"
+        "perf gates passed: fast block {block_speedup:.2}x >= 1.5x scalar reference, block \
+         BE >= token BE, int8 draft {int8_draft_speedup:.2}x >= 1.3x fp32, int8 e2e block \
+         {int8_block_speedup:.2}x > 1x, int8 tau within 0.9x of fp32"
     );
     Ok(())
 }

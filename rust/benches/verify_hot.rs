@@ -1,47 +1,76 @@
 //! L3 hot-path microbenchmarks: the three verification algorithms at the
 //! production shape (gamma=8, V=256), plus the allocation-free scratch
 //! variant used by the host-verify engine (EXPERIMENTS.md §Perf).
+//!
+//! Runs in the CI `perf-native` job with `--smoke` (fewer reps) and
+//! **appends** its per-op nanoseconds to `BENCH_native.json` under a
+//! `"verify_hot"` object — merging with whatever `benches/native_fast.rs`
+//! already wrote, so the archived perf-trajectory file carries both the
+//! wall-clock gates and the verify-kernel microbench in one artifact.
 
 use specd::bench::Bench;
+use specd::util::json;
 use specd::util::proptest::rand_instance;
 use specd::verify::{self, Algo, BlockScratch, GreedyState, Rng};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, samples, n_instances) = if smoke { (1, 5, 24) } else { (3, 15, 64) };
     let mut rng = Rng::new(42);
     let gamma = 8;
     let vocab = 256;
     let instances: Vec<_> =
-        (0..64).map(|_| rand_instance(&mut rng, gamma, vocab, 0.8)).collect();
+        (0..n_instances).map(|_| rand_instance(&mut rng, gamma, vocab, 0.8)).collect();
     let etas: Vec<f64> = (0..gamma).map(|_| rng.uniform()).collect();
-    let b = Bench::new(3, 15);
+    let b = Bench::new(warmup, samples);
+    let mut results: Vec<(String, f64)> = Vec::new();
 
     for algo in [Algo::Token, Algo::Block, Algo::Greedy] {
-        b.run_n(&format!("verify/{algo}/g8_v256"), instances.len(), || {
+        let s = b.run_n(&format!("verify/{algo}/g8_v256"), instances.len(), || {
             for (ps, qs, drafts) in &instances {
                 let out = verify::verify(algo, ps, qs, drafts, &etas, 0.37);
                 std::hint::black_box(out.tau);
             }
         });
+        results.push((format!("{algo}_ns"), s.mean.as_nanos() as f64));
     }
 
     // scratch (allocation-free) block verification
     let mut scratch = BlockScratch::new(gamma, vocab);
     let mut emitted = Vec::with_capacity(gamma + 1);
-    b.run_n("verify/block_scratch/g8_v256", instances.len(), || {
+    let s = b.run_n("verify/block_scratch/g8_v256", instances.len(), || {
         for (ps, qs, drafts) in &instances {
             let tau = scratch.verify(ps, qs, drafts, &etas, 0.37, &mut emitted);
             std::hint::black_box(tau);
         }
     });
+    results.push(("block_scratch_ns".into(), s.mean.as_nanos() as f64));
 
     // greedy with an active window layer (worst-case composite rebuild)
     let st = GreedyState {
         layers: vec![specd::verify::Layer { remaining: 4, ratio: 0.7 }],
     };
-    b.run_n("verify/greedy_windowed/g8_v256", instances.len(), || {
+    let s = b.run_n("verify/greedy_windowed/g8_v256", instances.len(), || {
         for (ps, qs, drafts) in &instances {
             let (out, _) = verify::greedy_verify(ps, qs, drafts, &etas, 0.37, &st);
             std::hint::black_box(out.tau);
         }
     });
+    results.push(("greedy_windowed_ns".into(), s.mean.as_nanos() as f64));
+
+    // ---- append to BENCH_native.json -------------------------------------
+    // Merge into the existing report (native_fast writes it first in CI);
+    // start a fresh object when the file is absent or unparsable.
+    let mut top = std::fs::read_to_string("BENCH_native.json")
+        .ok()
+        .and_then(|raw| json::parse(&raw).ok())
+        .and_then(|v| v.as_obj().cloned())
+        .unwrap_or_default();
+    let hot = json::obj(
+        results.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect::<Vec<_>>(),
+    );
+    top.insert("verify_hot".into(), hot);
+    std::fs::write("BENCH_native.json", json::to_string(&json::Value::Obj(top)))
+        .expect("writing BENCH_native.json");
+    println!("appended verify_hot numbers to BENCH_native.json");
 }

@@ -117,6 +117,93 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
+/// Int8-weight GEMM: `out (t, d_out) += (x (t, d_in) @ dequant(q) (d_in,
+/// d_out))` where `dequant(q)[i][o] = q[i*d_out+o] as f32 * scale[o]`
+/// (the per-output-column symmetric layout of
+/// [`super::quant::QuantMatrix`]).  Mirrors [`matmul_blocked`]'s
+/// register-tile structure — [`TILE`] output lanes accumulate the raw
+/// `x · q` partial sums in registers across the whole `d_in` loop, and
+/// the per-column scale is applied **once** per output element at the
+/// end (factoring `scale[o]` out of the reduction), so the fp32 work per
+/// element is one convert + one fma while the weight traffic is a
+/// quarter of the fp32 kernel's.  Runs on the same `backend::pool`
+/// row-parallel forwards as the fp32 kernels; like them it is a pure
+/// function of its inputs, so results are independent of threading.
+pub fn matmul_q8_acc(
+    x: &[f32],
+    q: &[i8],
+    scale: &[f32],
+    out: &mut [f32],
+    t: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(x.len(), t * d_in);
+    debug_assert_eq!(q.len(), d_in * d_out);
+    debug_assert_eq!(scale.len(), d_out);
+    debug_assert_eq!(out.len(), t * d_out);
+    for ti in 0..t {
+        let xrow = &x[ti * d_in..(ti + 1) * d_in];
+        let orow = &mut out[ti * d_out..(ti + 1) * d_out];
+        let mut o0 = 0;
+        while o0 + TILE <= d_out {
+            let mut acc = [0.0f32; TILE];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let qtile = &q[i * d_out + o0..i * d_out + o0 + TILE];
+                for (a, &qv) in acc.iter_mut().zip(qtile.iter()) {
+                    *a += xv * qv as f32;
+                }
+            }
+            let stile = &scale[o0..o0 + TILE];
+            for ((o, &a), &s) in orow[o0..o0 + TILE].iter_mut().zip(acc.iter()).zip(stile) {
+                *o += a * s;
+            }
+            o0 += TILE;
+        }
+        if o0 < d_out {
+            // Remainder lanes: same accumulate-then-scale order.
+            let mut acc = [0.0f32; TILE];
+            let rem = d_out - o0;
+            for (i, &xv) in xrow.iter().enumerate() {
+                let qrow = &q[i * d_out + o0..(i + 1) * d_out];
+                for (a, &qv) in acc[..rem].iter_mut().zip(qrow.iter()) {
+                    *a += xv * qv as f32;
+                }
+            }
+            for ((o, &a), &s) in
+                orow[o0..].iter_mut().zip(acc[..rem].iter()).zip(scale[o0..].iter())
+            {
+                *o += a * s;
+            }
+        }
+    }
+}
+
+/// Int8 dot product against an fp32 vector, mirroring [`dot_f32`]'s
+/// 8-lane unrolled structure (tail then lanes 0..8 combine order — same
+/// determinism contract).  The caller multiplies the result by the row's
+/// dequantisation scale (factored out of the reduction).
+#[inline]
+pub fn dot_q8(a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cq = q.chunks_exact(8);
+    for (xa, xq) in ca.by_ref().zip(cq.by_ref()) {
+        for ((l, &va), &vq) in acc.iter_mut().zip(xa.iter()).zip(xq.iter()) {
+            *l += va * vq as f32;
+        }
+    }
+    let mut sum = 0.0f32;
+    for (&va, &vq) in ca.remainder().iter().zip(cq.remainder().iter()) {
+        sum += va * vq as f32;
+    }
+    for &l in &acc {
+        sum += l;
+    }
+    sum
+}
+
 /// Which matmul kernel a forward pass runs with — the only thing the
 /// backend's `reference_kernel` benchmarking switch toggles (everything
 /// else in the forward is shared, so the `native_fast` bench isolates
@@ -185,6 +272,51 @@ mod tests {
         let mut out_b = vec![0.0f32; 2];
         matmul_blocked(&x, &w, &mut out_b, 1, 3, 2);
         assert_eq!(out_b, vec![4.0, 40.0]);
+    }
+
+    #[test]
+    fn q8_matmul_matches_scalar_dequantised_reference() {
+        let mut rng = Rng::new(0x0b8);
+        for &(t, d_in, d_out) in
+            &[(1usize, 32usize, 32usize), (5, 64, 256), (3, 64, 40), (2, 17, 23)]
+        {
+            let x = rand_vec(&mut rng, t * d_in);
+            let q: Vec<i8> =
+                (0..d_in * d_out).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
+            let scale: Vec<f32> =
+                (0..d_out).map(|_| (rng.uniform() * 0.02) as f32).collect();
+            let mut got = vec![0.0f32; t * d_out];
+            matmul_q8_acc(&x, &q, &scale, &mut got, t, d_in, d_out);
+            // Scalar reference with identical accumulate-then-scale order.
+            let mut want = vec![0.0f32; t * d_out];
+            for ti in 0..t {
+                for o in 0..d_out {
+                    let mut acc = 0.0f32;
+                    for i in 0..d_in {
+                        acc += x[ti * d_in + i] * q[i * d_out + o] as f32;
+                    }
+                    want[ti * d_out + o] += acc * scale[o];
+                }
+            }
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!(
+                    (g - w).abs() <= w.abs().max(1.0) * 1e-5,
+                    "t={t} d_in={d_in} d_out={d_out}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_q8_matches_naive_sum() {
+        let mut rng = Rng::new(0x0d8);
+        for n in [1usize, 7, 8, 9, 31, 64, 100] {
+            let a = rand_vec(&mut rng, n);
+            let q: Vec<i8> = (0..n).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
+            let got = dot_q8(&a, &q) as f64;
+            let want: f64 = a.iter().zip(q.iter()).map(|(&x, &v)| (x as f64) * v as f64).sum();
+            assert!((got - want).abs() < 1e-2, "n={n}: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod pool;
+pub mod quant;
 
 use std::path::PathBuf;
 
@@ -33,6 +34,7 @@ use crate::verify::Algo;
 pub use native::{NativeBackend, NativeKv};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use quant::Precision;
 
 /// Static facts about a backend instance: the fixed serving shapes the
 /// engine lays batches out against (what the PJRT path reads from
@@ -88,6 +90,24 @@ pub struct SpecIterOut {
     /// Per-row done flag (EOS emitted within the accepted prefix, or the
     /// sequence ring is out of room), `(B,)`.
     pub done: Vec<i32>,
+    /// Wall-clock microseconds the iteration spent in the draft forward
+    /// pass (all paths), for the `draft_forward_us` metric — how the
+    /// quantised-draft win shows up in `/metrics`.  0 = not instrumented
+    /// (a fully fused device program cannot separate its draft phase).
+    pub draft_us: u64,
+}
+
+/// One row mapping of a batched admission prefill
+/// ([`Backend::prefill_rows`]): splice the `len` leading cache positions
+/// of scratch-batch row `src_row` over live-cache row `dst_slot`.
+#[derive(Clone, Copy, Debug)]
+pub struct RowSplice {
+    /// Row of the prefilled scratch batch holding the new prompt.
+    pub src_row: usize,
+    /// Live-cache slot the prompt is being admitted into.
+    pub dst_slot: usize,
+    /// Prompt length: cache positions `0..len` are copied.
+    pub len: usize,
 }
 
 /// Output of one drafting call on the host-verify path.
@@ -135,18 +155,50 @@ pub trait Backend: Send + Sync + 'static {
     fn info(&self) -> &BackendInfo;
 
     /// Warm-up hook, called by engine constructors with the configured
-    /// algorithm and drafter so a backend can pre-size internal scratch
-    /// before the first iteration (the native backend pre-allocates its
-    /// persistent `(B·K)`-row multipath KV scratch here, DESIGN.md §10).
-    /// Must be cheap and idempotent.  Default: no-op.
-    fn prepare(&self, algo: Algo, drafter: &str) -> anyhow::Result<()> {
-        let _ = (algo, drafter);
+    /// algorithm, drafter and draft precision so a backend can pre-size
+    /// internal scratch before the first iteration (the native backend
+    /// pre-allocates its persistent `(B·K)`-row multipath KV scratch and
+    /// pre-quantises the drafter's int8 twin here, DESIGN.md §10/§11).
+    /// Must be cheap after the first call and idempotent.  Backends
+    /// without a quantised path ignore `draft_precision` and serve the
+    /// draft in fp32 — equally lossless, just slower (the PJRT quant path
+    /// is a ROADMAP follow-up).  Default: no-op.
+    fn prepare(&self, algo: Algo, drafter: &str, draft_precision: Precision) -> anyhow::Result<()> {
+        let _ = (algo, drafter, draft_precision);
         Ok(())
     }
 
     /// Ingest a padded prompt batch through `model` ("target" or a drafter
     /// name), returning its KV cache with rows `0..L-1` written.
     fn prefill(&self, model: &str, tokens: &[i32], length: &[i32]) -> anyhow::Result<Self::Kv>;
+
+    /// Batched admission prefill (DESIGN.md §11.3): ingest a padded
+    /// prompt batch (same `(B, L)` shapes as [`Backend::prefill`]) and
+    /// splice each mapping's `len` leading cache positions from scratch
+    /// row `src_row` directly over live-cache slot `dst_slot`.  This is
+    /// how the continuous batcher amortises admission cost — every
+    /// admission available in one scheduler tick rides a **single**
+    /// forward pass instead of one prefill per row.  Because batch rows
+    /// are independent (per-row causal attention), the spliced rows are
+    /// bit-identical to what a per-row `prefill` + [`Backend::kv_splice`]
+    /// would produce (test-enforced).  The default implementation is
+    /// exactly that fallback; the native backend overrides it to run the
+    /// forward in a pooled scratch cache, so no KV allocation happens per
+    /// admission.
+    fn prefill_rows(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        length: &[i32],
+        dst: &mut Self::Kv,
+        splices: &[RowSplice],
+    ) -> anyhow::Result<()> {
+        let kv = self.prefill(model, tokens, length)?;
+        for s in splices {
+            self.kv_splice(model, dst, s.dst_slot, &kv, s.src_row, s.len)?;
+        }
+        Ok(())
+    }
 
     /// One fused SpecDec iteration (paper Algorithm 3): draft `gamma`
     /// tokens with `drafter`, score with the target, verify with `algo`,

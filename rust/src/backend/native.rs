@@ -20,13 +20,16 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Mutex, OnceLock};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{anyhow, Context};
 
-use super::kernels::{dot_f32, MatKernel};
+use super::kernels::{dot_f32, dot_q8, matmul_q8_acc, MatKernel};
 use super::pool::{ScopedJob, ThreadPool};
-use super::{Backend, BackendInfo, DraftOut, SpecIterOut, StepOut};
+use super::quant::{Precision, QuantLayer, QuantMatrix, QuantModel, QuantRows};
+use super::{Backend, BackendInfo, DraftOut, RowSplice, SpecIterOut, StepOut};
 use crate::draftset::{DraftSet, RowViews};
 use crate::models::{self, vocab, ModelDims};
 use crate::runtime::Manifest;
@@ -94,6 +97,32 @@ pub struct NativeModel {
     /// hermetic generations stay in content space, mirroring trained
     /// behaviour.
     control_logit_bias: f32,
+}
+
+impl NativeModel {
+    /// Build the int8 quantised twin this model's draft forwards run with
+    /// under [`Precision::Int8`] (DESIGN.md §11.1): every weight matrix
+    /// per-output-column, the tied embedding per token row.  Layer norms,
+    /// the position table and the control-token bias stay fp32.
+    fn quantise(&self) -> QuantModel {
+        let d = self.dims.d_model;
+        let f = self.dims.d_ff();
+        QuantModel {
+            embed: QuantRows::quantise(&self.embed, self.dims.vocab_size, d),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| QuantLayer {
+                    wq: QuantMatrix::quantise(&l.wq, d, d),
+                    wk: QuantMatrix::quantise(&l.wk, d, d),
+                    wv: QuantMatrix::quantise(&l.wv, d, d),
+                    wo: QuantMatrix::quantise(&l.wo, d, d),
+                    w1: QuantMatrix::quantise(&l.w1, d, f),
+                    w2: QuantMatrix::quantise(&l.w2, f, d),
+                })
+                .collect(),
+        }
+    }
 }
 
 /// KV cache for one model over one batch: `(B, n_layers, L, H, hd)` flat.
@@ -252,16 +281,42 @@ struct RowSlot<'a> {
     start: i32,
 }
 
+/// `out += x @ w`, routed through the int8 kernel when the layer runs
+/// quantised and the configured fp32 kernel otherwise — the single
+/// dispatch point of the draft-precision knob inside a forward.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn matmul_any(
+    kernel: MatKernel,
+    qm: Option<&QuantMatrix>,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    t: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    match qm {
+        Some(qm) => matmul_q8_acc(x, &qm.q, &qm.scale, out, t, d_in, d_out),
+        None => kernel.matmul_acc(x, w, out, t, d_in, d_out),
+    }
+}
+
 /// Forward `t` tokens of one row through `model`, mirroring the per-row
 /// body of `model.py::forward_block`: embeds, runs every transformer
 /// layer (rewriting the row's cache positions `ws..ws+t`), and — when
 /// the slot carries a probs slice — applies the final norm + tied
-/// unembedding + softmax.  Pure function of `(model, slot, t, l)`; the
+/// unembedding + softmax.  With `quant` set, every weight matrix and the
+/// tied embedding (lookup *and* unembedding — the same int8 table both
+/// ways, so the row runs one well-defined int8 model, DESIGN.md §11)
+/// come from the quantised twin; activations, layer norms and positions
+/// stay fp32.  Pure function of `(model, quant, slot, t, l)`; the
 /// scratch is write-before-read throughout, so results are independent
 /// of which thread runs the row and of whatever a previous row left in
 /// the buffers (the threading determinism contract).
 fn forward_row(
     model: &NativeModel,
+    quant: Option<&QuantModel>,
     kernel: MatKernel,
     slot: RowSlot<'_>,
     t: usize,
@@ -280,18 +335,29 @@ fn forward_row(
     for j in 0..t {
         let tok = (toks[j].max(0) as usize).min(vcb - 1);
         let p = (start + j).min(l - 1);
-        for di in 0..d {
-            s.x[j * d + di] = model.embed[tok * d + di] + model.pos[p * d + di];
+        match quant {
+            None => {
+                for di in 0..d {
+                    s.x[j * d + di] = model.embed[tok * d + di] + model.pos[p * d + di];
+                }
+            }
+            Some(qm) => {
+                let (qrow, qs) = qm.embed.row(tok);
+                for di in 0..d {
+                    s.x[j * d + di] = qrow[di] as f32 * qs + model.pos[p * d + di];
+                }
+            }
         }
     }
     for (li, layer) in model.layers.iter().enumerate() {
+        let ql = quant.map(|qm| &qm.layers[li]);
         layer.ln1.apply(&s.x, &mut s.y, d);
         s.q.iter_mut().for_each(|z| *z = 0.0);
         s.kx.iter_mut().for_each(|z| *z = 0.0);
         s.vx.iter_mut().for_each(|z| *z = 0.0);
-        kernel.matmul_acc(&s.y, &layer.wq, &mut s.q, t, d, d);
-        kernel.matmul_acc(&s.y, &layer.wk, &mut s.kx, t, d, d);
-        kernel.matmul_acc(&s.y, &layer.wv, &mut s.vx, t, d, d);
+        matmul_any(kernel, ql.map(|q| &q.wq), &s.y, &layer.wq, &mut s.q, t, d, d);
+        matmul_any(kernel, ql.map(|q| &q.wk), &s.y, &layer.wk, &mut s.kx, t, d, d);
+        matmul_any(kernel, ql.map(|q| &q.wv), &s.y, &layer.wv, &mut s.vx, t, d, d);
         // Write the new K/V rows into the cache at ws..ws+t.
         for j in 0..t {
             let row = (li * l + ws + j) * hhd;
@@ -330,17 +396,17 @@ fn forward_row(
         }
         // x += o @ wo
         s.y.iter_mut().for_each(|z| *z = 0.0);
-        kernel.matmul_acc(&s.o, &layer.wo, &mut s.y, t, d, d);
+        matmul_any(kernel, ql.map(|q| &q.wo), &s.o, &layer.wo, &mut s.y, t, d, d);
         for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
             *xv += *yv;
         }
         // MLP: x += gelu(ln2(x) @ w1) @ w2
         layer.ln2.apply(&s.x, &mut s.y, d);
         s.ff.iter_mut().for_each(|z| *z = 0.0);
-        kernel.matmul_acc(&s.y, &layer.w1, &mut s.ff, t, d, dims.d_ff());
+        matmul_any(kernel, ql.map(|q| &q.w1), &s.y, &layer.w1, &mut s.ff, t, d, dims.d_ff());
         s.ff.iter_mut().for_each(|z| *z = gelu(*z));
         s.y.iter_mut().for_each(|z| *z = 0.0);
-        kernel.matmul_acc(&s.ff, &layer.w2, &mut s.y, t, dims.d_ff(), d);
+        matmul_any(kernel, ql.map(|q| &q.w2), &s.ff, &layer.w2, &mut s.y, t, dims.d_ff(), d);
         for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
             *xv += *yv;
         }
@@ -352,7 +418,13 @@ fn forward_row(
         let xrow = &s.y[j * d..(j + 1) * d];
         let prow = &mut probs[j * vcb..(j + 1) * vcb];
         for (tok, pv) in prow.iter_mut().enumerate() {
-            let mut dot = dot_f32(xrow, &model.embed[tok * d..(tok + 1) * d]);
+            let mut dot = match quant {
+                None => dot_f32(xrow, &model.embed[tok * d..(tok + 1) * d]),
+                Some(qm) => {
+                    let (qrow, qs) = qm.embed.row(tok);
+                    dot_q8(xrow, qrow) * qs
+                }
+            };
             if (tok as u32) < vocab::CONTENT_BASE {
                 dot += model.control_logit_bias;
             }
@@ -590,7 +662,19 @@ pub struct NativeBackend {
     /// Entries are taken out for the duration of a multipath call (so
     /// concurrent engines never alias one) and returned afterwards; the
     /// per-key stack holds one cache per concurrently-active engine.
+    /// Batched admission prefills ([`Backend::prefill_rows`]) draw their
+    /// `(B,)`-row forward scratch from the same pool.
     scratch: Mutex<HashMap<(String, usize), Vec<NativeKv>>>,
+    /// Draft-model inference precision ([`Precision`] as u8): fp32, or
+    /// the int8 quantised-weight path (DESIGN.md §11).  Backend-wide —
+    /// set at construction (env `SPECD_DRAFT_PRECISION`, default int8),
+    /// overridden by [`NativeBackend::with_draft_precision`] or the
+    /// engine's `draft_precision` config via [`Backend::prepare`].  The
+    /// target model always runs fp32.
+    draft_precision: AtomicU8,
+    /// Quantise-once cache of int8 model twins, keyed by model name —
+    /// the same keyed-pool idiom as `scratch`.
+    quant: Mutex<HashMap<String, Arc<QuantModel>>>,
 }
 
 /// Forward-pass thread count default: `SPECD_NATIVE_THREADS` when set,
@@ -615,6 +699,8 @@ impl NativeBackend {
             reference_kernel: false,
             persistent_scratch: true,
             scratch: Mutex::new(HashMap::new()),
+            draft_precision: AtomicU8::new(Precision::from_env_or_default() as u8),
+            quant: Mutex::new(HashMap::new()),
         }
     }
 
@@ -701,6 +787,39 @@ impl NativeBackend {
     pub fn with_persistent_scratch(mut self, on: bool) -> Self {
         self.persistent_scratch = on;
         self
+    }
+
+    /// Set the draft-model inference precision (fp32, or the int8
+    /// quantised-weight path — the default).  Builder form of the knob
+    /// [`Backend::prepare`] threads through from the engine config.
+    pub fn with_draft_precision(self, p: Precision) -> Self {
+        self.set_draft_precision(p);
+        self
+    }
+
+    /// Current draft-model precision.
+    pub fn draft_precision(&self) -> Precision {
+        match self.draft_precision.load(Ordering::Relaxed) {
+            0 => Precision::Fp32,
+            _ => Precision::Int8,
+        }
+    }
+
+    fn set_draft_precision(&self, p: Precision) {
+        self.draft_precision.store(p as u8, Ordering::Relaxed);
+    }
+
+    /// The quantised twin a *drafter* forward runs with, or `None` when
+    /// the model is the target (never quantised — its distributions
+    /// define the output law) or the backend runs fp32 drafts.  Twins are
+    /// built once per model and cached (`quant`, keyed by name).
+    fn draft_quant(&self, name: &str) -> Option<Arc<QuantModel>> {
+        if name == "target" || self.draft_precision() == Precision::Fp32 {
+            return None;
+        }
+        let model = self.models.get(name)?;
+        let mut cache = self.quant.lock().unwrap();
+        Some(cache.entry(name.to_string()).or_insert_with(|| Arc::new(model.quantise())).clone())
     }
 
     /// Configured forward-pass thread count.
@@ -809,6 +928,7 @@ impl NativeBackend {
     fn forward_block(
         &self,
         model: &NativeModel,
+        quant: Option<&QuantModel>,
         kv: &mut NativeKv,
         tokens_t: &[i32],
         t: usize,
@@ -850,7 +970,7 @@ impl NativeBackend {
         if n_threads == 1 {
             let mut scratch = RowScratch::new(dims, t, l);
             for slot in slots {
-                forward_row(model, kernel, slot, t, l, &mut scratch);
+                forward_row(model, quant, kernel, slot, t, l, &mut scratch);
             }
         } else {
             let chunk = rows.div_ceil(n_threads);
@@ -864,13 +984,45 @@ impl NativeBackend {
                 jobs.push(Box::new(move || {
                     let mut scratch = RowScratch::new(dims, t, l);
                     for slot in group {
-                        forward_row(model, kernel, slot, t, l, &mut scratch);
+                        forward_row(model, quant, kernel, slot, t, l, &mut scratch);
                     }
                 }));
             }
             self.pool().scope(jobs);
         }
         probs
+    }
+
+    /// Shared prefill forward: ingest a padded `(B, L)` prompt batch into
+    /// `kv` (a fresh cache for [`Backend::prefill`], a pooled scratch for
+    /// [`Backend::prefill_rows`]), at the drafter's configured precision
+    /// when `name` is a drafter.  Only positions `0..len-2` of a row are
+    /// ever attended before the decode loop rewrites the rest, so
+    /// forwarding the longest prompt is enough (the PJRT programs forward
+    /// the whole fixed-shape ring; here we can spare the quadratic
+    /// attention over PAD).
+    fn prefill_into(
+        &self,
+        m: &NativeModel,
+        name: &str,
+        kv: &mut NativeKv,
+        tokens: &[i32],
+        length: &[i32],
+    ) {
+        let (b, l) = (self.info.batch, self.info.max_len);
+        let t = length
+            .iter()
+            .map(|&x| x.max(1) as usize)
+            .max()
+            .unwrap_or(1)
+            .min(l);
+        let mut tok_t = vec![vocab::PAD as i32; b * t];
+        for bi in 0..b {
+            tok_t[bi * t..(bi + 1) * t].copy_from_slice(&tokens[bi * l..bi * l + t]);
+        }
+        let start = vec![0i32; b];
+        let quant = self.draft_quant(name);
+        let _ = self.forward_block(m, quant.as_deref(), kv, &tok_t, t, &start, false);
     }
 
     /// Pending token per row: `tokens[b][length[b] - 1]` (clamped).
@@ -887,9 +1039,11 @@ impl NativeBackend {
     /// carries (`B` serving rows, or `B * K` flattened path rows on the
     /// multipath scratch): `gamma` autoregressive steps from the per-row
     /// pending token `cur`, each row sampling from its own `rngs` stream.
+    #[allow(clippy::too_many_arguments)]
     fn draft_scan_flat(
         &self,
         model: &NativeModel,
+        quant: Option<&QuantModel>,
         kv: &mut NativeKv,
         mut cur: Vec<i32>,
         start0: &[i32],
@@ -904,7 +1058,7 @@ impl NativeBackend {
         let mut qs = vec![0.0f32; rows * gamma * vcb];
         for j in 0..gamma {
             let start: Vec<i32> = start0.iter().map(|&s| s + j as i32).collect();
-            let probs = self.forward_block(model, kv, &cur, 1, &start, true);
+            let probs = self.forward_block(model, quant, kv, &cur, 1, &start, true);
             for r in 0..rows {
                 let prow = &probs[r * vcb..(r + 1) * vcb];
                 qs[(r * gamma + j) * vcb..(r * gamma + j + 1) * vcb].copy_from_slice(prow);
@@ -920,9 +1074,12 @@ impl NativeBackend {
     /// `gamma` autoregressive draft steps (`model.py::draft_scan`).  Row
     /// `b` samples from its own stream keyed on `seeds[b]` alone, so a
     /// row's draft trajectory is independent of its slot and neighbours.
+    /// Runs the drafter at the backend's configured draft precision.
+    #[allow(clippy::too_many_arguments)]
     fn draft_scan(
         &self,
         model: &NativeModel,
+        quant: Option<&QuantModel>,
         kv: &mut NativeKv,
         tokens: &[i32],
         length: &[i32],
@@ -933,7 +1090,7 @@ impl NativeBackend {
             seeds.iter().map(|&s| Rng::new(seed64(s) ^ DOM_DRAFT)).collect();
         let cur = self.gather_pending(tokens, length);
         let start0: Vec<i32> = length.iter().map(|&len| len - 1).collect();
-        self.draft_scan_flat(model, kv, cur, &start0, gamma, &mut rngs)
+        self.draft_scan_flat(model, quant, kv, cur, &start0, gamma, &mut rngs)
     }
 
     /// Per-row seed count must match the serving batch.
@@ -968,7 +1125,7 @@ impl NativeBackend {
                 .copy_from_slice(&drafts[bi * gamma..(bi + 1) * gamma]);
         }
         let start: Vec<i32> = length.iter().map(|&len| len - 1).collect();
-        self.forward_block(model, kv, &inp, gamma + 1, &start, true)
+        self.forward_block(model, None, kv, &inp, gamma + 1, &start, true)
     }
 
     // ------------------------------------------------------------------
@@ -1037,7 +1194,16 @@ impl NativeBackend {
                 rngs.push(path_rng(seeds[bi], DOM_DRAFT, path));
             }
         }
-        let (drafts, qs) = self.draft_scan_flat(m, &mut scratch, cur, &start0, gamma, &mut rngs);
+        let quant = self.draft_quant(drafter);
+        let (drafts, qs) = self.draft_scan_flat(
+            m,
+            quant.as_deref(),
+            &mut scratch,
+            cur,
+            &start0,
+            gamma,
+            &mut rngs,
+        );
         let set = DraftSet::new(b, k, gamma, self.info.vocab_size, drafts, qs)?;
         Ok((set, scratch))
     }
@@ -1077,7 +1243,7 @@ impl NativeBackend {
                 start.push(length[bi] - 1);
             }
         }
-        let ps = self.forward_block(m, &mut scratch, &inp, gamma + 1, &start, true);
+        let ps = self.forward_block(m, None, &mut scratch, &inp, gamma + 1, &start, true);
         set.set_ps(ps)?;
         Ok(scratch)
     }
@@ -1099,8 +1265,10 @@ impl NativeBackend {
         seeds: &[i32],
     ) -> anyhow::Result<SpecIterOut> {
         let (b, l) = (self.info.batch, self.info.max_len);
+        let t_draft = Instant::now();
         let (mut set, d_scratch) =
             self.draft_multi_scratch(drafter, k, gamma, tokens, length, kv_drafter, seeds)?;
+        let draft_us = t_draft.elapsed().as_micros() as u64;
         let t_scratch = self.target_score_multi_scratch(&mut set, tokens, length, kv_target)?;
 
         let mut tau = vec![0i32; b];
@@ -1140,7 +1308,7 @@ impl NativeBackend {
         }
         self.put_scratch(drafter, d_scratch);
         self.put_scratch("target", t_scratch);
-        Ok(SpecIterOut { tau, emitted, done })
+        Ok(SpecIterOut { tau, emitted, done, draft_us })
     }
 }
 
@@ -1154,8 +1322,16 @@ impl Backend for NativeBackend {
     /// Pre-size the persistent multipath scratch for the engine's
     /// configured path count, so the first iteration never pays the
     /// `(B·K)`-row allocations (they would otherwise be taken lazily on
-    /// first use).
-    fn prepare(&self, algo: Algo, drafter: &str) -> anyhow::Result<()> {
+    /// first use) — and adopt the engine's draft precision, pre-building
+    /// the drafter's int8 twin so the first iteration never pays the
+    /// quantisation pass (DESIGN.md §11.1).  The precision knob is
+    /// backend-wide: engines sharing one backend must agree on it (the
+    /// last `prepare` wins).
+    fn prepare(&self, algo: Algo, drafter: &str, draft_precision: Precision) -> anyhow::Result<()> {
+        self.set_draft_precision(draft_precision);
+        if draft_precision == Precision::Int8 && self.info.has_drafter(drafter) {
+            let _ = self.draft_quant(drafter);
+        }
         if let Algo::MultiPath { k } = algo {
             if k == 0 {
                 return Err(anyhow!("multipath draft set needs k >= 1"));
@@ -1179,25 +1355,59 @@ impl Backend for NativeBackend {
     fn prefill(&self, model: &str, tokens: &[i32], length: &[i32]) -> anyhow::Result<NativeKv> {
         self.check_shapes(tokens, length)?;
         let m = self.model(model)?;
-        let (b, l) = (self.info.batch, self.info.max_len);
-        let mut kv = NativeKv::zeros(&m.dims, b, l);
-        // Only positions 0..len-2 of a row are ever attended before the
-        // decode loop rewrites the rest, so forwarding the longest prompt
-        // is enough (the PJRT programs forward the whole fixed-shape ring;
-        // here we can spare the quadratic attention over PAD).
-        let t = length
-            .iter()
-            .map(|&x| x.max(1) as usize)
-            .max()
-            .unwrap_or(1)
-            .min(l);
-        let mut tok_t = vec![vocab::PAD as i32; b * t];
-        for bi in 0..b {
-            tok_t[bi * t..(bi + 1) * t].copy_from_slice(&tokens[bi * l..bi * l + t]);
-        }
-        let start = vec![0i32; b];
-        let _ = self.forward_block(m, &mut kv, &tok_t, t, &start, false);
+        let mut kv = NativeKv::zeros(&m.dims, self.info.batch, self.info.max_len);
+        self.prefill_into(m, model, &mut kv, tokens, length);
         Ok(kv)
+    }
+
+    /// Batched admission prefill over the persistent scratch pool
+    /// (DESIGN.md §11.3): one forward over the whole padded prompt batch,
+    /// then one [`copy_kv_rows`] splice per admitted row — no per-call KV
+    /// allocation, and the forward cost is shared by every admission in
+    /// the scheduler tick.  Bit-identical to per-row `prefill` +
+    /// `kv_splice` because batch rows are causally independent
+    /// (test-enforced, `tests/theorems.rs`).
+    fn prefill_rows(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        length: &[i32],
+        dst: &mut NativeKv,
+        splices: &[RowSplice],
+    ) -> anyhow::Result<()> {
+        self.check_shapes(tokens, length)?;
+        let m = self.model(model)?;
+        let geom = (m.dims.n_layers, m.dims.n_heads, m.dims.head_dim());
+        if (dst.n_layers, dst.n_heads, dst.head_dim) != geom || dst.max_len != self.info.max_len
+        {
+            return Err(anyhow!("prefill_rows: dst cache does not belong to '{model}'"));
+        }
+        for s in splices {
+            if s.src_row >= self.info.batch || s.dst_slot >= dst.batch {
+                return Err(anyhow!(
+                    "prefill_rows: row out of range (src {}/{}, dst {}/{})",
+                    s.src_row,
+                    self.info.batch,
+                    s.dst_slot,
+                    dst.batch
+                ));
+            }
+            if s.len > length[s.src_row].max(1) as usize {
+                return Err(anyhow!(
+                    "prefill_rows: splice len {} exceeds prefilled length {} of row {}",
+                    s.len,
+                    length[s.src_row].max(1),
+                    s.src_row
+                ));
+            }
+        }
+        let mut scratch = self.take_scratch(m, model, self.info.batch);
+        self.prefill_into(m, model, &mut scratch, tokens, length);
+        for s in splices {
+            copy_kv_rows(dst, s.dst_slot, &scratch, s.src_row, s.len);
+        }
+        self.put_scratch(model, scratch);
+        Ok(())
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -1227,7 +1437,11 @@ impl Backend for NativeBackend {
         let m_d = self.model(drafter)?;
         let m_t = self.model("target")?;
 
-        let (drafts, qs) = self.draft_scan(m_d, kv_drafter, tokens, length, gamma, seeds);
+        let quant = self.draft_quant(drafter);
+        let t_draft = Instant::now();
+        let (drafts, qs) =
+            self.draft_scan(m_d, quant.as_deref(), kv_drafter, tokens, length, gamma, seeds);
+        let draft_us = t_draft.elapsed().as_micros() as u64;
         let ps = self.score(m_t, kv_target, tokens, length, &drafts, gamma);
 
         let mut tau = vec![0i32; b];
@@ -1259,7 +1473,7 @@ impl Backend for NativeBackend {
             done[bi] = (eos_hit || out_of_room) as i32;
             length[bi] = new_len.min(l as i32 - 1);
         }
-        Ok(SpecIterOut { tau, emitted, done })
+        Ok(SpecIterOut { tau, emitted, done, draft_us })
     }
 
     fn draft_block(
@@ -1275,7 +1489,9 @@ impl Backend for NativeBackend {
         self.check_gamma(gamma)?;
         self.check_seeds(seeds)?;
         let m = self.model(drafter)?;
-        let (drafts, qs) = self.draft_scan(m, kv, tokens, length, gamma, seeds);
+        let quant = self.draft_quant(drafter);
+        let (drafts, qs) =
+            self.draft_scan(m, quant.as_deref(), kv, tokens, length, gamma, seeds);
         Ok(DraftOut { drafts, qs })
     }
 
@@ -1371,7 +1587,7 @@ impl Backend for NativeBackend {
         let m = self.model("target")?;
         let pending = self.gather_pending(tokens, length);
         let start: Vec<i32> = length.iter().map(|&len| len - 1).collect();
-        let probs = self.forward_block(m, kv, &pending, 1, &start, true);
+        let probs = self.forward_block(m, None, kv, &pending, 1, &start, true);
         let mut rng = Rng::new(seed64(seed) ^ DOM_BASELINE);
         let mut next = vec![0i32; b];
         let mut done = vec![0i32; b];

@@ -1,0 +1,259 @@
+//! Int8 quantised-weight inference containers for the native backend
+//! (DESIGN.md §11).
+//!
+//! Speculative decoding's lossless guarantee holds *regardless of draft
+//! quality*: verification corrects any drift between drafter and target,
+//! so the draft forward pass is the one place precision can be traded for
+//! raw speed with zero change to the output distribution — provided the
+//! drafter reports the distributions it actually sampled from.  The
+//! quantised path therefore replaces the *whole* drafter (weights and the
+//! tied embedding used for both lookup and unembedding) with one
+//! well-defined int8 model: drafts are sampled from the int8 model's
+//! softmax outputs and those same outputs are handed to verification as
+//! `qs`, so the committed stream remains an exact target sample
+//! (test-enforced, `tests/theorems.rs`).  The target model is **never**
+//! quantised — its distributions define the output law, so any precision
+//! loss there would change what "lossless" means (DESIGN.md §11.2).
+//!
+//! Scheme: per-output-row symmetric int8.  A weight matrix `w (d_in,
+//! d_out)` stores `q[i][o] = round(w[i][o] / scale[o])` with one fp32
+//! scale per *output unit* `o` (`scale[o] = max_i |w[i][o]| / 127`), so
+//! each output lane's quantisation error is bounded by half a step of its
+//! own dynamic range and the GEMM dequantises with a single multiply per
+//! output element.  The tied embedding table quantises per *token row*
+//! (the output unit of the unembedding dot).  Quantisation happens once
+//! per model at first use and is cached on the backend, keyed by model
+//! name — the same keyed-pool idiom as the persistent multipath scratch
+//! (DESIGN.md §10.3).
+
+use std::fmt;
+
+/// Inference precision of the draft model's forward pass.  The knob is
+/// threaded from `EngineConfig` ("draft_precision" / env
+/// `SPECD_DRAFT_PRECISION`) through [`crate::backend::Backend::prepare`]
+/// to the backend; backends without a quantised path (PJRT — ROADMAP
+/// follow-up) serve the draft in fp32 either way, which is equally
+/// lossless.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full fp32 drafter — bit-identical to the pre-quantisation stream.
+    Fp32,
+    /// Int8 quantised drafter weights, fp32 activations — the default
+    /// fast path on the native backend.
+    #[default]
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "float32" => Some(Precision::Fp32),
+            "int8" | "i8" | "q8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Launch-time default: `SPECD_DRAFT_PRECISION` when set (and valid),
+    /// otherwise int8 — the quantised draft path is the default because
+    /// it cannot change the committed-token distribution (module docs).
+    /// An unparsable value falls back to the default *loudly* (stderr):
+    /// this is a `Default` impl's data source, so it cannot error like
+    /// the config-file path does, but a typo must not silently flip an
+    /// operator's intended precision.
+    pub fn from_env_or_default() -> Precision {
+        match std::env::var("SPECD_DRAFT_PRECISION") {
+            Ok(s) => Precision::parse(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "specd: ignoring invalid SPECD_DRAFT_PRECISION '{s}' (int8 | fp32); \
+                     using {}",
+                    Precision::default()
+                );
+                Precision::default()
+            }),
+            Err(_) => Precision::default(),
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+        })
+    }
+}
+
+/// An int8 weight matrix `(d_in, d_out)` row-major with one fp32 scale
+/// per output column: `w[i][o] ~= q[i*d_out + o] as f32 * scale[o]`.
+#[derive(Clone, Debug)]
+pub struct QuantMatrix {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Row-major `(d_in, d_out)` quantised weights.
+    pub q: Vec<i8>,
+    /// Per-output-column dequantisation scales, `(d_out,)`.
+    pub scale: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Symmetric per-output-column quantisation of a row-major `(d_in,
+    /// d_out)` fp32 matrix.  An all-zero column gets scale 0 (and all-zero
+    /// codes), so dequantisation reproduces it exactly.
+    pub fn quantise(w: &[f32], d_in: usize, d_out: usize) -> QuantMatrix {
+        assert_eq!(w.len(), d_in * d_out, "weight shape mismatch");
+        let mut absmax = vec![0.0f32; d_out];
+        for row in w.chunks_exact(d_out) {
+            for (m, &v) in absmax.iter_mut().zip(row.iter()) {
+                *m = m.max(v.abs());
+            }
+        }
+        let scale: Vec<f32> = absmax.iter().map(|&m| m / 127.0).collect();
+        let inv: Vec<f32> =
+            scale.iter().map(|&s| if s > 0.0 { 1.0 / s } else { 0.0 }).collect();
+        let mut q = Vec::with_capacity(d_in * d_out);
+        for row in w.chunks_exact(d_out) {
+            for (o, &v) in row.iter().enumerate() {
+                q.push((v * inv[o]).round().clamp(-127.0, 127.0) as i8);
+            }
+        }
+        QuantMatrix { d_in, d_out, q, scale }
+    }
+
+    /// Dequantised element (tests / error analysis).
+    pub fn dequant(&self, i: usize, o: usize) -> f32 {
+        self.q[i * self.d_out + o] as f32 * self.scale[o]
+    }
+
+    /// Worst-case absolute dequantisation error of column `o`: half a
+    /// quantisation step.
+    pub fn step(&self, o: usize) -> f32 {
+        self.scale[o] * 0.5
+    }
+}
+
+/// An int8 table of `rows` vectors of width `d` with one fp32 scale per
+/// *row* — the tied embedding layout, where a token row is both a lookup
+/// vector and an unembedding output unit.
+#[derive(Clone, Debug)]
+pub struct QuantRows {
+    pub rows: usize,
+    pub d: usize,
+    /// Row-major `(rows, d)` quantised table.
+    pub q: Vec<i8>,
+    /// Per-row dequantisation scales, `(rows,)`.
+    pub scale: Vec<f32>,
+}
+
+impl QuantRows {
+    /// Symmetric per-row quantisation of a row-major `(rows, d)` table.
+    pub fn quantise(w: &[f32], rows: usize, d: usize) -> QuantRows {
+        assert_eq!(w.len(), rows * d, "table shape mismatch");
+        let mut q = Vec::with_capacity(rows * d);
+        let mut scale = Vec::with_capacity(rows);
+        for row in w.chunks_exact(d) {
+            let m = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let s = m / 127.0;
+            let inv = if s > 0.0 { 1.0 / s } else { 0.0 };
+            scale.push(s);
+            q.extend(row.iter().map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8));
+        }
+        QuantRows { rows, d, q, scale }
+    }
+
+    /// Quantised row `r` and its scale.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[i8], f32) {
+        (&self.q[r * self.d..(r + 1) * self.d], self.scale[r])
+    }
+}
+
+/// One transformer block's quantised weights.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub wq: QuantMatrix,
+    pub wk: QuantMatrix,
+    pub wv: QuantMatrix,
+    pub wo: QuantMatrix,
+    pub w1: QuantMatrix,
+    pub w2: QuantMatrix,
+}
+
+/// A complete quantised model twin: the int8 weights the drafter forward
+/// runs with under [`Precision::Int8`].  Layer norms, the position table
+/// and all activations stay fp32 (they are tiny or per-token); see the
+/// module docs for why this is still one well-defined model.
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    pub embed: QuantRows,
+    pub layers: Vec<QuantLayer>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::Rng;
+
+    fn rand_mat(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| ((rng.uniform() * 2.0 - 1.0) * scale) as f32).collect()
+    }
+
+    #[test]
+    fn precision_parse_and_display() {
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("FP32"), Some(Precision::Fp32));
+        assert_eq!(Precision::parse(" f32 "), Some(Precision::Fp32));
+        assert_eq!(Precision::parse("bf16"), None);
+        assert_eq!(Precision::Int8.to_string(), "int8");
+        assert_eq!(Precision::Fp32.to_string(), "fp32");
+        assert_eq!(Precision::default(), Precision::Int8);
+    }
+
+    #[test]
+    fn matrix_roundtrip_error_is_bounded_per_column() {
+        let mut rng = Rng::new(0x9a7);
+        let (d_in, d_out) = (37, 23);
+        let w = rand_mat(&mut rng, d_in * d_out, 0.8);
+        let qm = QuantMatrix::quantise(&w, d_in, d_out);
+        for i in 0..d_in {
+            for o in 0..d_out {
+                let err = (qm.dequant(i, o) - w[i * d_out + o]).abs();
+                assert!(
+                    err <= qm.step(o) + 1e-7,
+                    "({i},{o}): err {err} > step {}",
+                    qm.step(o)
+                );
+            }
+        }
+        // Codes use the full range: every column's absmax maps to ±127.
+        for o in 0..d_out {
+            let m = (0..d_in).map(|i| qm.q[i * d_out + o].unsigned_abs()).max().unwrap();
+            assert_eq!(m, 127, "column {o} does not reach full code range");
+        }
+    }
+
+    #[test]
+    fn zero_column_survives_quantisation() {
+        let w = vec![0.0f32, 1.0, 0.0, -2.0]; // (2, 2): column 0 all-zero
+        let qm = QuantMatrix::quantise(&w, 2, 2);
+        assert_eq!(qm.scale[0], 0.0);
+        assert_eq!(qm.dequant(0, 0), 0.0);
+        assert_eq!(qm.dequant(1, 0), 0.0);
+        assert!((qm.dequant(1, 1) - -2.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn rows_roundtrip_error_is_bounded_per_row() {
+        let mut rng = Rng::new(0x10e);
+        let (rows, d) = (19, 31);
+        let w = rand_mat(&mut rng, rows * d, 0.5);
+        let qr = QuantRows::quantise(&w, rows, d);
+        for r in 0..rows {
+            let (q, s) = qr.row(r);
+            for j in 0..d {
+                let err = (q[j] as f32 * s - w[r * d + j]).abs();
+                assert!(err <= s * 0.5 + 1e-7, "row {r} col {j}: err {err}");
+            }
+        }
+    }
+}

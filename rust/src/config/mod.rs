@@ -20,6 +20,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::backend::Precision;
 use crate::util::json::Value;
 use crate::verify::Algo;
 
@@ -39,6 +40,13 @@ pub struct EngineConfig {
     pub host_verify: bool,
     /// RNG seed feeding per-iteration device seeds.
     pub seed: u64,
+    /// Draft-model inference precision (`"int8"` | `"fp32"`,
+    /// DESIGN.md §11).  Default: env `SPECD_DRAFT_PRECISION`, else int8 —
+    /// verification corrects any drafter drift, so the quantised draft
+    /// cannot change the committed-token distribution.  The target model
+    /// always runs fp32; backends without a quantised path (PJRT) serve
+    /// the draft in fp32 regardless.
+    pub draft_precision: Precision,
 }
 
 impl Default for EngineConfig {
@@ -50,6 +58,7 @@ impl Default for EngineConfig {
             max_new_tokens: 48,
             host_verify: false,
             seed: 0,
+            draft_precision: Precision::from_env_or_default(),
         }
     }
 }
@@ -86,6 +95,10 @@ impl EngineConfig {
         }
         if let Some(x) = v.get("seed").and_then(Value::as_u64) {
             self.seed = x;
+        }
+        if let Some(x) = v.get("draft_precision").and_then(Value::as_str) {
+            self.draft_precision = Precision::parse(x)
+                .ok_or_else(|| anyhow!("unknown draft_precision '{x}' (int8 | fp32)"))?;
         }
         Ok(())
     }
@@ -237,6 +250,15 @@ mod tests {
     #[test]
     fn bad_algo_rejected() {
         assert!(Config::parse(r#"{"engine": {"algo": "bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn draft_precision_parses_and_rejects_garbage() {
+        let c = Config::parse(r#"{"engine": {"draft_precision": "fp32"}}"#).unwrap();
+        assert_eq!(c.engine.draft_precision, Precision::Fp32);
+        let c = Config::parse(r#"{"engine": {"draft_precision": "int8"}}"#).unwrap();
+        assert_eq!(c.engine.draft_precision, Precision::Int8);
+        assert!(Config::parse(r#"{"engine": {"draft_precision": "fp64"}}"#).is_err());
     }
 
     #[test]

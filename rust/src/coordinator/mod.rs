@@ -26,7 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, ServerConfig};
-use crate::engine::spec::{DecodeState, SpecEngine};
+use crate::engine::spec::{Admission, DecodeState, SpecEngine};
 use crate::engine::{RowResult, RowTracker};
 use crate::metrics::EngineMetrics;
 use crate::verify::Rng;
@@ -155,34 +155,71 @@ fn batch_worker<B: Backend>(
             }
         }
 
-        // --- admit into free slots ----------------------------------------
-        for (req, reply) in incoming {
-            let st = match ensure_stream(&engine, &mut state) {
-                Ok(st) => st,
+        // --- admit into free slots (one batched prefill per tick) ---------
+        // All of this tick's admissions share a single batched prefill
+        // ([`SpecEngine::admit_rows`] → `Backend::prefill_rows`): m
+        // admissions cost one forward pass instead of m, and the slot
+        // table is only touched before and after that forward — never
+        // held across it — so the admission critical section no longer
+        // scales with prompt length (the old loop ran one full prefill
+        // per request between bookkeeping steps).  FIFO is preserved:
+        // requests arrive in queue order and are assigned ascending free
+        // slots in that order, with per-request seeds drawn in the same
+        // order as the old per-row loop.
+        if !incoming.is_empty() {
+            match ensure_stream(&engine, &mut state) {
                 Err(e) => {
-                    let _ = reply.send(Err(anyhow!("{e:#}")));
-                    continue;
+                    let msg = format!("{e:#}");
+                    for (_, reply) in incoming {
+                        let _ = reply.send(Err(anyhow!("{msg}")));
+                    }
                 }
-            };
-            let slot = slots.first_free().expect("admissions bounded by free slots");
-            let row_seed = req.seed.unwrap_or_else(|| seed_rng.next_u64());
-            metrics.queue_wait.observe(req.enqueued.elapsed());
-            match engine.admit_row(st, slot, &req.prompt, row_seed) {
-                Ok(()) => {
-                    let max_new = req.max_new_tokens.unwrap_or(default_max_new).max(1);
-                    slots.occupy(
-                        slot,
-                        SlotReq {
-                            tracker: RowTracker::new(true, max_new),
-                            reply,
-                            enqueued: req.enqueued,
-                        },
-                    );
-                }
-                // Admission errors (over-long prompt, bad state) reject
-                // just this request; the live batch is untouched.
-                Err(e) => {
-                    let _ = reply.send(Err(e));
+                Ok(st) => {
+                    let free = slots.free_slots();
+                    debug_assert!(incoming.len() <= free.len(), "admissions exceed free slots");
+                    let pending: Vec<(usize, GenRequest, Reply, u64)> = incoming
+                        .into_iter()
+                        .zip(free)
+                        .map(|((req, reply), slot)| {
+                            let row_seed = req.seed.unwrap_or_else(|| seed_rng.next_u64());
+                            metrics.queue_wait.observe(req.enqueued.elapsed());
+                            (slot, req, reply, row_seed)
+                        })
+                        .collect();
+                    let results = {
+                        let admissions: Vec<Admission<'_>> = pending
+                            .iter()
+                            .map(|(slot, req, _, row_seed)| Admission {
+                                slot: *slot,
+                                prompt: &req.prompt,
+                                row_seed: *row_seed,
+                            })
+                            .collect();
+                        engine.admit_rows(st, &admissions)
+                    };
+                    for ((slot, req, reply, _), res) in pending.into_iter().zip(results) {
+                        match res {
+                            Ok(()) => {
+                                let max_new =
+                                    req.max_new_tokens.unwrap_or(default_max_new).max(1);
+                                slots.occupy(
+                                    slot,
+                                    SlotReq {
+                                        tracker: RowTracker::new(true, max_new),
+                                        reply,
+                                        enqueued: req.enqueued,
+                                    },
+                                );
+                            }
+                            // Admission errors (over-long prompt, bad
+                            // state) reject just this request; the live
+                            // batch and the tick's other admissions are
+                            // untouched.
+                            Err(e) => {
+                                let _ = reply.send(Err(e));
+                            }
+                        }
+                    }
                 }
             }
         }

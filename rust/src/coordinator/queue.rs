@@ -153,6 +153,16 @@ impl<T> SlotTable<T> {
         self.slots.iter().position(|s| s.is_none())
     }
 
+    /// Every free slot, ascending — the batched-admission path assigns
+    /// one scheduler tick's queued requests to these in FIFO order.
+    pub fn free_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect()
+    }
+
     pub fn occupy(&mut self, slot: usize, item: T) {
         debug_assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
         self.slots[slot] = Some(item);

@@ -40,6 +40,10 @@ impl<B: Backend> HostVerifyEngine<B> {
         if !info.has_drafter(&cfg.drafter) {
             return Err(anyhow!("drafter '{}' not served", cfg.drafter));
         }
+        // Same warm-up hook as the fused engine: adopt the configured
+        // draft precision (and pre-build the drafter's int8 twin on the
+        // native backend, DESIGN.md §11).
+        backend.prepare(cfg.algo, &cfg.drafter, cfg.draft_precision)?;
         Ok(HostVerifyEngine { backend, cfg, metrics: Arc::new(EngineMetrics::default()) })
     }
 
@@ -63,6 +67,7 @@ impl<B: Backend> HostVerifyEngine<B> {
 
         let mut kv_t = backend.prefill("target", &toks, &lens)?;
         let mut kv_d = backend.prefill(&self.cfg.drafter, &toks, &lens)?;
+        self.metrics.prefill_batch_size.observe(n_real);
 
         let mut trackers: Vec<RowTracker> =
             (0..b).map(|i| RowTracker::new(i < n_real, self.cfg.max_new_tokens)).collect();
@@ -77,8 +82,10 @@ impl<B: Backend> HostVerifyEngine<B> {
             // One draft seed per row (the backend contract keys sampling
             // streams per row; see DESIGN.md §5.1).
             let iter_seeds: Vec<i32> = (0..b).map(|_| seed_rng.next_u64() as i32).collect();
+            let t_draft = Instant::now();
             let draft = backend
                 .draft_block(&self.cfg.drafter, gamma, &toks, &lens, &mut kv_d, &iter_seeds)?;
+            self.metrics.draft_forward_us.observe(t_draft.elapsed());
             let ps_flat =
                 backend.target_score(gamma, &toks, &lens, &mut kv_t, &draft.drafts)?;
             let qs_flat = &draft.qs;

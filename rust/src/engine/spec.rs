@@ -25,7 +25,7 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
-use crate::backend::{Backend, SpecIterOut};
+use crate::backend::{Backend, RowSplice, SpecIterOut};
 use crate::config::EngineConfig;
 use crate::metrics::EngineMetrics;
 use crate::models::vocab;
@@ -70,8 +70,10 @@ impl<B: Backend> SpecEngine<B> {
         }
         // Let the backend size internal scratch for this configuration up
         // front (the native backend pre-allocates its persistent
-        // `(B·K)`-row multipath KV scratch here, DESIGN.md §10).
-        backend.prepare(cfg.algo, &cfg.drafter)?;
+        // `(B·K)`-row multipath KV scratch and, under int8 draft
+        // precision, the drafter's quantised twin here, DESIGN.md
+        // §10/§11).
+        backend.prepare(cfg.algo, &cfg.drafter, cfg.draft_precision)?;
         Ok(SpecEngine { backend, cfg, metrics: Arc::new(EngineMetrics::default()) })
     }
 
@@ -94,6 +96,7 @@ impl<B: Backend> SpecEngine<B> {
         // --- prefill both models ---------------------------------------------
         let mut kv_t = backend.prefill("target", &tokens, &length)?;
         let mut kv_d = backend.prefill(&self.cfg.drafter, &tokens, &length)?;
+        self.metrics.prefill_batch_size.observe(n_real);
 
         // --- iterate ----------------------------------------------------------
         let mut trackers: Vec<RowTracker> = (0..b)
@@ -140,6 +143,11 @@ impl<B: Backend> SpecEngine<B> {
                 self.metrics.iterations.inc();
             }
             device_iterations += 1;
+            if out.draft_us > 0 {
+                self.metrics
+                    .draft_forward_us
+                    .observe(std::time::Duration::from_micros(out.draft_us));
+            }
             self.metrics.iter_latency.observe(t_iter.elapsed());
         }
 
@@ -189,10 +197,9 @@ impl<B: Backend> SpecEngine<B> {
         })
     }
 
-    /// Admit one request into a free slot of a live stream: prefill the
-    /// prompt in a scratch batch, splice its KV rows into the live caches
-    /// ([`Backend::kv_splice`]), reset the slot's token ring, and seed its
-    /// per-row sampling stream from `row_seed`.
+    /// Admit one request into a free slot of a live stream — the
+    /// single-row form of [`SpecEngine::admit_rows`] (an admission batch
+    /// of one).
     ///
     /// `row_seed` fully determines the row's randomness: the same prompt
     /// admitted with the same seed produces the same tokens regardless of
@@ -207,51 +214,127 @@ impl<B: Backend> SpecEngine<B> {
         prompt: &[u32],
         row_seed: u64,
     ) -> anyhow::Result<()> {
+        self.admit_rows(st, &[Admission { slot, prompt, row_seed }])
+            .pop()
+            .expect("one admission yields one result")
+    }
+
+    /// Admit a whole scheduler tick's worth of requests in one batched
+    /// prefill (DESIGN.md §11.3): every valid admission's prompt is laid
+    /// out in one scratch batch, each model runs a **single** forward
+    /// over it ([`Backend::prefill_rows`], drawing its KV from the
+    /// persistent scratch pool on the native backend), and each row is
+    /// spliced into its slot — so `m` admissions cost one prefill instead
+    /// of `m`.  Rows are causally independent in every backend, making
+    /// this bit-identical to `m` sequential [`SpecEngine::admit_row`]
+    /// calls (test-enforced, `tests/theorems.rs`).
+    ///
+    /// Returns one result per admission, in order.  Per-row validation
+    /// failures (bad slot, oversized prompt, duplicate slot) reject only
+    /// that admission; the rest proceed.  Admission order is preserved:
+    /// row `i` of the scratch batch is the `i`-th *valid* admission, and
+    /// each row's randomness is keyed on its own `row_seed`, so FIFO
+    /// semantics and per-row determinism are unaffected by the batching.
+    pub fn admit_rows(
+        &self,
+        st: &mut DecodeState<B>,
+        admissions: &[Admission<'_>],
+    ) -> Vec<anyhow::Result<()>> {
         let info = self.backend.info();
         let (b, l) = (info.batch, info.max_len);
-        if slot >= b {
-            return Err(anyhow!("slot {slot} out of range (batch {b})"));
+        let mut results: Vec<Option<anyhow::Result<()>>> =
+            admissions.iter().map(|_| None).collect();
+        // Per-admission validation; valid rows join the batched prefill.
+        let mut claimed = vec![false; b];
+        let mut valid: Vec<usize> = Vec::with_capacity(admissions.len().min(b));
+        for (i, a) in admissions.iter().enumerate() {
+            let err = if a.slot >= b {
+                Some(anyhow!("slot {} out of range (batch {b})", a.slot))
+            } else if st.row_rngs[a.slot].is_some() {
+                Some(anyhow!("slot {} is still occupied", a.slot))
+            } else if claimed[a.slot] {
+                Some(anyhow!("slot {} claimed twice in one admission batch", a.slot))
+            } else if a.prompt.len() < 2 {
+                Some(anyhow!("prompts need >= 2 tokens (BOS + marker)"))
+            } else if a.prompt.len() >= l / 2 {
+                Some(anyhow!(
+                    "prompt length {} exceeds the ring budget {} (max_len {l})",
+                    a.prompt.len(),
+                    l / 2 - 1
+                ))
+            } else {
+                None
+            };
+            match err {
+                Some(e) => results[i] = Some(Err(e)),
+                None => {
+                    claimed[a.slot] = true;
+                    valid.push(i);
+                }
+            }
         }
-        if st.row_rngs[slot].is_some() {
-            return Err(anyhow!("slot {slot} is still occupied"));
+        if !valid.is_empty() {
+            // One padded scratch batch carrying every admitted prompt
+            // (valid admissions are bounded by free slots <= B).  Rows
+            // are independent in every backend (per-row causal
+            // attention), so splicing row i out of the scratch caches
+            // yields exactly the rows a full-batch prefill would have
+            // produced for that prompt.
+            let prompts: Vec<Vec<u32>> =
+                valid.iter().map(|&i| admissions[i].prompt.to_vec()).collect();
+            let padded = pad_prompts(&prompts, b);
+            let (scratch_toks, scratch_lens) = layout_prompts(info, &padded);
+            let splices: Vec<RowSplice> = valid
+                .iter()
+                .enumerate()
+                .map(|(r, &i)| RowSplice {
+                    src_row: r,
+                    dst_slot: admissions[i].slot,
+                    len: admissions[i].prompt.len(),
+                })
+                .collect();
+            let prefilled = self
+                .backend
+                .prefill_rows("target", &scratch_toks, &scratch_lens, &mut st.kv_target, &splices)
+                .and_then(|()| {
+                    self.backend.prefill_rows(
+                        &self.cfg.drafter,
+                        &scratch_toks,
+                        &scratch_lens,
+                        &mut st.kv_drafter,
+                        &splices,
+                    )
+                });
+            match prefilled {
+                Err(e) => {
+                    // Device-level failure: every admission in the batch
+                    // fails; no slot bookkeeping was touched, and any
+                    // partially spliced cache rows are rewritten by the
+                    // next successful admission before being attended.
+                    let msg = format!("{e:#}");
+                    for &i in &valid {
+                        results[i] = Some(Err(anyhow!("batched prefill failed: {msg}")));
+                    }
+                }
+                Ok(()) => {
+                    self.metrics.prefill_batch_size.observe(valid.len());
+                    for &i in &valid {
+                        let a = &admissions[i];
+                        for j in 0..l {
+                            st.tokens[a.slot * l + j] = vocab::PAD as i32;
+                        }
+                        for (j, &t) in a.prompt.iter().enumerate() {
+                            st.tokens[a.slot * l + j] = t as i32;
+                        }
+                        st.length[a.slot] = a.prompt.len() as i32;
+                        st.row_rngs[a.slot] = Some(Rng::new(a.row_seed ^ SEED_DOMAIN));
+                        self.metrics.slots_refilled.inc();
+                        results[i] = Some(Ok(()));
+                    }
+                }
+            }
         }
-        if prompt.len() < 2 {
-            return Err(anyhow!("prompts need >= 2 tokens (BOS + marker)"));
-        }
-        if prompt.len() >= l / 2 {
-            return Err(anyhow!(
-                "prompt length {} exceeds the ring budget {} (max_len {l})",
-                prompt.len(),
-                l / 2 - 1
-            ));
-        }
-        // Scratch prefill with the prompt in row 0.  Rows are independent
-        // in every backend (per-row causal attention), so splicing row 0
-        // out of the scratch caches yields exactly the rows a full-batch
-        // prefill would have produced for this prompt.
-        let padded = pad_prompts(&[prompt.to_vec()], b);
-        let (scratch_toks, scratch_lens) = layout_prompts(info, &padded);
-        let kv_ts = self.backend.prefill("target", &scratch_toks, &scratch_lens)?;
-        let kv_ds = self.backend.prefill(&self.cfg.drafter, &scratch_toks, &scratch_lens)?;
-        self.backend.kv_splice("target", &mut st.kv_target, slot, &kv_ts, 0, prompt.len())?;
-        self.backend.kv_splice(
-            &self.cfg.drafter,
-            &mut st.kv_drafter,
-            slot,
-            &kv_ds,
-            0,
-            prompt.len(),
-        )?;
-        for j in 0..l {
-            st.tokens[slot * l + j] = vocab::PAD as i32;
-        }
-        for (j, &t) in prompt.iter().enumerate() {
-            st.tokens[slot * l + j] = t as i32;
-        }
-        st.length[slot] = prompt.len() as i32;
-        st.row_rngs[slot] = Some(Rng::new(row_seed ^ SEED_DOMAIN));
-        self.metrics.slots_refilled.inc();
-        Ok(())
+        results.into_iter().map(|r| r.expect("every admission resolved")).collect()
     }
 
     /// One fused iteration over the live stream.  Every slot advances
@@ -275,6 +358,11 @@ impl<B: Backend> SpecEngine<B> {
             &mut st.kv_drafter,
             &seeds,
         )?;
+        if out.draft_us > 0 {
+            self.metrics
+                .draft_forward_us
+                .observe(std::time::Duration::from_micros(out.draft_us));
+        }
         self.metrics.iter_latency.observe(t_iter.elapsed());
         Ok(out)
     }
@@ -295,6 +383,16 @@ impl<B: Backend> SpecEngine<B> {
         st.length[slot] = inert[0].len() as i32;
         st.row_rngs[slot] = None;
     }
+}
+
+/// One pending admission for [`SpecEngine::admit_rows`]: which free slot
+/// the prompt enters, and the seed that fully determines the row's
+/// randomness (see [`SpecEngine::admit_row`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Admission<'a> {
+    pub slot: usize,
+    pub prompt: &'a [u32],
+    pub row_seed: u64,
 }
 
 /// Live state of a continuously batched decode stream: the host

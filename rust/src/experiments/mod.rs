@@ -18,7 +18,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, Precision};
 use crate::config::ExperimentConfig;
 use crate::engine::baseline::run_baseline_prompts;
 use crate::engine::host::HostVerifyEngine;
@@ -50,6 +50,11 @@ pub struct Harness<B: Backend> {
     pub datasets: Vec<Dataset>,
     baseline_cache: Mutex<HashMap<(String, u64), f64>>,
     quiet: bool,
+    /// Draft precision every cell's engine runs with (DESIGN.md §11);
+    /// defaults to the env/int8 default, overridden from the config
+    /// file's `engine.draft_precision` via
+    /// [`Harness::with_draft_precision`].
+    draft_precision: Precision,
 }
 
 impl<B: Backend> Harness<B> {
@@ -62,11 +67,20 @@ impl<B: Backend> Harness<B> {
             datasets,
             baseline_cache: Mutex::new(HashMap::new()),
             quiet: false,
+            draft_precision: Precision::from_env_or_default(),
         })
     }
 
     pub fn quiet(mut self) -> Self {
         self.quiet = true;
+        self
+    }
+
+    /// Run every cell's drafter at the given precision (threads the
+    /// config file's `engine.draft_precision` into the harness — the
+    /// tables must honour the same knob `run`/`serve` do).
+    pub fn with_draft_precision(mut self, p: Precision) -> Self {
+        self.draft_precision = p;
         self
     }
 
@@ -122,6 +136,7 @@ impl<B: Backend> Harness<B> {
                 max_new_tokens: self.cfg.max_new_tokens,
                 host_verify: !algo.fused(),
                 seed,
+                draft_precision: self.draft_precision,
             };
             let reports = if algo.fused() {
                 SpecEngine::new(self.backend.clone(), cfg)?.run_prompts(&prompts, seed)?

@@ -133,6 +133,7 @@ fn cmd_run<B: Backend>(backend: Arc<B>, cfg: &Config, args: &Args) -> Result<()>
         max_new_tokens: cfg.engine.max_new_tokens,
         host_verify: !algo.fused(),
         seed,
+        draft_precision: cfg.engine.draft_precision,
     };
     let prompts = ds.take(n_prompts);
     let reports = if algo.fused() {
@@ -177,7 +178,8 @@ fn cmd_tables<B: Backend>(backend: Arc<B>, cfg: &Config, args: &Args) -> Result<
     if let Some(s) = args.get("seeds") {
         exp_cfg.seeds = (0..s.parse::<u64>()?).collect();
     }
-    let h = Harness::new(backend, exp_cfg)?;
+    let h =
+        Harness::new(backend, exp_cfg)?.with_draft_precision(cfg.engine.draft_precision);
     let text = match table {
         "1" => h.table1()?,
         "3" => h.table3()?,

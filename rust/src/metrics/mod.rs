@@ -169,6 +169,15 @@ pub struct EngineMetrics {
     /// Accepted-prefix-length (`tau`) distribution across row-iterations
     /// — per algorithm, since an engine runs exactly one.
     pub accepted_len_hist: ValueHist,
+    /// Rows admitted per batched admission prefill (DESIGN.md §11.3) —
+    /// mean > 1 is the amortisation win made observable: that many
+    /// admissions shared one prefill forward.
+    pub prefill_batch_size: ValueHist,
+    /// Wall-clock of the draft forward phase per engine iteration, as
+    /// reported by the backend (`SpecIterOut::draft_us`) or measured
+    /// around `draft_block` on the host-verify path — where the
+    /// quantised-draft speedup shows up in `/metrics`.
+    pub draft_forward_us: LatencyHist,
     pub queue_wait: LatencyHist,
     pub iter_latency: LatencyHist,
     pub request_latency: LatencyHist,
@@ -208,12 +217,18 @@ impl EngineMetrics {
         put("slot_occupancy", self.slot_occupancy());
         put("block_efficiency", self.block_efficiency());
         put("accepted_len_mean", self.accepted_len_hist.mean());
+        put("prefill_batch_size_mean", self.prefill_batch_size.mean());
+        put("draft_forward_mean_us", self.draft_forward_us.mean_us());
+        put("draft_forward_p99_us", self.draft_forward_us.quantile_us(0.99) as f64);
         put("iter_latency_mean_us", self.iter_latency.mean_us());
         put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
         put("request_latency_mean_us", self.request_latency.mean_us());
         put("queue_wait_mean_us", self.queue_wait.mean_us());
         for (len, n) in self.accepted_len_hist.nonzero() {
             s.push_str(&format!("specd_accepted_len_hist{{len=\"{len}\"}} {n}\n"));
+        }
+        for (n_rows, n) in self.prefill_batch_size.nonzero() {
+            s.push_str(&format!("specd_prefill_batch_size{{rows=\"{n_rows}\"}} {n}\n"));
         }
         s
     }
@@ -280,6 +295,20 @@ mod tests {
         let r = m.render();
         assert!(r.contains("specd_accepted_len_hist{len=\"3\"} 2"));
         assert!(r.contains("specd_accepted_len_mean"));
+    }
+
+    #[test]
+    fn prefill_and_draft_metrics_render() {
+        let m = EngineMetrics::default();
+        m.prefill_batch_size.observe(1);
+        m.prefill_batch_size.observe(3);
+        m.prefill_batch_size.observe(3);
+        m.draft_forward_us.observe(Duration::from_micros(800));
+        let r = m.render();
+        assert!(r.contains("specd_prefill_batch_size{rows=\"3\"} 2"));
+        assert!(r.contains("specd_prefill_batch_size_mean"));
+        assert!(r.contains("specd_draft_forward_mean_us"));
+        assert!((m.prefill_batch_size.mean() - 7.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -124,6 +124,7 @@ fn block_never_worse_than_token_on_aggregate() {
                     max_new_tokens: 16,
                     host_verify: false,
                     seed,
+                    ..Default::default()
                 };
                 let eng = SpecEngine::new(be.clone(), cfg).unwrap();
                 for rep in eng.run_prompts(&prompts, seed).unwrap() {

@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use specd::backend::kernels::{matmul_blocked, matmul_ref};
-use specd::backend::{Backend, NativeBackend};
+use specd::backend::{Backend, NativeBackend, Precision};
 use specd::config::EngineConfig;
 use specd::engine::spec::SpecEngine;
 use specd::models::vocab;
@@ -121,6 +121,98 @@ fn threaded_forward_is_bit_identical_to_single_thread() {
             assert_eq!(a, b, "threads={threads} algo={algo}: tokens diverged");
         }
     }
+}
+
+#[test]
+fn int8_draft_is_deterministic_and_thread_invariant() {
+    // The quantised draft path inherits every determinism contract of
+    // the fast path (DESIGN.md §11.1): identical backends produce
+    // identical streams, and the thread count / fp32-kernel choice (the
+    // target's matmuls) perturb nothing.
+    let reqs = prompts(8);
+    for algo in [Algo::Block, Algo::MultiPath { k: 2 }] {
+        let base = Arc::new(
+            NativeBackend::seeded_with_shapes(4, 64, 0x18a)
+                .with_threads(1)
+                .with_draft_precision(Precision::Int8),
+        );
+        let twin = Arc::new(
+            NativeBackend::seeded_with_shapes(4, 64, 0x18a)
+                .with_threads(1)
+                .with_draft_precision(Precision::Int8),
+        );
+        let threaded = Arc::new(
+            NativeBackend::seeded_with_shapes(4, 64, 0x18a)
+                .with_threads(4)
+                .with_draft_precision(Precision::Int8),
+        );
+        let refkernel = Arc::new(
+            NativeBackend::seeded_with_shapes(4, 64, 0x18a)
+                .with_threads(1)
+                .with_reference_kernel(true)
+                .with_draft_precision(Precision::Int8),
+        );
+        let a = decode(base, algo, &reqs, 31);
+        assert_eq!(a, decode(twin, algo, &reqs, 31), "algo={algo}: int8 not deterministic");
+        assert_eq!(a, decode(threaded, algo, &reqs, 31), "algo={algo}: threads perturb int8");
+        assert_eq!(
+            a,
+            decode(refkernel, algo, &reqs, 31),
+            "algo={algo}: fp32 kernel choice perturbs the int8 draft"
+        );
+    }
+}
+
+#[test]
+fn target_model_is_never_quantised() {
+    // The precision knob must only touch drafter forwards: target-scored
+    // distributions are bitwise equal between an int8 and an fp32
+    // backend (DESIGN.md §11.2 — the target defines the output law).
+    let int8 = NativeBackend::seeded_with_shapes(2, 32, 7)
+        .with_threads(1)
+        .with_draft_precision(Precision::Int8);
+    let fp32 = NativeBackend::seeded_with_shapes(2, 32, 7)
+        .with_threads(1)
+        .with_draft_precision(Precision::Fp32);
+    let (toks, lens) = prompt_state(&int8);
+    let mut kv_i = int8.prefill("target", &toks, &lens).unwrap();
+    let mut kv_f = fp32.prefill("target", &toks, &lens).unwrap();
+    let drafts = vec![20i32, 21, 22, 20, 21, 22];
+    let ps_i = int8.target_score(3, &toks, &lens, &mut kv_i, &drafts).unwrap();
+    let ps_f = fp32.target_score(3, &toks, &lens, &mut kv_f, &drafts).unwrap();
+    assert_eq!(ps_i, ps_f, "draft precision leaked into the target forward");
+}
+
+#[test]
+fn int8_drafter_engages_and_stays_close_to_fp32() {
+    // The knob must actually change the drafter's computation (int8 !=
+    // fp32 bits) while the quantisation error stays small: the int8
+    // drafter's next-token distributions track the fp32 drafter's far
+    // more closely than either tracks the target.
+    let int8 = NativeBackend::seeded_with_shapes(2, 32, 7)
+        .with_threads(1)
+        .with_draft_precision(Precision::Int8);
+    let fp32 = NativeBackend::seeded_with_shapes(2, 32, 7)
+        .with_threads(1)
+        .with_draft_precision(Precision::Fp32);
+    let (toks, lens) = prompt_state(&int8);
+    let mut kv_i = int8.prefill("xxs", &toks, &lens).unwrap();
+    let mut kv_f = fp32.prefill("xxs", &toks, &lens).unwrap();
+    let gamma = 4;
+    let di = int8.draft_block("xxs", gamma, &toks, &lens, &mut kv_i, &[5, 6]).unwrap();
+    let df = fp32.draft_block("xxs", gamma, &toks, &lens, &mut kv_f, &[5, 6]).unwrap();
+    assert_ne!(di.qs, df.qs, "int8 knob did not engage the drafter");
+    let v = int8.info().vocab_size;
+    let mut worst = 0.0f64;
+    for (qi, qf) in di.qs.chunks_exact(v).zip(df.qs.chunks_exact(v)) {
+        let tv = 0.5
+            * qi.iter()
+                .zip(qf.iter())
+                .map(|(&a, &b)| (a as f64 - b as f64).abs())
+                .sum::<f64>();
+        worst = worst.max(tv);
+    }
+    assert!(worst < 0.25, "int8 drafter drifted too far from fp32: worst row TV {worst}");
 }
 
 #[test]

@@ -34,6 +34,7 @@ fn cfg(algo: Algo, gamma: usize) -> EngineConfig {
         max_new_tokens: 16,
         host_verify: !algo.fused(),
         seed: 0,
+        ..Default::default()
     }
 }
 

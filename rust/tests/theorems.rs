@@ -1,12 +1,21 @@
 //! Property tests for the paper's theorems on the distribution-level
 //! substrate (no artifacts needed): Theorem 1 (losslessness), Theorem 2
 //! (block optimality/dominance), Theorem 3 (greedy per-iteration gain),
-//! and the Lemma 8 full-information bound.
+//! and the Lemma 8 full-information bound — plus the engine-level
+//! Theorem 1 corollaries of PR 5: the committed-token distribution is
+//! unchanged by int8 draft quantisation (DESIGN.md §11.2) and by batching
+//! admission prefills (§11.3).
 
+use std::sync::Arc;
+
+use specd::backend::{Backend, NativeBackend, Precision};
+use specd::config::EngineConfig;
+use specd::engine::spec::{Admission, SpecEngine};
+use specd::models::vocab;
 use specd::sim::{self, MarkovPair};
 use specd::stats::empirical::SeqDist;
 use specd::util::proptest::{check, rand_instance};
-use specd::verify::{self, Algo, GreedyState, Rng};
+use specd::verify::{self, dist, Algo, GreedyState, Rng};
 
 /// Theorem 1: SpecDec output prefixes are distributed as target-chain
 /// ancestral samples, for all three verification algorithms.
@@ -124,6 +133,141 @@ fn greedy_gains_per_iteration() {
         acc_g as f64 >= acc_b as f64 * 0.995,
         "greedy {acc_g} < block {acc_b} per fresh iteration"
     );
+}
+
+/// Theorem 1 at the engine level under draft quantisation
+/// (DESIGN.md §11.2): the committed-token distribution with an **int8**
+/// draft matches the target sample distribution, for token, block and
+/// multipath (K=2) verification.  Verification corrects any drafter
+/// drift, so quantising the drafter must not move the first committed
+/// token's law off the target's exact next-token distribution.  An fp32
+/// control run with the same sample count calibrates the finite-sample
+/// TV noise: the int8 TV must sit inside the control's noise band, not
+/// at the drafter-drift scale.
+#[test]
+fn int8_draft_commits_target_distributed_tokens() {
+    const SEED: u64 = 0x7e57;
+    const N_RUNS: u64 = 250;
+    let prompt: Vec<u32> = vec![vocab::BOS, vocab::marker_for(0), 25, 33, 47];
+
+    // Exact target next-token distribution after the prompt (fp32 target
+    // forward — the law every committed first token must follow).
+    let be = NativeBackend::seeded_with_shapes(4, 24, SEED);
+    let info = be.info().clone();
+    let (b, l, v) = (info.batch, info.max_len, info.vocab_size);
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        for (j, &t) in prompt.iter().enumerate() {
+            toks[bi * l + j] = t as i32;
+        }
+        lens[bi] = prompt.len() as i32;
+    }
+    let mut kv = be.prefill("target", &toks, &lens).unwrap();
+    let ps = be.target_score(1, &toks, &lens, &mut kv, &vec![20i32; b]).unwrap();
+    let mass: f64 = ps[..v].iter().map(|&x| x as f64).sum();
+    let exact: Vec<f64> = ps[..v].iter().map(|&x| x as f64 / mass).collect();
+
+    for algo in [Algo::Token, Algo::Block, Algo::MultiPath { k: 2 }] {
+        let mut tv = [0.0f64; 2];
+        for (pi, prec) in [Precision::Int8, Precision::Fp32].into_iter().enumerate() {
+            let backend = Arc::new(
+                NativeBackend::seeded_with_shapes(4, 24, SEED).with_draft_precision(prec),
+            );
+            let cfg = EngineConfig {
+                algo,
+                gamma: 2,
+                max_new_tokens: 1,
+                draft_precision: prec,
+                ..Default::default()
+            };
+            let engine = SpecEngine::new(backend, cfg).unwrap();
+            let mut hist = vec![0u64; v];
+            let mut n = 0u64;
+            for run in 0..N_RUNS {
+                let rep = engine.run_batch(&vec![prompt.clone(); b], 1000 + run).unwrap();
+                for row in rep.rows {
+                    // EOS truncates `tokens`; fold it back into the
+                    // histogram so no probability mass is dropped.
+                    let tok = row.tokens.first().copied().unwrap_or(vocab::EOS);
+                    hist[(tok as usize).min(v - 1)] += 1;
+                    n += 1;
+                }
+            }
+            let emp: Vec<f64> = hist.iter().map(|&c| c as f64 / n as f64).collect();
+            tv[pi] = dist::tv_distance(&exact, &emp);
+        }
+        let (tv_int8, tv_fp32) = (tv[0], tv[1]);
+        // The paired bound is the sharp one: both estimators carry the
+        // same finite-sample bias (they share batch seeds), so a
+        // drafter-biased committed stream would open a gap far above the
+        // residual fluctuation.  The absolute bound excludes gross
+        // failure even if the control drifts.
+        assert!(tv_int8 < 0.25, "{algo}: int8-draft committed TV {tv_int8} vs exact target");
+        assert!(
+            tv_int8 <= tv_fp32 + 0.05,
+            "{algo}: int8 TV {tv_int8} outside the fp32 control's noise band ({tv_fp32})"
+        );
+    }
+}
+
+/// DESIGN.md §11.3: admitting several prompts through one batched
+/// `prefill_rows` is bit-identical to admitting them one at a time —
+/// same spliced KV rows, same decode stream, token for token.
+#[test]
+fn batched_prefill_rows_matches_per_row_admissions() {
+    let backend = Arc::new(NativeBackend::seeded_with_shapes(4, 48, 0xad31));
+    let cfg = EngineConfig { gamma: 4, max_new_tokens: 10, ..Default::default() };
+    let engine = SpecEngine::new(backend, cfg).unwrap();
+    let prompts: Vec<Vec<u32>> = vec![
+        vec![vocab::BOS, vocab::marker_for(0), 21, 35, 44, 50],
+        vec![vocab::BOS, vocab::marker_for(1), 60, 61],
+        vec![vocab::BOS, vocab::marker_for(2), 77, 78, 79, 80, 81],
+    ];
+    let admissions: Vec<Admission<'_>> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Admission {
+            // Non-contiguous slots: 0, 1, 3 (slot 2 stays inert).
+            slot: if i == 2 { 3 } else { i },
+            prompt: p,
+            row_seed: 0x5eed + 13 * i as u64,
+        })
+        .collect();
+
+    let mut st_batched = engine.begin_stream().unwrap();
+    for res in engine.admit_rows(&mut st_batched, &admissions) {
+        res.unwrap();
+    }
+    let mut st_single = engine.begin_stream().unwrap();
+    for a in &admissions {
+        engine.admit_row(&mut st_single, a.slot, a.prompt, a.row_seed).unwrap();
+    }
+    for step in 0..6 {
+        let x = engine.step_stream(&mut st_batched).unwrap();
+        let y = engine.step_stream(&mut st_single).unwrap();
+        assert_eq!(x.tau, y.tau, "step {step}: tau diverged");
+        assert_eq!(x.emitted, y.emitted, "step {step}: emitted tokens diverged");
+        assert_eq!(x.done, y.done, "step {step}: done flags diverged");
+    }
+
+    // Per-admission validation rejects bad rows without poisoning the
+    // batch: a duplicate slot and an oversized prompt fail, the valid
+    // admission in the same batch succeeds.
+    let mut st = engine.begin_stream().unwrap();
+    let long: Vec<u32> = (0..48).map(|i| vocab::CONTENT_BASE + i).collect();
+    let batch = vec![
+        Admission { slot: 0, prompt: &prompts[0], row_seed: 1 },
+        Admission { slot: 0, prompt: &prompts[1], row_seed: 2 },
+        Admission { slot: 1, prompt: &long, row_seed: 3 },
+        Admission { slot: 2, prompt: &prompts[2], row_seed: 4 },
+    ];
+    let res = engine.admit_rows(&mut st, &batch);
+    assert!(res[0].is_ok());
+    assert!(res[1].is_err(), "duplicate slot must be rejected");
+    assert!(res[2].is_err(), "oversized prompt must be rejected");
+    assert!(res[3].is_ok(), "valid admission must survive its batch-mates' failures");
+    assert!(st.occupied(0) && !st.occupied(1) && st.occupied(2));
 }
 
 /// The §2 example end-to-end (E0 in DESIGN.md): exact 10/9, 11/9, 12/9.
