@@ -22,8 +22,15 @@
 //! the same file).  Exit code is non-zero when a perf invariant
 //! regresses:
 //!
-//! * fast-path block-verification throughput >= 1.5x the scalar
-//!   reference (PR-4 headline gate);
+//! * fast-path (SIMD-kernel) block-verification throughput >= 3x the
+//!   scalar reference where AVX2/NEON is detected, >= 1.5x on the
+//!   packed-scalar fallback (ISA-conditional so runners without AVX2
+//!   don't flake) — the PR-6 headline gate, superseding PR-4's flat
+//!   1.5x;
+//! * isolated f32 and int8 SIMD GEMM GFLOP/s >= the same ISA-conditional
+//!   multiple of their scalar references (per-(ISA, dtype) cells in
+//!   BENCH_native.json, so kernel regressions are attributable
+//!   separately from engine overheads);
 //! * block-verification BE >= token-level BE on the fast path (the
 //!   paper's never-worse guarantee; 0.05 finite-sample slack);
 //! * int8 draft-forward throughput >= 1.3x the fp32 draft;
@@ -36,12 +43,16 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use specd::backend::kernels::{
+    active_isa, matmul_blocked, matmul_q8_i32, matmul_q8_i32_ref, matmul_ref, matmul_simd,
+    pack_q8, Isa, PackedF32, QuantScratch,
+};
 use specd::backend::{Backend, NativeBackend, Precision};
 use specd::config::EngineConfig;
 use specd::engine::spec::SpecEngine;
 use specd::models::vocab;
 use specd::util::json;
-use specd::verify::Algo;
+use specd::verify::{Algo, Rng};
 use specd::workload::Dataset;
 
 /// One measured cell: throughput, block efficiency and mean accepted
@@ -116,6 +127,17 @@ fn measure_draft(backend: &NativeBackend, gamma: usize, reps: usize) -> anyhow::
     Ok((reps * b * gamma) as f64 / wall.max(1e-9))
 }
 
+/// Giga-ops/sec of one GEMM closure (`flops` counted per call, f32
+/// multiply-adds or i8×i8→i32 ones alike); one untimed warm-up call.
+fn gemm_gflops(reps: usize, flops: f64, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    flops * reps as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e9
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let (n_prompts, max_new, n_seeds, draft_reps) =
@@ -184,6 +206,61 @@ fn main() -> anyhow::Result<()> {
         block_fp32.tps, block_int8.tps, block_int8.tau, block_fp32.tau
     );
 
+    // ---- kernel cells: per-(ISA, dtype) GFLOP/s on one model shape ------
+    // Isolated GEMM throughput so kernel regressions are attributable
+    // separately from engine overheads (the e2e cells above).  2·t·d_in·
+    // d_out ops per call either way — f32 multiply-adds, or exact
+    // i8×i8→i32 multiply-accumulates for the int8 cells.
+    let isa = active_isa();
+    let kreps = if smoke { 200 } else { 1500 };
+    let (kt, kdi, kdo) = (8usize, 128usize, 512usize);
+    let mut krng = Rng::new(0x6e41);
+    let kx: Vec<f32> = (0..kt * kdi).map(|_| (krng.uniform() * 2.0 - 1.0) as f32).collect();
+    let kw: Vec<f32> = (0..kdi * kdo).map(|_| (krng.uniform() * 2.0 - 1.0) as f32).collect();
+    let kpk = PackedF32::pack(&kw, kdi, kdo);
+    let kq: Vec<i8> = (0..kdi * kdo).map(|_| (krng.uniform() * 255.0 - 127.0) as i8).collect();
+    let kqt = pack_q8(&kq, kdi, kdo);
+    let kscale: Vec<f32> = (0..kdo).map(|_| (krng.uniform() * 0.02) as f32).collect();
+    let mut kout = vec![0.0f32; kt * kdo];
+    let mut kscr = QuantScratch::default();
+    let kflops = 2.0 * (kt * kdi * kdo) as f64;
+    let f32_ref_gflops = gemm_gflops(kreps, kflops, || {
+        kout.fill(0.0);
+        matmul_ref(&kx, &kw, &mut kout, kt, kdi, kdo);
+        std::hint::black_box(kout[0]);
+    });
+    let f32_blocked_gflops = gemm_gflops(kreps, kflops, || {
+        kout.fill(0.0);
+        matmul_blocked(&kx, &kw, &mut kout, kt, kdi, kdo);
+        std::hint::black_box(kout[0]);
+    });
+    let f32_simd_gflops = gemm_gflops(kreps, kflops, || {
+        kout.fill(0.0);
+        matmul_simd(&kx, &kpk, &mut kout, kt, kdi, kdo);
+        std::hint::black_box(kout[0]);
+    });
+    let int8_ref_gops = gemm_gflops(kreps, kflops, || {
+        kout.fill(0.0);
+        matmul_q8_i32_ref(&kx, &kq, &kscale, &mut kout, kt, kdi, kdo, &mut kscr);
+        std::hint::black_box(kout[0]);
+    });
+    let int8_simd_gops = gemm_gflops(kreps, kflops, || {
+        kout.fill(0.0);
+        matmul_q8_i32(&kx, &kqt, &kscale, &mut kout, kt, kdi, kdo, &mut kscr);
+        std::hint::black_box(kout[0]);
+    });
+    let kernel_f32_speedup = f32_simd_gflops / f32_ref_gflops.max(1e-9);
+    let kernel_int8_speedup = int8_simd_gops / int8_ref_gops.max(1e-9);
+    println!(
+        "native/kernels[{isa}]  f32 ref {f32_ref_gflops:.2} / blocked {f32_blocked_gflops:.2} \
+         / simd {f32_simd_gflops:.2} GFLOP/s ({kernel_f32_speedup:.2}x)   int8 ref \
+         {int8_ref_gops:.2} / simd {int8_simd_gops:.2} Gop/s ({kernel_int8_speedup:.2}x)"
+    );
+    // Gate level: 3x over the scalar reference where real SIMD (AVX2 /
+    // NEON) was detected, 1.5x on the packed-scalar fallback so runners
+    // without AVX2 don't flake.
+    let simd_gate = if isa == Isa::Scalar { 1.5 } else { 3.0 };
+
     // ---- write BENCH_native.json ----------------------------------------
     let report = json::obj(vec![
         ("smoke", json::Value::Bool(smoke)),
@@ -208,16 +285,39 @@ fn main() -> anyhow::Result<()> {
         ("int8_block_speedup", json::num(int8_block_speedup)),
         ("tau_fp32", json::num(block_fp32.tau)),
         ("tau_int8", json::num(block_int8.tau)),
+        ("kernel_isa", json::Value::Str(isa.to_string())),
+        ("kernel_f32_ref_gflops", json::num(f32_ref_gflops)),
+        ("kernel_f32_blocked_gflops", json::num(f32_blocked_gflops)),
+        ("kernel_f32_simd_gflops", json::num(f32_simd_gflops)),
+        ("kernel_int8_ref_gops", json::num(int8_ref_gops)),
+        ("kernel_int8_simd_gops", json::num(int8_simd_gops)),
+        ("kernel_f32_simd_speedup", json::num(kernel_f32_speedup)),
+        ("kernel_int8_simd_speedup", json::num(kernel_int8_speedup)),
+        ("simd_gate", json::num(simd_gate)),
     ]);
     std::fs::write("BENCH_native.json", json::to_string(&report))?;
     println!("wrote BENCH_native.json");
 
     // ---- CI gates --------------------------------------------------------
     let mut failed = false;
-    if block_speedup < 1.5 {
+    if block_speedup < simd_gate {
         eprintln!(
-            "PERF REGRESSION: fast-path block throughput is only {block_speedup:.2}x the \
-             scalar reference (gate: >= 1.5x)"
+            "PERF REGRESSION: fast-path (simd) block throughput is only {block_speedup:.2}x \
+             the scalar reference (gate: >= {simd_gate}x on {isa})"
+        );
+        failed = true;
+    }
+    if kernel_f32_speedup < simd_gate {
+        eprintln!(
+            "PERF REGRESSION: f32 simd GEMM is only {kernel_f32_speedup:.2}x the scalar \
+             reference kernel (gate: >= {simd_gate}x on {isa})"
+        );
+        failed = true;
+    }
+    if kernel_int8_speedup < simd_gate {
+        eprintln!(
+            "PERF REGRESSION: int8 simd GEMM is only {kernel_int8_speedup:.2}x the scalar \
+             integer oracle (gate: >= {simd_gate}x on {isa})"
         );
         failed = true;
     }
@@ -255,9 +355,11 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(1);
     }
     println!(
-        "perf gates passed: fast block {block_speedup:.2}x >= 1.5x scalar reference, block \
-         BE >= token BE, int8 draft {int8_draft_speedup:.2}x >= 1.3x fp32, int8 e2e block \
-         {int8_block_speedup:.2}x > 1x, int8 tau within 0.9x of fp32"
+        "perf gates passed [{isa}]: fast block {block_speedup:.2}x >= {simd_gate}x scalar \
+         reference, f32 kernel {kernel_f32_speedup:.2}x / int8 kernel \
+         {kernel_int8_speedup:.2}x >= {simd_gate}x, block BE >= token BE, int8 draft \
+         {int8_draft_speedup:.2}x >= 1.3x fp32, int8 e2e block {int8_block_speedup:.2}x > 1x, \
+         int8 tau within 0.9x of fp32"
     );
     Ok(())
 }

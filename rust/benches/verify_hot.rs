@@ -8,6 +8,7 @@
 //! already wrote, so the archived perf-trajectory file carries both the
 //! wall-clock gates and the verify-kernel microbench in one artifact.
 
+use specd::backend::kernels::{active_isa, matmul_ref, matmul_simd, Isa, PackedF32};
 use specd::bench::Bench;
 use specd::util::json;
 use specd::util::proptest::rand_instance;
@@ -57,6 +58,35 @@ fn main() {
         }
     });
     results.push(("greedy_windowed_ns".into(), s.mean.as_nanos() as f64));
+
+    // ---- kernel microbench: GEMM shape sweep -----------------------------
+    // Reference vs SIMD per-call nanoseconds across the model shapes a
+    // forward actually runs (qkv/wo at d×d, MLP at d×4d, plus a tail
+    // shape), so a kernel regression is attributable separately from the
+    // engine cells in `benches/native_fast.rs`.
+    let scalar_isa = active_isa() == Isa::Scalar;
+    results.push(("kernel_isa_scalar".into(), scalar_isa as u64 as f64));
+    for (t, d_in, d_out) in
+        [(1usize, 64usize, 64usize), (8, 128, 128), (8, 128, 512), (9, 128, 509)]
+    {
+        let x: Vec<f32> = (0..t * d_in).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let w: Vec<f32> =
+            (0..d_in * d_out).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let pk = PackedF32::pack(&w, d_in, d_out);
+        let mut out = vec![0.0f32; t * d_out];
+        let s = b.run_n(&format!("kernel/ref/t{t}_i{d_in}_o{d_out}"), 1, || {
+            out.fill(0.0);
+            matmul_ref(&x, &w, &mut out, t, d_in, d_out);
+            std::hint::black_box(out[0]);
+        });
+        results.push((format!("gemm_ref_t{t}_i{d_in}_o{d_out}_ns"), s.mean.as_nanos() as f64));
+        let s = b.run_n(&format!("kernel/simd/t{t}_i{d_in}_o{d_out}"), 1, || {
+            out.fill(0.0);
+            matmul_simd(&x, &pk, &mut out, t, d_in, d_out);
+            std::hint::black_box(out[0]);
+        });
+        results.push((format!("gemm_simd_t{t}_i{d_in}_o{d_out}_ns"), s.mean.as_nanos() as f64));
+    }
 
     // ---- append to BENCH_native.json -------------------------------------
     // Merge into the existing report (native_fast writes it first in CI);

@@ -1,6 +1,6 @@
-//! CPU matmul/dot kernels for the native backend (DESIGN.md §10).
+//! CPU matmul/dot kernels for the native backend (DESIGN.md §10, §12).
 //!
-//! Two implementations of the same `out (t, d_out) += x (t, d_in) @
+//! Three implementations of the same `out (t, d_out) += x (t, d_in) @
 //! w (d_in, d_out)` contract:
 //!
 //! * [`matmul_ref`] — the scalar reference: the plain broadcast-row
@@ -9,23 +9,47 @@
 //!   weight initialisations and made scalar-vs-blocked comparisons
 //!   apples-to-oranges).  This is the baseline the `native_fast` bench
 //!   gate measures against.
-//! * [`matmul_blocked`] — the fast path: tiled over `d_out` in
-//!   [`TILE`]-wide register blocks so each output lane accumulates in a
-//!   register across the whole `d_in` loop (the reference re-loads and
-//!   re-stores the output row once per input element), with an
-//!   `f32x8`-style unrolled inner loop the autovectorizer maps onto SIMD
-//!   lanes.  Independent output lanes need no reduction reordering, so
-//!   vectorisation requires no fast-math relaxation.
+//! * [`matmul_blocked`] — tiled over `d_out` in [`TILE`]-wide register
+//!   blocks so each output lane accumulates in a register across the
+//!   whole `d_in` loop, with an `f32x8`-style unrolled inner loop the
+//!   autovectorizer maps onto SIMD lanes.
+//! * [`matmul_simd`] — explicit `std::arch` SIMD (AVX2 on x86_64, NEON
+//!   on aarch64, a packed-scalar fallback elsewhere) over a tile-major
+//!   [`PackedF32`] weight layout built once per model at
+//!   `Backend::prepare` time, so the inner loop streams contiguous
+//!   cache lines.
 //!
-//! Bit-identity contract: for a zero-filled `out`, both kernels add each
-//! output element's partial products in the same (input-index) order, so
-//! their results are bit-identical — `tests/native_fast.rs` enforces it.
-//! That is what lets the backend switch kernels per
-//! [`super::NativeBackend::with_reference_kernel`] without perturbing a
-//! single sampled token.
+//! Bit-identity contract: for a zero-filled `out`, all three kernels add
+//! each output element's partial products in the same (input-index)
+//! order, so their results are bit-identical — `tests/native_fast.rs`
+//! enforces it, including on non-lane-multiple tail shapes.  The SIMD
+//! kernels keep the contract by parallelising over *output lanes*: lane
+//! `o` of an accumulator register replays exactly the scalar sequence
+//! `acc += x[i] * w[i][o]` (separate IEEE multiply and add per element —
+//! **never** FMA, whose single rounding would diverge), and the final
+//! `out[o] += acc` is one add in both worlds.  That is what lets the
+//! backend switch kernels per [`MatKernel`] without perturbing a single
+//! sampled token.
+//!
+//! The int8 drafter path is different: [`matmul_q8_i32`] is a true
+//! i8×i8→i32 integer GEMM (per-token-row activation quantisation, exact
+//! integer accumulation, one fp32 rescale per output element at the
+//! end).  Integer accumulation is associative, so the scalar reference
+//! [`matmul_q8_i32_ref`] and every SIMD variant are bit-identical *by
+//! construction* — the determinism contract for the quantised drafter
+//! holds across ISAs and kernel choices (DESIGN.md §12.3).
+//!
+//! Kernel selection is resolved once per process: [`default_kernel`]
+//! reads `SPECD_NATIVE_KERNEL` (`ref | blocked | simd`, default `simd`)
+//! and [`active_isa`] probes the CPU, both `OnceLock`-cached.
 
-/// Register-tile width of the blocked kernel: 16 f32 lanes (two AVX or
-/// four SSE registers) held live across the `d_in` loop.
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Register-tile width of the blocked and SIMD kernels: 16 f32 lanes
+/// (two AVX2 registers, four NEON registers) held live across the
+/// `d_in` loop.  Also the lane granularity of the tile-major packed
+/// weight layouts ([`PackedF32`], [`pack_q8`]).
 pub const TILE: usize = 16;
 
 /// Scalar reference kernel: `out (t, d_out) += x (t, d_in) @ w (d_in,
@@ -117,19 +141,161 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
-/// Int8-weight GEMM: `out (t, d_out) += (x (t, d_in) @ dequant(q) (d_in,
-/// d_out))` where `dequant(q)[i][o] = q[i*d_out+o] as f32 * scale[o]`
-/// (the per-output-column symmetric layout of
-/// [`super::quant::QuantMatrix`]).  Mirrors [`matmul_blocked`]'s
-/// register-tile structure — [`TILE`] output lanes accumulate the raw
-/// `x · q` partial sums in registers across the whole `d_in` loop, and
-/// the per-column scale is applied **once** per output element at the
-/// end (factoring `scale[o]` out of the reduction), so the fp32 work per
-/// element is one convert + one fma while the weight traffic is a
-/// quarter of the fp32 kernel's.  Runs on the same `backend::pool`
-/// row-parallel forwards as the fp32 kernels; like them it is a pure
-/// function of its inputs, so results are independent of threading.
-pub fn matmul_q8_acc(
+// ---------------------------------------------------------------------------
+// Tile-major weight packing
+// ---------------------------------------------------------------------------
+
+/// A weight matrix repacked tile-major for the SIMD kernel: for each
+/// [`TILE`]-wide output tile, all `d_in` input rows' tile slices are
+/// stored contiguously — `data[(tile * d_in + i) * TILE + lane] =
+/// w[i * d_out + tile * TILE + lane]` — so the inner `d_in` loop streams
+/// one contiguous cache line per step instead of striding by `d_out`.
+/// The tail tile's missing lanes are zero-padded; `x * 0.0` contributes
+/// `+0.0` to a lane that is never written back, so padding cannot
+/// perturb results.
+#[derive(Clone, Debug)]
+pub struct PackedF32 {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// `(d_out.div_ceil(TILE), d_in, TILE)` tile-major data.
+    pub data: Vec<f32>,
+}
+
+impl PackedF32 {
+    /// Pack a row-major `(d_in, d_out)` matrix (done once per model at
+    /// `Backend::prepare` time, cached on the backend).
+    pub fn pack(w: &[f32], d_in: usize, d_out: usize) -> PackedF32 {
+        assert_eq!(w.len(), d_in * d_out, "weight shape mismatch");
+        let ntiles = d_out.div_ceil(TILE);
+        let mut data = vec![0.0f32; ntiles * d_in * TILE];
+        for (i, row) in w.chunks_exact(d_out).enumerate() {
+            for (o, &v) in row.iter().enumerate() {
+                data[((o / TILE) * d_in + i) * TILE + o % TILE] = v;
+            }
+        }
+        PackedF32 { d_in, d_out, data }
+    }
+}
+
+/// Tile-major repack of a row-major `(d_in, d_out)` int8 matrix — the
+/// integer twin of [`PackedF32::pack`], with the same layout and
+/// zero-padded tail tile (`xq * 0` adds nothing to padded lanes).
+pub fn pack_q8(q: &[i8], d_in: usize, d_out: usize) -> Vec<i8> {
+    assert_eq!(q.len(), d_in * d_out, "weight shape mismatch");
+    let ntiles = d_out.div_ceil(TILE);
+    let mut data = vec![0i8; ntiles * d_in * TILE];
+    for (i, row) in q.chunks_exact(d_out).enumerate() {
+        for (o, &v) in row.iter().enumerate() {
+            data[((o / TILE) * d_in + i) * TILE + o % TILE] = v;
+        }
+    }
+    data
+}
+
+// ---------------------------------------------------------------------------
+// f32 SIMD GEMM over the packed layout
+// ---------------------------------------------------------------------------
+
+/// Explicit-SIMD f32 GEMM over a [`PackedF32`] weight: `out (t, d_out)
+/// += x (t, d_in) @ w (d_in, d_out)`.  Dispatches on [`active_isa`];
+/// every variant (AVX2, NEON, packed-scalar) is bit-identical to
+/// [`matmul_ref`] on a zero-filled `out` — see the module docs for the
+/// output-lane argument.
+pub fn matmul_simd(
+    x: &[f32],
+    pk: &PackedF32,
+    out: &mut [f32],
+    t: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(pk.d_in, d_in);
+    debug_assert_eq!(pk.d_out, d_out);
+    debug_assert_eq!(x.len(), t * d_in);
+    debug_assert_eq!(out.len(), t * d_out);
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::matmul_f32_avx2(x, &pk.data, out, d_in, d_out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::matmul_f32_neon(x, &pk.data, out, d_in, d_out) },
+        _ => matmul_f32_packed_scalar(x, &pk.data, out, d_in, d_out),
+    }
+}
+
+/// Scalar walk of the packed layout — the [`matmul_simd`] fallback on
+/// CPUs without AVX2.  Identical accumulation structure to
+/// [`matmul_blocked`] (per-lane partial sums in input order, one final
+/// add into `out`), hence bit-identical to [`matmul_ref`].
+fn matmul_f32_packed_scalar(x: &[f32], data: &[f32], out: &mut [f32], d_in: usize, d_out: usize) {
+    let ntiles = d_out.div_ceil(TILE);
+    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+        for tile in 0..ntiles {
+            let base = tile * d_in * TILE;
+            let mut acc = [0.0f32; TILE];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wrow = &data[base + i * TILE..base + (i + 1) * TILE];
+                for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+                    *a += xv * wv;
+                }
+            }
+            let o0 = tile * TILE;
+            let n = TILE.min(d_out - o0);
+            for (o, &a) in orow[o0..o0 + n].iter_mut().zip(acc.iter()) {
+                *o += a;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 integer GEMM (i8 x i8 -> i32, fp32 rescale at the end)
+// ---------------------------------------------------------------------------
+
+/// Reusable activation-quantisation scratch for the int8 GEMMs: the
+/// quantised activation rows and their per-row scales.  Owned by the
+/// caller (one per forward scratch) so the hot loop never allocates.
+#[derive(Default, Debug)]
+pub struct QuantScratch {
+    pub xq: Vec<i8>,
+    pub xs: Vec<f32>,
+}
+
+/// Symmetric per-row activation quantisation: writes `round(x / s)`
+/// codes into `xq` and returns the scale `s = absmax / 127` (0 for an
+/// all-zero row, with all-zero codes).  Deliberately scalar everywhere:
+/// `f32::round` ties away from zero while SIMD rounding modes tie to
+/// even, so a vectorised variant would break the cross-ISA bit-identity
+/// of the integer GEMM at exact-half codes.
+#[inline]
+pub fn quantise_row_q8(x: &[f32], xq: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), xq.len());
+    let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = m / 127.0;
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    for (q, &v) in xq.iter_mut().zip(x.iter()) {
+        *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+fn quantise_rows(x: &[f32], t: usize, d_in: usize, scr: &mut QuantScratch) {
+    scr.xq.resize(t * d_in, 0);
+    scr.xs.resize(t, 0.0);
+    for ((xrow, qrow), s) in
+        x.chunks_exact(d_in).zip(scr.xq.chunks_exact_mut(d_in)).zip(scr.xs.iter_mut())
+    {
+        *s = quantise_row_q8(xrow, qrow);
+    }
+}
+
+/// Integer-accumulate scalar reference for the int8 GEMM, over the
+/// row-major [`super::quant::QuantMatrix`] layout: `out (t, d_out) +=
+/// dequant(quantise_rows(x) @ q)`.  Each output element is an exact
+/// i8×i8→i32 sum rescaled once by `sx * scale[o]`; no float enters the
+/// accumulation, so every other implementation (packed scalar, AVX2,
+/// NEON) is bit-identical to this one by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q8_i32_ref(
     x: &[f32],
     q: &[i8],
     scale: &[f32],
@@ -137,92 +303,436 @@ pub fn matmul_q8_acc(
     t: usize,
     d_in: usize,
     d_out: usize,
+    scr: &mut QuantScratch,
 ) {
     debug_assert_eq!(x.len(), t * d_in);
     debug_assert_eq!(q.len(), d_in * d_out);
     debug_assert_eq!(scale.len(), d_out);
     debug_assert_eq!(out.len(), t * d_out);
-    for ti in 0..t {
-        let xrow = &x[ti * d_in..(ti + 1) * d_in];
-        let orow = &mut out[ti * d_out..(ti + 1) * d_out];
-        let mut o0 = 0;
-        while o0 + TILE <= d_out {
-            let mut acc = [0.0f32; TILE];
-            for (i, &xv) in xrow.iter().enumerate() {
-                let qtile = &q[i * d_out + o0..i * d_out + o0 + TILE];
-                for (a, &qv) in acc.iter_mut().zip(qtile.iter()) {
-                    *a += xv * qv as f32;
-                }
+    quantise_rows(x, t, d_in, scr);
+    for ((xq, &sx), orow) in
+        scr.xq.chunks_exact(d_in).zip(scr.xs.iter()).zip(out.chunks_exact_mut(d_out))
+    {
+        for (o, (ov, &sw)) in orow.iter_mut().zip(scale.iter()).enumerate() {
+            let mut acc = 0i32;
+            for (i, &xv) in xq.iter().enumerate() {
+                acc += xv as i32 * q[i * d_out + o] as i32;
             }
-            let stile = &scale[o0..o0 + TILE];
-            for ((o, &a), &s) in orow[o0..o0 + TILE].iter_mut().zip(acc.iter()).zip(stile) {
-                *o += a * s;
-            }
-            o0 += TILE;
+            *ov += acc as f32 * (sx * sw);
         }
-        if o0 < d_out {
-            // Remainder lanes: same accumulate-then-scale order.
-            let mut acc = [0.0f32; TILE];
-            let rem = d_out - o0;
+    }
+}
+
+/// True i8×i8→i32 integer GEMM over the tile-major packed layout of
+/// [`pack_q8`]: quantises `x` per token row (shared scalar helper),
+/// accumulates exact integer dot products, and rescales each output
+/// element once (`acc as f32 * (sx * scale[o])`).  Dispatches on
+/// [`active_isa`]; all variants are bit-identical to
+/// [`matmul_q8_i32_ref`] because integer accumulation is order-free and
+/// the rescale expression is shared.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q8_i32(
+    x: &[f32],
+    qt: &[i8],
+    scale: &[f32],
+    out: &mut [f32],
+    t: usize,
+    d_in: usize,
+    d_out: usize,
+    scr: &mut QuantScratch,
+) {
+    debug_assert_eq!(x.len(), t * d_in);
+    debug_assert_eq!(qt.len(), d_out.div_ceil(TILE) * d_in * TILE);
+    debug_assert_eq!(scale.len(), d_out);
+    debug_assert_eq!(out.len(), t * d_out);
+    quantise_rows(x, t, d_in, scr);
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            x86::matmul_q8_avx2(&scr.xq, &scr.xs, qt, scale, out, d_in, d_out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            arm::matmul_q8_neon(&scr.xq, &scr.xs, qt, scale, out, d_in, d_out)
+        },
+        _ => matmul_q8_packed_scalar(&scr.xq, &scr.xs, qt, scale, out, d_in, d_out),
+    }
+}
+
+fn matmul_q8_packed_scalar(
+    xq: &[i8],
+    xs: &[f32],
+    qt: &[i8],
+    scale: &[f32],
+    out: &mut [f32],
+    d_in: usize,
+    d_out: usize,
+) {
+    let ntiles = d_out.div_ceil(TILE);
+    for ((xrow, &sx), orow) in
+        xq.chunks_exact(d_in).zip(xs.iter()).zip(out.chunks_exact_mut(d_out))
+    {
+        for tile in 0..ntiles {
+            let base = tile * d_in * TILE;
+            let mut acc = [0i32; TILE];
             for (i, &xv) in xrow.iter().enumerate() {
-                let qrow = &q[i * d_out + o0..(i + 1) * d_out];
-                for (a, &qv) in acc[..rem].iter_mut().zip(qrow.iter()) {
-                    *a += xv * qv as f32;
+                let wrow = &qt[base + i * TILE..base + (i + 1) * TILE];
+                for (a, &qv) in acc.iter_mut().zip(wrow.iter()) {
+                    *a += xv as i32 * qv as i32;
                 }
             }
-            for ((o, &a), &s) in
-                orow[o0..].iter_mut().zip(acc[..rem].iter()).zip(scale[o0..].iter())
+            let o0 = tile * TILE;
+            let n = TILE.min(d_out - o0);
+            for ((ov, &a), &sw) in
+                orow[o0..o0 + n].iter_mut().zip(acc.iter()).zip(scale[o0..o0 + n].iter())
             {
-                *o += a * s;
+                *ov += a as f32 * (sx * sw);
             }
         }
     }
 }
 
-/// Int8 dot product against an fp32 vector, mirroring [`dot_f32`]'s
-/// 8-lane unrolled structure (tail then lanes 0..8 combine order — same
-/// determinism contract).  The caller multiplies the result by the row's
-/// dequantisation scale (factored out of the reduction).
+/// Exact i8×i8→i32 dot product, ISA-dispatched.  Integer accumulation
+/// is order-free, so every variant returns the same integer regardless
+/// of ISA or chunking — the unembedding path uses this unconditionally
+/// (no kernel switch needed for determinism).
 #[inline]
-pub fn dot_q8(a: &[f32], q: &[i8]) -> f32 {
-    debug_assert_eq!(a.len(), q.len());
-    let mut acc = [0.0f32; 8];
-    let mut ca = a.chunks_exact(8);
-    let mut cq = q.chunks_exact(8);
-    for (xa, xq) in ca.by_ref().zip(cq.by_ref()) {
-        for ((l, &va), &vq) in acc.iter_mut().zip(xa.iter()).zip(xq.iter()) {
-            *l += va * vq as f32;
-        }
+pub fn dot_q8_i32(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_q8_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::dot_q8_neon(a, b) },
+        _ => dot_q8_i32_scalar(a, b),
     }
-    let mut sum = 0.0f32;
-    for (&va, &vq) in ca.remainder().iter().zip(cq.remainder().iter()) {
-        sum += va * vq as f32;
-    }
-    for &l in &acc {
-        sum += l;
-    }
-    sum
 }
 
-/// Which matmul kernel a forward pass runs with — the only thing the
-/// backend's `reference_kernel` benchmarking switch toggles (everything
-/// else in the forward is shared, so the `native_fast` bench isolates
-/// exactly the kernel + threading + scratch delta).
+/// Scalar oracle for [`dot_q8_i32`] (also the non-SIMD fallback).
+#[inline]
+pub fn dot_q8_i32_scalar(a: &[i8], b: &[i8]) -> i32 {
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::TILE;
+    use std::arch::x86_64::*;
+
+    /// AVX2 f32 GEMM over the tile-major layout.  Two 8-lane registers
+    /// cover one [`TILE`]; each lane replays the scalar `acc += x[i] *
+    /// w[i][o]` sequence with separate multiply and add (no FMA), so the
+    /// result is bit-identical to the scalar reference.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_f32_avx2(
+        x: &[f32],
+        data: &[f32],
+        out: &mut [f32],
+        d_in: usize,
+        d_out: usize,
+    ) {
+        let ntiles = d_out.div_ceil(TILE);
+        for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+            for tile in 0..ntiles {
+                let base = tile * d_in * TILE;
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut p = data.as_ptr().add(base);
+                for &xv in xrow {
+                    let xv8 = _mm256_set1_ps(xv);
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv8, _mm256_loadu_ps(p)));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv8, _mm256_loadu_ps(p.add(8))));
+                    p = p.add(TILE);
+                }
+                let mut buf = [0.0f32; TILE];
+                _mm256_storeu_ps(buf.as_mut_ptr(), acc0);
+                _mm256_storeu_ps(buf.as_mut_ptr().add(8), acc1);
+                let o0 = tile * TILE;
+                let n = TILE.min(d_out - o0);
+                for (o, &a) in orow[o0..o0 + n].iter_mut().zip(buf.iter()) {
+                    *o += a;
+                }
+            }
+        }
+    }
+
+    /// AVX2 i8×i8→i32 GEMM over the tile-major layout.  Weights widen
+    /// i8→i16, multiply against the broadcast activation code with
+    /// `mullo_epi16` (exact: |product| ≤ 127² = 16129 < 2¹⁵), widen to
+    /// i32 and accumulate; the fp32 rescale per output element matches
+    /// the scalar reference's expression exactly.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_q8_avx2(
+        xq: &[i8],
+        xs: &[f32],
+        qt: &[i8],
+        scale: &[f32],
+        out: &mut [f32],
+        d_in: usize,
+        d_out: usize,
+    ) {
+        let ntiles = d_out.div_ceil(TILE);
+        for ((xrow, &sx), orow) in
+            xq.chunks_exact(d_in).zip(xs.iter()).zip(out.chunks_exact_mut(d_out))
+        {
+            for tile in 0..ntiles {
+                let base = tile * d_in * TILE;
+                let mut acc0 = _mm256_setzero_si256();
+                let mut acc1 = _mm256_setzero_si256();
+                let mut p = qt.as_ptr().add(base);
+                for &xv in xrow {
+                    let xv16 = _mm256_set1_epi16(xv as i16);
+                    let w16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(p as *const __m128i));
+                    let prod = _mm256_mullo_epi16(w16, xv16);
+                    let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+                    let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+                    acc0 = _mm256_add_epi32(acc0, lo);
+                    acc1 = _mm256_add_epi32(acc1, hi);
+                    p = p.add(TILE);
+                }
+                let mut buf = [0i32; TILE];
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc0);
+                _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc1);
+                let o0 = tile * TILE;
+                let n = TILE.min(d_out - o0);
+                for ((ov, &a), &sw) in
+                    orow[o0..o0 + n].iter_mut().zip(buf.iter()).zip(scale[o0..o0 + n].iter())
+                {
+                    *ov += a as f32 * (sx * sw);
+                }
+            }
+        }
+    }
+
+    /// AVX2 i8×i8→i32 dot: widen both operands to i16 and `madd` (pairs
+    /// of exact i16 products summed into i32 lanes).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_q8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = _mm256_setzero_si256();
+        let mut ca = a.chunks_exact(16);
+        let mut cb = b.chunks_exact(16);
+        for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+            let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(xa.as_ptr() as *const __m128i));
+            let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(xb.as_ptr() as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        }
+        let mut buf = [0i32; 8];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum: i32 = buf.iter().sum();
+        for (&va, &vb) in ca.remainder().iter().zip(cb.remainder().iter()) {
+            sum += va as i32 * vb as i32;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::TILE;
+    use std::arch::aarch64::*;
+
+    /// NEON f32 GEMM over the tile-major layout.  Four 4-lane registers
+    /// cover one [`TILE`]; `vmulq` + `vaddq` with separate roundings
+    /// (never `vfmaq`) keeps each lane bit-identical to the scalar
+    /// reference sequence.
+    pub(super) unsafe fn matmul_f32_neon(
+        x: &[f32],
+        data: &[f32],
+        out: &mut [f32],
+        d_in: usize,
+        d_out: usize,
+    ) {
+        let ntiles = d_out.div_ceil(TILE);
+        for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+            for tile in 0..ntiles {
+                let base = tile * d_in * TILE;
+                let mut acc0 = vdupq_n_f32(0.0);
+                let mut acc1 = vdupq_n_f32(0.0);
+                let mut acc2 = vdupq_n_f32(0.0);
+                let mut acc3 = vdupq_n_f32(0.0);
+                let mut p = data.as_ptr().add(base);
+                for &xv in xrow {
+                    let xv4 = vdupq_n_f32(xv);
+                    acc0 = vaddq_f32(acc0, vmulq_f32(xv4, vld1q_f32(p)));
+                    acc1 = vaddq_f32(acc1, vmulq_f32(xv4, vld1q_f32(p.add(4))));
+                    acc2 = vaddq_f32(acc2, vmulq_f32(xv4, vld1q_f32(p.add(8))));
+                    acc3 = vaddq_f32(acc3, vmulq_f32(xv4, vld1q_f32(p.add(12))));
+                    p = p.add(TILE);
+                }
+                let mut buf = [0.0f32; TILE];
+                vst1q_f32(buf.as_mut_ptr(), acc0);
+                vst1q_f32(buf.as_mut_ptr().add(4), acc1);
+                vst1q_f32(buf.as_mut_ptr().add(8), acc2);
+                vst1q_f32(buf.as_mut_ptr().add(12), acc3);
+                let o0 = tile * TILE;
+                let n = TILE.min(d_out - o0);
+                for (o, &a) in orow[o0..o0 + n].iter_mut().zip(buf.iter()) {
+                    *o += a;
+                }
+            }
+        }
+    }
+
+    /// NEON i8×i8→i32 GEMM over the tile-major layout: widen weights
+    /// i8→i16 and `vmlal` against the broadcast activation code into
+    /// four i32x4 accumulators (exact).
+    pub(super) unsafe fn matmul_q8_neon(
+        xq: &[i8],
+        xs: &[f32],
+        qt: &[i8],
+        scale: &[f32],
+        out: &mut [f32],
+        d_in: usize,
+        d_out: usize,
+    ) {
+        let ntiles = d_out.div_ceil(TILE);
+        for ((xrow, &sx), orow) in
+            xq.chunks_exact(d_in).zip(xs.iter()).zip(out.chunks_exact_mut(d_out))
+        {
+            for tile in 0..ntiles {
+                let base = tile * d_in * TILE;
+                let mut acc = [vdupq_n_s32(0); 4];
+                let mut p = qt.as_ptr().add(base);
+                for &xv in xrow {
+                    let xv4 = vdup_n_s16(xv as i16);
+                    let w = vld1q_s8(p);
+                    let wlo = vmovl_s8(vget_low_s8(w));
+                    let whi = vmovl_s8(vget_high_s8(w));
+                    acc[0] = vmlal_s16(acc[0], vget_low_s16(wlo), xv4);
+                    acc[1] = vmlal_s16(acc[1], vget_high_s16(wlo), xv4);
+                    acc[2] = vmlal_s16(acc[2], vget_low_s16(whi), xv4);
+                    acc[3] = vmlal_s16(acc[3], vget_high_s16(whi), xv4);
+                    p = p.add(TILE);
+                }
+                let mut buf = [0i32; TILE];
+                for (k, &a) in acc.iter().enumerate() {
+                    vst1q_s32(buf.as_mut_ptr().add(4 * k), a);
+                }
+                let o0 = tile * TILE;
+                let n = TILE.min(d_out - o0);
+                for ((ov, &a), &sw) in
+                    orow[o0..o0 + n].iter_mut().zip(buf.iter()).zip(scale[o0..o0 + n].iter())
+                {
+                    *ov += a as f32 * (sx * sw);
+                }
+            }
+        }
+    }
+
+    /// NEON i8×i8→i32 dot: `vmull_s8` to exact i16 products, pairwise
+    /// add-accumulate into i32 lanes.
+    pub(super) unsafe fn dot_q8_neon(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = vdupq_n_s32(0);
+        let mut ca = a.chunks_exact(16);
+        let mut cb = b.chunks_exact(16);
+        for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+            let va = vld1q_s8(xa.as_ptr());
+            let vb = vld1q_s8(xb.as_ptr());
+            acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(va), vget_low_s8(vb)));
+            acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(va), vget_high_s8(vb)));
+        }
+        let mut sum = vaddvq_s32(acc);
+        for (&va, &vb) in ca.remainder().iter().zip(cb.remainder().iter()) {
+            sum += va as i32 * vb as i32;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime ISA detection and kernel dispatch
+// ---------------------------------------------------------------------------
+
+/// The SIMD instruction set the process resolved at startup
+/// ([`active_isa`]).  `Scalar` means [`matmul_simd`] runs the
+/// packed-scalar fallback (still bit-identical, still cache-friendly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    Avx2,
+    Neon,
+    Scalar,
+}
+
+impl fmt::Display for Isa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        })
+    }
+}
+
+/// CPU feature probe, resolved once per process (`OnceLock`).
+pub fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(detect_isa)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_isa() -> Isa {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_isa() -> Isa {
+    // NEON is baseline on aarch64 targets; no runtime probe needed.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_isa() -> Isa {
+    Isa::Scalar
+}
+
+/// Which matmul kernel a forward pass runs with.  All three produce
+/// bit-identical f32 results (module docs), so the choice is purely a
+/// performance A/B — and all three route int8 drafts through the same
+/// exact integer GEMM, so the quantised stream is kernel-invariant too.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MatKernel {
     /// [`matmul_ref`] — scalar baseline for perf comparisons.
     Reference,
-    /// [`matmul_blocked`] — the production fast path.
+    /// [`matmul_blocked`] — register-tiled, autovectorized.
     Blocked,
+    /// [`matmul_simd`] — explicit `std::arch` SIMD over packed tiles;
+    /// the production default.
+    Simd,
 }
 
 impl MatKernel {
-    /// `out (t, d_out) += x (t, d_in) @ w (d_in, d_out)`.
+    pub fn parse(s: &str) -> Option<MatKernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "ref" | "reference" | "scalar" => Some(MatKernel::Reference),
+            "blocked" => Some(MatKernel::Blocked),
+            "simd" => Some(MatKernel::Simd),
+            _ => None,
+        }
+    }
+
+    /// `out (t, d_out) += x (t, d_in) @ w (d_in, d_out)`.  `packed` is
+    /// the tile-major twin of `w` when the caller has one; `Simd`
+    /// without it falls back to the (bit-identical) blocked kernel
+    /// rather than packing per call.
+    #[allow(clippy::too_many_arguments)]
     #[inline]
     pub fn matmul_acc(
         self,
         x: &[f32],
         w: &[f32],
+        packed: Option<&PackedF32>,
         out: &mut [f32],
         t: usize,
         d_in: usize,
@@ -231,8 +741,40 @@ impl MatKernel {
         match self {
             MatKernel::Reference => matmul_ref(x, w, out, t, d_in, d_out),
             MatKernel::Blocked => matmul_blocked(x, w, out, t, d_in, d_out),
+            MatKernel::Simd => match packed {
+                Some(pk) => matmul_simd(x, pk, out, t, d_in, d_out),
+                None => matmul_blocked(x, w, out, t, d_in, d_out),
+            },
         }
     }
+}
+
+impl fmt::Display for MatKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            MatKernel::Reference => "ref",
+            MatKernel::Blocked => "blocked",
+            MatKernel::Simd => "simd",
+        })
+    }
+}
+
+/// Process-wide default kernel: `SPECD_NATIVE_KERNEL` when set (and
+/// valid), otherwise [`MatKernel::Simd`].  Resolved once (`OnceLock`);
+/// an unparsable value falls back *loudly* (stderr) — a typo must not
+/// silently flip an operator's intended A/B arm.
+pub fn default_kernel() -> MatKernel {
+    static KERNEL: OnceLock<MatKernel> = OnceLock::new();
+    *KERNEL.get_or_init(|| match std::env::var("SPECD_NATIVE_KERNEL") {
+        Ok(s) => MatKernel::parse(&s).unwrap_or_else(|| {
+            eprintln!(
+                "specd: ignoring invalid SPECD_NATIVE_KERNEL '{s}' (ref | blocked | simd); \
+                 using simd"
+            );
+            MatKernel::Simd
+        }),
+        Err(_) => MatKernel::Simd,
+    })
 }
 
 #[cfg(test)]
@@ -244,12 +786,23 @@ mod tests {
         (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect()
     }
 
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 32, 32),
+        (5, 128, 512),
+        (3, 64, 40),
+        (2, 17, 23),
+        (4, 96, 16),
+        (1, 1, 1),
+        (2, 3, 15),
+        (6, 9, 17),
+        (2, 16, 31),
+        (5, 7, 33),
+    ];
+
     #[test]
     fn blocked_matches_reference_bitwise() {
         let mut rng = Rng::new(0xb10c);
-        for &(t, d_in, d_out) in
-            &[(1usize, 32usize, 32usize), (5, 128, 512), (3, 64, 40), (2, 17, 23), (4, 96, 16)]
-        {
+        for &(t, d_in, d_out) in SHAPES {
             let x = rand_vec(&mut rng, t * d_in);
             let w = rand_vec(&mut rng, d_in * d_out);
             let mut a = vec![0.0f32; t * d_out];
@@ -258,6 +811,116 @@ mod tests {
             matmul_blocked(&x, &w, &mut b, t, d_in, d_out);
             assert_eq!(a, b, "kernels diverge at t={t} d_in={d_in} d_out={d_out}");
         }
+    }
+
+    #[test]
+    fn simd_matches_reference_bitwise_on_packed_tiles() {
+        let mut rng = Rng::new(0x51d);
+        for &(t, d_in, d_out) in SHAPES {
+            let x = rand_vec(&mut rng, t * d_in);
+            let w = rand_vec(&mut rng, d_in * d_out);
+            let pk = PackedF32::pack(&w, d_in, d_out);
+            let mut a = vec![0.0f32; t * d_out];
+            let mut b = vec![0.0f32; t * d_out];
+            matmul_ref(&x, &w, &mut a, t, d_in, d_out);
+            matmul_simd(&x, &pk, &mut b, t, d_in, d_out);
+            assert_eq!(
+                a, b,
+                "simd ({}) diverges at t={t} d_in={d_in} d_out={d_out}",
+                active_isa()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_layout_roundtrips() {
+        let mut rng = Rng::new(0x9ac);
+        let (d_in, d_out) = (7, 37); // tail tile of 5 lanes
+        let w = rand_vec(&mut rng, d_in * d_out);
+        let pk = PackedF32::pack(&w, d_in, d_out);
+        assert_eq!(pk.data.len(), d_out.div_ceil(TILE) * d_in * TILE);
+        for i in 0..d_in {
+            for o in 0..d_out {
+                let v = pk.data[((o / TILE) * d_in + i) * TILE + o % TILE];
+                assert_eq!(v, w[i * d_out + o], "({i},{o}) mispacked");
+            }
+        }
+        // Padded tail lanes are zero.
+        for i in 0..d_in {
+            for lane in d_out % TILE..TILE {
+                let v = pk.data[((d_out / TILE) * d_in + i) * TILE + lane];
+                assert_eq!(v, 0.0, "pad lane ({i},{lane}) not zero");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_gemm_variants_are_bit_identical_and_match_integer_oracle() {
+        let mut rng = Rng::new(0x0b8);
+        for &(t, d_in, d_out) in SHAPES {
+            let x = rand_vec(&mut rng, t * d_in);
+            let q: Vec<i8> =
+                (0..d_in * d_out).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
+            let scale: Vec<f32> = (0..d_out).map(|_| (rng.uniform() * 0.02) as f32).collect();
+            let qt = pack_q8(&q, d_in, d_out);
+            let mut scr = QuantScratch::default();
+            let mut got_ref = vec![0.0f32; t * d_out];
+            matmul_q8_i32_ref(&x, &q, &scale, &mut got_ref, t, d_in, d_out, &mut scr);
+            let mut got_simd = vec![0.0f32; t * d_out];
+            matmul_q8_i32(&x, &qt, &scale, &mut got_simd, t, d_in, d_out, &mut scr);
+            assert_eq!(
+                got_ref, got_simd,
+                "int8 GEMM diverges ({}) at t={t} d_in={d_in} d_out={d_out}",
+                active_isa()
+            );
+            // Independent integer-accumulate oracle: no float enters the
+            // accumulation, the rescale expression is shared.
+            let mut xq = vec![0i8; d_in];
+            for ti in 0..t {
+                let sx = quantise_row_q8(&x[ti * d_in..(ti + 1) * d_in], &mut xq);
+                for o in 0..d_out {
+                    let mut acc = 0i32;
+                    for (i, &xv) in xq.iter().enumerate() {
+                        acc += xv as i32 * q[i * d_out + o] as i32;
+                    }
+                    let want = acc as f32 * (sx * scale[o]);
+                    assert_eq!(
+                        got_ref[ti * d_out + o],
+                        want,
+                        "oracle mismatch at ti={ti} o={o}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_q8_i32_matches_scalar_oracle_exactly() {
+        let mut rng = Rng::new(0x0d8);
+        for n in [1usize, 7, 8, 15, 16, 17, 31, 64, 100] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
+            assert_eq!(dot_q8_i32(&a, &b), dot_q8_i32_scalar(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn quantise_row_uses_full_code_range() {
+        let mut rng = Rng::new(0x11e);
+        let x = rand_vec(&mut rng, 33);
+        let mut xq = vec![0i8; 33];
+        let s = quantise_row_q8(&x, &mut xq);
+        assert!(s > 0.0);
+        assert_eq!(xq.iter().map(|q| q.unsigned_abs()).max().unwrap(), 127);
+        // Roundtrip error bounded by half a step.
+        for (&q, &v) in xq.iter().zip(x.iter()) {
+            assert!((q as f32 * s - v).abs() <= s * 0.5 + 1e-7);
+        }
+        // All-zero rows quantise to scale 0, all-zero codes.
+        let z = vec![0.0f32; 8];
+        let mut zq = vec![1i8; 8];
+        assert_eq!(quantise_row_q8(&z, &mut zq), 0.0);
+        assert!(zq.iter().all(|&q| q == 0));
     }
 
     #[test]
@@ -272,51 +935,10 @@ mod tests {
         let mut out_b = vec![0.0f32; 2];
         matmul_blocked(&x, &w, &mut out_b, 1, 3, 2);
         assert_eq!(out_b, vec![4.0, 40.0]);
-    }
-
-    #[test]
-    fn q8_matmul_matches_scalar_dequantised_reference() {
-        let mut rng = Rng::new(0x0b8);
-        for &(t, d_in, d_out) in
-            &[(1usize, 32usize, 32usize), (5, 64, 256), (3, 64, 40), (2, 17, 23)]
-        {
-            let x = rand_vec(&mut rng, t * d_in);
-            let q: Vec<i8> =
-                (0..d_in * d_out).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
-            let scale: Vec<f32> =
-                (0..d_out).map(|_| (rng.uniform() * 0.02) as f32).collect();
-            let mut got = vec![0.0f32; t * d_out];
-            matmul_q8_acc(&x, &q, &scale, &mut got, t, d_in, d_out);
-            // Scalar reference with identical accumulate-then-scale order.
-            let mut want = vec![0.0f32; t * d_out];
-            for ti in 0..t {
-                for o in 0..d_out {
-                    let mut acc = 0.0f32;
-                    for i in 0..d_in {
-                        acc += x[ti * d_in + i] * q[i * d_out + o] as f32;
-                    }
-                    want[ti * d_out + o] += acc * scale[o];
-                }
-            }
-            for (g, w) in got.iter().zip(want.iter()) {
-                assert!(
-                    (g - w).abs() <= w.abs().max(1.0) * 1e-5,
-                    "t={t} d_in={d_in} d_out={d_out}: {g} vs {w}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn dot_q8_matches_naive_sum() {
-        let mut rng = Rng::new(0x0d8);
-        for n in [1usize, 7, 8, 9, 31, 64, 100] {
-            let a = rand_vec(&mut rng, n);
-            let q: Vec<i8> = (0..n).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
-            let got = dot_q8(&a, &q) as f64;
-            let want: f64 = a.iter().zip(q.iter()).map(|(&x, &v)| (x as f64) * v as f64).sum();
-            assert!((got - want).abs() < 1e-2, "n={n}: {got} vs {want}");
-        }
+        let pk = PackedF32::pack(&w, 3, 2);
+        let mut out_s = vec![0.0f32; 2];
+        matmul_simd(&x, &pk, &mut out_s, 1, 3, 2);
+        assert_eq!(out_s, vec![4.0, 40.0]);
     }
 
     #[test]
@@ -328,6 +950,40 @@ mod tests {
             let got = dot_f32(&a, &b) as f64;
             let want: f64 = a.iter().zip(b.iter()).map(|(&x, &y)| (x * y) as f64).sum();
             assert!((got - want).abs() < 1e-4, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn kernel_parse_and_display() {
+        assert_eq!(MatKernel::parse("ref"), Some(MatKernel::Reference));
+        assert_eq!(MatKernel::parse(" Reference "), Some(MatKernel::Reference));
+        assert_eq!(MatKernel::parse("blocked"), Some(MatKernel::Blocked));
+        assert_eq!(MatKernel::parse("SIMD"), Some(MatKernel::Simd));
+        assert_eq!(MatKernel::parse("avx512"), None);
+        assert_eq!(MatKernel::Reference.to_string(), "ref");
+        assert_eq!(MatKernel::Blocked.to_string(), "blocked");
+        assert_eq!(MatKernel::Simd.to_string(), "simd");
+        // The ISA label renders (whatever this host resolves to).
+        assert!(["avx2", "neon", "scalar"].contains(&active_isa().to_string().as_str()));
+    }
+
+    #[test]
+    fn matkernel_dispatch_is_bit_identical_across_variants() {
+        let mut rng = Rng::new(0xd15);
+        let (t, d_in, d_out) = (3, 48, 50);
+        let x = rand_vec(&mut rng, t * d_in);
+        let w = rand_vec(&mut rng, d_in * d_out);
+        let pk = PackedF32::pack(&w, d_in, d_out);
+        let mut want = vec![0.0f32; t * d_out];
+        matmul_ref(&x, &w, &mut want, t, d_in, d_out);
+        for kernel in [MatKernel::Reference, MatKernel::Blocked, MatKernel::Simd] {
+            let mut got = vec![0.0f32; t * d_out];
+            kernel.matmul_acc(&x, &w, Some(&pk), &mut got, t, d_in, d_out);
+            assert_eq!(got, want, "{kernel} diverges from reference");
+            // Simd without packed tiles falls back, still bit-identical.
+            let mut got2 = vec![0.0f32; t * d_out];
+            kernel.matmul_acc(&x, &w, None, &mut got2, t, d_in, d_out);
+            assert_eq!(got2, want, "{kernel} (unpacked) diverges from reference");
         }
     }
 }

@@ -95,6 +95,10 @@ pub struct SpecIterOut {
     /// quantised-draft win shows up in `/metrics`.  0 = not instrumented
     /// (a fully fused device program cannot separate its draft phase).
     pub draft_us: u64,
+    /// Wall-clock microseconds the iteration spent in the target scoring
+    /// forward, for the `target_forward_us` metric — the denominator of
+    /// every kernel-substrate win.  0 = not instrumented, as above.
+    pub target_us: u64,
 }
 
 /// One row mapping of a batched admission prefill

@@ -26,7 +26,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context};
 
-use super::kernels::{dot_f32, dot_q8, matmul_q8_acc, MatKernel};
+use super::kernels::{
+    default_kernel, dot_f32, dot_q8_i32, matmul_q8_i32, matmul_q8_i32_ref, quantise_row_q8,
+    MatKernel, PackedF32, QuantScratch,
+};
 use super::pool::{ScopedJob, ThreadPool};
 use super::quant::{Precision, QuantLayer, QuantMatrix, QuantModel, QuantRows};
 use super::{Backend, BackendInfo, DraftOut, RowSplice, SpecIterOut, StepOut};
@@ -251,6 +254,11 @@ struct RowScratch {
     o: Vec<f32>,
     ff: Vec<f32>,
     att: Vec<f32>,
+    /// Activation-quantisation scratch for the int8 integer GEMMs
+    /// (`kernels::matmul_q8_i32`); unused on fp32 forwards.
+    qscr: QuantScratch,
+    /// Quantised normed row for the int8 unembedding dot.
+    xq: Vec<i8>,
 }
 
 impl RowScratch {
@@ -265,6 +273,8 @@ impl RowScratch {
             o: vec![0.0; t * d],
             ff: vec![0.0; t * dims.d_ff()],
             att: vec![0.0; l],
+            qscr: QuantScratch::default(),
+            xq: vec![0; d],
         }
     }
 }
@@ -281,24 +291,78 @@ struct RowSlot<'a> {
     start: i32,
 }
 
-/// `out += x @ w`, routed through the int8 kernel when the layer runs
-/// quantised and the configured fp32 kernel otherwise — the single
-/// dispatch point of the draft-precision knob inside a forward.
+/// Tile-major packed fp32 twin of one transformer block — the SIMD
+/// kernel's weight layout ([`PackedF32`]).
+pub(crate) struct PackedLayer {
+    wq: PackedF32,
+    wk: PackedF32,
+    wv: PackedF32,
+    wo: PackedF32,
+    w1: PackedF32,
+    w2: PackedF32,
+}
+
+/// Tile-major packed fp32 model twin, built once per model at
+/// [`Backend::prepare`] time (or lazily on the first `Simd` forward) and
+/// cached on the backend keyed by model name — the same keyed-pool idiom
+/// as the int8 twins.  Only the six GEMM matrices per layer pack; the
+/// embedding is consumed row-wise through `dot_f32` (already contiguous)
+/// and the norms are vectors.
+pub(crate) struct PackedModel {
+    layers: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    fn pack(m: &NativeModel) -> PackedModel {
+        let d = m.dims.d_model;
+        let f = m.dims.d_ff();
+        PackedModel {
+            layers: m
+                .layers
+                .iter()
+                .map(|l| PackedLayer {
+                    wq: PackedF32::pack(&l.wq, d, d),
+                    wk: PackedF32::pack(&l.wk, d, d),
+                    wv: PackedF32::pack(&l.wv, d, d),
+                    wo: PackedF32::pack(&l.wo, d, d),
+                    w1: PackedF32::pack(&l.w1, d, f),
+                    w2: PackedF32::pack(&l.w2, f, d),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// `out += x @ w`, routed through the exact i8×i8→i32 integer GEMM when
+/// the layer runs quantised and the configured fp32 kernel otherwise —
+/// the single dispatch point of the draft-precision knob inside a
+/// forward.  The int8 route ignores the fp32 kernel choice except to
+/// pick the (bit-identical) layout walked: `Reference` runs the scalar
+/// row-major oracle, everything else the SIMD-dispatched tile-major
+/// twin; integer accumulation makes both exact, so the quantised stream
+/// is kernel- and ISA-invariant (DESIGN.md §12.3).
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn matmul_any(
     kernel: MatKernel,
     qm: Option<&QuantMatrix>,
+    pm: Option<&PackedF32>,
     x: &[f32],
     w: &[f32],
     out: &mut [f32],
     t: usize,
     d_in: usize,
     d_out: usize,
+    scr: &mut QuantScratch,
 ) {
     match qm {
-        Some(qm) => matmul_q8_acc(x, &qm.q, &qm.scale, out, t, d_in, d_out),
-        None => kernel.matmul_acc(x, w, out, t, d_in, d_out),
+        Some(qm) => match kernel {
+            MatKernel::Reference => {
+                matmul_q8_i32_ref(x, &qm.q, &qm.scale, out, t, d_in, d_out, scr)
+            }
+            _ => matmul_q8_i32(x, &qm.qt, &qm.scale, out, t, d_in, d_out, scr),
+        },
+        None => kernel.matmul_acc(x, w, pm, out, t, d_in, d_out),
     }
 }
 
@@ -309,14 +373,19 @@ fn matmul_any(
 /// unembedding + softmax.  With `quant` set, every weight matrix and the
 /// tied embedding (lookup *and* unembedding — the same int8 table both
 /// ways, so the row runs one well-defined int8 model, DESIGN.md §11)
-/// come from the quantised twin; activations, layer norms and positions
-/// stay fp32.  Pure function of `(model, quant, slot, t, l)`; the
+/// come from the quantised twin; layer norms and positions stay fp32
+/// while GEMM activations quantise per token row inside the integer
+/// kernels.  Pure function of `(model, quant, packed, slot, t, l)`; the
 /// scratch is write-before-read throughout, so results are independent
 /// of which thread runs the row and of whatever a previous row left in
-/// the buffers (the threading determinism contract).
+/// the buffers (the threading determinism contract).  `packed` is the
+/// tile-major fp32 twin the `Simd` kernel streams; `None` falls back to
+/// the bit-identical blocked kernel.
+#[allow(clippy::too_many_arguments)]
 fn forward_row(
     model: &NativeModel,
     quant: Option<&QuantModel>,
+    packed: Option<&PackedModel>,
     kernel: MatKernel,
     slot: RowSlot<'_>,
     t: usize,
@@ -351,13 +420,16 @@ fn forward_row(
     }
     for (li, layer) in model.layers.iter().enumerate() {
         let ql = quant.map(|qm| &qm.layers[li]);
+        let pl = packed.map(|pm| &pm.layers[li]);
         layer.ln1.apply(&s.x, &mut s.y, d);
         s.q.iter_mut().for_each(|z| *z = 0.0);
         s.kx.iter_mut().for_each(|z| *z = 0.0);
         s.vx.iter_mut().for_each(|z| *z = 0.0);
-        matmul_any(kernel, ql.map(|q| &q.wq), &s.y, &layer.wq, &mut s.q, t, d, d);
-        matmul_any(kernel, ql.map(|q| &q.wk), &s.y, &layer.wk, &mut s.kx, t, d, d);
-        matmul_any(kernel, ql.map(|q| &q.wv), &s.y, &layer.wv, &mut s.vx, t, d, d);
+        let (wq, wk, wv) = (ql.map(|q| &q.wq), ql.map(|q| &q.wk), ql.map(|q| &q.wv));
+        let (pq, pk, pv) = (pl.map(|p| &p.wq), pl.map(|p| &p.wk), pl.map(|p| &p.wv));
+        matmul_any(kernel, wq, pq, &s.y, &layer.wq, &mut s.q, t, d, d, &mut s.qscr);
+        matmul_any(kernel, wk, pk, &s.y, &layer.wk, &mut s.kx, t, d, d, &mut s.qscr);
+        matmul_any(kernel, wv, pv, &s.y, &layer.wv, &mut s.vx, t, d, d, &mut s.qscr);
         // Write the new K/V rows into the cache at ws..ws+t.
         for j in 0..t {
             let row = (li * l + ws + j) * hhd;
@@ -396,17 +468,21 @@ fn forward_row(
         }
         // x += o @ wo
         s.y.iter_mut().for_each(|z| *z = 0.0);
-        matmul_any(kernel, ql.map(|q| &q.wo), &s.o, &layer.wo, &mut s.y, t, d, d);
+        let (wo, po) = (ql.map(|q| &q.wo), pl.map(|p| &p.wo));
+        matmul_any(kernel, wo, po, &s.o, &layer.wo, &mut s.y, t, d, d, &mut s.qscr);
         for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
             *xv += *yv;
         }
         // MLP: x += gelu(ln2(x) @ w1) @ w2
         layer.ln2.apply(&s.x, &mut s.y, d);
         s.ff.iter_mut().for_each(|z| *z = 0.0);
-        matmul_any(kernel, ql.map(|q| &q.w1), &s.y, &layer.w1, &mut s.ff, t, d, dims.d_ff());
+        let (w1, p1) = (ql.map(|q| &q.w1), pl.map(|p| &p.w1));
+        let ff = dims.d_ff();
+        matmul_any(kernel, w1, p1, &s.y, &layer.w1, &mut s.ff, t, d, ff, &mut s.qscr);
         s.ff.iter_mut().for_each(|z| *z = gelu(*z));
         s.y.iter_mut().for_each(|z| *z = 0.0);
-        matmul_any(kernel, ql.map(|q| &q.w2), &s.ff, &layer.w2, &mut s.y, t, dims.d_ff(), d);
+        let (w2, p2) = (ql.map(|q| &q.w2), pl.map(|p| &p.w2));
+        matmul_any(kernel, w2, p2, &s.ff, &layer.w2, &mut s.y, t, ff, d, &mut s.qscr);
         for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
             *xv += *yv;
         }
@@ -416,13 +492,20 @@ fn forward_row(
     model.ln_f.apply(&s.x, &mut s.y, d);
     for j in 0..t {
         let xrow = &s.y[j * d..(j + 1) * d];
+        // Int8 unembedding: quantise the normed row once, then one exact
+        // i8×i8→i32 dot per vocab row, rescaled by the product of the
+        // activation and embedding-row scales (DESIGN.md §12.3).
+        let sx = match quant {
+            Some(_) => quantise_row_q8(xrow, &mut s.xq),
+            None => 0.0,
+        };
         let prow = &mut probs[j * vcb..(j + 1) * vcb];
         for (tok, pv) in prow.iter_mut().enumerate() {
             let mut dot = match quant {
                 None => dot_f32(xrow, &model.embed[tok * d..(tok + 1) * d]),
                 Some(qm) => {
                     let (qrow, qs) = qm.embed.row(tok);
-                    dot_q8(xrow, qrow) * qs
+                    dot_q8_i32(&s.xq, qrow) as f32 * (sx * qs)
                 }
             };
             if (tok as u32) < vocab::CONTENT_BASE {
@@ -652,9 +735,11 @@ pub struct NativeBackend {
     /// first parallel `forward_block` (a `threads = 1` backend never
     /// spawns any).
     pool: OnceLock<ThreadPool>,
-    /// Run the scalar reference matmul kernel instead of the blocked one
-    /// (benchmark baseline; bit-identical outputs either way).
-    reference_kernel: bool,
+    /// The fp32 matmul kernel the forwards run with (reference, blocked,
+    /// or SIMD; bit-identical outputs either way — DESIGN.md §12.2).
+    /// Defaults to the process-wide [`default_kernel`] choice
+    /// (`SPECD_NATIVE_KERNEL`).
+    kernel: MatKernel,
     /// Reuse the `(B·K)`-row multipath scratch caches across iterations
     /// instead of allocating fresh ones per call.
     persistent_scratch: bool,
@@ -675,15 +760,24 @@ pub struct NativeBackend {
     /// Quantise-once cache of int8 model twins, keyed by model name —
     /// the same keyed-pool idiom as `scratch`.
     quant: Mutex<HashMap<String, Arc<QuantModel>>>,
+    /// Pack-once cache of tile-major fp32 model twins for the SIMD
+    /// kernel, keyed by model name (same idiom as `quant`).
+    packed: Mutex<HashMap<String, Arc<PackedModel>>>,
 }
 
-/// Forward-pass thread count default: `SPECD_NATIVE_THREADS` when set,
-/// else the machine's parallelism capped at 4 (the serving batch is
-/// small; more threads than rows just idle).
+/// Forward-pass thread count default: `SPECD_NATIVE_THREADS` when set
+/// (and valid), else the machine's parallelism capped at 4 (the serving
+/// batch is small; more threads than rows just idle).  An unparsable
+/// value falls back *loudly* (stderr), matching `SPECD_DRAFT_PRECISION`
+/// and `SPECD_NATIVE_KERNEL`: a typo must not silently change an
+/// operator's intended parallelism.
 fn default_threads() -> usize {
     if let Ok(s) = std::env::var("SPECD_NATIVE_THREADS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            return n.clamp(1, 64);
+        match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n.min(64),
+            _ => eprintln!(
+                "specd: ignoring invalid SPECD_NATIVE_THREADS '{s}' (want 1..=64); using auto"
+            ),
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
@@ -696,11 +790,12 @@ impl NativeBackend {
             models,
             threads: default_threads(),
             pool: OnceLock::new(),
-            reference_kernel: false,
+            kernel: default_kernel(),
             persistent_scratch: true,
             scratch: Mutex::new(HashMap::new()),
             draft_precision: AtomicU8::new(Precision::from_env_or_default() as u8),
             quant: Mutex::new(HashMap::new()),
+            packed: Mutex::new(HashMap::new()),
         }
     }
 
@@ -774,9 +869,16 @@ impl NativeBackend {
 
     /// Switch the forward pass to the scalar reference matmul kernel
     /// (`benches/native_fast.rs`'s baseline).  Outputs are bit-identical
-    /// to the blocked kernel; only wall-clock changes.
-    pub fn with_reference_kernel(mut self, on: bool) -> Self {
-        self.reference_kernel = on;
+    /// to the blocked and SIMD kernels; only wall-clock changes.  `false`
+    /// restores the process-wide default choice.
+    pub fn with_reference_kernel(self, on: bool) -> Self {
+        self.with_kernel(if on { MatKernel::Reference } else { default_kernel() })
+    }
+
+    /// Pin the fp32 matmul kernel explicitly (A/B benchmarking; outputs
+    /// are bit-identical across all variants, DESIGN.md §12.2).
+    pub fn with_kernel(mut self, kernel: MatKernel) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -833,12 +935,25 @@ impl NativeBackend {
     }
 
     /// The matmul kernel this backend's forwards run with.
-    fn kernel(&self) -> MatKernel {
-        if self.reference_kernel {
-            MatKernel::Reference
-        } else {
-            MatKernel::Blocked
+    pub fn kernel(&self) -> MatKernel {
+        self.kernel
+    }
+
+    /// The tile-major packed fp32 twin of `model` when the active kernel
+    /// wants one (SIMD only), built once per model and cached (`packed`,
+    /// keyed by name — `Backend::prepare` pre-builds the twins so steady
+    /// state never packs).
+    fn packed_model(&self, name: &str, model: &NativeModel) -> Option<Arc<PackedModel>> {
+        if self.kernel != MatKernel::Simd {
+            return None;
         }
+        let mut cache = self.packed.lock().unwrap();
+        Some(
+            cache
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(PackedModel::pack(model)))
+                .clone(),
+        )
     }
 
     /// Check out a `(rows,)`-row scratch cache for `model` (persistent
@@ -928,6 +1043,7 @@ impl NativeBackend {
     fn forward_block(
         &self,
         model: &NativeModel,
+        name: &str,
         quant: Option<&QuantModel>,
         kv: &mut NativeKv,
         tokens_t: &[i32],
@@ -949,6 +1065,8 @@ impl NativeBackend {
 
         let mut probs = if want_probs { vec![0.0f32; rows * t * vcb] } else { Vec::new() };
         let kernel = self.kernel();
+        let packed_arc = self.packed_model(name, model);
+        let packed = packed_arc.as_deref();
         // Disjoint per-row views: the batch-major cache layout makes each
         // row's K/V a contiguous chunk, and probs splits the same way.
         let stride = kv.row_stride();
@@ -970,7 +1088,7 @@ impl NativeBackend {
         if n_threads == 1 {
             let mut scratch = RowScratch::new(dims, t, l);
             for slot in slots {
-                forward_row(model, quant, kernel, slot, t, l, &mut scratch);
+                forward_row(model, quant, packed, kernel, slot, t, l, &mut scratch);
             }
         } else {
             let chunk = rows.div_ceil(n_threads);
@@ -984,7 +1102,7 @@ impl NativeBackend {
                 jobs.push(Box::new(move || {
                     let mut scratch = RowScratch::new(dims, t, l);
                     for slot in group {
-                        forward_row(model, quant, kernel, slot, t, l, &mut scratch);
+                        forward_row(model, quant, packed, kernel, slot, t, l, &mut scratch);
                     }
                 }));
             }
@@ -1022,7 +1140,7 @@ impl NativeBackend {
         }
         let start = vec![0i32; b];
         let quant = self.draft_quant(name);
-        let _ = self.forward_block(m, quant.as_deref(), kv, &tok_t, t, &start, false);
+        let _ = self.forward_block(m, name, quant.as_deref(), kv, &tok_t, t, &start, false);
     }
 
     /// Pending token per row: `tokens[b][length[b] - 1]` (clamped).
@@ -1043,6 +1161,7 @@ impl NativeBackend {
     fn draft_scan_flat(
         &self,
         model: &NativeModel,
+        name: &str,
         quant: Option<&QuantModel>,
         kv: &mut NativeKv,
         mut cur: Vec<i32>,
@@ -1058,7 +1177,7 @@ impl NativeBackend {
         let mut qs = vec![0.0f32; rows * gamma * vcb];
         for j in 0..gamma {
             let start: Vec<i32> = start0.iter().map(|&s| s + j as i32).collect();
-            let probs = self.forward_block(model, quant, kv, &cur, 1, &start, true);
+            let probs = self.forward_block(model, name, quant, kv, &cur, 1, &start, true);
             for r in 0..rows {
                 let prow = &probs[r * vcb..(r + 1) * vcb];
                 qs[(r * gamma + j) * vcb..(r * gamma + j + 1) * vcb].copy_from_slice(prow);
@@ -1079,6 +1198,7 @@ impl NativeBackend {
     fn draft_scan(
         &self,
         model: &NativeModel,
+        name: &str,
         quant: Option<&QuantModel>,
         kv: &mut NativeKv,
         tokens: &[i32],
@@ -1090,7 +1210,7 @@ impl NativeBackend {
             seeds.iter().map(|&s| Rng::new(seed64(s) ^ DOM_DRAFT)).collect();
         let cur = self.gather_pending(tokens, length);
         let start0: Vec<i32> = length.iter().map(|&len| len - 1).collect();
-        self.draft_scan_flat(model, quant, kv, cur, &start0, gamma, &mut rngs)
+        self.draft_scan_flat(model, name, quant, kv, cur, &start0, gamma, &mut rngs)
     }
 
     /// Per-row seed count must match the serving batch.
@@ -1125,7 +1245,7 @@ impl NativeBackend {
                 .copy_from_slice(&drafts[bi * gamma..(bi + 1) * gamma]);
         }
         let start: Vec<i32> = length.iter().map(|&len| len - 1).collect();
-        self.forward_block(model, None, kv, &inp, gamma + 1, &start, true)
+        self.forward_block(model, "target", None, kv, &inp, gamma + 1, &start, true)
     }
 
     // ------------------------------------------------------------------
@@ -1197,6 +1317,7 @@ impl NativeBackend {
         let quant = self.draft_quant(drafter);
         let (drafts, qs) = self.draft_scan_flat(
             m,
+            drafter,
             quant.as_deref(),
             &mut scratch,
             cur,
@@ -1243,7 +1364,7 @@ impl NativeBackend {
                 start.push(length[bi] - 1);
             }
         }
-        let ps = self.forward_block(m, None, &mut scratch, &inp, gamma + 1, &start, true);
+        let ps = self.forward_block(m, "target", None, &mut scratch, &inp, gamma + 1, &start, true);
         set.set_ps(ps)?;
         Ok(scratch)
     }
@@ -1269,7 +1390,9 @@ impl NativeBackend {
         let (mut set, d_scratch) =
             self.draft_multi_scratch(drafter, k, gamma, tokens, length, kv_drafter, seeds)?;
         let draft_us = t_draft.elapsed().as_micros() as u64;
+        let t_target = Instant::now();
         let t_scratch = self.target_score_multi_scratch(&mut set, tokens, length, kv_target)?;
+        let target_us = t_target.elapsed().as_micros() as u64;
 
         let mut tau = vec![0i32; b];
         let mut emitted = vec![vocab::PAD as i32; b * (gamma + 1)];
@@ -1308,7 +1431,7 @@ impl NativeBackend {
         }
         self.put_scratch(drafter, d_scratch);
         self.put_scratch("target", t_scratch);
-        Ok(SpecIterOut { tau, emitted, done, draft_us })
+        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us })
     }
 }
 
@@ -1331,6 +1454,15 @@ impl Backend for NativeBackend {
         self.set_draft_precision(draft_precision);
         if draft_precision == Precision::Int8 && self.info.has_drafter(drafter) {
             let _ = self.draft_quant(drafter);
+        }
+        // Pre-pack the tile-major fp32 twins the SIMD kernel streams, so
+        // the first forward never pays the packing pass (DESIGN.md §12.1).
+        if self.kernel == MatKernel::Simd {
+            for name in [drafter, "target"] {
+                if let Ok(m) = self.model(name) {
+                    let _ = self.packed_model(name, m);
+                }
+            }
         }
         if let Algo::MultiPath { k } = algo {
             if k == 0 {
@@ -1439,10 +1571,20 @@ impl Backend for NativeBackend {
 
         let quant = self.draft_quant(drafter);
         let t_draft = Instant::now();
-        let (drafts, qs) =
-            self.draft_scan(m_d, quant.as_deref(), kv_drafter, tokens, length, gamma, seeds);
+        let (drafts, qs) = self.draft_scan(
+            m_d,
+            drafter,
+            quant.as_deref(),
+            kv_drafter,
+            tokens,
+            length,
+            gamma,
+            seeds,
+        );
         let draft_us = t_draft.elapsed().as_micros() as u64;
+        let t_target = Instant::now();
         let ps = self.score(m_t, kv_target, tokens, length, &drafts, gamma);
+        let target_us = t_target.elapsed().as_micros() as u64;
 
         let mut tau = vec![0i32; b];
         let mut emitted = vec![vocab::PAD as i32; b * (gamma + 1)];
@@ -1473,7 +1615,7 @@ impl Backend for NativeBackend {
             done[bi] = (eos_hit || out_of_room) as i32;
             length[bi] = new_len.min(l as i32 - 1);
         }
-        Ok(SpecIterOut { tau, emitted, done, draft_us })
+        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us })
     }
 
     fn draft_block(
@@ -1491,7 +1633,7 @@ impl Backend for NativeBackend {
         let m = self.model(drafter)?;
         let quant = self.draft_quant(drafter);
         let (drafts, qs) =
-            self.draft_scan(m, quant.as_deref(), kv, tokens, length, gamma, seeds);
+            self.draft_scan(m, drafter, quant.as_deref(), kv, tokens, length, gamma, seeds);
         Ok(DraftOut { drafts, qs })
     }
 
@@ -1587,7 +1729,7 @@ impl Backend for NativeBackend {
         let m = self.model("target")?;
         let pending = self.gather_pending(tokens, length);
         let start: Vec<i32> = length.iter().map(|&len| len - 1).collect();
-        let probs = self.forward_block(m, None, kv, &pending, 1, &start, true);
+        let probs = self.forward_block(m, "target", None, kv, &pending, 1, &start, true);
         let mut rng = Rng::new(seed64(seed) ^ DOM_BASELINE);
         let mut next = vec![0i32; b];
         let mut done = vec![0i32; b];

@@ -191,9 +191,9 @@ impl Backend for PjrtBackend {
         let h_kvt_k = handles.pop().unwrap();
         kv_target.put(h_kvt_k, h_kvt_v);
         kv_drafter.put(h_kvd_k, h_kvd_v);
-        // draft_us = 0: the fused device program cannot separate its
-        // draft phase (see the SpecIterOut field docs).
-        Ok(SpecIterOut { tau, emitted, done, draft_us: 0 })
+        // draft_us / target_us = 0: the fused device program cannot
+        // separate its phases (see the SpecIterOut field docs).
+        Ok(SpecIterOut { tau, emitted, done, draft_us: 0, target_us: 0 })
     }
 
     fn draft_block(

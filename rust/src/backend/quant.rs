@@ -28,6 +28,8 @@
 
 use std::fmt;
 
+use super::kernels;
+
 /// Inference precision of the draft model's forward pass.  The knob is
 /// threaded from `EngineConfig` ("draft_precision" / env
 /// `SPECD_DRAFT_PRECISION`) through [`crate::backend::Backend::prepare`]
@@ -38,8 +40,9 @@ use std::fmt;
 pub enum Precision {
     /// Full fp32 drafter — bit-identical to the pre-quantisation stream.
     Fp32,
-    /// Int8 quantised drafter weights, fp32 activations — the default
-    /// fast path on the native backend.
+    /// Int8 quantised drafter weights with per-token-row activation
+    /// quantisation and exact i8×i8→i32 accumulation (DESIGN.md §12.3)
+    /// — the default fast path on the native backend.
     #[default]
     Int8,
 }
@@ -86,12 +89,21 @@ impl fmt::Display for Precision {
 
 /// An int8 weight matrix `(d_in, d_out)` row-major with one fp32 scale
 /// per output column: `w[i][o] ~= q[i*d_out + o] as f32 * scale[o]`.
+///
+/// Carries two layouts of the same codes: `q` row-major (the
+/// reference-kernel GEMM and the tests index it directly) and `qt`
+/// tile-major ([`kernels::pack_q8`]) for the SIMD integer GEMM.  Both
+/// are built once at quantisation time, so `Backend::prepare`'s twin
+/// pre-build covers the packing too.
 #[derive(Clone, Debug)]
 pub struct QuantMatrix {
     pub d_in: usize,
     pub d_out: usize,
     /// Row-major `(d_in, d_out)` quantised weights.
     pub q: Vec<i8>,
+    /// Tile-major twin of `q` (see [`kernels::pack_q8`]), zero-padded to
+    /// a whole number of [`kernels::TILE`]-wide output tiles.
+    pub qt: Vec<i8>,
     /// Per-output-column dequantisation scales, `(d_out,)`.
     pub scale: Vec<f32>,
 }
@@ -117,7 +129,8 @@ impl QuantMatrix {
                 q.push((v * inv[o]).round().clamp(-127.0, 127.0) as i8);
             }
         }
-        QuantMatrix { d_in, d_out, q, scale }
+        let qt = kernels::pack_q8(&q, d_in, d_out);
+        QuantMatrix { d_in, d_out, q, qt, scale }
     }
 
     /// Dequantised element (tests / error analysis).
@@ -230,6 +243,16 @@ mod tests {
             let m = (0..d_in).map(|i| qm.q[i * d_out + o].unsigned_abs()).max().unwrap();
             assert_eq!(m, 127, "column {o} does not reach full code range");
         }
+    }
+
+    #[test]
+    fn packed_twin_matches_row_major_codes() {
+        let mut rng = Rng::new(0x7e1);
+        let (d_in, d_out) = (9, 21); // tail tile of 5 lanes
+        let w = rand_mat(&mut rng, d_in * d_out, 0.6);
+        let qm = QuantMatrix::quantise(&w, d_in, d_out);
+        assert_eq!(qm.qt, kernels::pack_q8(&qm.q, d_in, d_out));
+        assert_eq!(qm.qt.len(), d_out.div_ceil(kernels::TILE) * d_in * kernels::TILE);
     }
 
     #[test]

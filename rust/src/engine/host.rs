@@ -86,8 +86,10 @@ impl<B: Backend> HostVerifyEngine<B> {
             let draft = backend
                 .draft_block(&self.cfg.drafter, gamma, &toks, &lens, &mut kv_d, &iter_seeds)?;
             self.metrics.draft_forward_us.observe(t_draft.elapsed());
+            let t_target = Instant::now();
             let ps_flat =
                 backend.target_score(gamma, &toks, &lens, &mut kv_t, &draft.drafts)?;
+            self.metrics.target_forward_us.observe(t_target.elapsed());
             let qs_flat = &draft.qs;
             let drafts = &draft.drafts;
 

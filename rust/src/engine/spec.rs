@@ -148,6 +148,11 @@ impl<B: Backend> SpecEngine<B> {
                     .draft_forward_us
                     .observe(std::time::Duration::from_micros(out.draft_us));
             }
+            if out.target_us > 0 {
+                self.metrics
+                    .target_forward_us
+                    .observe(std::time::Duration::from_micros(out.target_us));
+            }
             self.metrics.iter_latency.observe(t_iter.elapsed());
         }
 
@@ -362,6 +367,11 @@ impl<B: Backend> SpecEngine<B> {
             self.metrics
                 .draft_forward_us
                 .observe(std::time::Duration::from_micros(out.draft_us));
+        }
+        if out.target_us > 0 {
+            self.metrics
+                .target_forward_us
+                .observe(std::time::Duration::from_micros(out.target_us));
         }
         self.metrics.iter_latency.observe(t_iter.elapsed());
         Ok(out)

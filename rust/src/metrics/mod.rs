@@ -178,6 +178,12 @@ pub struct EngineMetrics {
     /// around `draft_block` on the host-verify path — where the
     /// quantised-draft speedup shows up in `/metrics`.
     pub draft_forward_us: LatencyHist,
+    /// Wall-clock of the target scoring forward per engine iteration
+    /// (`SpecIterOut::target_us`, or measured around `target_score` on
+    /// the host-verify path) — the denominator of every kernel-substrate
+    /// speedup, so SIMD-kernel wins are observable next to the draft
+    /// phase they multiply with.
+    pub target_forward_us: LatencyHist,
     pub queue_wait: LatencyHist,
     pub iter_latency: LatencyHist,
     pub request_latency: LatencyHist,
@@ -220,6 +226,8 @@ impl EngineMetrics {
         put("prefill_batch_size_mean", self.prefill_batch_size.mean());
         put("draft_forward_mean_us", self.draft_forward_us.mean_us());
         put("draft_forward_p99_us", self.draft_forward_us.quantile_us(0.99) as f64);
+        put("target_forward_mean_us", self.target_forward_us.mean_us());
+        put("target_forward_p99_us", self.target_forward_us.quantile_us(0.99) as f64);
         put("iter_latency_mean_us", self.iter_latency.mean_us());
         put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
         put("request_latency_mean_us", self.request_latency.mean_us());
@@ -230,6 +238,13 @@ impl EngineMetrics {
         for (n_rows, n) in self.prefill_batch_size.nonzero() {
             s.push_str(&format!("specd_prefill_batch_size{{rows=\"{n_rows}\"}} {n}\n"));
         }
+        // Info line: the process-wide native kernel choice and detected
+        // ISA (constant per process — `default_kernel` is OnceLock-cached).
+        s.push_str(&format!(
+            "specd_native_kernel{{kernel=\"{}\",isa=\"{}\"}} 1\n",
+            crate::backend::kernels::default_kernel(),
+            crate::backend::kernels::active_isa(),
+        ));
         s
     }
 }
@@ -304,10 +319,13 @@ mod tests {
         m.prefill_batch_size.observe(3);
         m.prefill_batch_size.observe(3);
         m.draft_forward_us.observe(Duration::from_micros(800));
+        m.target_forward_us.observe(Duration::from_micros(1700));
         let r = m.render();
         assert!(r.contains("specd_prefill_batch_size{rows=\"3\"} 2"));
         assert!(r.contains("specd_prefill_batch_size_mean"));
         assert!(r.contains("specd_draft_forward_mean_us"));
+        assert!(r.contains("specd_target_forward_mean_us"));
+        assert!(r.contains("specd_native_kernel{kernel=\""));
         assert!((m.prefill_batch_size.mean() - 7.0 / 3.0).abs() < 1e-12);
     }
 

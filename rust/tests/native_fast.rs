@@ -17,7 +17,10 @@
 
 use std::sync::Arc;
 
-use specd::backend::kernels::{matmul_blocked, matmul_ref};
+use specd::backend::kernels::{
+    matmul_blocked, matmul_q8_i32, matmul_ref, matmul_simd, pack_q8, quantise_row_q8, MatKernel,
+    PackedF32, QuantScratch,
+};
 use specd::backend::{Backend, NativeBackend, Precision};
 use specd::config::EngineConfig;
 use specd::engine::spec::SpecEngine;
@@ -85,6 +88,64 @@ fn blocked_kernel_is_bit_identical_to_scalar_reference() {
 }
 
 #[test]
+fn simd_kernel_is_bit_identical_to_scalar_reference_on_random_shapes() {
+    // Property test over random non-lane-multiple shapes (DESIGN.md
+    // §12.2): whatever ISA this host resolves, the packed SIMD GEMM must
+    // reproduce the scalar reference bit-for-bit, tails included.
+    let mut rng = Rng::new(0x51d0);
+    for _ in 0..40 {
+        let t = 1 + (rng.uniform() * 6.0) as usize;
+        let d_in = 1 + (rng.uniform() * 130.0) as usize;
+        let d_out = 1 + (rng.uniform() * 130.0) as usize;
+        let x: Vec<f32> = (0..t * d_in).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let pk = PackedF32::pack(&w, d_in, d_out);
+        let mut a = vec![0.0f32; t * d_out];
+        let mut b = vec![0.0f32; t * d_out];
+        matmul_ref(&x, &w, &mut a, t, d_in, d_out);
+        matmul_simd(&x, &pk, &mut b, t, d_in, d_out);
+        assert_eq!(a, b, "simd diverges at t={t} d_in={d_in} d_out={d_out}");
+    }
+}
+
+#[test]
+fn int8_gemm_matches_integer_oracle_on_random_shapes() {
+    // Property test: the packed i8×i8→i32 GEMM must *exactly* equal an
+    // integer-accumulate oracle — no float enters the accumulation, and
+    // the one fp32 rescale per output element is the shared expression
+    // `acc as f32 * (sx * sw)` (DESIGN.md §12.3).
+    let mut rng = Rng::new(0x18a0);
+    for _ in 0..40 {
+        let t = 1 + (rng.uniform() * 5.0) as usize;
+        let d_in = 1 + (rng.uniform() * 90.0) as usize;
+        let d_out = 1 + (rng.uniform() * 90.0) as usize;
+        let x: Vec<f32> = (0..t * d_in).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        let q: Vec<i8> =
+            (0..d_in * d_out).map(|_| (rng.uniform() * 255.0 - 127.0) as i8).collect();
+        let scale: Vec<f32> = (0..d_out).map(|_| (rng.uniform() * 0.02) as f32).collect();
+        let qt = pack_q8(&q, d_in, d_out);
+        let mut scr = QuantScratch::default();
+        let mut got = vec![0.0f32; t * d_out];
+        matmul_q8_i32(&x, &qt, &scale, &mut got, t, d_in, d_out, &mut scr);
+        let mut xq = vec![0i8; d_in];
+        for ti in 0..t {
+            let sx = quantise_row_q8(&x[ti * d_in..(ti + 1) * d_in], &mut xq);
+            for o in 0..d_out {
+                let mut acc = 0i32;
+                for (i, &xv) in xq.iter().enumerate() {
+                    acc += xv as i32 * q[i * d_out + o] as i32;
+                }
+                assert_eq!(
+                    got[ti * d_out + o],
+                    acc as f32 * (sx * scale[o]),
+                    "oracle mismatch at t={t} d_in={d_in} d_out={d_out} ti={ti} o={o}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn reference_kernel_backend_matches_blocked_backend() {
     let blocked = NativeBackend::seeded_with_shapes(2, 32, 7).with_threads(1);
     let reference =
@@ -96,6 +157,46 @@ fn reference_kernel_backend_matches_blocked_backend() {
     let ps_b = blocked.target_score(3, &toks, &lens, &mut kv_b, &drafts).unwrap();
     let ps_r = reference.target_score(3, &toks, &lens, &mut kv_r, &drafts).unwrap();
     assert_eq!(ps_b, ps_r, "kernel choice must not perturb scored distributions");
+}
+
+#[test]
+fn all_kernel_variants_decode_bit_identically() {
+    // Backend- and engine-level three-way check: pinning the kernel to
+    // ref, blocked, or simd (packed tile-major weights, explicit
+    // `std::arch` lanes) changes nothing but wall-clock.
+    let reqs = prompts(8);
+    let mk = |kernel: MatKernel| {
+        NativeBackend::seeded_with_shapes(4, 64, 0x51d).with_threads(1).with_kernel(kernel)
+    };
+    // Backend-level: scored distributions bitwise equal.
+    let reference = mk(MatKernel::Reference);
+    let (toks, lens) = prompt_state(&reference);
+    let drafts: Vec<i32> = (0..4 * 3).map(|i| 20 + (i % 5)).collect();
+    let mut kv_r = reference.prefill("target", &toks, &lens).unwrap();
+    let ps_r = reference.target_score(3, &toks, &lens, &mut kv_r, &drafts).unwrap();
+    for kernel in [MatKernel::Blocked, MatKernel::Simd] {
+        let be = mk(kernel);
+        let mut kv = be.prefill("target", &toks, &lens).unwrap();
+        let ps = be.target_score(3, &toks, &lens, &mut kv, &drafts).unwrap();
+        assert_eq!(ps_r, ps, "{kernel}: scored distributions diverged from reference");
+    }
+    // Engine-level: every generated token equal across kernels, both
+    // fused algos, fp32 and int8 drafters.
+    for precision in [Precision::Fp32, Precision::Int8] {
+        for algo in [Algo::Block, Algo::MultiPath { k: 2 }] {
+            let want = decode(
+                Arc::new(mk(MatKernel::Reference).with_draft_precision(precision)),
+                algo,
+                &reqs,
+                17,
+            );
+            for kernel in [MatKernel::Blocked, MatKernel::Simd] {
+                let be = Arc::new(mk(kernel).with_draft_precision(precision));
+                let got = decode(be, algo, &reqs, 17);
+                assert_eq!(want, got, "{kernel} algo={algo} {precision:?}: tokens diverged");
+            }
+        }
+    }
 }
 
 #[test]
