@@ -64,4 +64,30 @@ fn main() {
             (m - blk) / blk * 100.0
         );
     }
+
+    for k in [2usize, 4] {
+        b.run(&format!("exact/tree_nodes_v4_g4_k{k}"), || {
+            std::hint::black_box(sim::exact::expected_tree_nodes(&pair, 4, k));
+        });
+        b.run(&format!("mc/simulate_tree_k{k}_20k_tokens"), || {
+            std::hint::black_box(sim::simulate_tree(&pair, 4, k, 20_000, 1).mean_tau());
+        });
+    }
+
+    // Prefix-sharing tree (DESIGN.md §13): identical tau to multipath at
+    // every K (dedup-invariance), but strictly fewer drafted tokens
+    // scored — the flat cost is K*gamma, the tree's is the expected
+    // distinct-prefix count.
+    println!("\nTree vs multipath (exact), vocab=4, gamma=4:");
+    for k in [1usize, 2, 4, 8] {
+        let mp = sim::exact::expected_tau_multipath(&pair, 4, k);
+        let tr = sim::exact::expected_tau_tree(&pair, 4, k);
+        let nodes = sim::exact::expected_tree_nodes(&pair, 4, k);
+        let flat = (k * 4) as f64;
+        println!(
+            "  K {k}: tau tree {tr:.4} / multipath {mp:.4}  scored tree {nodes:.3} / flat \
+             {flat:.0}  ({:+.1}% tokens)",
+            (nodes - flat) / flat * 100.0
+        );
+    }
 }

@@ -11,6 +11,11 @@
 //! * multipath accepted tokens per target call must not drop below
 //!   block's at K in {2, 4} (stage 1 of multipath *is* block
 //!   verification, so extra paths can only add; same 0.05 slack);
+//! * the prefix-sharing tree must hold acceptance (tau >= flat
+//!   multipath's at K in {2, 4} — the two are bit-identical decodes, so
+//!   only float-division noise separates them) while scoring no more
+//!   drafted tokens per committed token at each K, and strictly fewer on
+//!   aggregate — the whole point of sharing (DESIGN.md §13);
 //! * the continuous batcher must never need more engine iterations than
 //!   batch drain on the mixed-length profile (per-row decodes are
 //!   identical under both policies, so earlier admission can only shrink
@@ -109,14 +114,25 @@ fn main() -> anyhow::Result<()> {
     prompts.truncate(n_prompts);
 
     // ---- 1) verification algorithms: BE + accepted/iter + tokens/sec ----
-    // (BE, tok/s, mean accepted tau per target call)
-    let algos = [Algo::Token, Algo::Block, Algo::MultiPath { k: 2 }, Algo::MultiPath { k: 4 }];
-    let mut stats: Vec<(f64, f64, f64)> = Vec::new();
+    // (BE, tok/s, mean accepted tau per target call, drafted-per-committed)
+    let algos = [
+        Algo::Token,
+        Algo::Block,
+        Algo::MultiPath { k: 2 },
+        Algo::MultiPath { k: 4 },
+        Algo::Tree { k: 2 },
+        Algo::Tree { k: 4 },
+    ];
+    let mut stats: Vec<(f64, f64, f64, f64)> = Vec::new();
     for algo in algos {
         let cfg = EngineConfig { algo, max_new_tokens: max_new, ..Default::default() };
         let engine = SpecEngine::new(backend.clone(), cfg)?;
         // Warm-up pass, then timed seeds.
         let _ = engine.run_prompts(&prompts[..prompts.len().min(4)], 0)?;
+        // Drafted tokens scored (SpecIterOut::drafted) accrue on the
+        // engine metrics; delta over the timed region gives the
+        // speculation cost of exactly these decodes.
+        let drafted0 = engine.metrics.drafts_scored.get();
         let (mut emitted, mut iters, mut toks, mut accepted) = (0usize, 0usize, 0usize, 0usize);
         let t0 = Instant::now();
         for seed in 0..n_seeds {
@@ -130,17 +146,24 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let wall = t0.elapsed().as_secs_f64();
+        let drafted = (engine.metrics.drafts_scored.get() - drafted0) as f64;
         let be = emitted as f64 / iters.max(1) as f64;
         let tau = accepted as f64 / iters.max(1) as f64;
         let tps = toks as f64 / wall.max(1e-9);
+        let dpc = drafted / (emitted as f64).max(1.0);
         let label = algo.to_string();
-        println!("verify/{label:<12}  BE {be:>6.3}  tau {tau:>6.3}   {tps:>9.1} tok/s");
-        stats.push((be, tps, tau));
+        println!(
+            "verify/{label:<12}  BE {be:>6.3}  tau {tau:>6.3}  drafted/committed {dpc:>6.3}  \
+             {tps:>9.1} tok/s"
+        );
+        stats.push((be, tps, tau, dpc));
     }
-    let (token_be, token_tps, _) = stats[0];
-    let (block_be, block_tps, block_tau) = stats[1];
-    let (mp2_be, _, mp2_tau) = stats[2];
-    let (mp4_be, _, mp4_tau) = stats[3];
+    let (token_be, token_tps, _, _) = stats[0];
+    let (block_be, block_tps, block_tau, _) = stats[1];
+    let (mp2_be, _, mp2_tau, mp2_dpc) = stats[2];
+    let (mp4_be, _, mp4_tau, mp4_dpc) = stats[3];
+    let (tree2_be, _, tree2_tau, tree2_dpc) = stats[4];
+    let (tree4_be, _, tree4_tau, tree4_dpc) = stats[5];
 
     // ---- 2) mixed-length serving: continuous vs emulated batch drain ----
     // Caps cycle short/medium/long so freed slots matter.
@@ -183,8 +206,16 @@ fn main() -> anyhow::Result<()> {
         ("block_tau", json::num(block_tau)),
         ("multipath2_be", json::num(mp2_be)),
         ("multipath2_tau", json::num(mp2_tau)),
+        ("multipath2_dpc", json::num(mp2_dpc)),
         ("multipath4_be", json::num(mp4_be)),
         ("multipath4_tau", json::num(mp4_tau)),
+        ("multipath4_dpc", json::num(mp4_dpc)),
+        ("tree2_be", json::num(tree2_be)),
+        ("tree2_tau", json::num(tree2_tau)),
+        ("tree2_dpc", json::num(tree2_dpc)),
+        ("tree4_be", json::num(tree4_be)),
+        ("tree4_tau", json::num(tree4_tau)),
+        ("tree4_dpc", json::num(tree4_dpc)),
         ("drain_tps", json::num(drain_tps)),
         ("continuous_tps", json::num(cont_tps)),
         ("drain_iters", json::num(drain_iters as f64)),
@@ -211,6 +242,41 @@ fn main() -> anyhow::Result<()> {
             failed = true;
         }
     }
+    // Tree gates (DESIGN.md §13): acceptance must match flat multipath
+    // (bit-identical decodes; 1e-9 absorbs the float division), and the
+    // tree must never score *more* drafted tokens per committed token at
+    // either K — with a strict saving on aggregate, since sharing any
+    // coincident prefix anywhere in the run scores it once instead of
+    // K times.
+    for (label, tree_tau, mp_tau, tree_dpc, mp_dpc) in [
+        ("tree:2", tree2_tau, mp2_tau, tree2_dpc, mp2_dpc),
+        ("tree:4", tree4_tau, mp4_tau, tree4_dpc, mp4_dpc),
+    ] {
+        if tree_tau < mp_tau - 1e-9 {
+            eprintln!(
+                "PERF REGRESSION: {label} accepted/iter {tree_tau:.6} fell below flat \
+                 multipath's {mp_tau:.6} — sharing must not change acceptance"
+            );
+            failed = true;
+        }
+        if tree_dpc > mp_dpc + 1e-9 {
+            eprintln!(
+                "PERF REGRESSION: {label} drafted/committed {tree_dpc:.4} exceeds flat \
+                 multipath's {mp_dpc:.4} — the tree may never score extra tokens"
+            );
+            failed = true;
+        }
+    }
+    if tree2_dpc + tree4_dpc >= mp2_dpc + mp4_dpc {
+        eprintln!(
+            "PERF REGRESSION: tree scored as many drafted tokens as flat multipath \
+             (tree {:.4} vs flat {:.4} aggregate drafted/committed) — prefix sharing \
+             is not engaging",
+            tree2_dpc + tree4_dpc,
+            mp2_dpc + mp4_dpc
+        );
+        failed = true;
+    }
     if cont_iters > drain_iters {
         eprintln!(
             "PERF REGRESSION: continuous batching used {cont_iters} iterations, \
@@ -223,7 +289,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "perf gates passed: block BE >= token BE, multipath tau >= block tau (K=2,4), \
-         continuous <= drain iterations"
+         tree tau >= multipath tau with strictly fewer drafted tokens per committed \
+         token (K=2,4), continuous <= drain iterations"
     );
     Ok(())
 }

@@ -3,7 +3,9 @@
 //! The [`Backend`] trait is the contract extracted from the original
 //! PJRT-only runtime (DESIGN.md §5): `prefill`, `spec_iter`,
 //! `draft_block`, `target_score`, `baseline_step`, `kv_splice`, plus the
-//! multi-draft pair `draft_multi` / `target_score_multi` (DESIGN.md §9)
+//! multi-draft tree pair `draft_tree` / `score_tree` (DESIGN.md §13; the
+//! flat `draft_multi` / `target_score_multi` of §9 survive as deprecated
+//! default-impl shims over it, §13.6)
 //! — expressed over *plain host tensors* (`tokens (B, L) i32`,
 //! `length (B,) i32`, flat `f32`/`i32` readbacks) plus an opaque per-model
 //! KV-cache handle ([`Backend::Kv`]) that each backend represents however
@@ -28,13 +30,38 @@ pub mod quant;
 
 use std::path::PathBuf;
 
-use crate::draftset::DraftSet;
+use crate::draftset::{BranchPolicy, DraftSet, DraftTree};
 use crate::verify::Algo;
 
 pub use native::{NativeBackend, NativeKv};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use quant::Precision;
+
+/// Everything one multi-draft speculation call needs (DESIGN.md §13.2):
+/// the unified request the tree API takes in place of the deprecated
+/// `draft_multi` positional-argument pile.  Borrowed views keep the hot
+/// path allocation-free.
+#[derive(Clone, Copy, Debug)]
+pub struct DraftRequest<'a> {
+    /// Drafter model name.
+    pub drafter: &'a str,
+    /// Draft block length per leaf path.
+    pub gamma: usize,
+    /// Path budget: the tree is capped at `k` leaves.
+    pub k: usize,
+    /// Where the drafter may merge coincident draws into shared nodes.
+    pub policy: BranchPolicy,
+    /// Sequence ring, row-major `(B, L)`.
+    pub tokens: &'a [i32],
+    /// Current per-row sequence lengths, `(B,)`.
+    pub length: &'a [i32],
+    /// Per-row sampling seeds, `(B,)` (trait-level determinism contract).
+    pub seeds: &'a [i32],
+    /// Draft-forward precision override; `None` = the backend's prepared
+    /// default (what [`Backend::prepare`] installed).
+    pub precision: Option<Precision>,
+}
 
 /// Static facts about a backend instance: the fixed serving shapes the
 /// engine lays batches out against (what the PJRT path reads from
@@ -99,6 +126,11 @@ pub struct SpecIterOut {
     /// forward, for the `target_forward_us` metric — the denominator of
     /// every kernel-substrate win.  0 = not instrumented, as above.
     pub target_us: u64,
+    /// Drafted tokens the target scored this iteration, summed over the
+    /// batch (`B·gamma` single-path, `B·K·gamma` flat multipath, total
+    /// tree nodes for `Algo::Tree` — the prefix-sharing FLOP win shows
+    /// up as this number dropping at equal tau; `drafts_scored` metric).
+    pub drafted: usize,
 }
 
 /// One row mapping of a batched admission prefill
@@ -251,16 +283,38 @@ pub trait Backend: Send + Sync + 'static {
         drafts: &[i32],
     ) -> anyhow::Result<Vec<f32>>;
 
-    /// Draft `k` independent candidate paths of length `gamma` per row —
-    /// the multi-draft analogue of [`Backend::draft_block`]
-    /// (DESIGN.md §9).  Path 0 of every row replays exactly the
-    /// single-path draft stream for the row's seed (the `k == 1`
-    /// degradation); paths `1..k` draw from per-path fold-ins of the
-    /// same seed.  Unlike `draft_block`, the live cache is **not**
-    /// advanced: every path is drafted against a scratch copy of the
+    /// Draft a prefix-sharing token tree per batch row (DESIGN.md §13):
+    /// `req.k` independent candidate streams of length `req.gamma`,
+    /// with coincident draws merged into shared nodes wherever
+    /// `req.policy` allows.  Path `p` of every row replays exactly the
+    /// flat multipath stream for fold-in `p` of the row's seed (path 0
+    /// = the single-path stream — the `k == 1` degradation), so a tree
+    /// drafted under [`BranchPolicy::Disjoint`] flattens to precisely
+    /// what the deprecated `draft_multi` returned.  The live cache is
+    /// **not** advanced: drafting runs against a scratch copy of each
     /// row's shared prefix, and only the winning path's cache rows are
-    /// committed (the fused multipath `spec_iter` does this internally
-    /// via `kv_splice`-style row copies).
+    /// committed by the fused `spec_iter`.
+    fn draft_tree(&self, req: &DraftRequest, kv: &Self::Kv) -> anyhow::Result<DraftTree>;
+
+    /// Target-score every node of a draft tree in one batched pass under
+    /// the tree attention mask (each node attends to the shared prefix,
+    /// its ancestors, and itself — DESIGN.md §13.2), filling each row's
+    /// per-node `ps` and `ps_root`.  Shared nodes are scored **once**;
+    /// that is the prefix-sharing FLOP win over the flat `(B·K)` layout.
+    /// Leaves the live cache untouched.
+    fn score_tree(
+        &self,
+        tree: &mut DraftTree,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &Self::Kv,
+    ) -> anyhow::Result<()>;
+
+    /// Deprecated flat multi-draft API (DESIGN.md §13.6), kept for one
+    /// release as a shim over [`Backend::draft_tree`]: drafts a
+    /// [`BranchPolicy::Disjoint`] tree at the backend's prepared
+    /// precision and flattens it to the `(B·K)` layout — bit-identical
+    /// to the pre-tree implementation (test-enforced).
     #[allow(clippy::too_many_arguments)]
     fn draft_multi(
         &self,
@@ -271,22 +325,37 @@ pub trait Backend: Send + Sync + 'static {
         length: &[i32],
         kv: &Self::Kv,
         seeds: &[i32],
-    ) -> anyhow::Result<DraftSet>;
+    ) -> anyhow::Result<DraftSet> {
+        let req = DraftRequest {
+            drafter,
+            gamma,
+            k,
+            policy: BranchPolicy::Disjoint,
+            tokens,
+            length,
+            seeds,
+            precision: None,
+        };
+        self.draft_tree(&req, kv)?.flatten()
+    }
 
-    /// Score every path of a draft set with the target over the
-    /// flattened `(B·K)` layout, filling [`DraftSet::ps`] with
-    /// `(B, K, gamma + 1, V)` row-major distributions.  Like
-    /// [`Backend::draft_multi`] this leaves the live cache untouched —
-    /// the native backend runs one batched forward over all `B·K` path
-    /// rows sharing each row's prefix KV; the PJRT backend falls back to
-    /// one host-composed `target_score` per path.
+    /// Deprecated flat multi-draft scoring (DESIGN.md §13.6), kept for
+    /// one release as a shim over [`Backend::score_tree`]: lifts the set
+    /// into a degenerate disjoint tree, scores it, and copies the
+    /// per-path `(B, K, gamma + 1, V)` distributions back — bit-identical
+    /// to the pre-tree implementation (test-enforced).
     fn target_score_multi(
         &self,
         set: &mut DraftSet,
         tokens: &[i32],
         length: &[i32],
         kv: &Self::Kv,
-    ) -> anyhow::Result<()>;
+    ) -> anyhow::Result<()> {
+        let mut tree = DraftTree::from_flat(set);
+        self.score_tree(&mut tree, tokens, length, kv)?;
+        let scored = tree.flatten()?;
+        set.set_ps(scored.ps)
+    }
 
     /// One autoregressive target step (the paper's 1x wall-clock
     /// baseline): sample the next token per row and apply it, updating

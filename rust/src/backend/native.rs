@@ -32,8 +32,8 @@ use super::kernels::{
 };
 use super::pool::{ScopedJob, ThreadPool};
 use super::quant::{Precision, QuantLayer, QuantMatrix, QuantModel, QuantRows};
-use super::{Backend, BackendInfo, DraftOut, RowSplice, SpecIterOut, StepOut};
-use crate::draftset::{DraftSet, RowViews};
+use super::{Backend, BackendInfo, DraftOut, DraftRequest, RowSplice, SpecIterOut, StepOut};
+use crate::draftset::{BranchPolicy, DraftSet, DraftTree, RowViews, TreeRow, TreeViews};
 use crate::models::{self, vocab, ModelDims};
 use crate::runtime::Manifest;
 use crate::verify::{self, dist, Algo, ProbMatrix, Rng};
@@ -188,6 +188,56 @@ fn copy_kv_rows(dst: &mut NativeKv, dst_row: usize, src: &NativeKv, src_row: usi
     for li in 0..src.n_layers {
         let d0 = dst.row(li, dst_row, 0);
         let s0 = src.row(li, src_row, 0);
+        dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
+        dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+    }
+}
+
+/// Copy cache positions `0..len` of `src` row `src_row` over `dst` row
+/// `dst_row`, for every layer, tolerating caches with *different ring
+/// lengths* — the cross-ring twin of [`copy_kv_rows`] the tree paths
+/// need (tree scratch rings are [`NativeBackend::tree_scratch_len`]
+/// long, the live ring `L`).  Positions within a layer are contiguous in
+/// both, so this is still one chunk copy per layer.
+fn copy_kv_span(dst: &mut NativeKv, dst_row: usize, src: &NativeKv, src_row: usize, len: usize) {
+    debug_assert_eq!(
+        (dst.n_layers, dst.n_heads, dst.head_dim),
+        (src.n_layers, src.n_heads, src.head_dim),
+        "KV geometry mismatch"
+    );
+    debug_assert!(dst_row < dst.batch && src_row < src.batch);
+    debug_assert!(len <= src.max_len && len <= dst.max_len);
+    let chunk = len * src.n_heads * src.head_dim;
+    for li in 0..src.n_layers {
+        let d0 = dst.row(li, dst_row, 0);
+        let s0 = src.row(li, src_row, 0);
+        dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
+        dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+    }
+}
+
+/// Copy one cache position across rows (and possibly rings), for every
+/// layer — the winner-commit gather of the tree path, where a leaf's
+/// node slots are scattered through the scratch ring instead of
+/// contiguous.
+fn copy_kv_pos(
+    dst: &mut NativeKv,
+    dst_row: usize,
+    dst_pos: usize,
+    src: &NativeKv,
+    src_row: usize,
+    src_pos: usize,
+) {
+    debug_assert_eq!(
+        (dst.n_layers, dst.n_heads, dst.head_dim),
+        (src.n_layers, src.n_heads, src.head_dim),
+        "KV geometry mismatch"
+    );
+    debug_assert!(dst_pos < dst.max_len && src_pos < src.max_len);
+    let chunk = src.n_heads * src.head_dim;
+    for li in 0..src.n_layers {
+        let d0 = dst.row(li, dst_row, dst_pos);
+        let s0 = src.row(li, src_row, src_pos);
         dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
         dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
     }
@@ -517,6 +567,208 @@ fn forward_row(
     }
 }
 
+/// One batch row's token-tree forward inputs (DESIGN.md §13.2).  Unlike
+/// the flat [`RowSlot`] — where a call's tokens occupy contiguous
+/// positions and attend a contiguous prefix — every tree token carries
+/// its own flat sequence position, KV write slot and explicit ascending
+/// visible-slot list (shared prefix, then ancestors by node index, then
+/// self: the tree attention mask over the node→parent table).
+struct TreeSlot<'a> {
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+    probs: &'a mut [f32],
+    toks: &'a [i32],
+    /// Flat sequence position per token (`len + depth` — what the token's
+    /// position would be on its own path), indexing the position table
+    /// (clamped into the model ring exactly like [`forward_row`]).
+    pos: &'a [usize],
+    /// KV write slot per token within the scratch ring (`len + node`).
+    slot: &'a [usize],
+    /// Visible scratch slots per token, strictly ascending, self last.
+    vis: &'a [Vec<usize>],
+}
+
+/// Per-row token batch for one tree forward call (the owning twin of
+/// [`TreeSlot`], built level-by-level by the tree drafter scan and in
+/// one piece by the tree scorer).
+#[derive(Default)]
+struct TreeTokens {
+    toks: Vec<i32>,
+    pos: Vec<usize>,
+    slot: Vec<usize>,
+    vis: Vec<Vec<usize>>,
+}
+
+impl TreeTokens {
+    fn push(&mut self, tok: i32, pos: usize, slot: usize, vis: Vec<usize>) {
+        self.toks.push(tok);
+        self.pos.push(pos);
+        self.slot.push(slot);
+        self.vis.push(vis);
+    }
+}
+
+/// The ascending visible-slot list of node `node` in a row whose shared
+/// prefix (prompt + pending token) occupies scratch slots `0..len`:
+/// prefix slots, then the node's ancestors (parents precede children, so
+/// ascending node index == ascending depth == the flat path's position
+/// order), then the node itself.  Walking this list accumulates the
+/// attention softmax in exactly the order [`forward_row`] walks slots
+/// `0..=hi` on the equivalent flat path — the bit-identity contract.
+fn visible_slots(len: usize, parent: &[i32], node: usize) -> Vec<usize> {
+    let mut anc = Vec::new();
+    let mut n = node as i32;
+    while n >= 0 {
+        anc.push(len + n as usize);
+        n = parent[n as usize];
+    }
+    anc.reverse();
+    let mut vis: Vec<usize> = (0..len).collect();
+    vis.extend(anc);
+    vis
+}
+
+/// Forward one row's tree tokens, replicating [`forward_row`]'s float
+/// arithmetic operation for operation — same kernels, same per-layer
+/// write-KV-then-attend order, same streaming softmax accumulation —
+/// with the contiguous position/slot/visibility arithmetic replaced by
+/// [`TreeSlot`]'s explicit per-token lists.  A token's outputs therefore
+/// match the flat forward of its root-to-leaf path bit for bit
+/// (test-enforced via the `Algo::Tree`/`Algo::MultiPath` ladder).
+/// `lt` is the scratch ring length, `lm` the model ring (position-table)
+/// length.
+#[allow(clippy::too_many_arguments)]
+fn forward_tree_row(
+    model: &NativeModel,
+    quant: Option<&QuantModel>,
+    packed: Option<&PackedModel>,
+    kernel: MatKernel,
+    slot: TreeSlot<'_>,
+    lt: usize,
+    lm: usize,
+    s: &mut RowScratch,
+) {
+    let dims = &model.dims;
+    let (d, h, hd, vcb) = (dims.d_model, dims.n_heads, dims.head_dim(), dims.vocab_size);
+    let hhd = h * hd;
+    let scale = (hd as f32).powf(-0.5);
+    let t = slot.toks.len();
+    let TreeSlot { k: krow, v: vrow, probs, toks, pos, slot: wslot, vis } = slot;
+    // Embed + positions (position lookup clamped like forward_row).
+    for j in 0..t {
+        let tok = (toks[j].max(0) as usize).min(vcb - 1);
+        let p = pos[j].min(lm - 1);
+        match quant {
+            None => {
+                for di in 0..d {
+                    s.x[j * d + di] = model.embed[tok * d + di] + model.pos[p * d + di];
+                }
+            }
+            Some(qm) => {
+                let (qrow, qs) = qm.embed.row(tok);
+                for di in 0..d {
+                    s.x[j * d + di] = qrow[di] as f32 * qs + model.pos[p * d + di];
+                }
+            }
+        }
+    }
+    for (li, layer) in model.layers.iter().enumerate() {
+        let ql = quant.map(|qm| &qm.layers[li]);
+        let pl = packed.map(|pm| &pm.layers[li]);
+        layer.ln1.apply(&s.x, &mut s.y, d);
+        s.q.iter_mut().for_each(|z| *z = 0.0);
+        s.kx.iter_mut().for_each(|z| *z = 0.0);
+        s.vx.iter_mut().for_each(|z| *z = 0.0);
+        let (wq, wk, wv) = (ql.map(|q| &q.wq), ql.map(|q| &q.wk), ql.map(|q| &q.wv));
+        let (pq, pk, pv) = (pl.map(|p| &p.wq), pl.map(|p| &p.wk), pl.map(|p| &p.wv));
+        matmul_any(kernel, wq, pq, &s.y, &layer.wq, &mut s.q, t, d, d, &mut s.qscr);
+        matmul_any(kernel, wk, pk, &s.y, &layer.wk, &mut s.kx, t, d, d, &mut s.qscr);
+        matmul_any(kernel, wv, pv, &s.y, &layer.wv, &mut s.vx, t, d, d, &mut s.qscr);
+        // Write every token's K/V rows at its own slot before attention
+        // (the flat forward's write-then-attend order; tokens of one call
+        // are never each other's ancestors, so visibility is unaffected).
+        for j in 0..t {
+            let row = (li * lt + wslot[j]) * hhd;
+            krow[row..row + hhd].copy_from_slice(&s.kx[j * d..(j + 1) * d]);
+            vrow[row..row + hhd].copy_from_slice(&s.vx[j * d..(j + 1) * d]);
+        }
+        // Tree attention: each token attends exactly its visible slots.
+        s.o.iter_mut().for_each(|z| *z = 0.0);
+        for j in 0..t {
+            let nv = vis[j].len();
+            for hh in 0..h {
+                let qv = &s.q[j * d + hh * hd..j * d + (hh + 1) * hd];
+                let mut mx = f32::NEG_INFINITY;
+                for (a, &sp) in s.att[..nv].iter_mut().zip(vis[j].iter()) {
+                    let row = (li * lt + sp) * hhd + hh * hd;
+                    *a = dot_f32(qv, &krow[row..row + hd]) * scale;
+                    mx = mx.max(*a);
+                }
+                let mut sum = 0.0f32;
+                for a in s.att[..nv].iter_mut() {
+                    *a = (*a - mx).exp();
+                    sum += *a;
+                }
+                let inv = 1.0 / sum.max(1e-30);
+                let orow = &mut s.o[j * d + hh * hd..j * d + (hh + 1) * hd];
+                for (&a, &sp) in s.att[..nv].iter().zip(vis[j].iter()) {
+                    let w = a * inv;
+                    let row = (li * lt + sp) * hhd + hh * hd;
+                    let vr = &vrow[row..row + hd];
+                    for (ov, &vv) in orow.iter_mut().zip(vr.iter()) {
+                        *ov += w * vv;
+                    }
+                }
+            }
+        }
+        // x += o @ wo
+        s.y.iter_mut().for_each(|z| *z = 0.0);
+        let (wo, po) = (ql.map(|q| &q.wo), pl.map(|p| &p.wo));
+        matmul_any(kernel, wo, po, &s.o, &layer.wo, &mut s.y, t, d, d, &mut s.qscr);
+        for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
+            *xv += *yv;
+        }
+        // MLP: x += gelu(ln2(x) @ w1) @ w2
+        layer.ln2.apply(&s.x, &mut s.y, d);
+        s.ff.iter_mut().for_each(|z| *z = 0.0);
+        let (w1, p1) = (ql.map(|q| &q.w1), pl.map(|p| &p.w1));
+        let ff = dims.d_ff();
+        matmul_any(kernel, w1, p1, &s.y, &layer.w1, &mut s.ff, t, d, ff, &mut s.qscr);
+        s.ff.iter_mut().for_each(|z| *z = gelu(*z));
+        s.y.iter_mut().for_each(|z| *z = 0.0);
+        let (w2, p2) = (ql.map(|q| &q.w2), pl.map(|p| &p.w2));
+        matmul_any(kernel, w2, p2, &s.ff, &layer.w2, &mut s.y, t, ff, d, &mut s.qscr);
+        for (xv, yv) in s.x.iter_mut().zip(s.y.iter()) {
+            *xv += *yv;
+        }
+    }
+    // Final norm + tied unembedding + softmax (tree forwards always want
+    // probs — every node's distribution feeds sampling or verification).
+    model.ln_f.apply(&s.x, &mut s.y, d);
+    for j in 0..t {
+        let xrow = &s.y[j * d..(j + 1) * d];
+        let sx = match quant {
+            Some(_) => quantise_row_q8(xrow, &mut s.xq),
+            None => 0.0,
+        };
+        let prow = &mut probs[j * vcb..(j + 1) * vcb];
+        for (tok, pv) in prow.iter_mut().enumerate() {
+            let mut dot = match quant {
+                None => dot_f32(xrow, &model.embed[tok * d..(tok + 1) * d]),
+                Some(qm) => {
+                    let (qrow, qs) = qm.embed.row(tok);
+                    dot_q8_i32(&s.xq, qrow) as f32 * (sx * qs)
+                }
+            };
+            if (tok as u32) < vocab::CONTENT_BASE {
+                dot += model.control_logit_bias;
+            }
+            *pv = dot;
+        }
+        softmax_row(prow);
+    }
+}
+
 /// The verification uniforms one row draws from its per-row seed: `etas
 /// (gamma,)` and the residual-sampling uniform `u`.  A pure function of
 /// `(seed, gamma)` — no batch or slot index enters, which is what makes
@@ -743,13 +995,26 @@ pub struct NativeBackend {
     /// Reuse the `(B·K)`-row multipath scratch caches across iterations
     /// instead of allocating fresh ones per call.
     persistent_scratch: bool,
-    /// The persistent scratch caches, keyed by `(model name, rows)`.
-    /// Entries are taken out for the duration of a multipath call (so
-    /// concurrent engines never alias one) and returned afterwards; the
-    /// per-key stack holds one cache per concurrently-active engine.
-    /// Batched admission prefills ([`Backend::prefill_rows`]) draw their
-    /// `(B,)`-row forward scratch from the same pool.
-    scratch: Mutex<HashMap<(String, usize), Vec<NativeKv>>>,
+    /// The persistent scratch caches, keyed by `(model name, rows,
+    /// ring length)`.  Entries are taken out for the duration of a
+    /// multipath/tree call (so concurrent engines never alias one) and
+    /// returned afterwards; the per-key stack holds one cache per
+    /// concurrently-active engine.  Batched admission prefills
+    /// ([`Backend::prefill_rows`]) draw their `(B,)`-row forward scratch
+    /// from the same pool.  The ring length is part of the key because
+    /// tree scratches run an extended ring
+    /// ([`NativeBackend::tree_scratch_len`]): a flat `B·K`-row checkout
+    /// must never alias a tree checkout that happens to hold the same
+    /// row count (regression-tested in `tests/native_fast.rs`).
+    scratch: Mutex<HashMap<(String, usize, usize), Vec<NativeKv>>>,
+    /// Entropy-gap branch threshold for `Algo::Tree` drafting
+    /// ([`BranchPolicy::EntropyGap`]): coincident draws at a node share
+    /// one child only when the parent distribution's top-2 probability
+    /// gap is at least this value.  `0.0` (the default) always shares;
+    /// `f64::INFINITY` never does (the multipath layout twin).  Sharing
+    /// never changes emitted bits — only how many drafted tokens are
+    /// scored (DESIGN.md §13.3).
+    branch_threshold: f64,
     /// Draft-model inference precision ([`Precision`] as u8): fp32, or
     /// the int8 quantised-weight path (DESIGN.md §11).  Backend-wide —
     /// set at construction (env `SPECD_DRAFT_PRECISION`, default int8),
@@ -783,6 +1048,22 @@ fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
 }
 
+/// Tree branch-threshold default: `SPECD_TREE_THRESHOLD` when set (and a
+/// valid non-negative float), else 0.0 (always share coincident draws).
+/// An unparsable value falls back *loudly* (stderr), matching the other
+/// `SPECD_*` knobs.
+fn default_branch_threshold() -> f64 {
+    if let Ok(s) = std::env::var("SPECD_TREE_THRESHOLD") {
+        match s.trim().parse::<f64>() {
+            Ok(t) if t >= 0.0 => return t,
+            _ => eprintln!(
+                "specd: ignoring invalid SPECD_TREE_THRESHOLD '{s}' (want >= 0); using 0"
+            ),
+        }
+    }
+    0.0
+}
+
 impl NativeBackend {
     fn with_models(info: BackendInfo, models: HashMap<String, NativeModel>) -> Self {
         NativeBackend {
@@ -793,6 +1074,7 @@ impl NativeBackend {
             kernel: default_kernel(),
             persistent_scratch: true,
             scratch: Mutex::new(HashMap::new()),
+            branch_threshold: default_branch_threshold(),
             draft_precision: AtomicU8::new(Precision::from_env_or_default() as u8),
             quant: Mutex::new(HashMap::new()),
             packed: Mutex::new(HashMap::new()),
@@ -891,6 +1173,23 @@ impl NativeBackend {
         self
     }
 
+    /// Set the entropy-gap branch threshold for `Algo::Tree` drafting
+    /// (default 0.0 = always share coincident draws, or the
+    /// `SPECD_TREE_THRESHOLD` env override; `f64::INFINITY` = never
+    /// share, the exact multipath layout twin).  Any value yields the
+    /// same emitted bits — the threshold only trades drafted-token work
+    /// against tree width (DESIGN.md §13.3, test-enforced).
+    pub fn with_branch_threshold(mut self, threshold: f64) -> Self {
+        assert!(threshold >= 0.0, "branch threshold must be >= 0");
+        self.branch_threshold = threshold;
+        self
+    }
+
+    /// Current entropy-gap branch threshold.
+    pub fn branch_threshold(&self) -> f64 {
+        self.branch_threshold
+    }
+
     /// Set the draft-model inference precision (fp32, or the int8
     /// quantised-weight path — the default).  Builder form of the knob
     /// [`Backend::prepare`] threads through from the engine config.
@@ -916,7 +1215,16 @@ impl NativeBackend {
     /// define the output law) or the backend runs fp32 drafts.  Twins are
     /// built once per model and cached (`quant`, keyed by name).
     fn draft_quant(&self, name: &str) -> Option<Arc<QuantModel>> {
-        if name == "target" || self.draft_precision() == Precision::Fp32 {
+        self.quant_for(name, None)
+    }
+
+    /// [`NativeBackend::draft_quant`] with an optional per-request
+    /// precision override ([`DraftRequest::precision`]): `None` follows
+    /// the backend-wide knob, `Some(p)` forces it for this call.  The
+    /// target is never quantised regardless.
+    fn quant_for(&self, name: &str, precision: Option<Precision>) -> Option<Arc<QuantModel>> {
+        let p = precision.unwrap_or_else(|| self.draft_precision());
+        if name == "target" || p == Precision::Fp32 {
             return None;
         }
         let model = self.models.get(name)?;
@@ -956,19 +1264,25 @@ impl NativeBackend {
         )
     }
 
-    /// Check out a `(rows,)`-row scratch cache for `model` (persistent
-    /// pool hit, or a fresh zeroed cache).  Stale contents are fine: the
-    /// multipath forwards splice every attended prefix row and rewrite
-    /// every in-flight row before it is read (DESIGN.md §10 scratch
-    /// lifetime), so reuse is bit-identical to a fresh cache.
-    fn take_scratch(&self, model: &NativeModel, name: &str, rows: usize) -> NativeKv {
+    /// Check out a `(rows,)`-row scratch cache of ring length `max_len`
+    /// for `model` (persistent pool hit, or a fresh zeroed cache).  Stale
+    /// contents are fine: the multipath/tree forwards splice every
+    /// attended prefix slot and rewrite every in-flight slot before it is
+    /// read (DESIGN.md §10 scratch lifetime), so reuse is bit-identical
+    /// to a fresh cache.  The ring length is part of the pool key: flat
+    /// multipath checkouts (`max_len == info.max_len`) and tree checkouts
+    /// (extended ring, [`NativeBackend::tree_scratch_len`]) never alias
+    /// even at equal row counts.
+    fn take_scratch(&self, model: &NativeModel, name: &str, rows: usize, max_len: usize) -> NativeKv {
         if self.persistent_scratch {
             let mut cache = self.scratch.lock().unwrap();
-            if let Some(kv) = cache.get_mut(&(name.to_string(), rows)).and_then(Vec::pop) {
+            if let Some(kv) =
+                cache.get_mut(&(name.to_string(), rows, max_len)).and_then(Vec::pop)
+            {
                 return kv;
             }
         }
-        NativeKv::zeros(&model.dims, rows, self.info.max_len)
+        NativeKv::zeros(&model.dims, rows, max_len)
     }
 
     /// Return a scratch cache to the persistent pool (dropped when the
@@ -976,8 +1290,21 @@ impl NativeBackend {
     fn put_scratch(&self, name: &str, kv: NativeKv) {
         if self.persistent_scratch {
             let mut cache = self.scratch.lock().unwrap();
-            cache.entry((name.to_string(), kv.batch)).or_default().push(kv);
+            cache.entry((name.to_string(), kv.batch, kv.max_len)).or_default().push(kv);
         }
+    }
+
+    /// Ring length of a `k`-leaf tree scratch row: the serving ring plus
+    /// `k` per-leaf extension slots per supported draft depth
+    /// (`gamma <= max_len / 4`, [`BackendInfo::supports_gamma`]), so the
+    /// slot of node `i` — `len + i` with `len <= max_len` and
+    /// `i < k * gamma` — always fits, for any admissible `len`/`gamma`.
+    /// Gamma-independent on purpose: [`Backend::prepare`] pre-sizes the
+    /// pool without knowing the engine's gamma.  Slots past the model
+    /// ring are pure KV storage (position embeddings clamp, exactly like
+    /// the flat forward's ring-end clamp).
+    fn tree_scratch_len(&self, k: usize) -> usize {
+        self.info.max_len + k * (self.info.max_len / 4).max(1)
     }
 
     /// Artifact bundle when present, hermetic seeded weights otherwise —
@@ -1267,7 +1594,7 @@ impl NativeBackend {
         kv: &NativeKv,
     ) -> NativeKv {
         let (b, l) = (self.info.batch, self.info.max_len);
-        let mut scratch = self.take_scratch(model, name, b * k);
+        let mut scratch = self.take_scratch(model, name, b * k, l);
         for bi in 0..b {
             let prefix = (length[bi].max(1) as usize - 1).min(l);
             for path in 0..k {
@@ -1431,8 +1758,392 @@ impl NativeBackend {
         }
         self.put_scratch(drafter, d_scratch);
         self.put_scratch("target", t_scratch);
-        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us })
+        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us, drafted: b * k * gamma })
     }
+
+    // ------------------------------------------------------------------
+    // Prefix-sharing token-tree speculation (DESIGN.md §13)
+    // ------------------------------------------------------------------
+
+    /// Forward each row's tree-token batch ([`TreeTokens`]) against its
+    /// scratch ring in one call — the tree twin of
+    /// [`NativeBackend::forward_block`], with explicit per-token
+    /// position/slot/visibility instead of the contiguous block layout.
+    /// Rows may carry different token counts (sharing collapses levels
+    /// unevenly), so probs come back per row.  Rows are independent and
+    /// split across the thread pool exactly like the flat forward —
+    /// bit-identical for any thread count.
+    fn forward_tree(
+        &self,
+        model: &NativeModel,
+        name: &str,
+        quant: Option<&QuantModel>,
+        kv: &mut NativeKv,
+        batch_tokens: &[TreeTokens],
+    ) -> Vec<Vec<f32>> {
+        let dims = &model.dims;
+        let (rows, lt) = (kv.batch, kv.max_len);
+        let lm = self.info.max_len;
+        let vcb = dims.vocab_size;
+        debug_assert_eq!(batch_tokens.len(), rows);
+        debug_assert_eq!(
+            (kv.n_layers, kv.n_heads, kv.head_dim),
+            (dims.n_layers, dims.n_heads, dims.head_dim()),
+            "KV cache belongs to a different model"
+        );
+        let kernel = self.kernel();
+        let packed_arc = self.packed_model(name, model);
+        let packed = packed_arc.as_deref();
+        let mut probs: Vec<Vec<f32>> =
+            batch_tokens.iter().map(|tt| vec![0.0f32; tt.toks.len() * vcb]).collect();
+        let stride = kv.row_stride();
+        let mut kit = kv.k.chunks_mut(stride);
+        let mut vit = kv.v.chunks_mut(stride);
+        let mut slots = Vec::with_capacity(rows);
+        for (tt, prow) in batch_tokens.iter().zip(probs.iter_mut()) {
+            slots.push(TreeSlot {
+                k: kit.next().expect("kv row chunk"),
+                v: vit.next().expect("kv row chunk"),
+                probs: prow,
+                toks: &tt.toks,
+                pos: &tt.pos,
+                slot: &tt.slot,
+                vis: &tt.vis,
+            });
+        }
+        let n_threads = self.threads.min(rows).max(1);
+        if n_threads == 1 {
+            for slot in slots {
+                if slot.toks.is_empty() {
+                    continue;
+                }
+                let mut scratch = RowScratch::new(dims, slot.toks.len(), lt);
+                forward_tree_row(model, quant, packed, kernel, slot, lt, lm, &mut scratch);
+            }
+        } else {
+            let chunk = rows.div_ceil(n_threads);
+            let mut it = slots.into_iter();
+            let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(n_threads);
+            loop {
+                let group: Vec<TreeSlot<'_>> = it.by_ref().take(chunk).collect();
+                if group.is_empty() {
+                    break;
+                }
+                jobs.push(Box::new(move || {
+                    for slot in group {
+                        if slot.toks.is_empty() {
+                            continue;
+                        }
+                        let mut scratch = RowScratch::new(dims, slot.toks.len(), lt);
+                        forward_tree_row(model, quant, packed, kernel, slot, lt, lm, &mut scratch);
+                    }
+                }));
+            }
+            self.pool().scope(jobs);
+        }
+        probs
+    }
+
+    /// [`Backend::draft_tree`] plus the drafter's tree scratch cache
+    /// (kept by the fused tree iteration for the winner-chain commit).
+    ///
+    /// Every leaf runs the *same* independent draft stream as a flat
+    /// multipath path (`path_rng(seed, DOM_DRAFT, p)`, one uniform per
+    /// depth); leaves whose freshly drawn tokens coincide at the same
+    /// node share one child — drafted, stored and scored once — when the
+    /// branch policy's confidence gate allows (DESIGN.md §13.3).  Sharing
+    /// never changes any draw or any distribution (a shared node's q-row
+    /// is bit-identical to what each leaf would compute on its own flat
+    /// row), so emitted tokens match `Algo::MultiPath` exactly; only the
+    /// drafted-token count shrinks.
+    fn draft_tree_scratch(
+        &self,
+        req: &DraftRequest<'_>,
+        kv: &NativeKv,
+    ) -> anyhow::Result<(DraftTree, NativeKv)> {
+        let (tokens, length, seeds) = (req.tokens, req.length, req.seeds);
+        let (k, gamma) = (req.k, req.gamma);
+        self.check_shapes(tokens, length)?;
+        self.check_gamma(gamma)?;
+        self.check_seeds(seeds)?;
+        if k == 0 {
+            return Err(anyhow!("tree draft set needs k >= 1"));
+        }
+        let m = self.model(req.drafter)?;
+        let (b, lm, vcb) = (self.info.batch, self.info.max_len, self.info.vocab_size);
+        let lt = self.tree_scratch_len(k);
+        let mut scratch = self.take_scratch(m, req.drafter, b, lt);
+        // Shared prefix: each serving row's committed slots, copied once
+        // — the tree's whole point (multipath copies the prefix into all
+        // `k` path rows and attends it `k` times over).
+        for bi in 0..b {
+            let prefix = (length[bi].max(1) as usize - 1).min(lm);
+            copy_kv_span(&mut scratch, bi, kv, bi, prefix);
+        }
+        let pending = self.gather_pending(tokens, length);
+        let quant = self.quant_for(req.drafter, req.precision);
+
+        let mut rows: Vec<TreeRow> = (0..b).map(|_| TreeRow::default()).collect();
+        // cur[bi][p]: node index leaf stream `p` currently sits on
+        // (-1 = root, i.e. the pending token).
+        let mut cur: Vec<Vec<i32>> = vec![vec![-1i32; k]; b];
+        let mut rngs: Vec<Vec<Rng>> = seeds
+            .iter()
+            .map(|&s| (0..k).map(|p| path_rng(s, DOM_DRAFT, p)).collect())
+            .collect();
+        // Nodes the previous forward call scored, per row (call 0 scores
+        // the pending token, whose q-row seeds depth 0).
+        let mut prev_level: Vec<Vec<i32>> = vec![vec![-1i32]; b];
+
+        for dj in 0..gamma {
+            // Forward this level in one batched call: call 0 forwards
+            // [pending]; call `dj` forwards every depth-(dj-1) node.
+            let mut batch_toks: Vec<TreeTokens> = Vec::with_capacity(b);
+            for bi in 0..b {
+                let p0 = (length[bi] - 1).max(0) as usize;
+                let mut tt = TreeTokens::default();
+                for &n in &prev_level[bi] {
+                    if n < 0 {
+                        tt.push(pending[bi], p0, p0, (0..p0 + 1).collect());
+                    } else {
+                        let (ni, row) = (n as usize, &rows[bi]);
+                        tt.push(
+                            row.tokens[ni],
+                            (p0 + 1 + row.depth[ni]).min(lm - 1),
+                            p0 + 1 + ni,
+                            visible_slots(p0 + 1, &row.parent, ni),
+                        );
+                    }
+                }
+                batch_toks.push(tt);
+            }
+            let probs =
+                self.forward_tree(m, req.drafter, quant.as_deref(), &mut scratch, &batch_toks);
+            // Sample each leaf stream's next token from its current
+            // node's distribution (its own uniform at every depth — the
+            // multipath streams verbatim), then group coincident
+            // `(parent, token)` draws into shared children where the
+            // confidence gate allows.
+            for bi in 0..b {
+                let mut next_level: Vec<i32> = Vec::new();
+                let mut share: HashMap<(i32, i32), i32> = HashMap::new();
+                let mut next_cur = vec![-1i32; k];
+                for p in 0..k {
+                    let parent = cur[bi][p];
+                    let qi = prev_level[bi]
+                        .iter()
+                        .position(|&x| x == parent)
+                        .expect("leaf parent was forwarded this level");
+                    let qrow = &probs[bi][qi * vcb..(qi + 1) * vcb];
+                    let u = rngs[bi][p].uniform();
+                    let tok = sample_row(qrow, u) as i32;
+                    let shareable = match req.policy {
+                        BranchPolicy::Disjoint => false,
+                        BranchPolicy::EntropyGap { threshold } => top2_gap(qrow) >= threshold,
+                    };
+                    let hit =
+                        if shareable { share.get(&(parent, tok)).copied() } else { None };
+                    let node = match hit {
+                        Some(n) => n,
+                        None => {
+                            let row = &mut rows[bi];
+                            let n = row.tokens.len() as i32;
+                            row.tokens.push(tok);
+                            row.parent.push(parent);
+                            row.depth.push(dj);
+                            row.qs.extend_from_slice(qrow);
+                            next_level.push(n);
+                            if shareable {
+                                share.insert((parent, tok), n);
+                            }
+                            n
+                        }
+                    };
+                    next_cur[p] = node;
+                }
+                cur[bi] = next_cur;
+                prev_level[bi] = next_level;
+            }
+        }
+        for bi in 0..b {
+            rows[bi].leaves = cur[bi].iter().map(|&n| n as usize).collect();
+        }
+        let tree = DraftTree::new(b, k, gamma, vcb, rows)?;
+        Ok((tree, scratch))
+    }
+
+    /// [`Backend::score_tree`] plus the target's tree scratch cache (the
+    /// winner-commit twin of [`NativeBackend::draft_tree_scratch`]): one
+    /// target forward per row over `[pending] ++ all tree nodes` under
+    /// the tree attention mask — every root-to-leaf chain gets exactly
+    /// the distributions a flat per-path scoring pass would produce,
+    /// with shared prefixes scored once.
+    fn score_tree_scratch(
+        &self,
+        tree: &mut DraftTree,
+        tokens: &[i32],
+        length: &[i32],
+        kv: &NativeKv,
+    ) -> anyhow::Result<NativeKv> {
+        self.check_shapes(tokens, length)?;
+        let (b, lm, vcb) = (self.info.batch, self.info.max_len, self.info.vocab_size);
+        if tree.batch != b || tree.vocab != vcb {
+            return Err(anyhow!(
+                "draft tree shape mismatch: batch {} (want {b}), vocab {} (want {vcb})",
+                tree.batch,
+                tree.vocab
+            ));
+        }
+        self.check_gamma(tree.gamma)?;
+        let m = self.model("target")?;
+        let lt = self.tree_scratch_len(tree.k);
+        let mut scratch = self.take_scratch(m, "target", b, lt);
+        for bi in 0..b {
+            let prefix = (length[bi].max(1) as usize - 1).min(lm);
+            copy_kv_span(&mut scratch, bi, kv, bi, prefix);
+        }
+        let pending = self.gather_pending(tokens, length);
+        let mut batch_toks: Vec<TreeTokens> = Vec::with_capacity(b);
+        for bi in 0..b {
+            let p0 = (length[bi] - 1).max(0) as usize;
+            let row = &tree.rows[bi];
+            let mut tt = TreeTokens::default();
+            tt.push(pending[bi], p0, p0, (0..p0 + 1).collect());
+            for ni in 0..row.n_nodes() {
+                tt.push(
+                    row.tokens[ni],
+                    (p0 + 1 + row.depth[ni]).min(lm - 1),
+                    p0 + 1 + ni,
+                    visible_slots(p0 + 1, &row.parent, ni),
+                );
+            }
+            batch_toks.push(tt);
+        }
+        let probs = self.forward_tree(m, "target", None, &mut scratch, &batch_toks);
+        for bi in 0..b {
+            let n = tree.rows[bi].n_nodes();
+            let ps_root = probs[bi][..vcb].to_vec();
+            let node_ps = probs[bi][vcb..(n + 1) * vcb].to_vec();
+            tree.set_row_scores(bi, ps_root, node_ps)?;
+        }
+        Ok(scratch)
+    }
+
+    /// One fused tree iteration: draft the prefix-sharing token tree,
+    /// score all its tokens in one batched target pass per row, verify
+    /// every root-to-leaf chain jointly ([`verify::tree_verify`]) and
+    /// commit only the winning chain's KV back into the live caches —
+    /// leaving token/length/cache state bit-identical to
+    /// [`NativeBackend::spec_iter_multipath`] at the same `k` (the
+    /// ladder contract, test-enforced), with `drafted` counting actual
+    /// tree nodes (strictly fewer than `B·K·gamma` whenever draws
+    /// coincide).
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter_tree(
+        &self,
+        k: usize,
+        drafter: &str,
+        gamma: usize,
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut NativeKv,
+        kv_drafter: &mut NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<SpecIterOut> {
+        let (b, l) = (self.info.batch, self.info.max_len);
+        let t_draft = Instant::now();
+        let req = DraftRequest {
+            drafter,
+            gamma,
+            k,
+            policy: BranchPolicy::EntropyGap { threshold: self.branch_threshold },
+            tokens,
+            length,
+            seeds,
+            precision: None,
+        };
+        let (mut tree, d_scratch) = self.draft_tree_scratch(&req, kv_drafter)?;
+        let draft_us = t_draft.elapsed().as_micros() as u64;
+        let t_target = Instant::now();
+        let t_scratch = self.score_tree_scratch(&mut tree, tokens, length, kv_target)?;
+        let target_us = t_target.elapsed().as_micros() as u64;
+        let drafted = tree.total_nodes();
+
+        let mut tau = vec![0i32; b];
+        let mut emitted = vec![vocab::PAD as i32; b * (gamma + 1)];
+        let mut done = vec![0i32; b];
+        let mut views = TreeViews::default();
+        for bi in 0..b {
+            let (etas, u_res) = multipath_uniforms(seeds[bi], gamma, k);
+            tree.tree_views_into(bi, &mut views)?;
+            let row = &tree.rows[bi];
+            let outcome = verify::tree_verify(
+                &views.ps_root,
+                &views.node_ps,
+                &views.node_qs,
+                &views.tokens,
+                &row.parent,
+                &row.leaves,
+                &etas,
+                u_res,
+            );
+            // Commit the winning chain: one span copy for the shared
+            // prefix (+ pending), then each chain node's slot to its
+            // flat cache position — covering exactly the slots the flat
+            // multipath commit rewrites (drafter wrote pending + depths
+            // 0..gamma-2; the target all gamma depths), with identical
+            // values (DESIGN.md §13.5).
+            let len = length[bi].max(0) as usize;
+            let p0 = (length[bi] - 1).max(0) as usize;
+            let chain = row.path_nodes(outcome.path);
+            let lim_d = (len + gamma).saturating_sub(1).min(l);
+            let lim_t = (len + gamma).min(l);
+            copy_kv_span(kv_drafter, bi, &d_scratch, bi, (p0 + 1).min(lim_d));
+            copy_kv_span(kv_target, bi, &t_scratch, bi, (p0 + 1).min(lim_t));
+            for (dj, &node) in chain.iter().enumerate() {
+                let src_pos = p0 + 1 + node;
+                let dst_pos = p0 + 1 + dj;
+                if dj < gamma.saturating_sub(1) && dst_pos < lim_d {
+                    copy_kv_pos(kv_drafter, bi, dst_pos, &d_scratch, bi, src_pos);
+                }
+                if dst_pos < lim_t {
+                    copy_kv_pos(kv_target, bi, dst_pos, &t_scratch, bi, src_pos);
+                }
+            }
+            for (j, &t) in outcome.emitted.iter().enumerate() {
+                if len + j < l {
+                    tokens[bi * l + len + j] = t as i32;
+                }
+                emitted[bi * (gamma + 1) + j] = t as i32;
+            }
+            let eos_hit = outcome.emitted.iter().any(|&t| t == vocab::EOS);
+            let new_len = length[bi] + outcome.tau as i32 + 1;
+            let out_of_room = new_len > (l as i32) - (gamma as i32 + 2);
+            tau[bi] = outcome.tau as i32;
+            done[bi] = (eos_hit || out_of_room) as i32;
+            length[bi] = new_len.min(l as i32 - 1);
+        }
+        self.put_scratch(drafter, d_scratch);
+        self.put_scratch("target", t_scratch);
+        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us, drafted })
+    }
+}
+
+/// Top-2 probability gap of a distribution row — the
+/// [`BranchPolicy::EntropyGap`] confidence signal: a large gap means the
+/// distribution is concentrated (low entropy), so coincident draws are
+/// expected and sharing them loses no exploration (DESIGN.md §13.3).
+fn top2_gap(q: &[f32]) -> f64 {
+    let (mut a, mut b) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &p in q {
+        if p > a {
+            b = a;
+            a = p;
+        } else if p > b {
+            b = p;
+        }
+    }
+    (a - b) as f64
 }
 
 impl Backend for NativeBackend {
@@ -1464,20 +2175,35 @@ impl Backend for NativeBackend {
                 }
             }
         }
-        if let Algo::MultiPath { k } = algo {
-            if k == 0 {
-                return Err(anyhow!("multipath draft set needs k >= 1"));
+        // Pre-size the persistent scratch for the multi-draft algorithms:
+        // multipath runs `B·K` flat rows at the serving ring; tree runs
+        // `B` rows at the extended tree ring (a distinct pool key —
+        // never aliased, see `take_scratch`).
+        let plan: Option<(usize, usize)> = match algo {
+            Algo::MultiPath { k } => {
+                if k == 0 {
+                    return Err(anyhow!("multipath draft set needs k >= 1"));
+                }
+                Some((self.info.batch * k, self.info.max_len))
             }
+            Algo::Tree { k } => {
+                if k == 0 {
+                    return Err(anyhow!("tree draft set needs k >= 1"));
+                }
+                Some((self.info.batch, self.tree_scratch_len(k)))
+            }
+            _ => None,
+        };
+        if let Some((rows, ring)) = plan {
             if !self.persistent_scratch {
                 return Ok(());
             }
-            let rows = self.info.batch * k;
             for name in [drafter, "target"] {
                 let m = self.model(name)?;
                 let mut cache = self.scratch.lock().unwrap();
-                let entry = cache.entry((name.to_string(), rows)).or_default();
+                let entry = cache.entry((name.to_string(), rows, ring)).or_default();
                 if entry.is_empty() {
-                    entry.push(NativeKv::zeros(&m.dims, rows, self.info.max_len));
+                    entry.push(NativeKv::zeros(&m.dims, rows, ring));
                 }
             }
         }
@@ -1533,7 +2259,7 @@ impl Backend for NativeBackend {
                 ));
             }
         }
-        let mut scratch = self.take_scratch(m, model, self.info.batch);
+        let mut scratch = self.take_scratch(m, model, self.info.batch, self.info.max_len);
         self.prefill_into(m, model, &mut scratch, tokens, length);
         for s in splices {
             copy_kv_rows(dst, s.dst_slot, &scratch, s.src_row, s.len);
@@ -1559,6 +2285,11 @@ impl Backend for NativeBackend {
         }
         if let Algo::MultiPath { k } = algo {
             return self.spec_iter_multipath(
+                k, drafter, gamma, tokens, length, kv_target, kv_drafter, seeds,
+            );
+        }
+        if let Algo::Tree { k } = algo {
+            return self.spec_iter_tree(
                 k, drafter, gamma, tokens, length, kv_target, kv_drafter, seeds,
             );
         }
@@ -1615,7 +2346,7 @@ impl Backend for NativeBackend {
             done[bi] = (eos_hit || out_of_room) as i32;
             length[bi] = new_len.min(l as i32 - 1);
         }
-        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us })
+        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us, drafted: b * gamma })
     }
 
     fn draft_block(
@@ -1688,31 +2419,20 @@ impl Backend for NativeBackend {
         Ok(self.score(m, kv, tokens, length, drafts, gamma))
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn draft_multi(
-        &self,
-        drafter: &str,
-        k: usize,
-        gamma: usize,
-        tokens: &[i32],
-        length: &[i32],
-        kv: &NativeKv,
-        seeds: &[i32],
-    ) -> anyhow::Result<DraftSet> {
-        let (set, scratch) =
-            self.draft_multi_scratch(drafter, k, gamma, tokens, length, kv, seeds)?;
-        self.put_scratch(drafter, scratch);
-        Ok(set)
+    fn draft_tree(&self, req: &DraftRequest<'_>, kv: &NativeKv) -> anyhow::Result<DraftTree> {
+        let (tree, scratch) = self.draft_tree_scratch(req, kv)?;
+        self.put_scratch(req.drafter, scratch);
+        Ok(tree)
     }
 
-    fn target_score_multi(
+    fn score_tree(
         &self,
-        set: &mut DraftSet,
+        tree: &mut DraftTree,
         tokens: &[i32],
         length: &[i32],
         kv: &NativeKv,
     ) -> anyhow::Result<()> {
-        let scratch = self.target_score_multi_scratch(set, tokens, length, kv)?;
+        let scratch = self.score_tree_scratch(tree, tokens, length, kv)?;
         self.put_scratch("target", scratch);
         Ok(())
     }
@@ -1972,6 +2692,121 @@ mod tests {
             assert_eq!(kd1.k, kd2.k, "iter {iter}: drafter K cache diverged");
             assert_eq!(kd1.v, kd2.v, "iter {iter}: drafter V cache diverged");
         }
+    }
+
+    /// Drive two algos side by side on two (identically seeded) backends
+    /// and require bit-identical emitted tokens, rings, lengths and all
+    /// four KV caches after every iteration.
+    fn spec_ladder_bit_identical(be_a: &NativeBackend, a: Algo, be_b: &NativeBackend, b: Algo) {
+        let (mut t1, mut l1) = prompt_state(be_a);
+        let (mut t2, mut l2) = (t1.clone(), l1.clone());
+        let mut kt1 = be_a.prefill("target", &t1, &l1).unwrap();
+        let mut kd1 = be_a.prefill("xxs", &t1, &l1).unwrap();
+        let mut kt2 = be_b.prefill("target", &t2, &l2).unwrap();
+        let mut kd2 = be_b.prefill("xxs", &t2, &l2).unwrap();
+        for iter in 0..4i32 {
+            let seeds = [11 + iter, 23 + 7 * iter];
+            let oa = be_a
+                .spec_iter(a, "xxs", 4, &mut t1, &mut l1, &mut kt1, &mut kd1, &seeds)
+                .unwrap();
+            let ob = be_b
+                .spec_iter(b, "xxs", 4, &mut t2, &mut l2, &mut kt2, &mut kd2, &seeds)
+                .unwrap();
+            assert_eq!(oa.tau, ob.tau, "{a} vs {b} iter {iter}");
+            assert_eq!(oa.emitted, ob.emitted, "{a} vs {b} iter {iter}");
+            assert_eq!(oa.done, ob.done, "{a} vs {b} iter {iter}");
+            assert_eq!(t1, t2, "{a} vs {b} iter {iter}: token rings diverged");
+            assert_eq!(l1, l2, "{a} vs {b} iter {iter}: lengths diverged");
+            assert_eq!(kt1.k, kt2.k, "{a} vs {b} iter {iter}: target K cache diverged");
+            assert_eq!(kt1.v, kt2.v, "{a} vs {b} iter {iter}: target V cache diverged");
+            assert_eq!(kd1.k, kd2.k, "{a} vs {b} iter {iter}: drafter K cache diverged");
+            assert_eq!(kd1.v, kd2.v, "{a} vs {b} iter {iter}: drafter V cache diverged");
+        }
+    }
+
+    /// Bottom rung of the ladder: a 1-leaf tree is block verification.
+    #[test]
+    fn tree_k1_spec_iter_is_bit_identical_to_block() {
+        spec_ladder_bit_identical(&tiny(), Algo::Block, &tiny(), Algo::Tree { k: 1 });
+    }
+
+    /// Middle rung: the tree is flat multipath with shared storage — at
+    /// the default threshold (share coincident draws) *and* at threshold
+    /// infinity (never share; exact layout twin), the k-leaf tree must be
+    /// bit-identical to `MultiPath { k }` end to end.
+    #[test]
+    fn tree_spec_iter_is_bit_identical_to_multipath() {
+        for k in [2usize, 3] {
+            spec_ladder_bit_identical(
+                &tiny(),
+                Algo::MultiPath { k },
+                &tiny(),
+                Algo::Tree { k },
+            );
+            let never_share = tiny().with_branch_threshold(f64::INFINITY);
+            spec_ladder_bit_identical(
+                &tiny(),
+                Algo::MultiPath { k },
+                &never_share,
+                Algo::Tree { k },
+            );
+        }
+    }
+
+    /// The tree never drafts more than flat multipath (`b * k * gamma`
+    /// scored tokens) and never less than a single path per row.
+    #[test]
+    fn tree_drafted_count_is_bounded() {
+        let be = tiny();
+        let (mut toks, mut lens) = prompt_state(&be);
+        let mut kvt = be.prefill("target", &toks, &lens).unwrap();
+        let mut kvd = be.prefill("xxs", &toks, &lens).unwrap();
+        let (b, k, gamma) = (be.info().batch, 3usize, 4usize);
+        for iter in 0..4i32 {
+            let out = be
+                .spec_iter(
+                    Algo::Tree { k },
+                    "xxs",
+                    gamma,
+                    &mut toks,
+                    &mut lens,
+                    &mut kvt,
+                    &mut kvd,
+                    &[3 + iter, 4 + iter],
+                )
+                .unwrap();
+            assert!(out.drafted <= b * k * gamma, "iter {iter}: {}", out.drafted);
+            assert!(out.drafted >= b * gamma, "iter {iter}: {}", out.drafted);
+        }
+    }
+
+    /// Dedup-invariance at the draft level: the sharing tree flattens to
+    /// exactly the per-leaf streams the disjoint (multipath-layout) tree
+    /// produces, while storing at most as many nodes.
+    #[test]
+    fn draft_tree_sharing_matches_disjoint_flat() {
+        let be = tiny();
+        let (toks, lens) = prompt_state(&be);
+        let kv = be.prefill("xxs", &toks, &lens).unwrap();
+        let req_d = DraftRequest {
+            drafter: "xxs",
+            gamma: 3,
+            k: 4,
+            policy: BranchPolicy::Disjoint,
+            tokens: &toks,
+            length: &lens,
+            seeds: &[5, 6],
+            precision: None,
+        };
+        let req_s = DraftRequest { policy: BranchPolicy::EntropyGap { threshold: 0.0 }, ..req_d };
+        let t_d = be.draft_tree(&req_d, &kv).unwrap();
+        let t_s = be.draft_tree(&req_s, &kv).unwrap();
+        assert_eq!(t_d.total_nodes(), 2 * 4 * 3, "disjoint tree is the flat layout");
+        assert!(t_s.total_nodes() <= t_d.total_nodes());
+        let f_d = t_d.flatten().unwrap();
+        let f_s = t_s.flatten().unwrap();
+        assert_eq!(f_d.drafts, f_s.drafts, "per-leaf streams must not depend on sharing");
+        assert_eq!(f_d.qs, f_s.qs, "shared nodes must carry bit-identical q rows");
     }
 
     #[test]

@@ -13,8 +13,8 @@ use std::sync::Arc;
 
 use anyhow::anyhow;
 
-use super::{Backend, BackendInfo, DraftOut, SpecIterOut, StepOut};
-use crate::draftset::DraftSet;
+use super::{Backend, BackendInfo, DraftOut, DraftRequest, SpecIterOut, StepOut};
+use crate::draftset::{DraftSet, DraftTree};
 use crate::runtime::{literal, Runtime, StateHandle};
 use crate::verify::Algo;
 
@@ -147,10 +147,10 @@ impl Backend for PjrtBackend {
         if !algo.fused() {
             return Err(anyhow!("algo {algo} requires the host-verify path"));
         }
-        if let Algo::MultiPath { .. } = algo {
+        if let Algo::MultiPath { .. } | Algo::Tree { .. } = algo {
             return Err(anyhow!(
-                "algo {algo} has no AOT program yet (ROADMAP: device KV-fork multipath); \
-                 run multipath on the native backend"
+                "algo {algo} has no AOT program yet (ROADMAP: device KV-fork multipath / \
+                 device tree-KV); run it on the native backend"
             ));
         }
         let rt = &*self.rt;
@@ -193,7 +193,14 @@ impl Backend for PjrtBackend {
         kv_drafter.put(h_kvd_k, h_kvd_v);
         // draft_us / target_us = 0: the fused device program cannot
         // separate its phases (see the SpecIterOut field docs).
-        Ok(SpecIterOut { tau, emitted, done, draft_us: 0, target_us: 0 })
+        Ok(SpecIterOut {
+            tau,
+            emitted,
+            done,
+            draft_us: 0,
+            target_us: 0,
+            drafted: self.info.batch * gamma,
+        })
     }
 
     fn draft_block(
@@ -263,24 +270,20 @@ impl Backend for PjrtBackend {
         Ok(ps)
     }
 
-    /// Host-composed multi-draft fallback: one `draft_block` program run
-    /// per path against a host clone of the live cache (the AOT grid has
-    /// no flattened `(B·K)` program yet — ROADMAP: device KV-fork
-    /// multipath).  The live cache is left untouched, per the trait
-    /// contract.
-    #[allow(clippy::too_many_arguments)]
-    fn draft_multi(
-        &self,
-        drafter: &str,
-        k: usize,
-        gamma: usize,
-        tokens: &[i32],
-        length: &[i32],
-        kv: &PjrtKv,
-        seeds: &[i32],
-    ) -> anyhow::Result<DraftSet> {
+    /// Host-composed tree-draft fallback: one `draft_block` program run
+    /// per leaf path against a host clone of the live cache (the AOT
+    /// grid has no tree-attention program yet — ROADMAP: device tree-KV).
+    /// Because the paths run separately, nothing is ever merged: the
+    /// returned tree is always the disjoint `k * gamma`-node layout
+    /// whatever `req.policy` says — a valid (if unshared) tree, since
+    /// sharing is a pure compute optimisation, never a semantics change.
+    /// `req.precision` is likewise ignored: the AOT programs are fp32
+    /// (the PJRT quant path is a ROADMAP follow-up).  The live cache is
+    /// left untouched, per the trait contract.
+    fn draft_tree(&self, req: &DraftRequest, kv: &PjrtKv) -> anyhow::Result<DraftTree> {
+        let (k, gamma) = (req.k, req.gamma);
         if k == 0 {
-            return Err(anyhow!("multipath draft set needs k >= 1"));
+            return Err(anyhow!("tree draft set needs k >= 1"));
         }
         let (b, v) = (self.info.batch, self.info.vocab_size);
         let mut drafts = vec![0i32; b * k * gamma];
@@ -288,12 +291,12 @@ impl Backend for PjrtBackend {
         for path in 0..k {
             let mut scratch = clone_kv_host(kv)?;
             let d = self.draft_block(
-                drafter,
+                req.drafter,
                 gamma,
-                tokens,
-                length,
+                req.tokens,
+                req.length,
                 &mut scratch,
-                &path_seeds(seeds, path),
+                &path_seeds(req.seeds, path),
             )?;
             for bi in 0..b {
                 let r = bi * k + path;
@@ -303,41 +306,60 @@ impl Backend for PjrtBackend {
                     .copy_from_slice(&d.qs[bi * gamma * v..(bi + 1) * gamma * v]);
             }
         }
-        DraftSet::new(b, k, gamma, v, drafts, qs)
+        let set = DraftSet::new(b, k, gamma, v, drafts, qs)?;
+        Ok(DraftTree::from_flat(&set))
     }
 
-    /// Host-composed scoring fallback: one `target_score` program run per
-    /// path on a host clone of the live cache (see
-    /// [`PjrtBackend::draft_multi`]).
-    fn target_score_multi(
+    /// Host-composed tree-scoring fallback: one `target_score` program
+    /// run per leaf path on a host clone of the live cache (see
+    /// [`PjrtBackend::draft_tree`]).  Works for *any* tree shape, not
+    /// just the disjoint ones this backend drafts: a node shared by
+    /// several paths is scored once per path, but every run produces the
+    /// same distribution (row `j + 1` of `target_score` depends only on
+    /// the pending token and drafts `0..=j` — the shared prefix), so the
+    /// last write is as good as the first.
+    fn score_tree(
         &self,
-        set: &mut DraftSet,
+        tree: &mut DraftTree,
         tokens: &[i32],
         length: &[i32],
         kv: &PjrtKv,
     ) -> anyhow::Result<()> {
         let (b, v) = (self.info.batch, self.info.vocab_size);
-        if set.batch != b || set.vocab != v {
+        if tree.batch != b || tree.vocab != v {
             return Err(anyhow!(
-                "draft set shape mismatch: batch {} (want {b}), vocab {} (want {v})",
-                set.batch,
-                set.vocab
+                "draft tree shape mismatch: batch {} (want {b}), vocab {} (want {v})",
+                tree.batch,
+                tree.vocab
             ));
         }
-        let gamma = set.gamma;
+        let gamma = tree.gamma;
         let n = (gamma + 1) * v;
-        let mut ps = vec![0.0f32; set.flat_rows() * n];
-        for path in 0..set.k {
+        let mut ps_root: Vec<Vec<f32>> = vec![Vec::new(); b];
+        let mut node_ps: Vec<Vec<f32>> =
+            (0..b).map(|bi| vec![0.0f32; tree.rows[bi].n_nodes() * v]).collect();
+        for path in 0..tree.k {
             let mut scratch = clone_kv_host(kv)?;
             let drafts_p: Vec<i32> =
-                (0..b).flat_map(|bi| set.path_drafts(bi, path).to_vec()).collect();
+                (0..b).flat_map(|bi| tree.rows[bi].path_drafts(path)).collect();
             let ps_p = self.target_score(gamma, tokens, length, &mut scratch, &drafts_p)?;
             for bi in 0..b {
-                let r = set.flat_row(bi, path);
-                ps[r * n..(r + 1) * n].copy_from_slice(&ps_p[bi * n..(bi + 1) * n]);
+                let base = bi * n;
+                if path == 0 {
+                    ps_root[bi] = ps_p[base..base + v].to_vec();
+                }
+                for (j, &node) in tree.rows[bi].path_nodes(path).iter().enumerate() {
+                    let src = base + (j + 1) * v;
+                    node_ps[bi][node * v..(node + 1) * v].copy_from_slice(&ps_p[src..src + v]);
+                }
             }
         }
-        set.set_ps(ps)
+        for bi in 0..b {
+            let root = std::mem::take(&mut ps_root[bi]);
+            let nodes = std::mem::take(&mut node_ps[bi]);
+            tree.set_row_scores(bi, root, nodes)?;
+        }
+        Ok(())
     }
 
     fn baseline_step(

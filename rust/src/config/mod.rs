@@ -12,9 +12,20 @@
 //! }
 //! ```
 //!
-//! Multi-draft speculation selects `"algo": "multipath"` (or
-//! `"multipath:<k>"`); an optional `"paths": <k>` field overrides the
-//! path count and is ignored for single-draft algorithms.
+//! Multi-draft speculation selects `"algo": "multipath"` /
+//! `"multipath:<k>"` or `"algo": "tree"` / `"tree:<k>"` (prefix-sharing
+//! token tree, DESIGN.md §13); an optional `"paths": <k>` field overrides
+//! the path count for either and is ignored (with a warning) for
+//! single-draft algorithms.
+//!
+//! Engine knobs funnel through [`EngineConfigBuilder`]: both the JSON
+//! layer and programmatic construction go through
+//! [`EngineConfigBuilder::build`], the single place that validates and
+//! warns (on stderr) about inconsistent engine settings.  The one knob
+//! that stays backend-level is the tree branch threshold
+//! (`NativeBackend::with_branch_threshold` / `SPECD_TREE_THRESHOLD`): it
+//! tunes drafting cost, never the committed distribution, so it belongs
+//! to the backend that owns the drafter.
 
 use std::path::{Path, PathBuf};
 
@@ -69,38 +80,151 @@ impl EngineConfig {
         self.host_verify || !self.algo.fused()
     }
 
+    /// Start a builder from the defaults.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfig::default().to_builder()
+    }
+
+    /// Start a builder from this config (the JSON layer uses this so that
+    /// partial configs revalidate against what they override).
+    pub fn to_builder(&self) -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: self.clone(), paths: None }
+    }
+
     fn apply(&mut self, v: &Value) -> Result<()> {
+        let mut b = self.to_builder();
         if let Some(x) = v.get("gamma").and_then(Value::as_usize) {
-            self.gamma = x;
+            b = b.gamma(x);
         }
         if let Some(x) = v.get("algo").and_then(Value::as_str) {
-            self.algo = Algo::parse(x).ok_or_else(|| anyhow!("unknown algo '{x}'"))?;
+            b = b.algo(Algo::parse(x).ok_or_else(|| anyhow!("unknown algo '{x}'"))?);
         }
         if let Some(x) = v.get("paths").and_then(Value::as_usize) {
-            if let Algo::MultiPath { .. } = self.algo {
-                if x == 0 {
-                    return Err(anyhow!("paths must be >= 1"));
-                }
-                self.algo = Algo::MultiPath { k: x };
-            }
+            b = b.paths(x);
         }
         if let Some(x) = v.get("drafter").and_then(Value::as_str) {
-            self.drafter = x.to_string();
+            b = b.drafter(x);
         }
         if let Some(x) = v.get("max_new_tokens").and_then(Value::as_usize) {
-            self.max_new_tokens = x;
+            b = b.max_new_tokens(x);
         }
         if let Some(x) = v.get("host_verify").and_then(Value::as_bool) {
-            self.host_verify = x;
+            b = b.host_verify(x);
         }
         if let Some(x) = v.get("seed").and_then(Value::as_u64) {
-            self.seed = x;
+            b = b.seed(x);
         }
         if let Some(x) = v.get("draft_precision").and_then(Value::as_str) {
-            self.draft_precision = Precision::parse(x)
-                .ok_or_else(|| anyhow!("unknown draft_precision '{x}' (int8 | fp32)"))?;
+            b = b.draft_precision(
+                Precision::parse(x)
+                    .ok_or_else(|| anyhow!("unknown draft_precision '{x}' (int8 | fp32)"))?,
+            );
         }
+        *self = b.build()?;
         Ok(())
+    }
+}
+
+/// Builder for [`EngineConfig`].  Every way of constructing an engine
+/// config — JSON file, CLI flags, tests — funnels through [`Self::build`],
+/// which is the **single** validation point: hard errors for degenerate
+/// values, warnings on stderr for keys that are legal but have no effect
+/// under the chosen algorithm.  Settings that used to be scattered across
+/// call sites ("paths" rewriting, host-verify routing) live here.
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+    /// Pending `"paths"` override; resolved against the algorithm in
+    /// [`Self::build`] so key order in the JSON cannot matter.
+    paths: Option<usize>,
+}
+
+impl Default for EngineConfigBuilder {
+    fn default() -> Self {
+        EngineConfig::builder()
+    }
+}
+
+impl EngineConfigBuilder {
+    /// Draft block length (paper gamma).
+    pub fn gamma(mut self, gamma: usize) -> Self {
+        self.cfg.gamma = gamma;
+        self
+    }
+
+    /// Verification algorithm.
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.cfg.algo = algo;
+        self
+    }
+
+    /// Path count override for the multi-draft algorithms
+    /// ([`Algo::MultiPath`] / [`Algo::Tree`]); warned-and-ignored for
+    /// single-draft ones.
+    pub fn paths(mut self, k: usize) -> Self {
+        self.paths = Some(k);
+        self
+    }
+
+    /// Drafter variant name.
+    pub fn drafter(mut self, name: &str) -> Self {
+        self.cfg.drafter = name.to_string();
+        self
+    }
+
+    /// Per-request generation cap.
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.cfg.max_new_tokens = n;
+        self
+    }
+
+    /// Force host-side verification (cross-checks; greedy needs it).
+    pub fn host_verify(mut self, on: bool) -> Self {
+        self.cfg.host_verify = on;
+        self
+    }
+
+    /// RNG seed feeding per-iteration device seeds.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Draft-model inference precision (DESIGN.md §11).
+    pub fn draft_precision(mut self, p: Precision) -> Self {
+        self.cfg.draft_precision = p;
+        self
+    }
+
+    /// Validate and produce the config.  The one warn-on-stderr point for
+    /// engine configuration: degenerate values error, ineffective
+    /// combinations warn and are normalised.
+    pub fn build(self) -> Result<EngineConfig> {
+        let EngineConfigBuilder { mut cfg, paths } = self;
+        if cfg.gamma == 0 {
+            return Err(anyhow!("gamma must be >= 1"));
+        }
+        if let Some(k) = paths {
+            if k == 0 {
+                return Err(anyhow!("paths must be >= 1"));
+            }
+            match cfg.algo {
+                Algo::MultiPath { .. } => cfg.algo = Algo::MultiPath { k },
+                Algo::Tree { .. } => cfg.algo = Algo::Tree { k },
+                a => eprintln!("specd: config key 'paths' ignored for single-draft algo '{a}'"),
+            }
+        }
+        if cfg.host_verify && matches!(cfg.algo, Algo::MultiPath { .. } | Algo::Tree { .. }) {
+            eprintln!(
+                "specd: host_verify ignored for '{}'; multi-draft verification runs fused",
+                cfg.algo
+            );
+            cfg.host_verify = false;
+        }
+        if cfg.max_new_tokens == 0 {
+            eprintln!("specd: max_new_tokens is 0; the engine will emit nothing");
+        }
+        Ok(cfg)
     }
 }
 
@@ -277,5 +401,51 @@ mod tests {
         // multipath stays on the fused engine path.
         let c = Config::parse(r#"{"engine": {"algo": "multipath"}}"#).unwrap();
         assert!(!c.engine.effective_host_verify());
+    }
+
+    #[test]
+    fn tree_algo_and_paths() {
+        let c = Config::parse(r#"{"engine": {"algo": "tree"}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::Tree { k: 2 });
+        let c = Config::parse(r#"{"engine": {"algo": "tree:4"}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::Tree { k: 4 });
+        // "paths" overrides the tree width exactly as it does multipath's.
+        let c = Config::parse(r#"{"engine": {"algo": "tree", "paths": 3}}"#).unwrap();
+        assert_eq!(c.engine.algo, Algo::Tree { k: 3 });
+        assert!(Config::parse(r#"{"engine": {"algo": "tree", "paths": 0}}"#).is_err());
+        // Tree runs on the fused engine path.
+        assert!(!c.engine.effective_host_verify());
+    }
+
+    #[test]
+    fn builder_is_the_single_validation_point() {
+        let cfg = EngineConfig::builder()
+            .gamma(4)
+            .algo(Algo::Tree { k: 2 })
+            .paths(4)
+            .drafter("xxxs")
+            .max_new_tokens(16)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.gamma, 4);
+        assert_eq!(cfg.algo, Algo::Tree { k: 4 });
+        assert_eq!(cfg.drafter, "xxxs");
+        assert_eq!(cfg.seed, 7);
+        // Degenerate values are hard errors...
+        assert!(EngineConfig::builder().gamma(0).build().is_err());
+        assert!(EngineConfig::builder().paths(0).build().is_err());
+        // ...ineffective combinations warn (stderr) and normalise: the
+        // host-verify flag cannot route a multi-draft algo off the fused
+        // engine.
+        let cfg = EngineConfig::builder()
+            .algo(Algo::MultiPath { k: 2 })
+            .host_verify(true)
+            .build()
+            .unwrap();
+        assert!(!cfg.host_verify);
+        assert!(!cfg.effective_host_verify());
+        // JSON "gamma": 0 now funnels through the same check.
+        assert!(Config::parse(r#"{"engine": {"gamma": 0}}"#).is_err());
     }
 }

@@ -82,13 +82,19 @@ impl DraftSet {
     }
 
     /// Rows of the flattened scratch batch: `B * K`.
-    pub fn flat_rows(&self) -> usize {
+    ///
+    /// Crate-internal since the tree API redesign: the flat `(B·K)`
+    /// layout is an implementation detail of the deprecated
+    /// `draft_multi`/`target_score_multi` shims (DESIGN.md §13.6) and no
+    /// longer part of the public surface.
+    pub(crate) fn flat_rows(&self) -> usize {
         self.batch * self.k
     }
 
-    /// Flat scratch-batch row index of `(row, path)`.
+    /// Flat scratch-batch row index of `(row, path)` (crate-internal;
+    /// see [`DraftSet::flat_rows`]).
     #[inline]
-    pub fn flat_row(&self, row: usize, path: usize) -> usize {
+    pub(crate) fn flat_row(&self, row: usize, path: usize) -> usize {
         debug_assert!(row < self.batch && path < self.k);
         row * self.k + path
     }
@@ -189,6 +195,337 @@ pub struct RowViews {
     pub drafts: Vec<Vec<u32>>,
 }
 
+/// Reusable node-table views of one [`DraftTree`] row, the direct input
+/// of [`crate::verify::tree_verify`].  Allocation-recycling analogue of
+/// [`RowViews`] for the tree hot path.
+pub struct TreeViews {
+    /// Target law at the pending token, `(1, V)`.
+    pub ps_root: ProbMatrix,
+    /// Target law at each node, `(n_nodes, V)`.
+    pub node_ps: ProbMatrix,
+    /// Drafter law each node was sampled from, `(n_nodes, V)`.
+    pub node_qs: ProbMatrix,
+    /// Node tokens.
+    pub tokens: Vec<u32>,
+}
+
+impl Default for TreeViews {
+    fn default() -> Self {
+        TreeViews {
+            ps_root: ProbMatrix::new(0, 0),
+            node_ps: ProbMatrix::new(0, 0),
+            node_qs: ProbMatrix::new(0, 0),
+            tokens: Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefix-sharing token trees (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Where the tree drafter may merge coincident draws into a shared node.
+///
+/// Every one of the `K` leaves always keeps its own full independent draft
+/// stream (the flat multipath streams, verbatim), so the drafted *law* is
+/// exactly multipath's regardless of policy — sharing only deduplicates
+/// the compute and storage of draws that happen to coincide.  That is
+/// what keeps tree speculation lossless and bit-identical to
+/// `Algo::MultiPath{k}` (DESIGN.md §13.4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BranchPolicy {
+    /// Branch at high-entropy positions: when the drafter's top-2
+    /// probability gap at a node is *below* `threshold` the position is
+    /// treated as high-entropy and every leaf keeps its own child even
+    /// on coincident draws; at or above it, leaves that drew the same
+    /// token from the same node share one child.  `threshold = 0.0`
+    /// (the default) shares every coincidence; `f64::INFINITY` never
+    /// shares.
+    EntropyGap { threshold: f64 },
+    /// Never share: every leaf gets its own `gamma`-deep chain
+    /// (`k * gamma` nodes) — the exact layout twin of the flat multipath
+    /// [`DraftSet`], used by the deprecated-API shims and the
+    /// bit-identity ladder tests.
+    Disjoint,
+}
+
+impl Default for BranchPolicy {
+    fn default() -> Self {
+        BranchPolicy::EntropyGap { threshold: 0.0 }
+    }
+}
+
+/// One batch row's token tree: a node table (parents strictly before
+/// children) plus the `K` leaves, each at depth `gamma - 1`.
+///
+/// Node `i` holds exactly one drafted token and one KV entry in the
+/// backend's tree scratch cache (slot `len + i`).  `qs` row `i` is the
+/// drafter law node `i` was *sampled from* (its parent's forward output;
+/// root children share the pending token's output), and `ps` row `i` —
+/// filled by scoring — is the target law *at* node `i` (the forward
+/// output of the node's own token).  `ps_root` is the target law at the
+/// pending token, shared by every leaf path as verification row 0.
+#[derive(Clone, Debug, Default)]
+pub struct TreeRow {
+    /// Node tokens.
+    pub tokens: Vec<i32>,
+    /// Node -> parent table; `-1` = child of the pending root token.
+    /// Parents always precede children (`parent[i] < i`).
+    pub parent: Vec<i32>,
+    /// Node depth, `0..gamma` (root children are depth 0).
+    pub depth: Vec<usize>,
+    /// Leaf node index per draft path, in path order; path `p`'s drafts
+    /// are the root-to-leaf token walk ending at `leaves[p]`.
+    pub leaves: Vec<usize>,
+    /// Drafter law each node was sampled from, `(n_nodes, V)` row-major.
+    pub qs: Vec<f32>,
+    /// Target law at each node, `(n_nodes, V)`; empty until scored.
+    pub ps: Vec<f32>,
+    /// Target law at the pending token, `(V,)`; empty until scored.
+    pub ps_root: Vec<f32>,
+}
+
+impl TreeRow {
+    pub fn n_nodes(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Root-to-leaf node-index chain of one path (length `gamma`).
+    pub fn path_nodes(&self, path: usize) -> Vec<usize> {
+        let mut chain = Vec::new();
+        let mut n = self.leaves[path] as i32;
+        while n >= 0 {
+            chain.push(n as usize);
+            n = self.parent[n as usize];
+        }
+        chain.reverse();
+        chain
+    }
+
+    /// One path's draft tokens (the root-to-leaf token walk).
+    pub fn path_drafts(&self, path: usize) -> Vec<i32> {
+        self.path_nodes(path).iter().map(|&i| self.tokens[i]).collect()
+    }
+}
+
+/// Prefix-sharing token trees for every batch row — the successor of the
+/// flat `(B·K)` [`DraftSet`] layout.  Produced by
+/// [`crate::backend::Backend::draft_tree`], scored in place by
+/// [`crate::backend::Backend::score_tree`].
+#[derive(Clone, Debug)]
+pub struct DraftTree {
+    /// Engine batch rows `B`.
+    pub batch: usize,
+    /// Draft paths (leaves) per row `K`.
+    pub k: usize,
+    /// Draft block length per path.
+    pub gamma: usize,
+    /// Vocabulary size `V`.
+    pub vocab: usize,
+    /// One tree per batch row.
+    pub rows: Vec<TreeRow>,
+}
+
+impl DraftTree {
+    /// Wrap freshly drafted trees, validating the per-row invariants:
+    /// parents precede children, every leaf sits at depth `gamma - 1`,
+    /// and `qs` covers every node.
+    pub fn new(
+        batch: usize,
+        k: usize,
+        gamma: usize,
+        vocab: usize,
+        rows: Vec<TreeRow>,
+    ) -> anyhow::Result<Self> {
+        if batch == 0 || k == 0 || gamma == 0 || vocab == 0 {
+            return Err(anyhow!(
+                "degenerate draft tree shape (B {batch}, K {k}, gamma {gamma}, V {vocab})"
+            ));
+        }
+        if rows.len() != batch {
+            return Err(anyhow!("tree rows {} != batch {batch}", rows.len()));
+        }
+        for (bi, row) in rows.iter().enumerate() {
+            let n = row.n_nodes();
+            if n > k * gamma || row.parent.len() != n || row.depth.len() != n {
+                return Err(anyhow!("row {bi}: inconsistent node table ({n} nodes)"));
+            }
+            if row.leaves.len() != k {
+                return Err(anyhow!("row {bi}: {} leaves != K {k}", row.leaves.len()));
+            }
+            for i in 0..n {
+                let p = row.parent[i];
+                if p >= i as i32 || (p >= 0 && row.depth[p as usize] + 1 != row.depth[i]) {
+                    return Err(anyhow!("row {bi}: node {i} breaks parent/depth order"));
+                }
+                if p < 0 && row.depth[i] != 0 {
+                    return Err(anyhow!("row {bi}: root child {i} at depth {}", row.depth[i]));
+                }
+            }
+            for (p, &leaf) in row.leaves.iter().enumerate() {
+                if leaf >= n || row.depth[leaf] + 1 != gamma {
+                    return Err(anyhow!("row {bi}: leaf {p} is not at depth gamma-1"));
+                }
+            }
+            if row.qs.len() != n * vocab {
+                return Err(anyhow!("row {bi}: qs shape {} != n*V", row.qs.len()));
+            }
+        }
+        Ok(DraftTree { batch, k, gamma, vocab, rows })
+    }
+
+    /// Total nodes across every row — the count of drafted tokens the
+    /// target actually scores (the prefix-sharing FLOP win: at most
+    /// `B * K * gamma`, strictly fewer whenever draws coincided).
+    pub fn total_nodes(&self) -> usize {
+        self.rows.iter().map(TreeRow::n_nodes).sum()
+    }
+
+    /// Has [`DraftTree::set_row_scores`]/backend scoring filled every row?
+    pub fn scored(&self) -> bool {
+        self.rows.iter().all(|r| !r.ps_root.is_empty() && r.ps.len() == r.qs.len())
+    }
+
+    /// Per-leaf verification views of one row, in the exact shape
+    /// [`crate::verify::multipath_verify`] consumes — each leaf's
+    /// root-to-leaf walk materialised as a flat path.  Shared-prefix
+    /// nodes contribute the *same* `ps`/`qs` rows to every leaf that
+    /// passes through them.
+    pub fn row_views_into(&self, row: usize, out: &mut RowViews) -> anyhow::Result<()> {
+        if !self.scored() {
+            return Err(anyhow!("draft tree has not been target-scored"));
+        }
+        let tr = &self.rows[row];
+        let v = self.vocab;
+        out.ps.resize_with(self.k, || ProbMatrix::new(0, 0));
+        out.qs.resize_with(self.k, || ProbMatrix::new(0, 0));
+        out.drafts.resize_with(self.k, Vec::new);
+        let mut flat_p = vec![0.0f32; (self.gamma + 1) * v];
+        let mut flat_q = vec![0.0f32; self.gamma * v];
+        for path in 0..self.k {
+            let chain = tr.path_nodes(path);
+            flat_p[..v].copy_from_slice(&tr.ps_root);
+            for (j, &i) in chain.iter().enumerate() {
+                flat_p[(j + 1) * v..(j + 2) * v].copy_from_slice(&tr.ps[i * v..(i + 1) * v]);
+                flat_q[j * v..(j + 1) * v].copy_from_slice(&tr.qs[i * v..(i + 1) * v]);
+            }
+            out.ps[path].copy_from_f32(self.gamma + 1, v, &flat_p);
+            out.qs[path].copy_from_f32(self.gamma, v, &flat_q);
+            out.drafts[path].clear();
+            out.drafts[path].extend(chain.iter().map(|&i| tr.tokens[i] as u32));
+        }
+        Ok(())
+    }
+
+    /// Expand the tree into the flat `(B·K)` [`DraftSet`] layout (every
+    /// shared node duplicated per path) — the bridge the deprecated
+    /// `draft_multi`/`target_score_multi` shims ride on.  Scored trees
+    /// yield scored sets.
+    pub fn flatten(&self) -> anyhow::Result<DraftSet> {
+        let (v, g) = (self.vocab, self.gamma);
+        let mut drafts = vec![0i32; self.batch * self.k * g];
+        let mut qs = vec![0.0f32; self.batch * self.k * g * v];
+        let scored = self.scored();
+        let mut ps = if scored { vec![0.0f32; self.batch * self.k * (g + 1) * v] } else { Vec::new() };
+        for (bi, tr) in self.rows.iter().enumerate() {
+            for path in 0..self.k {
+                let r = bi * self.k + path;
+                for (j, &i) in tr.path_nodes(path).iter().enumerate() {
+                    drafts[r * g + j] = tr.tokens[i];
+                    qs[(r * g + j) * v..(r * g + j + 1) * v]
+                        .copy_from_slice(&tr.qs[i * v..(i + 1) * v]);
+                    if scored {
+                        let o = (r * (g + 1) + j + 1) * v;
+                        ps[o..o + v].copy_from_slice(&tr.ps[i * v..(i + 1) * v]);
+                    }
+                }
+                if scored {
+                    let o = r * (g + 1) * v;
+                    ps[o..o + v].copy_from_slice(&tr.ps_root);
+                }
+            }
+        }
+        let mut set = DraftSet::new(self.batch, self.k, g, v, drafts, qs)?;
+        if scored {
+            set.set_ps(ps)?;
+        }
+        Ok(set)
+    }
+
+    /// Degenerate (no-sharing) tree from a flat set: each path becomes
+    /// its own chain, node order path-major — the inverse of
+    /// [`DraftTree::flatten`] under [`BranchPolicy::Disjoint`].  Used by
+    /// the `target_score_multi` shim to score pre-built flat sets
+    /// through the tree API.
+    pub fn from_flat(set: &DraftSet) -> Self {
+        let (v, g) = (set.vocab, set.gamma);
+        let mut rows = Vec::with_capacity(set.batch);
+        for bi in 0..set.batch {
+            let mut tr = TreeRow::default();
+            for path in 0..set.k {
+                let r = bi * set.k + path;
+                for j in 0..g {
+                    let i = tr.n_nodes();
+                    tr.tokens.push(set.drafts[r * g + j]);
+                    tr.parent.push(if j == 0 { -1 } else { i as i32 - 1 });
+                    tr.depth.push(j);
+                    tr.qs.extend_from_slice(&set.qs[(r * g + j) * v..(r * g + j + 1) * v]);
+                    if set.scored() {
+                        let o = (r * (g + 1) + j + 1) * v;
+                        tr.ps.extend_from_slice(&set.ps[o..o + v]);
+                    }
+                }
+                tr.leaves.push(tr.n_nodes() - 1);
+                if set.scored() {
+                    tr.ps_root = set.ps[r * (g + 1) * v..r * (g + 1) * v + v].to_vec();
+                }
+            }
+            rows.push(tr);
+        }
+        DraftTree { batch: set.batch, k: set.k, gamma: g, vocab: v, rows }
+    }
+
+    /// Fill reusable node-table views of one row for
+    /// [`crate::verify::tree_verify`]: unlike [`DraftTree::row_views_into`]
+    /// this never duplicates shared rows — the verifier indexes the node
+    /// table directly.
+    pub fn tree_views_into(&self, row: usize, out: &mut TreeViews) -> anyhow::Result<()> {
+        if !self.scored() {
+            return Err(anyhow!("draft tree has not been target-scored"));
+        }
+        let tr = &self.rows[row];
+        let (n, v) = (tr.n_nodes(), self.vocab);
+        out.ps_root.copy_from_f32(1, v, &tr.ps_root);
+        out.node_ps.copy_from_f32(n, v, &tr.ps);
+        out.node_qs.copy_from_f32(n, v, &tr.qs);
+        out.tokens.clear();
+        out.tokens.extend(tr.tokens.iter().map(|&t| t as u32));
+        Ok(())
+    }
+
+    /// Write one row's per-node target scores (called by backends from
+    /// their tree-scoring forward): `ps_root` is the law at the pending
+    /// token, `node_ps` is `(n_nodes, V)` row-major.
+    pub fn set_row_scores(
+        &mut self,
+        row: usize,
+        ps_root: Vec<f32>,
+        node_ps: Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let tr = &mut self.rows[row];
+        if ps_root.len() != self.vocab || node_ps.len() != tr.n_nodes() * self.vocab {
+            return Err(anyhow!(
+                "row {row}: score shapes ({}, {}) != (V, n*V)",
+                ps_root.len(),
+                node_ps.len()
+            ));
+        }
+        tr.ps_root = ps_root;
+        tr.ps = node_ps;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,5 +602,124 @@ mod tests {
         assert!(DraftSet::new(2, 2, 2, 3, vec![0; 8], vec![0.0; 23]).is_err());
         assert!(DraftSet::new(0, 2, 2, 3, vec![], vec![]).is_err());
         assert!(DraftSet::new(2, 0, 2, 3, vec![], vec![]).is_err());
+    }
+
+    /// A 1-row K=2, gamma=2 tree sharing the depth-0 node:
+    /// node 0 (tok 5, root child) -> nodes 1 (tok 6, leaf 0) and 2 (tok 7, leaf 1).
+    fn shared_tree() -> DraftTree {
+        let v = 3;
+        let row = TreeRow {
+            tokens: vec![5, 6, 7],
+            parent: vec![-1, 0, 0],
+            depth: vec![0, 1, 1],
+            leaves: vec![1, 2],
+            qs: (0..3 * v).map(|i| i as f32).collect(),
+            ps: Vec::new(),
+            ps_root: Vec::new(),
+        };
+        DraftTree::new(1, 2, 2, v, vec![row]).unwrap()
+    }
+
+    #[test]
+    fn tree_paths_walk_root_to_leaf() {
+        let tree = shared_tree();
+        assert_eq!(tree.total_nodes(), 3);
+        assert!(!tree.scored());
+        assert_eq!(tree.rows[0].path_nodes(0), vec![0, 1]);
+        assert_eq!(tree.rows[0].path_nodes(1), vec![0, 2]);
+        assert_eq!(tree.rows[0].path_drafts(0), vec![5, 6]);
+        assert_eq!(tree.rows[0].path_drafts(1), vec![5, 7]);
+    }
+
+    #[test]
+    fn tree_flatten_duplicates_shared_prefix_and_roundtrips() {
+        let mut tree = shared_tree();
+        let v = tree.vocab;
+        tree.set_row_scores(
+            0,
+            vec![0.5, 0.25, 0.25],
+            (0..3 * v).map(|i| 100.0 + i as f32).collect(),
+        )
+        .unwrap();
+        assert!(tree.scored());
+        let set = tree.flatten().unwrap();
+        assert_eq!((set.batch, set.k, set.gamma, set.vocab), (1, 2, 2, v));
+        assert_eq!(set.drafts, vec![5, 6, 5, 7]);
+        // Both paths carry the shared node's q row at position 0.
+        assert_eq!(set.qs[..v], set.qs[2 * v..3 * v]);
+        // ps layout: row r = [ps_root, node ps...].
+        assert_eq!(&set.ps[..v], &[0.5, 0.25, 0.25]);
+        assert_eq!(set.ps[v], 100.0); // path 0 node 0
+        assert_eq!(set.ps[3 * v + v], 100.0); // path 1 shares node 0's score
+
+        // Flat -> tree -> flat is the identity (degenerate disjoint tree).
+        let back = DraftTree::from_flat(&set);
+        assert_eq!(back.total_nodes(), 4); // no sharing in the flat layout
+        let set2 = back.flatten().unwrap();
+        assert_eq!(set2.drafts, set.drafts);
+        assert_eq!(set2.qs, set.qs);
+        assert_eq!(set2.ps, set.ps);
+    }
+
+    #[test]
+    fn tree_row_views_match_flat_row_views() {
+        let mut tree = shared_tree();
+        let v = tree.vocab;
+        tree.set_row_scores(
+            0,
+            vec![0.5, 0.25, 0.25],
+            (0..3 * v).map(|i| 100.0 + i as f32).collect(),
+        )
+        .unwrap();
+        let set = tree.flatten().unwrap();
+        let mut tv = RowViews::default();
+        let mut fv = RowViews::default();
+        tree.row_views_into(0, &mut tv).unwrap();
+        set.row_views_into(0, &mut fv).unwrap();
+        assert_eq!(tv.drafts, fv.drafts);
+        for path in 0..2 {
+            for i in 0..3 {
+                assert_eq!(tv.ps[path].row(i), fv.ps[path].row(i));
+            }
+            for i in 0..2 {
+                assert_eq!(tv.qs[path].row(i), fv.qs[path].row(i));
+            }
+        }
+        // Unscored trees are rejected.
+        let mut fresh = RowViews::default();
+        assert!(shared_tree().row_views_into(0, &mut fresh).is_err());
+    }
+
+    #[test]
+    fn tree_rejects_bad_structure() {
+        let v = 3;
+        let ok = || TreeRow {
+            tokens: vec![5, 6],
+            parent: vec![-1, 0],
+            depth: vec![0, 1],
+            leaves: vec![1],
+            qs: vec![0.0; 2 * v],
+            ps: Vec::new(),
+            ps_root: Vec::new(),
+        };
+        assert!(DraftTree::new(1, 1, 2, v, vec![ok()]).is_ok());
+        // Child before parent.
+        let mut bad = ok();
+        bad.parent = vec![1, -1];
+        bad.depth = vec![1, 0];
+        bad.leaves = vec![0];
+        assert!(DraftTree::new(1, 1, 2, v, vec![bad]).is_err());
+        // Leaf not at depth gamma-1.
+        let mut bad = ok();
+        bad.leaves = vec![0];
+        assert!(DraftTree::new(1, 1, 2, v, vec![bad]).is_err());
+        // qs shape mismatch.
+        let mut bad = ok();
+        bad.qs.pop();
+        assert!(DraftTree::new(1, 1, 2, v, vec![bad]).is_err());
+        // Wrong leaf count for K.
+        assert!(DraftTree::new(1, 2, 2, v, vec![ok()]).is_err());
+        // Wrong row count.
+        assert!(DraftTree::new(2, 1, 2, v, vec![ok()]).is_err());
     }
 }

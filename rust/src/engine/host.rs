@@ -27,10 +27,11 @@ pub struct HostVerifyEngine<B: Backend> {
 
 impl<B: Backend> HostVerifyEngine<B> {
     pub fn new(backend: Arc<B>, cfg: EngineConfig) -> anyhow::Result<Self> {
-        if matches!(cfg.algo, Algo::MultiPath { .. }) {
+        if matches!(cfg.algo, Algo::MultiPath { .. } | Algo::Tree { .. }) {
             return Err(anyhow!(
-                "multipath verification runs on the fused engine (engine::spec); \
-                 the host-verify path is single-draft"
+                "multi-draft verification ({}) runs on the fused engine (engine::spec); \
+                 the host-verify path is single-draft",
+                cfg.algo
             ));
         }
         let info = backend.info();

@@ -142,6 +142,7 @@ impl<B: Backend> SpecEngine<B> {
                 self.metrics.accepted_len_hist.observe(t_i);
                 self.metrics.iterations.inc();
             }
+            self.metrics.drafts_scored.add(out.drafted as u64);
             device_iterations += 1;
             if out.draft_us > 0 {
                 self.metrics
@@ -373,6 +374,7 @@ impl<B: Backend> SpecEngine<B> {
                 .target_forward_us
                 .observe(std::time::Duration::from_micros(out.target_us));
         }
+        self.metrics.drafts_scored.add(out.drafted as u64);
         self.metrics.iter_latency.observe(t_iter.elapsed());
         Ok(out)
     }

@@ -156,6 +156,12 @@ pub struct EngineMetrics {
     pub requests_completed: Counter,
     pub tokens_emitted: Counter,
     pub drafts_accepted: Counter,
+    /// Drafted tokens the target scored, summed over iterations
+    /// (`SpecIterOut::drafted`).  The per-committed-token ratio is the
+    /// speculation *cost* axis: `Algo::Tree` wins here over flat
+    /// multipath at equal tau by scoring shared prefixes once
+    /// (DESIGN.md §13; gated in `benches/serving.rs`).
+    pub drafts_scored: Counter,
     pub iterations: Counter,
     pub batches: Counter,
     /// Admissions spliced into a live decode stream (continuous batching;
@@ -217,6 +223,7 @@ impl EngineMetrics {
         put("requests_completed", self.requests_completed.get() as f64);
         put("tokens_emitted", self.tokens_emitted.get() as f64);
         put("drafts_accepted", self.drafts_accepted.get() as f64);
+        put("drafts_scored", self.drafts_scored.get() as f64);
         put("iterations", self.iterations.get() as f64);
         put("batches", self.batches.get() as f64);
         put("slots_refilled", self.slots_refilled.get() as f64);

@@ -184,6 +184,66 @@ pub fn expected_tau_multipath(pair: &MarkovPair, gamma: usize, k: usize) -> f64 
     total
 }
 
+/// `E[tau]` for prefix-sharing tree verification (DESIGN.md §13), exact.
+///
+/// Equal to [`expected_tau_multipath`] by **dedup-invariance**: the tree
+/// drafts the same `k` i.i.d. token streams as flat multipath (each leaf
+/// keeps its own draw sequence), and merely stores/scores coincident
+/// prefixes once.  Because the tree forward pass returns bit-identical
+/// rows for a shared node and for the separate flat rows it replaces
+/// (test-enforced in `tests/multipath.rs`), the verification walk sees
+/// exactly the flat multipath inputs, so the acceptance law — and hence
+/// `E[tau]` — is unchanged.  What *does* change is the number of drafted
+/// tokens scored per iteration: see [`expected_tree_nodes`].
+pub fn expected_tau_tree(pair: &MarkovPair, gamma: usize, k: usize) -> f64 {
+    expected_tau_multipath(pair, gamma, k)
+}
+
+fn nodes_rec(
+    pair: &MarkovPair,
+    depth: usize,
+    gamma: usize,
+    last: Option<u32>,
+    q_joint: f64,
+    k: usize,
+    total: &mut f64,
+) {
+    if depth >= gamma {
+        return;
+    }
+    let drow = pair.draft_row(last);
+    for x in 0..pair.vocab {
+        let q = drow[x];
+        if q <= 0.0 {
+            continue;
+        }
+        let qw = q_joint * q;
+        // The prefix `w` materialises one tree node iff at least one of
+        // the k i.i.d. draft streams walks it.
+        *total += 1.0 - (1.0 - qw).powi(k as i32);
+        nodes_rec(pair, depth + 1, gamma, Some(x as u32), qw, k, total);
+    }
+}
+
+/// Expected number of tree nodes drafted *and* target-scored per
+/// iteration under the always-share branch policy (threshold 0,
+/// DESIGN.md §13.3):
+///
+/// `sum_{j=1..gamma} sum_{|w|=j} (1 - (1 - q(w))^k)`
+///
+/// where `q(w)` is the draft-chain probability of prefix `w` from the
+/// root context.  Flat multipath always scores `k * gamma`; the tree
+/// scores strictly fewer whenever any prefix probability lies in (0, 1)
+/// and `k >= 2`, and exactly `gamma` at `k = 1`.  This is the
+/// denominator of the drafted-tokens-per-committed-token CI gate
+/// (`benches/serving.rs`).
+pub fn expected_tree_nodes(pair: &MarkovPair, gamma: usize, k: usize) -> f64 {
+    assert!(k >= 1, "tree needs k >= 1");
+    let mut total = 0.0;
+    nodes_rec(pair, 0, gamma, None, 1.0, k, &mut total);
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,5 +347,49 @@ mod tests {
         let one = expected_tau_multipath(&pair, 2, 1);
         let two = expected_tau_multipath(&pair, 2, 2);
         assert!(two > one + 1e-6, "K=2 {two} should beat K=1 {one}");
+    }
+
+    /// Dedup-invariance: tree E[tau] is multipath E[tau] for every pair
+    /// (same acceptance law, fewer scored tokens).
+    #[test]
+    fn tree_tau_equals_multipath_tau() {
+        for seed in 0..6 {
+            let pair = MarkovPair::random(4, 0.25 + 0.1 * seed as f64, seed + 40);
+            for gamma in 1..=3 {
+                for k in [1usize, 2, 4] {
+                    let t = expected_tau_tree(&pair, gamma, k);
+                    let m = expected_tau_multipath(&pair, gamma, k);
+                    assert!((t - m).abs() < 1e-15, "seed {seed} g {gamma} k {k}: {t} vs {m}");
+                }
+            }
+        }
+    }
+
+    /// Node-count accounting: exactly gamma at k = 1 (a chain), between
+    /// gamma and k*gamma in general, strictly below k*gamma for k >= 2 on
+    /// stochastic drafters, and nondecreasing in k.
+    #[test]
+    fn tree_nodes_bounds_and_strict_saving() {
+        for seed in 0..6 {
+            let pair = MarkovPair::random(4, 0.25 + 0.1 * seed as f64, seed + 70);
+            for gamma in 1..=3 {
+                let g = gamma as f64;
+                assert!((expected_tree_nodes(&pair, gamma, 1) - g).abs() < 1e-12);
+                let mut prev = g;
+                for k in [2usize, 4, 8] {
+                    let n = expected_tree_nodes(&pair, gamma, k);
+                    assert!(n >= prev - 1e-12, "nodes must grow with k");
+                    assert!(n >= g - 1e-12);
+                    // Strict: some depth-1 prefix has q in (0,1), so the
+                    // union bound loses mass vs k disjoint copies.
+                    assert!(
+                        n < (k * gamma) as f64 - 1e-9,
+                        "seed {seed} g {gamma} k {k}: {n} !< {}",
+                        k * gamma
+                    );
+                    prev = n;
+                }
+            }
+        }
     }
 }

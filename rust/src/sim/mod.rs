@@ -13,8 +13,8 @@ pub mod specdec;
 
 pub use chain::{bernoulli_example, MarkovPair};
 pub use specdec::{
-    run_iteration_multi, sample_target, simulate, simulate_multi, specdec_prefix,
-    specdec_prefix_multi, SimStats,
+    run_iteration_multi, run_iteration_tree, sample_target, simulate, simulate_multi,
+    simulate_tree, specdec_prefix, specdec_prefix_multi, specdec_prefix_tree, SimStats,
 };
 
 /// The §2 motivating-example report (E0 in DESIGN.md): exact values for

@@ -18,6 +18,10 @@ pub struct SimStats {
     pub accepted_total: usize,
     /// histogram of tau values, length gamma + 1
     pub tau_hist: Vec<usize>,
+    /// Drafted tokens scored by the target, summed over iterations.
+    /// Filled by [`simulate_tree`] (tree nodes) — the speculation-cost
+    /// axis of DESIGN.md §13; zero for the paths that don't track it.
+    pub drafted_total: usize,
 }
 
 impl SimStats {
@@ -34,6 +38,15 @@ impl SimStats {
             return 0.0;
         }
         self.accepted_total as f64 / self.iterations as f64
+    }
+
+    /// Drafted tokens scored per committed token (speculation cost);
+    /// meaningful only where [`Self::drafted_total`] is tracked.
+    pub fn drafts_per_token(&self) -> f64 {
+        if self.tokens_emitted == 0 {
+            return 0.0;
+        }
+        self.drafted_total as f64 / self.tokens_emitted as f64
     }
 }
 
@@ -144,6 +157,99 @@ pub fn run_iteration_multi(
         (0..k).map(|_| (0..gamma).map(|_| rng.uniform()).collect()).collect();
     let u = rng.uniform();
     verify::multipath_verify(&ps_l, &qs_l, &drafts_l, &etas, u)
+}
+
+/// One prefix-sharing tree iteration at the distribution level
+/// (DESIGN.md §13): draws and verification are *exactly* those of
+/// [`run_iteration_multi`] — same path-major draw order, same
+/// [`verify::multipath_verify`] acceptance law — because the tree is a
+/// storage/scoring optimisation, not a sampling change.  The second
+/// return value is what the tree would actually score: the number of
+/// distinct draft prefixes across the `k` streams (always-share policy),
+/// versus flat multipath's `k * gamma`.  Its expectation is
+/// [`crate::sim::exact::expected_tree_nodes`] (test-enforced).
+pub fn run_iteration_tree(
+    pair: &MarkovPair,
+    last: Option<u32>,
+    gamma: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> (MultipathOutcome, usize) {
+    let mut ps_l = Vec::with_capacity(k);
+    let mut qs_l = Vec::with_capacity(k);
+    let mut drafts_l: Vec<Vec<u32>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut ps_rows: Vec<Vec<f64>> = Vec::with_capacity(gamma + 1);
+        let mut qs_rows: Vec<Vec<f64>> = Vec::with_capacity(gamma);
+        let mut drafts: Vec<u32> = Vec::with_capacity(gamma);
+        let mut cur = last;
+        for _ in 0..gamma {
+            let q = pair.draft_row(cur).to_vec();
+            let p = pair.target_row(cur).to_vec();
+            let x = inv_cdf(&q, rng.uniform()) as u32;
+            drafts.push(x);
+            qs_rows.push(q);
+            ps_rows.push(p);
+            cur = Some(x);
+        }
+        ps_rows.push(pair.target_row(cur).to_vec());
+        ps_l.push(ProbMatrix::from_rows(ps_rows));
+        qs_l.push(ProbMatrix::from_rows(qs_rows));
+        drafts_l.push(drafts);
+    }
+    let mut nodes = 0usize;
+    for j in 1..=gamma {
+        let mut prefixes: Vec<&[u32]> = drafts_l.iter().map(|d| &d[..j]).collect();
+        prefixes.sort_unstable();
+        prefixes.dedup();
+        nodes += prefixes.len();
+    }
+    let etas: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..gamma).map(|_| rng.uniform()).collect()).collect();
+    let u = rng.uniform();
+    (verify::multipath_verify(&ps_l, &qs_l, &drafts_l, &etas, u), nodes)
+}
+
+/// Decode `n_tokens` tokens via `k`-leaf tree speculative decoding,
+/// tracking scored nodes in [`SimStats::drafted_total`].
+pub fn simulate_tree(
+    pair: &MarkovPair,
+    gamma: usize,
+    k: usize,
+    n_tokens: usize,
+    seed: u64,
+) -> SimStats {
+    let mut rng = Rng::new(seed);
+    let mut stats = SimStats { tau_hist: vec![0; gamma + 1], ..Default::default() };
+    let mut last: Option<u32> = None;
+    while stats.tokens_emitted < n_tokens {
+        let (out, nodes) = run_iteration_tree(pair, last, gamma, k, &mut rng);
+        stats.iterations += 1;
+        stats.tokens_emitted += out.emitted.len();
+        stats.accepted_total += out.tau;
+        stats.tau_hist[out.tau] += 1;
+        stats.drafted_total += nodes;
+        last = out.emitted.last().copied().or(last);
+    }
+    stats
+}
+
+/// Decode a fixed-length prefix with tree speculative decoding (the
+/// losslessness harness twin of [`specdec_prefix_multi`]).
+pub fn specdec_prefix_tree(
+    pair: &MarkovPair,
+    gamma: usize,
+    k: usize,
+    n_tokens: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let mut out: Vec<u32> = Vec::with_capacity(n_tokens + gamma + 1);
+    while out.len() < n_tokens {
+        let (res, _nodes) = run_iteration_tree(pair, out.last().copied(), gamma, k, rng);
+        out.extend_from_slice(&res.emitted);
+    }
+    out.truncate(n_tokens);
+    out
 }
 
 /// Decode `n_tokens` tokens via `k`-path multipath speculative decoding.
@@ -279,6 +385,39 @@ mod tests {
             }
             let got = tot as f64 / n as f64;
             assert!((got - want).abs() < 0.02, "k={k}: mc {got} vs exact {want}");
+        }
+    }
+
+    /// Tree iterations replay multipath draw for draw: identical
+    /// outcomes from identical rng streams, and the mean scored-node
+    /// count matches the exact union-probability enumeration.
+    #[test]
+    fn mc_tree_matches_multipath_and_exact_nodes() {
+        let pair = MarkovPair::random(4, 0.6, 5);
+        let gamma = 3;
+        for k in [1usize, 2, 4] {
+            let want_nodes = exact::expected_tree_nodes(&pair, gamma, k);
+            let n = 60_000;
+            let mut rng_t = Rng::new(33);
+            let mut rng_m = Rng::new(33);
+            let (mut tot_tau, mut tot_nodes) = (0usize, 0usize);
+            for _ in 0..n {
+                let (out, nodes) = run_iteration_tree(&pair, None, gamma, k, &mut rng_t);
+                let out_m = run_iteration_multi(&pair, None, gamma, k, &mut rng_m);
+                assert_eq!(out.emitted, out_m.emitted);
+                assert_eq!(out.tau, out_m.tau);
+                assert!(nodes <= k * gamma);
+                tot_tau += out.tau;
+                tot_nodes += nodes;
+            }
+            let got_tau = tot_tau as f64 / n as f64;
+            let got_nodes = tot_nodes as f64 / n as f64;
+            let want_tau = exact::expected_tau_tree(&pair, gamma, k);
+            assert!((got_tau - want_tau).abs() < 0.02, "k={k}: tau {got_tau} vs {want_tau}");
+            assert!(
+                (got_nodes - want_nodes).abs() < 0.02,
+                "k={k}: nodes {got_nodes} vs {want_nodes}"
+            );
         }
     }
 

@@ -21,7 +21,7 @@ pub use block::{
 pub use dist::ProbMatrix;
 pub use greedy::{greedy_verify, GreedyState};
 pub use greedy::Layer;
-pub use multipath::{multipath_verify, MultipathOutcome};
+pub use multipath::{multipath_verify, tree_verify, MultipathOutcome};
 pub use rng::Rng;
 pub use token::token_verify;
 
@@ -47,6 +47,14 @@ pub enum Algo {
     /// paths ([`multipath`], DESIGN.md §9); bit-identical to
     /// [`Algo::Block`] at `k == 1` (test-enforced).
     MultiPath { k: usize },
+    /// Prefix-sharing token-tree speculation over `k` leaves
+    /// ([`tree_verify`], DESIGN.md §13): the same `k` independent draft
+    /// streams as [`Algo::MultiPath`], but coincident prefixes are
+    /// drafted, stored, and target-scored once.  Bit-identical to
+    /// `MultiPath { k }` end to end (and hence to [`Algo::Block`] at
+    /// `k == 1`), with strictly fewer drafted tokens scored whenever
+    /// draws coincide (both test-enforced).
+    Tree { k: usize },
 }
 
 impl Algo {
@@ -56,20 +64,26 @@ impl Algo {
             Algo::Block => "block",
             Algo::Greedy => "greedy",
             Algo::MultiPath { .. } => "multipath",
+            Algo::Tree { .. } => "tree",
         }
     }
 
-    /// Parse an algorithm name; multipath takes an optional path count
-    /// (`"multipath"` = 2 paths, `"multipath:4"` = 4).
+    /// Parse an algorithm name; multipath and tree take an optional path
+    /// count (`"multipath"` = 2 paths, `"multipath:4"` = 4, likewise
+    /// `"tree"`/`"tree:<k>"`).
     pub fn parse(s: &str) -> Option<Algo> {
         if let Some(ks) = s.strip_prefix("multipath:") {
             return ks.parse::<usize>().ok().filter(|&k| k >= 1).map(|k| Algo::MultiPath { k });
+        }
+        if let Some(ks) = s.strip_prefix("tree:") {
+            return ks.parse::<usize>().ok().filter(|&k| k >= 1).map(|k| Algo::Tree { k });
         }
         match s {
             "token" => Some(Algo::Token),
             "block" => Some(Algo::Block),
             "greedy" => Some(Algo::Greedy),
             "multipath" => Some(Algo::MultiPath { k: 2 }),
+            "tree" => Some(Algo::Tree { k: 2 }),
             _ => None,
         }
     }
@@ -78,7 +92,7 @@ impl Algo {
     /// algorithms).
     pub fn paths(self) -> usize {
         match self {
-            Algo::MultiPath { k } => k,
+            Algo::MultiPath { k } | Algo::Tree { k } => k,
             _ => 1,
         }
     }
@@ -94,6 +108,7 @@ impl std::fmt::Display for Algo {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Algo::MultiPath { k } => write!(f, "multipath:{k}"),
+            Algo::Tree { k } => write!(f, "tree:{k}"),
             _ => f.write_str(self.name()),
         }
     }
@@ -113,7 +128,9 @@ pub fn verify(
 ) -> VerifyOutcome {
     match algo {
         Algo::Token => token_verify(ps, qs, drafts, etas, u_final),
-        Algo::Block | Algo::MultiPath { .. } => block_verify(ps, qs, drafts, etas, u_final),
+        Algo::Block | Algo::MultiPath { .. } | Algo::Tree { .. } => {
+            block_verify(ps, qs, drafts, etas, u_final)
+        }
         Algo::Greedy => {
             greedy_verify(ps, qs, drafts, etas, u_final, &GreedyState::new(drafts.len())).0
         }
@@ -147,6 +164,21 @@ mod tests {
         assert_eq!(Algo::Block.paths(), 1);
         assert!(a.fused());
         // Display round-trips through parse for any k.
+        assert_eq!(Algo::parse(&a.to_string()), Some(a));
+    }
+
+    #[test]
+    fn tree_parse_display_paths() {
+        assert_eq!(Algo::parse("tree"), Some(Algo::Tree { k: 2 }));
+        assert_eq!(Algo::parse("tree:4"), Some(Algo::Tree { k: 4 }));
+        assert_eq!(Algo::parse("tree:1"), Some(Algo::Tree { k: 1 }));
+        assert_eq!(Algo::parse("tree:0"), None);
+        assert_eq!(Algo::parse("tree:x"), None);
+        let a = Algo::Tree { k: 4 };
+        assert_eq!(a.to_string(), "tree:4");
+        assert_eq!(a.name(), "tree");
+        assert_eq!(a.paths(), 4);
+        assert!(a.fused());
         assert_eq!(Algo::parse(&a.to_string()), Some(a));
     }
 

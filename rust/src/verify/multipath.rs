@@ -131,6 +131,89 @@ pub fn multipath_verify(
     unreachable!("the last stage always returns");
 }
 
+/// Jointly verify the `K` leaf paths of one prefix-sharing token tree
+/// (DESIGN.md §13.5) — the tree walk of [`multipath_verify`].
+///
+/// Stage `k` block-verifies the `k`-th leaf's root-to-leaf walk of the
+/// node→parent table.  Positions on a shared prefix are *not re-scored*:
+/// every leaf passing through a shared node reads the same `node_ps` /
+/// `node_qs` rows, so the "skip positions already accepted on a shared
+/// prefix" rule is realised structurally — there is one scored row per
+/// node, period.  (Under the greedy tau >= 1-wins rule a later stage
+/// only ever runs after *every* earlier stage accepted nothing, so there
+/// are never previously-accepted positions to re-judge; the skip clause
+/// is vacuous at runtime and the dedup is where the tree actually wins.)
+///
+/// Inputs index the node table directly: `node_ps` row `i` is the target
+/// law *at* node `i`, `node_qs` row `i` the drafter law node `i` was
+/// sampled from, `ps_root` row 0 the target law at the pending token
+/// (verification row 0 of every path).  `etas[k]` carries leaf `k`'s
+/// `gamma` acceptance uniforms — the same independent per-path streams
+/// as multipath, which is what makes a no-sharing tree bit-identical to
+/// [`multipath_verify`] and the residual chain's losslessness carry over
+/// verbatim (DESIGN.md §13.4).
+pub fn tree_verify(
+    ps_root: &ProbMatrix,
+    node_ps: &ProbMatrix,
+    node_qs: &ProbMatrix,
+    tokens: &[u32],
+    parent: &[i32],
+    leaves: &[usize],
+    etas: &[Vec<f64>],
+    u_final: f64,
+) -> MultipathOutcome {
+    let k = leaves.len();
+    assert!(k >= 1, "tree verification needs at least one leaf");
+    assert_eq!(etas.len(), k, "ragged tree set: {} etas for {k} leaves", etas.len());
+    assert!(
+        tokens.len() == parent.len()
+            && node_ps.rows == tokens.len()
+            && node_qs.rows == tokens.len(),
+        "ragged node table"
+    );
+
+    let mut d: Vec<f64> = Vec::new();
+    let mut chain: Vec<usize> = Vec::new();
+    for (stage, &leaf) in leaves.iter().enumerate() {
+        // Root-to-leaf walk of the parent table (parents precede
+        // children, so the reversed ancestor climb is position order).
+        chain.clear();
+        let mut n = leaf as i32;
+        while n >= 0 {
+            chain.push(n as usize);
+            n = parent[n as usize];
+        }
+        chain.reverse();
+        let drafts: Vec<u32> = chain.iter().map(|&i| tokens[i]).collect();
+        let mut ps_rows = Vec::with_capacity(chain.len() + 1);
+        ps_rows.push(ps_root.row(0).to_vec());
+        for &i in &chain {
+            ps_rows.push(node_ps.row(i).to_vec());
+        }
+        let ps = ProbMatrix::from_rows(ps_rows);
+        let qs = ProbMatrix::from_rows(chain.iter().map(|&i| node_qs.row(i).to_vec()).collect());
+        // From here the stage body is multipath_verify's, verbatim.
+        let out = if stage == 0 {
+            block_verify(&ps, &qs, &drafts, &etas[stage], u_final)
+        } else {
+            block_verify_row0(&ps, Some(&d), &qs, &drafts, &etas[stage], u_final)
+        };
+        if out.tau >= 1 || stage == k - 1 {
+            return MultipathOutcome { tau: out.tau, path: stage, emitted: out.emitted };
+        }
+        if stage == 0 {
+            d = ps_root.row(0).to_vec();
+        }
+        for (dv, qv) in d.iter_mut().zip(node_qs.row(chain[0])) {
+            *dv = (*dv - qv).max(0.0);
+        }
+        if !normalize(&mut d) {
+            return MultipathOutcome { tau: 0, path: stage, emitted: out.emitted };
+        }
+    }
+    unreachable!("the last stage always returns");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,5 +326,131 @@ mod tests {
             assert_eq!(out.tau, 2);
             assert_eq!(&out.emitted[..2], &[1, 2]);
         }
+    }
+
+    /// Build a disjoint (no-sharing) node table out of a flat multipath
+    /// instance: path `p`'s chain occupies nodes `p*gamma .. (p+1)*gamma`.
+    fn disjoint_table(
+        ps: &[ProbMatrix],
+        qs: &[ProbMatrix],
+        drafts: &[Vec<u32>],
+    ) -> (ProbMatrix, ProbMatrix, ProbMatrix, Vec<u32>, Vec<i32>, Vec<usize>) {
+        let gamma = drafts[0].len();
+        let ps_root = ProbMatrix::from_rows(vec![ps[0].row(0).to_vec()]);
+        let mut p_rows = Vec::new();
+        let mut q_rows = Vec::new();
+        let mut tokens = Vec::new();
+        let mut parent = Vec::new();
+        let mut leaves = Vec::new();
+        for path in 0..drafts.len() {
+            for j in 0..gamma {
+                let i = tokens.len();
+                p_rows.push(ps[path].row(j + 1).to_vec());
+                q_rows.push(qs[path].row(j).to_vec());
+                tokens.push(drafts[path][j]);
+                parent.push(if j == 0 { -1 } else { i as i32 - 1 });
+            }
+            leaves.push(tokens.len() - 1);
+        }
+        (
+            ps_root,
+            ProbMatrix::from_rows(p_rows),
+            ProbMatrix::from_rows(q_rows),
+            tokens,
+            parent,
+            leaves,
+        )
+    }
+
+    #[test]
+    fn tree_verify_on_disjoint_chains_is_multipath_bit_for_bit() {
+        check("tree(disjoint) == multipath", 200, |rng| {
+            let gamma = 1 + rng.below(5);
+            let vocab = 2 + rng.below(10);
+            let k = 1 + rng.below(4);
+            let mut ps = Vec::new();
+            let mut qs = Vec::new();
+            let mut drafts = Vec::new();
+            let mut etas: Vec<Vec<f64>> = Vec::new();
+            for path in 0..k {
+                let (mut p, mut q, d) = rand_instance(rng, gamma, vocab, 0.8);
+                if path > 0 {
+                    p.row_mut(0).copy_from_slice(ps[0].row(0));
+                    q.row_mut(0).copy_from_slice(qs[0].row(0));
+                }
+                ps.push(p);
+                qs.push(q);
+                drafts.push(d);
+                etas.push((0..gamma).map(|_| rng.uniform()).collect());
+            }
+            let u = rng.uniform();
+            let want = multipath_verify(&ps, &qs, &drafts, &etas, u);
+            let (pr, np, nq, tokens, parent, leaves) = disjoint_table(&ps, &qs, &drafts);
+            let got = tree_verify(&pr, &np, &nq, &tokens, &parent, &leaves, &etas, u);
+            if got != want {
+                return Err(format!("{got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_verify_shared_prefix_matches_duplicated_paths() {
+        // Two leaves sharing the position-0 node vs the same instance
+        // flattened with the shared rows duplicated: identical outcomes
+        // for every uniform draw (the dedup is pure layout).
+        check("tree(shared) == tree(duplicated)", 200, |rng| {
+            let vocab = 2 + rng.below(10);
+            let gamma = 2 + rng.below(4);
+            // One flat 2-path instance whose paths coincide at position 0.
+            let (p0, q0, d0) = rand_instance(rng, gamma, vocab, 0.8);
+            let (mut p1, mut q1, mut d1) = rand_instance(rng, gamma, vocab, 0.8);
+            p1.row_mut(0).copy_from_slice(p0.row(0));
+            q1.row_mut(0).copy_from_slice(q0.row(0));
+            p1.row_mut(1).copy_from_slice(p0.row(1));
+            q1.row_mut(1).copy_from_slice(q0.row(1));
+            d1[0] = d0[0];
+            let ps = [p0, p1];
+            let qs = [q0, q1];
+            let drafts = [d0, d1];
+            let etas: Vec<Vec<f64>> =
+                (0..2).map(|_| (0..gamma).map(|_| rng.uniform()).collect()).collect();
+            let u = rng.uniform();
+
+            // Shared table: one depth-0 node, two suffix chains.
+            let ps_root = ProbMatrix::from_rows(vec![ps[0].row(0).to_vec()]);
+            let mut p_rows = vec![ps[0].row(1).to_vec()];
+            let mut q_rows = vec![qs[0].row(0).to_vec()];
+            let mut tokens = vec![drafts[0][0]];
+            let mut parent = vec![-1i32];
+            let mut leaves = Vec::new();
+            for path in 0..2 {
+                let mut prev = 0i32;
+                for j in 1..gamma {
+                    let i = tokens.len();
+                    p_rows.push(ps[path].row(j + 1).to_vec());
+                    q_rows.push(qs[path].row(j).to_vec());
+                    tokens.push(drafts[path][j]);
+                    parent.push(prev);
+                    prev = i as i32;
+                }
+                leaves.push(prev as usize);
+            }
+            let shared = tree_verify(
+                &ps_root,
+                &ProbMatrix::from_rows(p_rows),
+                &ProbMatrix::from_rows(q_rows),
+                &tokens,
+                &parent,
+                &leaves,
+                &etas,
+                u,
+            );
+            let flat = multipath_verify(&ps, &qs, &drafts, &etas, u);
+            if shared != flat {
+                return Err(format!("{shared:?} vs {flat:?}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -11,6 +11,11 @@
 //!    `expected_tau_block`, and more paths never hurt.
 //! 4. On the seeded native model, multipath accepts at least as many
 //!    draft tokens per target call as block verification on aggregate.
+//! 5. The prefix-sharing tree ladder (DESIGN.md §13): `Algo::Tree { k: 1 }`
+//!    is `Algo::Block` bit for bit, `Algo::Tree { k }` is
+//!    `Algo::MultiPath { k }` bit for bit (sharing and never-share branch
+//!    policies alike), tree decoding is lossless, and the tree scores
+//!    strictly fewer drafted tokens in expectation.
 
 use std::sync::Arc;
 
@@ -184,6 +189,132 @@ fn multipath_not_worse_than_block_on_native_aggregate() {
     );
 }
 
+fn ladder_prompts() -> Vec<Vec<u32>> {
+    (0..4)
+        .map(|i| {
+            vec![
+                vocab::BOS,
+                vocab::marker_for(i as u32 % 8),
+                vocab::CONTENT_BASE + 5 + i as u32,
+                vocab::CONTENT_BASE + 90,
+                vocab::CONTENT_BASE + 17 + 3 * i as u32,
+            ]
+        })
+        .collect()
+}
+
+fn run_fused(be: NativeBackend, algo: Algo, seed: u64) -> specd::engine::BatchReport {
+    let cfg = EngineConfig { algo, gamma: 4, max_new_tokens: 20, ..Default::default() };
+    let eng = SpecEngine::new(Arc::new(be), cfg).unwrap();
+    eng.run_batch(&ladder_prompts(), seed).unwrap()
+}
+
+fn assert_reports_identical(a: &specd::engine::BatchReport, b: &specd::engine::BatchReport, tag: &str) {
+    assert_eq!(a.device_iterations, b.device_iterations, "{tag}: iteration counts");
+    for (i, (ra, rb)) in a.rows.iter().zip(&b.rows).enumerate() {
+        assert_eq!(ra.tokens, rb.tokens, "{tag} row {i}: tokens diverged");
+        assert_eq!(ra.accepted, rb.accepted, "{tag} row {i}: accepted");
+        assert_eq!(ra.iterations, rb.iterations, "{tag} row {i}: iterations");
+        assert_eq!(ra.finish, rb.finish, "{tag} row {i}: finish reason");
+    }
+}
+
+/// Bottom rung of the tree ladder: a 1-leaf tree degenerates to block
+/// verification, token for token through the fused engine.
+#[test]
+fn tree_k1_bit_identical_to_block_end_to_end() {
+    for seed in [0u64, 7, 0xbeef] {
+        let a = run_fused(NativeBackend::seeded_with_shapes(4, 64, 0xcafe), Algo::Block, seed);
+        let b =
+            run_fused(NativeBackend::seeded_with_shapes(4, 64, 0xcafe), Algo::Tree { k: 1 }, seed);
+        assert_reports_identical(&a, &b, &format!("seed {seed} tree:1 vs block"));
+    }
+}
+
+/// Middle rung: the k-leaf tree reproduces flat multipath bit for bit —
+/// with the default share-coincident policy *and* with branching forced
+/// off (`with_branch_threshold(inf)`, the degenerate no-sharing tree).
+#[test]
+fn tree_bit_identical_to_multipath_end_to_end() {
+    for k in [2usize, 4] {
+        for seed in [0u64, 0xbeef] {
+            let m = run_fused(
+                NativeBackend::seeded_with_shapes(4, 64, 0xcafe),
+                Algo::MultiPath { k },
+                seed,
+            );
+            let t = run_fused(
+                NativeBackend::seeded_with_shapes(4, 64, 0xcafe),
+                Algo::Tree { k },
+                seed,
+            );
+            assert_reports_identical(&m, &t, &format!("seed {seed} k {k} tree vs multipath"));
+            let never = NativeBackend::seeded_with_shapes(4, 64, 0xcafe)
+                .with_branch_threshold(f64::INFINITY);
+            let t_inf = run_fused(never, Algo::Tree { k }, seed);
+            assert_reports_identical(
+                &m,
+                &t_inf,
+                &format!("seed {seed} k {k} never-share tree vs multipath"),
+            );
+        }
+    }
+}
+
+/// Theorem-1-style losslessness for tree verification at the
+/// distribution level: tree output prefixes match target ancestral
+/// samples (same harness and tolerance as the multipath test above).
+#[test]
+fn tree_lossless_on_markov_pair() {
+    let pair = MarkovPair::random(3, 0.5, 11);
+    let h = 3;
+    let n = 30_000;
+    for k in [2usize, 3] {
+        let mut spec = SeqDist::default();
+        let mut anc = SeqDist::default();
+        let mut rng_s = Rng::new(7);
+        let mut rng_a = Rng::new(8);
+        for _ in 0..n {
+            spec.add(&sim::specdec_prefix_tree(&pair, 2, k, h, &mut rng_s));
+            anc.add(&sim::sample_target(&pair, h, &mut rng_a));
+        }
+        let tv = spec.tv(&anc);
+        assert!(tv < 0.03, "tree k={k}: TV {tv}");
+    }
+}
+
+/// Satellite property tests: tree E[tau] never falls below multipath
+/// E[tau] (they are equal by dedup-invariance), and the expected scored
+/// node count is strictly below the flat `k * gamma` for k >= 2.
+#[test]
+fn expected_tau_tree_dominates_multipath_and_saves_tokens() {
+    check("exact tree tau >= multipath tau; nodes < k*gamma", 30, |rng| {
+        let vocab = 2 + rng.below(4);
+        let mix = 0.1 + 0.8 * rng.uniform();
+        let pair = MarkovPair::random(vocab, mix, rng.next_u64());
+        for gamma in 1..=3 {
+            for k in [1usize, 2, 4] {
+                let t = sim::exact::expected_tau_tree(&pair, gamma, k);
+                let m = sim::exact::expected_tau_multipath(&pair, gamma, k);
+                if t < m - 1e-12 {
+                    return Err(format!("gamma {gamma} k {k}: tree {t} < multipath {m}"));
+                }
+                let nodes = sim::exact::expected_tree_nodes(&pair, gamma, k);
+                if k >= 2 && nodes >= (k * gamma) as f64 - 1e-9 {
+                    return Err(format!(
+                        "gamma {gamma} k {k}: nodes {nodes} not < {}",
+                        k * gamma
+                    ));
+                }
+                if k == 1 && (nodes - gamma as f64).abs() > 1e-9 {
+                    return Err(format!("gamma {gamma}: k=1 nodes {nodes} != gamma"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Engine-layer wiring: multipath is fused-only and k must be >= 1.
 #[test]
 fn multipath_engine_validation() {
@@ -197,6 +328,12 @@ fn multipath_engine_validation() {
     assert!(SpecEngine::new(be.clone(), good.clone()).is_ok());
     let zero = EngineConfig { algo: Algo::MultiPath { k: 0 }, ..good.clone() };
     assert!(SpecEngine::new(be.clone(), zero).is_err());
+    // Same wiring for the tree: fused-only, k >= 1.
+    let tree = EngineConfig { algo: Algo::Tree { k: 2 }, ..good.clone() };
+    assert!(SpecEngine::new(be.clone(), tree.clone()).is_ok());
+    let tree_zero = EngineConfig { algo: Algo::Tree { k: 0 }, ..good.clone() };
+    assert!(SpecEngine::new(be.clone(), tree_zero).is_err());
+    assert!(HostVerifyEngine::new(be.clone(), tree).is_err());
     // The host-verify engine is single-draft.
     assert!(HostVerifyEngine::new(be, good).is_err());
 }

@@ -11,9 +11,11 @@
 //! 3. a threaded forward (`threads = N`) is bit-identical to the
 //!    sequential one (`threads = 1`), backend- and engine-level;
 //! 4. the persistent-scratch multipath path is bit-identical to the old
-//!    allocate-per-iteration path, engine-level, for both block and
-//!    multipath verification — including across consecutive batches,
-//!    where the scratch is reused dirty.
+//!    allocate-per-iteration path, engine-level, for block, multipath
+//!    and tree verification — including across consecutive batches,
+//!    where the scratch is reused dirty, and across interleaved
+//!    algorithm families sharing one pool (the `(model, rows, ring)`
+//!    keying regression).
 
 use std::sync::Arc;
 
@@ -321,7 +323,13 @@ fn persistent_scratch_is_bit_identical_to_allocating_path() {
     // Multiple consecutive batches per engine: from the second batch on,
     // the persistent path verifies against a *dirty* reused scratch.
     let reqs = prompts(12);
-    for algo in [Algo::Block, Algo::MultiPath { k: 2 }, Algo::MultiPath { k: 4 }] {
+    for algo in [
+        Algo::Block,
+        Algo::MultiPath { k: 2 },
+        Algo::MultiPath { k: 4 },
+        Algo::Tree { k: 2 },
+        Algo::Tree { k: 4 },
+    ] {
         let persistent = Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0x5c8a));
         let allocating = Arc::new(
             NativeBackend::seeded_with_shapes(4, 64, 0x5c8a).with_persistent_scratch(false),
@@ -334,5 +342,35 @@ fn persistent_scratch_is_bit_identical_to_allocating_path() {
         let a2 = decode(persistent, algo, &reqs, 29);
         let b2 = decode(allocating, algo, &reqs, 29);
         assert_eq!(a2, b2, "algo={algo}: dirty scratch reuse changed decoded tokens");
+    }
+}
+
+#[test]
+fn scratch_pool_never_aliases_flat_and_tree_checkouts() {
+    // Regression for the pool key: a flat multipath checkout of B*K rows
+    // at the model's max_len and a tree checkout of equal row count (but
+    // a wider per-row ring) must hit different pool entries.  With the
+    // old `(model, rows)` key, `MultiPath { k: 1 }` (4 rows x 64 slots)
+    // and `Tree { k }` (4 rows x tree ring) would trade caches and read
+    // each other's geometry.  Interleave all three algorithm families on
+    // one persistent backend and require every decode to match a
+    // fresh-backend run bit for bit.
+    let reqs = prompts(8);
+    let schedule = [
+        Algo::MultiPath { k: 1 },
+        Algo::Tree { k: 2 },
+        Algo::MultiPath { k: 2 },
+        Algo::Tree { k: 4 },
+        Algo::Block,
+        Algo::MultiPath { k: 1 },
+        Algo::Tree { k: 2 },
+    ];
+    let shared = Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0x5c8a));
+    for (i, &algo) in schedule.iter().enumerate() {
+        let fresh = Arc::new(NativeBackend::seeded_with_shapes(4, 64, 0x5c8a));
+        let seed = 31 + i as u64;
+        let got = decode(shared.clone(), algo, &reqs, seed);
+        let want = decode(fresh, algo, &reqs, seed);
+        assert_eq!(got, want, "step {i} ({algo}): pooled scratch aliased across algorithms");
     }
 }

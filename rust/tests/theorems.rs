@@ -137,8 +137,9 @@ fn greedy_gains_per_iteration() {
 
 /// Theorem 1 at the engine level under draft quantisation
 /// (DESIGN.md §11.2): the committed-token distribution with an **int8**
-/// draft matches the target sample distribution, for token, block and
-/// multipath (K=2) verification.  Verification corrects any drafter
+/// draft matches the target sample distribution, for token, block,
+/// multipath (K=2) and prefix-sharing tree (K=2, 4; DESIGN.md §13.4)
+/// verification.  Verification corrects any drafter
 /// drift, so quantising the drafter must not move the first committed
 /// token's law off the target's exact next-token distribution.  An fp32
 /// control run with the same sample count calibrates the finite-sample
@@ -168,7 +169,13 @@ fn int8_draft_commits_target_distributed_tokens() {
     let mass: f64 = ps[..v].iter().map(|&x| x as f64).sum();
     let exact: Vec<f64> = ps[..v].iter().map(|&x| x as f64 / mass).collect();
 
-    for algo in [Algo::Token, Algo::Block, Algo::MultiPath { k: 2 }] {
+    for algo in [
+        Algo::Token,
+        Algo::Block,
+        Algo::MultiPath { k: 2 },
+        Algo::Tree { k: 2 },
+        Algo::Tree { k: 4 },
+    ] {
         let mut tv = [0.0f64; 2];
         for (pi, prec) in [Precision::Int8, Precision::Fp32].into_iter().enumerate() {
             let backend = Arc::new(
