@@ -1,19 +1,20 @@
-//! End-to-end serving demo: starts the coordinator + HTTP server on a
-//! loopback port over the native backend (hermetic — trained weights only
-//! if an artifact bundle exists), fires a small mixed-length workload from
-//! several client threads, and reports latency/throughput — the
-//! serving-paper E2E driver (EXPERIMENTS.md records a run).  Short
-//! requests complete and their slots are refilled while long ones are
-//! still decoding (continuous batching, DESIGN.md §7) — visible in the
-//! `specd_slot_occupancy` / `specd_slots_refilled` metrics printed at the
-//! end.
+//! End-to-end serving demo: starts the serving tier (router + replicas)
+//! + HTTP server on a loopback port over the native backend (hermetic —
+//! trained weights only if an artifact bundle exists), fires a small
+//! mixed-length workload from several client threads, and reports
+//! latency/throughput — the serving-paper E2E driver (EXPERIMENTS.md
+//! records a run).  Short requests complete and their slots are refilled
+//! while long ones are still decoding (continuous batching, DESIGN.md
+//! §7) — visible in the `specd_slot_occupancy` / `specd_slots_refilled`
+//! metrics printed at the end, next to the router's per-replica blocks
+//! and prefix-cache counters (DESIGN.md §14).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use specd::backend::{Backend, NativeBackend};
 use specd::config::{Config, EngineConfig};
-use specd::coordinator::Coordinator;
+use specd::serve::Router;
 use specd::server::{client, serve, ServerState};
 use specd::stats::mean_std;
 use specd::workload::Dataset;
@@ -25,8 +26,8 @@ fn main() -> anyhow::Result<()> {
     let datasets = Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref())?;
     let cfg = Config::default();
     let engine_cfg = EngineConfig { max_new_tokens: 32, ..Default::default() };
-    let coordinator = Coordinator::spawn(backend, engine_cfg, &cfg.server)?;
-    let state = Arc::new(ServerState { coordinator, datasets });
+    let router = Router::spawn(backend, engine_cfg, &cfg.server, &cfg.router)?;
+    let state = Arc::new(ServerState { router, datasets });
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();

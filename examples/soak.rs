@@ -1,44 +1,85 @@
-//! Serving soak (CI gate): boot the full HTTP stack on the hermetic
-//! native backend, fire ~200 mixed-length concurrent requests from many
-//! client threads, and require every response to be 200 or 429 with no
-//! hangs — this hammers the continuous batcher's admit/step/release path
-//! end to end (DESIGN.md §7).
+//! Serving soak (CI gate): boot the full HTTP stack — router, replicas,
+//! paged KV pool, prefix cache (DESIGN.md §14) — on the hermetic native
+//! backend, fire mixed-length concurrent requests from many client
+//! threads, and require every response to be 200 or a well-formed shed
+//! (429 **with** a `Retry-After` header) with no hangs.
 //!
 //! ```sh
-//! cargo run --release --example soak            # 200 requests
+//! cargo run --release --example soak                 # 200 requests
 //! cargo run --release --example soak -- --requests=50
+//! cargo run --release --example soak -- --scale      # ~2000 requests,
+//!                                                    # 64 clients, shared-
+//!                                                    # prefix-heavy mix;
+//!                                                    # writes BENCH_ci.json
 //! ```
 //!
-//! Exit codes: 0 pass, 1 bad responses, 2 watchdog timeout (hang).
+//! `--scale` sends explicit `prompt_tokens` drawn from a small set of
+//! shared 32-token prefixes plus per-request suffixes, so the router's
+//! prefix cache must get hits and warm admissions must prefill only the
+//! suffix — gated via the `prefill_positions < prompt_positions`
+//! accounting (DESIGN.md §14.5).  p50/p99 latency and the shed rate land
+//! in BENCH_ci.json for the perf trajectory.
+//!
+//! Exit codes: 0 pass, 1 bad responses / failed gate, 2 watchdog (hang).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use specd::backend::NativeBackend;
 use specd::config::{Config, EngineConfig};
-use specd::coordinator::Coordinator;
+use specd::models::vocab;
+use specd::serve::Router;
 use specd::server::{client, serve, ServerState};
 use specd::util::json;
+use specd::verify::Rng;
 use specd::workload::Dataset;
 
+/// Shared prompt prefixes for `--scale`: page-aligned 32-token heads
+/// (page_size = 16) so `PrefixCache::candidate_len` keys exactly on them.
+const SCALE_PREFIXES: usize = 8;
+const SCALE_PREFIX_LEN: usize = 32;
+
+fn scale_prompt(prefixes: &[Vec<u32>], c: usize, r: usize) -> Vec<u32> {
+    let mut p = prefixes[(c + r) % prefixes.len()].clone();
+    // Per-request suffix: 1..=10 content tokens — prompts 33..=42 stay
+    // under the engine's `len < L/2 = 48` prefix guard and the ring.
+    let mut rng = Rng::new(((c as u64) << 32) | r as u64);
+    let span = (vocab::SIZE - vocab::CONTENT_BASE) as usize;
+    for _ in 0..1 + (c * 31 + r) % 10 {
+        p.push(vocab::CONTENT_BASE + rng.below(span) as u32);
+    }
+    p
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    sorted_ms[((q * (sorted_ms.len() - 1) as f64).round() as usize).min(sorted_ms.len() - 1)]
+}
+
 fn main() -> anyhow::Result<()> {
+    let scale = std::env::args().any(|a| a == "--scale");
     let total: usize = std::env::args()
         .find_map(|a| a.strip_prefix("--requests=").and_then(|v| v.parse().ok()))
-        .unwrap_or(200);
+        .unwrap_or(if scale { 2000 } else { 200 });
+    let n_clients = if scale { 64 } else { 16 };
 
     let backend = Arc::new(NativeBackend::seeded(0x50a4));
     let datasets = Dataset::load_or_synthetic(None)?;
     let mut cfg = Config::default();
-    // The in-flight limit must sit BELOW the client concurrency (16
-    // threads) or the 429 admission-rejection path would be unreachable:
-    // blocking clients can never hold more requests in flight than there
-    // are threads.
-    cfg.server.queue_limit = 8;
+    // The per-replica admission token budget must sit BELOW what the
+    // blocking clients can hold in flight, or the shed path would be
+    // unreachable: budget/cost bounds concurrent admissions per replica,
+    // so size it to a handful of requests (cost = prompt + max_new,
+    // <= ~60 tokens here) against 16/64 client threads.
+    cfg.router.replicas = 2;
+    cfg.router.token_budget = if scale { 1024 } else { 256 };
+    let max_new_mix: &[usize] = if scale { &[1, 2, 4, 6] } else { &[1, 2, 4, 8, 16, 24] };
     let ecfg = EngineConfig { max_new_tokens: 24, ..Default::default() };
-    let coordinator = Coordinator::spawn(backend, ecfg, &cfg.server)?;
-    let metrics = coordinator.metrics.clone();
-    let state = Arc::new(ServerState { coordinator, datasets });
+    let router = Router::spawn(backend, ecfg, &cfg.server, &cfg.router)?;
+    let state = Arc::new(ServerState { router: router.clone(), datasets });
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
@@ -48,7 +89,27 @@ fn main() -> anyhow::Result<()> {
             let _ = serve(listener, st);
         });
     }
-    println!("soak: {total} requests against http://{addr}");
+    println!(
+        "soak: {total} requests ({n_clients} clients{}) against http://{addr}",
+        if scale { ", --scale shared-prefix mix" } else { "" }
+    );
+
+    // Shared 32-token prompt heads for the --scale prefix-cache workload.
+    let mut prng = Rng::new(0x5ca1_e5eed);
+    let prefixes: Arc<Vec<Vec<u32>>> = Arc::new(
+        (0..SCALE_PREFIXES)
+            .map(|i| {
+                let mut p = vec![vocab::BOS, vocab::marker_for((i % 8) as u32)];
+                while p.len() < SCALE_PREFIX_LEN {
+                    p.push(
+                        vocab::CONTENT_BASE
+                            + prng.below((vocab::SIZE - vocab::CONTENT_BASE) as usize) as u32,
+                    );
+                }
+                p
+            })
+            .collect(),
+    );
 
     // Watchdog: a hang anywhere in the serving stack must fail the run,
     // not stall CI until the job-level timeout.
@@ -68,33 +129,56 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    let n_clients = 16;
     let per_client = total.div_ceil(n_clients);
     let ok = Arc::new(AtomicUsize::new(0));
-    let rejected = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicUsize::new(0));
     let bad = Arc::new(AtomicUsize::new(0));
+    let latencies = Arc::new(Mutex::new(Vec::<f64>::new()));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
         let addr = addr.clone();
-        let (ok, rejected, bad) = (ok.clone(), rejected.clone(), bad.clone());
+        let prefixes = prefixes.clone();
+        let (ok, shed, bad) = (ok.clone(), shed.clone(), bad.clone());
+        let latencies = latencies.clone();
         handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
             for r in 0..per_client {
-                let ds = ["gsm8k", "wmt", "xsum", "sharegpt"][(c + r) % 4];
-                let max_new = [1, 2, 4, 8, 16, 24][(c * per_client + r) % 6];
-                let body = json::to_string(&json::obj(vec![
-                    ("dataset", json::str_v(ds)),
+                let max_new = max_new_mix[(c * per_client + r) % max_new_mix.len()];
+                let mut fields = vec![
                     ("max_new_tokens", json::num(max_new as f64)),
                     ("seed", json::num((c * 1000 + r) as f64)),
-                ]));
-                match client::post_json(&addr, "/v1/generate", &body) {
-                    Ok((200, _)) => {
+                    ("tenant", json::num((c % 4) as f64)),
+                    ("lane", json::str_v(if (c + r) % 5 == 0 { "batch" } else { "interactive" })),
+                ];
+                if scale {
+                    fields.push(("prompt_tokens", json::arr_u32(&scale_prompt(&prefixes, c, r))));
+                } else {
+                    let ds = ["gsm8k", "wmt", "xsum", "sharegpt"][(c + r) % 4];
+                    fields.push(("dataset", json::str_v(ds)));
+                }
+                let body = json::to_string(&json::obj(fields));
+                let t = Instant::now();
+                match client::post_json_full(&addr, "/v1/generate", &body) {
+                    Ok((200, _, _)) => {
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
                         ok.fetch_add(1, Ordering::Relaxed);
                     }
-                    Ok((429, _)) => {
-                        rejected.fetch_add(1, Ordering::Relaxed);
+                    // Load shed: must be a *well-formed* shed — 429 and a
+                    // Retry-After hint (the serving-tier overload
+                    // contract, DESIGN.md §14.1).
+                    Ok((429, headers, resp)) => {
+                        let retry_ok = headers.iter().any(|(k, v)| {
+                            k == "retry-after" && matches!(v.parse::<u64>(), Ok(s) if s >= 1)
+                        });
+                        if retry_ok {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            eprintln!("soak: 429 without retry-after header: {resp}");
+                            bad.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
-                    Ok((status, resp)) => {
+                    Ok((status, _, resp)) => {
                         eprintln!("soak: unexpected status {status}: {resp}");
                         bad.fetch_add(1, Ordering::Relaxed);
                     }
@@ -104,6 +188,7 @@ fn main() -> anyhow::Result<()> {
                     }
                 }
             }
+            latencies.lock().unwrap().extend(lat);
         }));
     }
     for h in handles {
@@ -112,57 +197,120 @@ fn main() -> anyhow::Result<()> {
     done.store(true, Ordering::Release);
 
     let wall = t0.elapsed().as_secs_f64();
-    let (ok, rejected, bad) =
-        (ok.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed), bad.load(Ordering::Relaxed));
+    let (ok, shed, bad) =
+        (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed), bad.load(Ordering::Relaxed));
     let sent = n_clients * per_client;
+    let mut lat = latencies.lock().unwrap().clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+    let shed_rate = shed as f64 / sent as f64;
     println!(
-        "soak: {sent} requests in {wall:.1}s — {ok} ok, {rejected} rejected (429), {bad} bad"
+        "soak: {sent} requests in {wall:.1}s — {ok} ok, {shed} shed (429), {bad} bad; \
+         p50 {p50:.0}ms p99 {p99:.0}ms"
     );
-    println!(
-        "soak: slot occupancy {:.2}, refills {}, tokens {}",
-        metrics.slot_occupancy(),
-        metrics.slots_refilled.get(),
-        metrics.tokens_emitted.get()
-    );
-    // Batched-admission accounting (DESIGN.md §11.3): every admitted
-    // request was part of exactly one batched prefill, so the histogram's
-    // value-weighted total must equal the refill count.  (Under 16
-    // concurrent clients against B=4 slots the batcher typically packs
-    // multi-row admission ticks — the mean printed below is the
-    // amortisation win the metric exists to observe; it is
-    // timing-dependent, so it is reported rather than gated.)  The
-    // watchdog above is the regression test for the narrowed admission
-    // critical section: a prefill that blocked the worker per request
-    // used to stretch exactly this run.
-    let admitted: u64 = metrics
-        .prefill_batch_size
-        .nonzero()
-        .iter()
-        .map(|&(rows, count)| rows as u64 * count)
-        .sum();
-    println!(
-        "soak: prefill batches {} (mean rows {:.2}), draft forward mean {:.0}us",
-        metrics.prefill_batch_size.total(),
-        metrics.prefill_batch_size.mean(),
-        metrics.draft_forward_us.mean_us()
-    );
-    let mut failed = bad != 0 || ok == 0 || ok + rejected != sent;
-    if admitted != metrics.slots_refilled.get() {
-        eprintln!(
-            "soak FAILED: prefill_batch_size accounts for {admitted} admissions but {} slots \
-             were refilled",
-            metrics.slots_refilled.get()
-        );
-        failed = true;
+
+    // Sum the engine-side accounting across replicas (each replica owns
+    // its own EngineMetrics; the router renders the same sums in
+    // /metrics — DESIGN.md §14.5).
+    let mut slots_refilled = 0u64;
+    let mut admitted = 0u64;
+    let mut prefill_batches = 0u64;
+    let mut draft_forwards = 0u64;
+    let mut tokens_emitted = 0u64;
+    let mut prefill_positions = 0u64;
+    let mut prompt_positions = 0u64;
+    for i in 0..router.replica_count() {
+        let m = router.replica_metrics(i);
+        slots_refilled += m.slots_refilled.get();
+        admitted += m
+            .prefill_batch_size
+            .nonzero()
+            .iter()
+            .map(|&(rows, count)| rows as u64 * count)
+            .sum::<u64>();
+        prefill_batches += m.prefill_batch_size.total();
+        draft_forwards += m.draft_forward_us.count();
+        tokens_emitted += m.tokens_emitted.get();
+        prefill_positions += m.prefill_positions.get();
+        prompt_positions += m.prompt_positions.get();
     }
-    if metrics.draft_forward_us.count() == 0 {
-        eprintln!("soak FAILED: draft_forward_us histogram is empty");
-        failed = true;
+    let stats = router.prefix_stats();
+    let (hits, misses) = (stats.hits.get(), stats.misses.get());
+    println!(
+        "soak: {} replicas — refills {slots_refilled}, tokens {tokens_emitted}, \
+         prefix cache {hits} hits / {misses} misses, \
+         prefilled {prefill_positions}/{prompt_positions} prompt positions",
+        router.replica_count()
+    );
+    println!(
+        "soak: prefill batches {prefill_batches}, kv pages {} used / {} total",
+        router.pool().pages_used(),
+        router.pool().total_pages()
+    );
+
+    // --scale writes the serving-tier trajectory numbers next to the
+    // perf-smoke bench's (same schema: flat name -> number).
+    if scale {
+        let report = json::obj(vec![
+            ("soak_requests", json::num(sent as f64)),
+            ("soak_ok", json::num(ok as f64)),
+            ("soak_shed", json::num(shed as f64)),
+            ("soak_shed_rate", json::num(shed_rate)),
+            ("soak_p50_ms", json::num(p50)),
+            ("soak_p99_ms", json::num(p99)),
+            ("soak_wall_s", json::num(wall)),
+            ("soak_req_per_s", json::num(ok as f64 / wall.max(1e-9))),
+            ("prefix_cache_hits", json::num(hits as f64)),
+            ("prefix_cache_misses", json::num(misses as f64)),
+            ("prefill_positions", json::num(prefill_positions as f64)),
+            ("prompt_positions", json::num(prompt_positions as f64)),
+            (
+                "prefill_fraction",
+                json::num(prefill_positions as f64 / prompt_positions.max(1) as f64),
+            ),
+        ]);
+        std::fs::write("BENCH_ci.json", json::to_string(&report))?;
+        println!("soak: wrote BENCH_ci.json");
+    }
+
+    let mut failed = false;
+    let mut gate = |cond: bool, msg: &str| {
+        if !cond {
+            eprintln!("soak FAILED: {msg}");
+            failed = true;
+        }
+    };
+    gate(bad == 0, "bad responses (non-200/429, malformed shed, or transport errors)");
+    gate(ok > 0, "no request succeeded");
+    gate(ok + shed + bad == sent, "response accounting does not cover every request");
+    // Every client-visible 429 is one router shed — the counter in
+    // /metrics must agree with what clients observed.
+    gate(
+        shed as u64 == router.metrics.requests_shed_total.get(),
+        "client-observed 429s disagree with specd_requests_shed_total",
+    );
+    // Batched-admission accounting (DESIGN.md §11.3): every admitted row
+    // was part of exactly one batched prefill.
+    gate(
+        admitted == slots_refilled,
+        "prefill_batch_size weighted total disagrees with slots_refilled",
+    );
+    gate(draft_forwards > 0, "draft_forward_us histogram is empty");
+    if scale {
+        // The shared-prefix mix must actually exercise the cache, and
+        // warm admissions must have prefilled strictly fewer positions
+        // than the prompts contained (the suffix-only prefill win).
+        gate(hits > 0, "prefix cache saw no hits under the shared-prefix mix");
+        gate(
+            prefill_positions < prompt_positions,
+            "warm admissions did not reduce prefilled positions below prompt positions",
+        );
+        gate(shed_rate < 0.9, "shed rate >= 90% — serving tier is rejecting almost everything");
     }
     if failed {
         eprintln!("soak FAILED");
         std::process::exit(1);
     }
-    println!("soak passed: all responses 2xx/429, no hangs");
+    println!("soak passed: all responses 200 or shed-with-Retry-After, no hangs");
     Ok(())
 }

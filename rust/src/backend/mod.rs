@@ -146,6 +146,34 @@ pub struct RowSplice {
     pub len: usize,
 }
 
+/// One row mapping of a prefix-warm admission prefill
+/// ([`Backend::prefill_rows_prefixed`], DESIGN.md §14.3): like
+/// [`RowSplice`], plus an optional cached prompt-prefix KV whose first
+/// `prefix.1` positions are already exactly what a cold prefill of this
+/// row would write.  `tokens` still carries the **full** prompt for the
+/// row, so a backend that cannot exploit the prefix may ignore it and
+/// stay lossless by construction.
+///
+/// Not `derive`d `Clone`/`Copy` because a derive would bound `K` —
+/// manual impls below keep the borrow copyable for any cache type.
+#[derive(Debug)]
+pub struct PrefixSplice<'a, K> {
+    /// The plain splice mapping (scratch row → live slot, full length).
+    pub splice: RowSplice,
+    /// Cached prefix cache and its position count, when this admission
+    /// longest-prefix-matched the shared-prefix cache; row 0 of the
+    /// handed cache holds the prefix.  `None` = cold admission.
+    pub prefix: Option<(&'a K, usize)>,
+}
+
+impl<K> Clone for PrefixSplice<'_, K> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<K> Copy for PrefixSplice<'_, K> {}
+
 /// Output of one drafting call on the host-verify path.
 #[derive(Clone, Debug)]
 pub struct DraftOut {
@@ -234,6 +262,53 @@ pub trait Backend: Send + Sync + 'static {
             self.kv_splice(model, dst, s.dst_slot, &kv, s.src_row, s.len)?;
         }
         Ok(())
+    }
+
+    /// Prefix-warm batched admission prefill (DESIGN.md §14.3): like
+    /// [`Backend::prefill_rows`], but each mapping may carry a cached
+    /// prompt-prefix KV ([`PrefixSplice::prefix`]) whose positions are
+    /// bit-identical to what a cold prefill of that row would write.  A
+    /// backend that understands prefixes splices the cached positions in
+    /// and forwards **only the suffix** (per-row causal attention means
+    /// cache row `i` depends only on tokens `0..=i`, so the suffix rows
+    /// come out bit-identical — test-enforced in `tests/serve_tier.rs`).
+    /// The default implementation simply drops the prefixes and runs the
+    /// full cold prefill — lossless by construction, since `tokens`
+    /// always carries the complete prompt.
+    fn prefill_rows_prefixed(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        length: &[i32],
+        dst: &mut Self::Kv,
+        splices: &[PrefixSplice<'_, Self::Kv>],
+    ) -> anyhow::Result<()> {
+        let plain: Vec<RowSplice> = splices.iter().map(|s| s.splice).collect();
+        self.prefill_rows(model, tokens, length, dst, &plain)
+    }
+
+    /// Extract one row's leading `len` cache positions into a standalone
+    /// single-row cache — the prefix-cache ingest primitive (DESIGN.md
+    /// §14.3): the serving tier prefills a shared prompt prefix once,
+    /// extracts it, and `kv_splice`s it under every admission that
+    /// longest-prefix-matches.  Backends may return a *compact* cache
+    /// (ring = `len`), which is only ever a splice source, never
+    /// forwarded.  The default implementation prefills an inert batch
+    /// and splices the row over row 0 — full-ring, but correct.
+    fn kv_extract(
+        &self,
+        model: &str,
+        src: &Self::Kv,
+        src_row: usize,
+        len: usize,
+    ) -> anyhow::Result<Self::Kv> {
+        let info = self.info();
+        let (b, l) = (info.batch, info.max_len);
+        let tokens = vec![crate::models::vocab::PAD as i32; b * l];
+        let length = vec![1i32; b];
+        let mut kv = self.prefill(model, &tokens, &length)?;
+        self.kv_splice(model, &mut kv, 0, src, src_row, len)?;
+        Ok(kv)
     }
 
     /// One fused SpecDec iteration (paper Algorithm 3): draft `gamma`

@@ -32,7 +32,9 @@ use super::kernels::{
 };
 use super::pool::{ScopedJob, ThreadPool};
 use super::quant::{Precision, QuantLayer, QuantMatrix, QuantModel, QuantRows};
-use super::{Backend, BackendInfo, DraftOut, DraftRequest, RowSplice, SpecIterOut, StepOut};
+use super::{
+    Backend, BackendInfo, DraftOut, DraftRequest, PrefixSplice, RowSplice, SpecIterOut, StepOut,
+};
 use crate::draftset::{BranchPolicy, DraftSet, DraftTree, RowViews, TreeRow, TreeViews};
 use crate::models::{self, vocab, ModelDims};
 use crate::runtime::Manifest;
@@ -1470,6 +1472,46 @@ impl NativeBackend {
         let _ = self.forward_block(m, name, quant.as_deref(), kv, &tok_t, t, &start, false);
     }
 
+    /// Suffix-only prefill forward (DESIGN.md §14.3): like
+    /// [`NativeBackend::prefill_into`], but row `bi` starts at cache
+    /// position `start[bi]` — its positions `0..start[bi]` must already
+    /// hold that row's prefix KV (spliced from the prefix cache).
+    /// Because cache row `i` depends only on tokens `0..=i` (per-row
+    /// causal attention, positions processed against the same cache
+    /// contents a cold prefill would hold), the suffix rows come out
+    /// bit-identical to a cold full-prompt prefill — the warm-admission
+    /// losslessness argument, test-enforced in `tests/serve_tier.rs`.
+    fn prefill_suffix_into(
+        &self,
+        m: &NativeModel,
+        name: &str,
+        kv: &mut NativeKv,
+        tokens: &[i32],
+        length: &[i32],
+        start: &[i32],
+    ) {
+        let (b, l) = (self.info.batch, self.info.max_len);
+        let t = length
+            .iter()
+            .zip(start.iter())
+            .map(|(&len, &s)| (len.max(1) - s.max(0)).max(1) as usize)
+            .max()
+            .unwrap_or(1)
+            .min(l);
+        let mut tok_t = vec![vocab::PAD as i32; b * t];
+        for bi in 0..b {
+            let s = (start[bi].max(0) as usize).min(l);
+            // Prompts are < L/2 (admission guard) and starts are below a
+            // prompt length, so the window never clips against the ring
+            // and the write origin is never clamp-shifted.
+            debug_assert!(s + t <= l, "suffix window {s}+{t} overruns ring {l}");
+            let hi = (s + t).min(l);
+            tok_t[bi * t..bi * t + (hi - s)].copy_from_slice(&tokens[bi * l + s..bi * l + hi]);
+        }
+        let quant = self.draft_quant(name);
+        let _ = self.forward_block(m, name, quant.as_deref(), kv, &tok_t, t, start, false);
+    }
+
     /// Pending token per row: `tokens[b][length[b] - 1]` (clamped).
     fn gather_pending(&self, tokens: &[i32], length: &[i32]) -> Vec<i32> {
         let l = self.info.max_len;
@@ -2268,6 +2310,110 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
+    /// Prefix-warm batched admission prefill (DESIGN.md §14.3): splice
+    /// each cached prefix's positions into the scratch batch, forward
+    /// **only the suffixes** ([`NativeBackend::prefill_suffix_into`]),
+    /// then splice the completed rows over the live cache exactly like
+    /// [`Backend::prefill_rows`].  Bit-identical to the cold path because
+    /// cache row `i` depends only on tokens `0..=i` and the cached prefix
+    /// rows are exactly what the cold forward would have written
+    /// (test-enforced, `tests/serve_tier.rs`).
+    fn prefill_rows_prefixed(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        length: &[i32],
+        dst: &mut NativeKv,
+        splices: &[PrefixSplice<'_, NativeKv>],
+    ) -> anyhow::Result<()> {
+        if splices.iter().all(|s| s.prefix.is_none()) {
+            let plain: Vec<RowSplice> = splices.iter().map(|s| s.splice).collect();
+            return self.prefill_rows(model, tokens, length, dst, &plain);
+        }
+        self.check_shapes(tokens, length)?;
+        let m = self.model(model)?;
+        let geom = (m.dims.n_layers, m.dims.n_heads, m.dims.head_dim());
+        if (dst.n_layers, dst.n_heads, dst.head_dim) != geom || dst.max_len != self.info.max_len
+        {
+            return Err(anyhow!("prefill_rows_prefixed: dst cache does not belong to '{model}'"));
+        }
+        let (b, l) = (self.info.batch, self.info.max_len);
+        let mut start = vec![0i32; b];
+        for s in splices {
+            if s.splice.src_row >= b || s.splice.dst_slot >= dst.batch {
+                return Err(anyhow!(
+                    "prefill_rows_prefixed: row out of range (src {}/{b}, dst {}/{})",
+                    s.splice.src_row,
+                    s.splice.dst_slot,
+                    dst.batch
+                ));
+            }
+            if s.splice.len > length[s.splice.src_row].max(1) as usize {
+                return Err(anyhow!(
+                    "prefill_rows_prefixed: splice len {} exceeds prefilled length {} of row {}",
+                    s.splice.len,
+                    length[s.splice.src_row].max(1),
+                    s.splice.src_row
+                ));
+            }
+            if let Some((pkv, plen)) = s.prefix {
+                if (pkv.n_layers, pkv.n_heads, pkv.head_dim) != geom {
+                    return Err(anyhow!(
+                        "prefill_rows_prefixed: prefix cache does not belong to '{model}'"
+                    ));
+                }
+                if plen == 0 || plen > pkv.max_len || plen >= s.splice.len {
+                    return Err(anyhow!(
+                        "prefill_rows_prefixed: prefix len {plen} invalid for prompt len {}",
+                        s.splice.len
+                    ));
+                }
+                start[s.splice.src_row] = plen as i32;
+            }
+        }
+        let mut scratch = self.take_scratch(m, model, b, l);
+        for s in splices {
+            if let Some((pkv, plen)) = s.prefix {
+                copy_kv_span(&mut scratch, s.splice.src_row, pkv, 0, plen);
+            }
+        }
+        self.prefill_suffix_into(m, model, &mut scratch, tokens, length, &start);
+        for s in splices {
+            copy_kv_rows(dst, s.splice.dst_slot, &scratch, s.splice.src_row, s.splice.len);
+        }
+        self.put_scratch(model, scratch);
+        Ok(())
+    }
+
+    /// Compact single-row extract: the returned cache's ring is exactly
+    /// `len`, so a prefix cache holds `len` positions instead of a full
+    /// `(B, L)` batch — the memory footprint the page accounting in
+    /// [`crate::serve::KvPool`] charges for it.  Only ever a splice
+    /// source ([`copy_kv_span`] tolerates ring mismatches); it is never
+    /// forwarded.
+    fn kv_extract(
+        &self,
+        model: &str,
+        src: &NativeKv,
+        src_row: usize,
+        len: usize,
+    ) -> anyhow::Result<NativeKv> {
+        let m = self.model(model)?;
+        let geom = (m.dims.n_layers, m.dims.n_heads, m.dims.head_dim());
+        if (src.n_layers, src.n_heads, src.head_dim) != geom {
+            return Err(anyhow!("kv_extract: src cache does not belong to '{model}'"));
+        }
+        if src_row >= src.batch {
+            return Err(anyhow!("kv_extract: row {src_row} out of range ({} rows)", src.batch));
+        }
+        if len > src.max_len {
+            return Err(anyhow!("kv_extract: len {len} exceeds ring {}", src.max_len));
+        }
+        let mut out = NativeKv::zeros(&m.dims, 1, len.max(1));
+        copy_kv_span(&mut out, 0, src, src_row, len);
+        Ok(out)
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn spec_iter(
         &self,
@@ -2383,8 +2529,7 @@ impl Backend for NativeBackend {
         let m = self.model(model)?;
         let geom = (m.dims.n_layers, m.dims.n_heads, m.dims.head_dim());
         for (who, kv) in [("dst", &*dst), ("src", src)] {
-            if (kv.n_layers, kv.n_heads, kv.head_dim) != geom || kv.max_len != self.info.max_len
-            {
+            if (kv.n_layers, kv.n_heads, kv.head_dim) != geom {
                 return Err(anyhow!("kv_splice: {who} cache does not belong to '{model}'"));
             }
         }
@@ -2395,10 +2540,17 @@ impl Backend for NativeBackend {
                 src.batch
             ));
         }
-        if len > self.info.max_len {
-            return Err(anyhow!("kv_splice: len {len} exceeds ring {}", self.info.max_len));
+        // Rings may differ: extracted prefix caches are compact (ring =
+        // prefix length, [`Backend::kv_extract`]) and only ever splice
+        // *sources*.  The copy just needs `len` positions on both sides.
+        if len > dst.max_len || len > src.max_len {
+            return Err(anyhow!(
+                "kv_splice: len {len} exceeds ring (dst {}, src {})",
+                dst.max_len,
+                src.max_len
+            ));
         }
-        copy_kv_rows(dst, dst_slot, src, src_row, len);
+        copy_kv_span(dst, dst_slot, src, src_row, len);
         Ok(())
     }
 

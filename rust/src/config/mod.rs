@@ -257,6 +257,85 @@ impl ServerConfig {
     }
 }
 
+/// Serving-tier knobs (DESIGN.md §14): replica fan-out, the paged KV
+/// pool and the shared prompt-prefix cache.  Every `0` means "derive
+/// from the backend shapes at spawn" so partial configs stay valid
+/// across model-geometry changes.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Engine replicas, each with its own worker thread and KV slots.
+    pub replicas: usize,
+    /// KV positions per pool page.
+    pub page_size: usize,
+    /// Total pool pages; 0 = auto (fund every replica's full slot table
+    /// plus prefix-cache headroom).
+    pub kv_pages: usize,
+    /// Per-replica admission token budget (prompt + generation tokens
+    /// outstanding); 0 = auto (a few batches' worth).
+    pub token_budget: usize,
+    /// Prompt-prefix KV cache on/off.
+    pub prefix_cache: bool,
+    /// Shortest prefix worth caching; 0 = auto (one page).
+    pub min_prefix_len: usize,
+    /// Debug/test override: route everything to this replica instead of
+    /// least-outstanding-tokens placement.
+    pub pinned_replica: Option<usize>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 2,
+            page_size: 16,
+            kv_pages: 0,
+            token_budget: 0,
+            prefix_cache: true,
+            min_prefix_len: 0,
+            pinned_replica: None,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// The shape [`crate::coordinator::Coordinator`] runs the router in
+    /// to preserve its historical single-engine semantics: one replica,
+    /// no prefix cache, a pool that always funds the full slot table and
+    /// a token budget that never sheds (its `AdmissionGate` already
+    /// bounds in-flight requests).
+    pub fn single_engine() -> Self {
+        RouterConfig {
+            replicas: 1,
+            prefix_cache: false,
+            token_budget: usize::MAX / 4,
+            ..RouterConfig::default()
+        }
+    }
+
+    fn apply(&mut self, v: &Value) {
+        if let Some(x) = v.get("replicas").and_then(Value::as_usize) {
+            self.replicas = x.max(1);
+        }
+        if let Some(x) = v.get("page_size").and_then(Value::as_usize) {
+            self.page_size = x.max(1);
+        }
+        if let Some(x) = v.get("kv_pages").and_then(Value::as_usize) {
+            self.kv_pages = x;
+        }
+        if let Some(x) = v.get("token_budget").and_then(Value::as_usize) {
+            self.token_budget = x;
+        }
+        if let Some(x) = v.get("prefix_cache").and_then(Value::as_bool) {
+            self.prefix_cache = x;
+        }
+        if let Some(x) = v.get("min_prefix_len").and_then(Value::as_usize) {
+            self.min_prefix_len = x;
+        }
+        if let Some(x) = v.get("pinned_replica").and_then(Value::as_usize) {
+            self.pinned_replica = Some(x);
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Prompts per dataset per run (paper: 1000; scaled default).
@@ -293,6 +372,7 @@ pub struct Config {
     pub artifacts: Option<PathBuf>,
     pub engine: EngineConfig,
     pub server: ServerConfig,
+    pub router: RouterConfig,
     pub experiments: ExperimentConfig,
 }
 
@@ -308,6 +388,9 @@ impl Config {
         }
         if let Some(s) = v.get("server") {
             cfg.server.apply(s);
+        }
+        if let Some(r) = v.get("router") {
+            cfg.router.apply(r);
         }
         if let Some(x) = v.get("experiments") {
             cfg.experiments.apply(x);
@@ -369,6 +452,35 @@ mod tests {
         assert_eq!(c.artifacts_dir(), PathBuf::from("/tmp/a"));
         assert_eq!(c.server.addr, "0.0.0.0:9000");
         assert_eq!(c.experiments.seeds, vec![5, 6]);
+    }
+
+    #[test]
+    fn router_section_parses_and_defaults() {
+        let c = Config::default();
+        assert_eq!(c.router.replicas, 2);
+        assert!(c.router.prefix_cache);
+        assert_eq!(c.router.pinned_replica, None);
+        let c = Config::parse(
+            r#"{"router": {"replicas": 4, "page_size": 8, "kv_pages": 64,
+                "token_budget": 2048, "prefix_cache": false,
+                "min_prefix_len": 24, "pinned_replica": 1}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.router.replicas, 4);
+        assert_eq!(c.router.page_size, 8);
+        assert_eq!(c.router.kv_pages, 64);
+        assert_eq!(c.router.token_budget, 2048);
+        assert!(!c.router.prefix_cache);
+        assert_eq!(c.router.min_prefix_len, 24);
+        assert_eq!(c.router.pinned_replica, Some(1));
+        // degenerate values clamp rather than error (serving keeps running)
+        let c = Config::parse(r#"{"router": {"replicas": 0, "page_size": 0}}"#).unwrap();
+        assert_eq!(c.router.replicas, 1);
+        assert_eq!(c.router.page_size, 1);
+        // the coordinator's single-engine shape
+        let s = RouterConfig::single_engine();
+        assert_eq!(s.replicas, 1);
+        assert!(!s.prefix_cache);
     }
 
     #[test]

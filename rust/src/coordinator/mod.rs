@@ -1,16 +1,14 @@
-//! L3 coordinator: request queue, admission control and the continuous
-//! batcher that feeds the engine.
+//! L3 coordinator: the single-engine serving entry point.
 //!
-//! Architecture (vLLM-router-like, scaled to a single-process CPU
-//! backend): front-end threads enqueue [`GenRequest`]s into a bounded
-//! channel guarded by an atomic [`AdmissionGate`]; a dedicated worker
-//! thread runs a **continuous batcher** over the engine's `B` slots
-//! (DESIGN.md §7) — queued requests are spliced into freed slots
-//! mid-decode via [`crate::backend::Backend::kv_splice`], every slot
-//! replies the moment its own row finishes, and mixed-length traffic no
-//! longer decodes at the speed of the slowest row in a batch.  Responses
-//! flow back through per-request oneshot channels.  Everything is
-//! std-only: the offline image has no tokio.
+//! Historically this module owned the continuous batcher directly; the
+//! batcher now lives in the serving tier ([`crate::serve::Router`],
+//! DESIGN.md §14) and [`Coordinator`] is a thin shim over a one-replica
+//! router with the prefix cache off and a pool that always funds the
+//! full slot table ([`crate::config::RouterConfig::single_engine`]) —
+//! exactly the old semantics, one batcher implementation.  The queue
+//! primitives (two-lane tenant-fair [`RequestQueue`], [`TokenBucket`],
+//! [`AdmissionGate`], [`SlotTable`]) live in [`queue`] and are shared
+//! with the router's replica workers.
 //!
 //! [`Coordinator::spawn`] is generic over [`Backend`]; the handle itself
 //! is type-erased (the worker thread owns the engine), so the HTTP server
@@ -18,20 +16,18 @@
 
 pub mod queue;
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::backend::Backend;
-use crate::config::{EngineConfig, ServerConfig};
-use crate::engine::spec::{Admission, DecodeState, SpecEngine};
-use crate::engine::{RowResult, RowTracker};
+use crate::config::{EngineConfig, RouterConfig, ServerConfig};
+use crate::engine::RowResult;
 use crate::metrics::EngineMetrics;
-use crate::verify::Rng;
+use crate::serve::{Router, ServeRequest};
 
-pub use queue::{AdmissionError, AdmissionGate, RequestQueue, SlotTable};
+pub use queue::{AdmissionError, AdmissionGate, Lane, RequestQueue, SlotTable, TokenBucket};
 
 /// A generation request as accepted by the coordinator.
 #[derive(Debug, Clone)]
@@ -47,12 +43,10 @@ pub struct GenRequest {
     pub enqueued: Instant,
 }
 
-type Reply = std::sync::mpsc::SyncSender<Result<RowResult>>;
-
 /// The coordinator handle cloned into server handlers.
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: SyncSender<(GenRequest, Reply)>,
+    router: Router,
     pub metrics: Arc<EngineMetrics>,
     gate: Arc<AdmissionGate>,
 }
@@ -64,237 +58,34 @@ impl Coordinator {
         engine_cfg: EngineConfig,
         server_cfg: &ServerConfig,
     ) -> Result<Coordinator> {
-        let engine = SpecEngine::new(backend, engine_cfg)?;
-        let metrics = engine.metrics.clone();
         let limit = server_cfg.queue_limit.max(1);
-        let (tx, rx) = sync_channel(limit);
-        let batch_wait = Duration::from_millis(server_cfg.batch_wait_ms);
-        let m2 = metrics.clone();
-        std::thread::Builder::new()
-            .name("specd-batcher".into())
-            .spawn(move || batch_worker(engine, rx, batch_wait, m2))
-            .map_err(|e| anyhow!("spawning batcher: {e}"))?;
-        Ok(Coordinator { tx, metrics, gate: Arc::new(AdmissionGate::new(limit)) })
+        let router =
+            Router::spawn(backend, engine_cfg, server_cfg, &RouterConfig::single_engine())?;
+        let metrics = router.replica_metrics(0);
+        Ok(Coordinator { router, metrics, gate: Arc::new(AdmissionGate::new(limit)) })
     }
 
     /// Enqueue a request and block until its row completes.
     pub fn generate(&self, req: GenRequest) -> Result<RowResult> {
         // Single atomic check-and-increment: concurrent callers can never
-        // exceed `queue_limit` (see AdmissionGate).
+        // exceed `queue_limit` (see AdmissionGate).  With the gate bounding
+        // in-flight requests to the replica's channel depth, the
+        // single-engine router never sheds.
         if !self.gate.try_acquire() {
             return Err(anyhow!("queue full — admission rejected"));
         }
-        let (otx, orx) = sync_channel(1);
-        self.metrics.requests_enqueued.inc();
-        let res = (|| {
-            self.tx
-                .try_send((req, otx))
-                .map_err(|_| anyhow!("queue full — admission rejected"))?;
-            orx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
-        })();
+        let res = self
+            .router
+            .generate(ServeRequest {
+                prompt: req.prompt,
+                max_new_tokens: req.max_new_tokens,
+                seed: req.seed,
+                lane: Lane::Interactive,
+                tenant: 0,
+                enqueued: req.enqueued,
+            })
+            .map_err(|e| anyhow!("{e}"));
         self.gate.release();
         res
     }
-}
-
-/// Per-slot request bookkeeping held by the worker.
-struct SlotReq {
-    tracker: RowTracker,
-    reply: Reply,
-    enqueued: Instant,
-}
-
-/// Continuous batching loop: admit queued requests into free engine slots
-/// the moment they open (including mid-decode), step the fused engine over
-/// the live batch, and reply per row as it finishes.
-fn batch_worker<B: Backend>(
-    engine: SpecEngine<B>,
-    rx: Receiver<(GenRequest, Reply)>,
-    batch_wait: Duration,
-    metrics: Arc<EngineMetrics>,
-) {
-    let b = engine.backend().info().batch;
-    let gamma = engine.cfg.gamma;
-    let default_max_new = engine.cfg.max_new_tokens;
-    // Admission seeds for requests that do not pin their own; requests
-    // that need reproducibility set `GenRequest::seed`.
-    let mut seed_rng = Rng::new(0xc0ffee0 ^ 0x9E3779B97F4A7C15);
-    // The decode stream is built lazily (first admission) and rebuilt
-    // after a device-level failure.
-    let mut state: Option<DecodeState<B>> = None;
-    let mut slots: SlotTable<SlotReq> = SlotTable::new(b);
-    'serve: loop {
-        // --- gather incoming requests, bounded by free slots --------------
-        let mut incoming: Vec<(GenRequest, Reply)> = Vec::new();
-        if slots.is_empty() {
-            // Idle: block for the next request, then give stragglers
-            // `batch_wait` to land so bursts start as one batch.
-            match rx.recv() {
-                Ok(x) => incoming.push(x),
-                Err(_) => return, // all senders dropped: shut down
-            }
-            let deadline = Instant::now() + batch_wait;
-            while incoming.len() < b {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(x) => incoming.push(x),
-                    Err(_) => break,
-                }
-            }
-        } else {
-            // Mid-decode: non-blocking refill of freed slots only — the
-            // live rows must not wait on the queue.
-            while incoming.len() < slots.free() {
-                match rx.try_recv() {
-                    Ok(x) => incoming.push(x),
-                    Err(_) => break,
-                }
-            }
-        }
-
-        // --- admit into free slots (one batched prefill per tick) ---------
-        // All of this tick's admissions share a single batched prefill
-        // ([`SpecEngine::admit_rows`] → `Backend::prefill_rows`): m
-        // admissions cost one forward pass instead of m, and the slot
-        // table is only touched before and after that forward — never
-        // held across it — so the admission critical section no longer
-        // scales with prompt length (the old loop ran one full prefill
-        // per request between bookkeeping steps).  FIFO is preserved:
-        // requests arrive in queue order and are assigned ascending free
-        // slots in that order, with per-request seeds drawn in the same
-        // order as the old per-row loop.
-        if !incoming.is_empty() {
-            match ensure_stream(&engine, &mut state) {
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for (_, reply) in incoming {
-                        let _ = reply.send(Err(anyhow!("{msg}")));
-                    }
-                }
-                Ok(st) => {
-                    let free = slots.free_slots();
-                    debug_assert!(incoming.len() <= free.len(), "admissions exceed free slots");
-                    let pending: Vec<(usize, GenRequest, Reply, u64)> = incoming
-                        .into_iter()
-                        .zip(free)
-                        .map(|((req, reply), slot)| {
-                            let row_seed = req.seed.unwrap_or_else(|| seed_rng.next_u64());
-                            metrics.queue_wait.observe(req.enqueued.elapsed());
-                            (slot, req, reply, row_seed)
-                        })
-                        .collect();
-                    let results = {
-                        let admissions: Vec<Admission<'_>> = pending
-                            .iter()
-                            .map(|(slot, req, _, row_seed)| Admission {
-                                slot: *slot,
-                                prompt: &req.prompt,
-                                row_seed: *row_seed,
-                            })
-                            .collect();
-                        engine.admit_rows(st, &admissions)
-                    };
-                    for ((slot, req, reply, _), res) in pending.into_iter().zip(results) {
-                        match res {
-                            Ok(()) => {
-                                let max_new =
-                                    req.max_new_tokens.unwrap_or(default_max_new).max(1);
-                                slots.occupy(
-                                    slot,
-                                    SlotReq {
-                                        tracker: RowTracker::new(true, max_new),
-                                        reply,
-                                        enqueued: req.enqueued,
-                                    },
-                                );
-                            }
-                            // Admission errors (over-long prompt, bad
-                            // state) reject just this request; the live
-                            // batch and the tick's other admissions are
-                            // untouched.
-                            Err(e) => {
-                                let _ = reply.send(Err(e));
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        if slots.is_empty() {
-            continue 'serve;
-        }
-
-        // --- one fused engine step over the live batch --------------------
-        let st = state.as_mut().expect("occupied slots imply a live stream");
-        let out = match engine.step_stream(st) {
-            Ok(out) => out,
-            Err(e) => {
-                // Device-level failure: fail every in-flight request and
-                // rebuild the stream on the next admission.
-                let msg = format!("{e:#}");
-                for (_, sr) in slots.drain() {
-                    let _ = sr.reply.send(Err(anyhow!("{msg}")));
-                }
-                state = None;
-                continue 'serve;
-            }
-        };
-
-        // --- absorb per-row outcomes; reply and free rows as they finish --
-        metrics.slot_iters_total.add(b as u64);
-        metrics.slot_iters_busy.add(slots.occupied() as u64);
-        let mut finished: Vec<usize> = Vec::new();
-        for (i, sr) in slots.iter_occupied_mut() {
-            let tau = out.tau[i] as usize;
-            let row: Vec<u32> = out.emitted[i * (gamma + 1)..i * (gamma + 1) + tau + 1]
-                .iter()
-                .map(|&x| x as u32)
-                .collect();
-            sr.tracker.absorb(&row, tau, out.done[i] != 0);
-            metrics.tokens_emitted.add(row.len() as u64);
-            metrics.drafts_accepted.add(tau as u64);
-            metrics.accepted_len_hist.observe(tau);
-            metrics.iterations.inc();
-            if !sr.tracker.active() {
-                finished.push(i);
-            }
-        }
-        let any_finished = !finished.is_empty();
-        for i in finished {
-            let sr = slots.release(i).expect("finished slot was occupied");
-            metrics.requests_completed.inc();
-            metrics.request_latency.observe(sr.enqueued.elapsed());
-            let result = sr.tracker.into_result();
-            let _ = sr.reply.send(Ok(result));
-            engine.release_row(st, i);
-        }
-        if slots.is_empty() {
-            metrics.batches.inc();
-        }
-        if any_finished {
-            // Per-row drain boundary: the step's outputs were read back
-            // above, so every outstanding upload is complete and the
-            // backend can release per-batch resources (pinned literals on
-            // PJRT).  Keyed on row completion — not on the batch emptying
-            // — so sustained traffic that never idles the batcher cannot
-            // grow the pinned set without bound.  (Deliberately skipped on
-            // the step-error path above: a failed execution may not have
-            // read its uploads back.)
-            engine.backend().end_batch();
-        }
-    }
-}
-
-/// Lazily build (or rebuild after failure) the worker's decode stream.
-fn ensure_stream<'a, B: Backend>(
-    engine: &SpecEngine<B>,
-    state: &'a mut Option<DecodeState<B>>,
-) -> Result<&'a mut DecodeState<B>> {
-    if state.is_none() {
-        *state = Some(engine.begin_stream()?);
-    }
-    Ok(state.as_mut().expect("just ensured"))
 }

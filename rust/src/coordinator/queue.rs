@@ -1,9 +1,14 @@
-//! Admission control and slot bookkeeping for the coordinator:
+//! Admission control and slot bookkeeping for the serving tier:
 //!
-//! * [`RequestQueue`] — bounded FIFO with prompt validation, a
-//!   standalone, testable model of the channel-level backpressure policy.
-//! * [`AdmissionGate`] — the atomic in-flight limiter guarding
-//!   [`crate::coordinator::Coordinator::generate`].
+//! * [`RequestQueue`] — bounded two-lane queue (interactive / batch) with
+//!   per-tenant round-robin inside each lane and prompt validation; the
+//!   standalone, testable model of the replica worker's scheduling policy
+//!   (DESIGN.md §14.4 — strict FIFO retired).
+//! * [`TokenBucket`] — the atomic budget limiter the router charges
+//!   per-replica admission costs against (DESIGN.md §14.2).
+//! * [`AdmissionGate`] — the in-flight limiter guarding
+//!   [`crate::coordinator::Coordinator::generate`]; a unit-cost
+//!   [`TokenBucket`].
 //! * [`SlotTable`] — which engine slots the continuous batcher has
 //!   occupied, and with what (DESIGN.md §7).
 
@@ -30,20 +35,120 @@ impl std::fmt::Display for AdmissionError {
     }
 }
 
-/// FIFO queue with a hard limit and prompt validation.
+/// Scheduling lane of a queued request: [`Lane::Interactive`] is always
+/// served before [`Lane::Batch`] (strict lane priority); *within* a lane
+/// tenants are served round-robin, so no tenant can starve another by
+/// flooding (DESIGN.md §14.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Lane {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+/// One lane of the two-lane queue: per-tenant FIFO sub-queues drained
+/// round-robin.  `cursor` remembers which tenant is served next, so the
+/// rotation survives across `take_batch` calls.
+#[derive(Debug)]
+struct LaneQueue<T> {
+    tenants: Vec<(u64, VecDeque<(Vec<u32>, T)>)>,
+    cursor: usize,
+    len: usize,
+}
+
+impl<T> Default for LaneQueue<T> {
+    fn default() -> Self {
+        LaneQueue { tenants: Vec::new(), cursor: 0, len: 0 }
+    }
+}
+
+impl<T> LaneQueue<T> {
+    fn sub(&mut self, tenant: u64) -> &mut VecDeque<(Vec<u32>, T)> {
+        if let Some(i) = self.tenants.iter().position(|(t, _)| *t == tenant) {
+            return &mut self.tenants[i].1;
+        }
+        // New tenants join *behind* the current rotation point, so they
+        // wait at most one full rotation before being served.
+        self.tenants.push((tenant, VecDeque::new()));
+        &mut self.tenants.last_mut().expect("just pushed").1
+    }
+
+    fn push_back(&mut self, tenant: u64, prompt: Vec<u32>, payload: T) {
+        self.sub(tenant).push_back((prompt, payload));
+        self.len += 1;
+    }
+
+    fn push_front(&mut self, tenant: u64, prompt: Vec<u32>, payload: T) {
+        self.sub(tenant).push_front((prompt, payload));
+        self.len += 1;
+    }
+
+    /// Pop one request from the tenant at the rotation cursor, advancing
+    /// the rotation.  Tenants whose sub-queue drains are removed (their
+    /// next request re-enters behind the rotation).
+    fn pop(&mut self) -> Option<(Vec<u32>, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        self.cursor %= self.tenants.len();
+        let q = &mut self.tenants[self.cursor].1;
+        let item = q.pop_front().expect("non-empty lane has non-empty tenant queues");
+        self.len -= 1;
+        if q.is_empty() {
+            // Removing at the cursor makes the cursor point at the next
+            // tenant already — no advance needed.
+            self.tenants.remove(self.cursor);
+        } else {
+            self.cursor += 1;
+        }
+        if !self.tenants.is_empty() {
+            self.cursor %= self.tenants.len();
+        } else {
+            self.cursor = 0;
+        }
+        Some(item)
+    }
+}
+
+/// Bounded two-lane request queue with per-tenant fairness: interactive
+/// requests are always served before batch requests, and within a lane
+/// tenants are drained round-robin (one request per tenant per turn).
+/// [`RequestQueue::push`] is the single-tenant interactive shorthand the
+/// pre-§14 FIFO callers keep using — with one lane and one tenant, the
+/// round-robin degenerates to exactly the old FIFO order.
 #[derive(Debug)]
 pub struct RequestQueue<T> {
-    items: VecDeque<(Vec<u32>, T)>,
+    interactive: LaneQueue<T>,
+    batch: LaneQueue<T>,
     pub limit: usize,
     pub max_prompt_len: usize,
 }
 
 impl<T> RequestQueue<T> {
     pub fn new(limit: usize, max_prompt_len: usize) -> Self {
-        RequestQueue { items: VecDeque::new(), limit, max_prompt_len }
+        RequestQueue {
+            interactive: LaneQueue::default(),
+            batch: LaneQueue::default(),
+            limit,
+            max_prompt_len,
+        }
     }
 
+    /// Enqueue as tenant 0 on the interactive lane (the single-tenant
+    /// FIFO shorthand).
     pub fn push(&mut self, prompt: Vec<u32>, payload: T) -> Result<(), AdmissionError> {
+        self.push_with(prompt, Lane::Interactive, 0, payload)
+    }
+
+    /// Enqueue on `lane` as `tenant`, validating the prompt and the
+    /// queue bound.
+    pub fn push_with(
+        &mut self,
+        prompt: Vec<u32>,
+        lane: Lane,
+        tenant: u64,
+        payload: T,
+    ) -> Result<(), AdmissionError> {
         if prompt.len() < 2 {
             return Err(AdmissionError::PromptTooShort);
         }
@@ -53,68 +158,119 @@ impl<T> RequestQueue<T> {
                 max: self.max_prompt_len,
             });
         }
-        if self.items.len() >= self.limit {
+        if self.len() >= self.limit {
             return Err(AdmissionError::QueueFull { limit: self.limit });
         }
-        self.items.push_back((prompt, payload));
+        match lane {
+            Lane::Interactive => self.interactive.push_back(tenant, prompt, payload),
+            Lane::Batch => self.batch.push_back(tenant, prompt, payload),
+        }
         Ok(())
     }
 
-    /// Drain up to `n` requests in FIFO order.
+    /// Put a request back at the *front* of its tenant's sub-queue,
+    /// bypassing validation and the queue bound — the replica worker's
+    /// deferral path for admissions that stalled on a KV-page lease
+    /// (DESIGN.md §14.2): the request already passed admission once and
+    /// must not lose its position or be shed for re-entering.
+    pub fn requeue(&mut self, prompt: Vec<u32>, lane: Lane, tenant: u64, payload: T) {
+        match lane {
+            Lane::Interactive => self.interactive.push_front(tenant, prompt, payload),
+            Lane::Batch => self.batch.push_front(tenant, prompt, payload),
+        }
+    }
+
+    /// Drain up to `n` requests: the interactive lane first, tenants
+    /// round-robin within each lane.
     pub fn take_batch(&mut self, n: usize) -> Vec<(Vec<u32>, T)> {
-        let k = n.min(self.items.len());
-        self.items.drain(..k).collect()
+        let mut out = Vec::with_capacity(n.min(self.len()));
+        while out.len() < n {
+            match self.interactive.pop().or_else(|| self.batch.pop()) {
+                Some(item) => out.push(item),
+                None => break,
+            }
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.interactive.len + self.batch.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len() == 0
     }
 }
 
-/// Atomic in-flight limiter: at most `limit` concurrent holders.  The
-/// check and the increment are one atomic `fetch_update`, so concurrent
-/// callers can never overshoot — unlike the load-then-increment pattern
-/// it replaced, where two threads could both observe `limit - 1` and both
-/// enter.
+/// Atomic token-budget limiter: at most `capacity` tokens outstanding,
+/// acquired in variable-size chunks.  The router charges each request's
+/// worst-case token footprint (prompt + generation budget) against its
+/// replica's bucket, so per-replica queueing is bounded by *work*, not
+/// request count — the [`AdmissionGate`] generalisation the serving tier
+/// sheds load with (DESIGN.md §14.2).  Check and decrement are one
+/// atomic `fetch_update`, so concurrent callers can never overshoot.
+#[derive(Debug)]
+pub struct TokenBucket {
+    available: AtomicUsize,
+    capacity: usize,
+}
+
+impl TokenBucket {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        TokenBucket { available: AtomicUsize::new(capacity), capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn available(&self) -> usize {
+        self.available.load(Ordering::Acquire)
+    }
+
+    /// Try to take `n` tokens; pair every success with exactly one
+    /// `release(n)`.  `n > capacity` never succeeds.
+    pub fn try_acquire(&self, n: usize) -> bool {
+        self.available
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |avail| avail.checked_sub(n))
+            .is_ok()
+    }
+
+    pub fn release(&self, n: usize) {
+        let prev = self.available.fetch_add(n, Ordering::AcqRel);
+        debug_assert!(prev + n <= self.capacity, "token bucket over-released");
+    }
+}
+
+/// Atomic in-flight limiter: at most `limit` concurrent holders — a
+/// unit-cost [`TokenBucket`], kept as the coordinator-facing API.
 #[derive(Debug)]
 pub struct AdmissionGate {
-    inflight: AtomicUsize,
-    limit: usize,
+    bucket: TokenBucket,
 }
 
 impl AdmissionGate {
     pub fn new(limit: usize) -> Self {
-        AdmissionGate { inflight: AtomicUsize::new(0), limit: limit.max(1) }
+        AdmissionGate { bucket: TokenBucket::new(limit) }
     }
 
     pub fn limit(&self) -> usize {
-        self.limit
+        self.bucket.capacity()
     }
 
     /// Try to take a slot; pair every success with exactly one
     /// [`AdmissionGate::release`].
     pub fn try_acquire(&self) -> bool {
-        self.inflight
-            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
-                if n < self.limit {
-                    Some(n + 1)
-                } else {
-                    None
-                }
-            })
-            .is_ok()
+        self.bucket.try_acquire(1)
     }
 
     pub fn release(&self) {
-        self.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.bucket.release(1);
     }
 
     pub fn inflight(&self) -> usize {
-        self.inflight.load(Ordering::Acquire)
+        self.bucket.capacity() - self.bucket.available()
     }
 }
 
@@ -224,6 +380,65 @@ mod tests {
         q.push(vec![1, 3], 0u32).unwrap();
         assert_eq!(q.take_batch(8).len(), 1);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interactive_lane_served_before_batch() {
+        let mut q = RequestQueue::new(16, 32);
+        q.push_with(vec![1, 3], Lane::Batch, 0, "b0").unwrap();
+        q.push_with(vec![1, 3], Lane::Batch, 0, "b1").unwrap();
+        q.push_with(vec![1, 3], Lane::Interactive, 0, "i0").unwrap();
+        let got: Vec<_> = q.take_batch(3).into_iter().map(|(_, p)| p).collect();
+        assert_eq!(got, vec!["i0", "b0", "b1"]);
+    }
+
+    /// The starvation regression strict FIFO had: a tenant flooding the
+    /// queue ahead of everyone else used to monopolise every scheduler
+    /// tick.  Under per-tenant round-robin, a late light tenant is served
+    /// on the very next rotation regardless of how deep the heavy
+    /// tenant's backlog is.
+    #[test]
+    fn heavy_tenant_cannot_starve_light_tenant() {
+        let mut q = RequestQueue::new(64, 32);
+        for i in 0..40u32 {
+            q.push_with(vec![1, 3, 20 + i], Lane::Interactive, 7, ("heavy", i)).unwrap();
+        }
+        q.push_with(vec![1, 3], Lane::Interactive, 8, ("light", 0)).unwrap();
+        // One rotation: the light tenant's request is in the first pair
+        // drained, not behind 40 heavy requests.
+        let got: Vec<_> = q.take_batch(2).into_iter().map(|(_, p)| p).collect();
+        assert!(got.contains(&("light", 0)), "light tenant starved: {got:?}");
+        // Heavy requests still drain in their own FIFO order.
+        let rest: Vec<_> = q.take_batch(3).into_iter().map(|(_, p)| p.1).collect();
+        assert_eq!(rest, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn requeue_keeps_position_and_bypasses_limit() {
+        let mut q = RequestQueue::new(2, 32);
+        q.push(vec![1, 3, 20], "a").unwrap();
+        q.push(vec![1, 3, 21], "b").unwrap();
+        assert_eq!(q.push(vec![1, 3, 22], "c"), Err(AdmissionError::QueueFull { limit: 2 }));
+        let (prompt, payload) = q.take_batch(1).pop().unwrap();
+        assert_eq!(payload, "a");
+        // Deferred admission goes back to the *front*, even at the limit.
+        q.requeue(prompt, Lane::Interactive, 0, "a");
+        let got: Vec<_> = q.take_batch(2).into_iter().map(|(_, p)| p).collect();
+        assert_eq!(got, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn token_bucket_charges_and_releases() {
+        let b = TokenBucket::new(100);
+        assert_eq!(b.capacity(), 100);
+        assert!(b.try_acquire(60));
+        assert!(!b.try_acquire(50), "only 40 tokens left");
+        assert!(b.try_acquire(40));
+        assert_eq!(b.available(), 0);
+        b.release(60);
+        b.release(40);
+        assert_eq!(b.available(), 100);
+        assert!(!b.try_acquire(101), "cost above capacity never admits");
     }
 
     /// Regression test for the racy admission check: the old coordinator

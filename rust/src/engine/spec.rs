@@ -25,7 +25,7 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
-use crate::backend::{Backend, RowSplice, SpecIterOut};
+use crate::backend::{Backend, PrefixSplice, RowSplice, SpecIterOut};
 use crate::config::EngineConfig;
 use crate::metrics::EngineMetrics;
 use crate::models::vocab;
@@ -246,6 +246,54 @@ impl<B: Backend> SpecEngine<B> {
         st: &mut DecodeState<B>,
         admissions: &[Admission<'_>],
     ) -> Vec<anyhow::Result<()>> {
+        let cold: Vec<Option<PrefixHandle<'_, B>>> = admissions.iter().map(|_| None).collect();
+        self.admit_rows_prefixed(st, admissions, &cold)
+    }
+
+    /// Prefill a shared prompt prefix once and extract it as a pair of
+    /// standalone single-row caches (target, drafter) — the prefix-cache
+    /// ingest path (DESIGN.md §14.3).  The returned caches hold exactly
+    /// the KV a cold prefill of any prompt starting with `prefix` would
+    /// write at positions `0..prefix.len()` (per-row causal attention:
+    /// cache row `i` depends only on tokens `0..=i`), which is what makes
+    /// splicing them under a later admission lossless.  `prefix` must
+    /// satisfy the same bounds as a prompt (`2 <= len < L/2`).
+    pub fn prefill_prefix(&self, prefix: &[u32]) -> anyhow::Result<(B::Kv, B::Kv)> {
+        let info = self.backend.info();
+        let (b, l) = (info.batch, info.max_len);
+        if prefix.len() < 2 || prefix.len() >= l / 2 {
+            return Err(anyhow!(
+                "prefix length {} outside the cacheable range 2..{} (max_len {l})",
+                prefix.len(),
+                l / 2
+            ));
+        }
+        let padded = pad_prompts(&[prefix.to_vec()], b);
+        let (tokens, length) = layout_prompts(info, &padded);
+        let kv_t = self.backend.prefill("target", &tokens, &length)?;
+        let kv_d = self.backend.prefill(&self.cfg.drafter, &tokens, &length)?;
+        let out_t = self.backend.kv_extract("target", &kv_t, 0, prefix.len())?;
+        let out_d = self.backend.kv_extract(&self.cfg.drafter, &kv_d, 0, prefix.len())?;
+        Ok((out_t, out_d))
+    }
+
+    /// [`SpecEngine::admit_rows`] with an optional cached prompt-prefix
+    /// per admission (DESIGN.md §14.3): admissions carrying a
+    /// [`PrefixHandle`] get the cached positions spliced into the scratch
+    /// batch and only their suffix forwarded
+    /// ([`Backend::prefill_rows_prefixed`]) — bit-identical to the cold
+    /// path (test-enforced, `tests/serve_tier.rs`), so callers may attach
+    /// prefixes opportunistically.  The caller is responsible for the
+    /// *match*: `prefixes[i]`, when present, must hold the KV of the
+    /// first `len` tokens of `admissions[i].prompt` (the serving tier
+    /// guarantees this by keying its cache on the exact token prefix).
+    pub fn admit_rows_prefixed(
+        &self,
+        st: &mut DecodeState<B>,
+        admissions: &[Admission<'_>],
+        prefixes: &[Option<PrefixHandle<'_, B>>],
+    ) -> Vec<anyhow::Result<()>> {
+        assert_eq!(admissions.len(), prefixes.len(), "one prefix slot per admission");
         let info = self.backend.info();
         let (b, l) = (info.batch, info.max_len);
         let mut results: Vec<Option<anyhow::Result<()>>> =
@@ -267,6 +315,15 @@ impl<B: Backend> SpecEngine<B> {
                     "prompt length {} exceeds the ring budget {} (max_len {l})",
                     a.prompt.len(),
                     l / 2 - 1
+                ))
+            } else if prefixes[i]
+                .as_ref()
+                .is_some_and(|p| p.len == 0 || p.len >= a.prompt.len())
+            {
+                Some(anyhow!(
+                    "prefix length {} invalid for prompt length {}",
+                    prefixes[i].as_ref().map_or(0, |p| p.len),
+                    a.prompt.len()
                 ))
             } else {
                 None
@@ -290,25 +347,46 @@ impl<B: Backend> SpecEngine<B> {
                 valid.iter().map(|&i| admissions[i].prompt.to_vec()).collect();
             let padded = pad_prompts(&prompts, b);
             let (scratch_toks, scratch_lens) = layout_prompts(info, &padded);
-            let splices: Vec<RowSplice> = valid
+            // Per-model splice maps: same row layout, each model spliced
+            // from its own cached prefix (target and drafter caches are
+            // separate models with separate KV).
+            let splice_for = |r: usize, i: usize| RowSplice {
+                src_row: r,
+                dst_slot: admissions[i].slot,
+                len: admissions[i].prompt.len(),
+            };
+            let splices_t: Vec<PrefixSplice<'_, B::Kv>> = valid
                 .iter()
                 .enumerate()
-                .map(|(r, &i)| RowSplice {
-                    src_row: r,
-                    dst_slot: admissions[i].slot,
-                    len: admissions[i].prompt.len(),
+                .map(|(r, &i)| PrefixSplice {
+                    splice: splice_for(r, i),
+                    prefix: prefixes[i].as_ref().map(|p| (p.kv_target, p.len)),
+                })
+                .collect();
+            let splices_d: Vec<PrefixSplice<'_, B::Kv>> = valid
+                .iter()
+                .enumerate()
+                .map(|(r, &i)| PrefixSplice {
+                    splice: splice_for(r, i),
+                    prefix: prefixes[i].as_ref().map(|p| (p.kv_drafter, p.len)),
                 })
                 .collect();
             let prefilled = self
                 .backend
-                .prefill_rows("target", &scratch_toks, &scratch_lens, &mut st.kv_target, &splices)
+                .prefill_rows_prefixed(
+                    "target",
+                    &scratch_toks,
+                    &scratch_lens,
+                    &mut st.kv_target,
+                    &splices_t,
+                )
                 .and_then(|()| {
-                    self.backend.prefill_rows(
+                    self.backend.prefill_rows_prefixed(
                         &self.cfg.drafter,
                         &scratch_toks,
                         &scratch_lens,
                         &mut st.kv_drafter,
-                        &splices,
+                        &splices_d,
                     )
                 });
             match prefilled {
@@ -335,6 +413,12 @@ impl<B: Backend> SpecEngine<B> {
                         st.length[a.slot] = a.prompt.len() as i32;
                         st.row_rngs[a.slot] = Some(Rng::new(a.row_seed ^ SEED_DOMAIN));
                         self.metrics.slots_refilled.inc();
+                        // Prefill-work accounting: positions the forward
+                        // actually covered vs. the whole prompt — the
+                        // prefix-cache win is the gap between the two.
+                        let plen = prefixes[i].as_ref().map_or(0, |p| p.len);
+                        self.metrics.prompt_positions.add(a.prompt.len() as u64);
+                        self.metrics.prefill_positions.add((a.prompt.len() - plen) as u64);
                         results[i] = Some(Ok(()));
                     }
                 }
@@ -406,6 +490,28 @@ pub struct Admission<'a> {
     pub prompt: &'a [u32],
     pub row_seed: u64,
 }
+
+/// A cached prompt prefix attached to one admission
+/// ([`SpecEngine::admit_rows_prefixed`]): the pair of single-row caches
+/// [`SpecEngine::prefill_prefix`] produced for the first `len` tokens of
+/// the prompt.  Manual `Clone`/`Copy` impls — a derive would wrongly
+/// bound `B` itself.
+pub struct PrefixHandle<'a, B: Backend> {
+    /// Target-model KV of the prefix (row 0 holds it).
+    pub kv_target: &'a B::Kv,
+    /// Drafter-model KV of the prefix (row 0 holds it).
+    pub kv_drafter: &'a B::Kv,
+    /// Prefix length in tokens; must be `1..prompt.len()`.
+    pub len: usize,
+}
+
+impl<B: Backend> Clone for PrefixHandle<'_, B> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<B: Backend> Copy for PrefixHandle<'_, B> {}
 
 /// Live state of a continuously batched decode stream: the host
 /// token/length rings, both KV caches, and one iteration-seed stream per

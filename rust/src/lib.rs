@@ -37,6 +37,7 @@ pub mod util;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod stats;

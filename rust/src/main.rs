@@ -19,10 +19,10 @@ use anyhow::{bail, Result};
 
 use specd::backend::{Backend, NativeBackend};
 use specd::config::{Config, EngineConfig, ExperimentConfig};
-use specd::coordinator::Coordinator;
 use specd::engine::host::HostVerifyEngine;
 use specd::engine::spec::SpecEngine;
 use specd::experiments::{motivating_table, Harness};
+use specd::serve::Router;
 use specd::server::{serve, ServerState};
 use specd::sim::{self, MarkovPair};
 use specd::util::argparse::Args;
@@ -105,10 +105,13 @@ fn run_cmd<B: Backend>(cmd: &str, backend: Arc<B>, cfg: &Config, args: &Args) ->
 fn cmd_serve<B: Backend>(backend: Arc<B>, cfg: &Config, args: &Args) -> Result<()> {
     let datasets = Dataset::load_or_synthetic(backend.info().artifacts_dir.as_deref())?;
     let addr = args.get_or("addr", &cfg.server.addr).to_string();
-    let coordinator = Coordinator::spawn(backend, cfg.engine.clone(), &cfg.server)?;
-    let state = Arc::new(ServerState { coordinator, datasets });
+    let router = Router::spawn(backend, cfg.engine.clone(), &cfg.server, &cfg.router)?;
+    let state = Arc::new(ServerState { router, datasets });
     let listener = std::net::TcpListener::bind(&addr)?;
-    println!("specd serving on http://{addr}  (POST /v1/generate)");
+    println!(
+        "specd serving on http://{addr}  (POST /v1/generate, {} replica(s))",
+        state.router.replica_count()
+    );
     serve(listener, state)
 }
 

@@ -66,6 +66,20 @@ impl LatencyHist {
         self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// `(upper_bucket_edge_us, count)` for every non-empty bucket,
+    /// ascending — the exposition-format histogram lines (the
+    /// `queue_wait_us` satellite of the serving tier).
+    pub fn nonzero(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then_some((1u64 << i, c))
+            })
+            .collect()
+    }
+
     /// Approximate quantile from the log2 buckets (upper bucket edge).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
@@ -193,6 +207,13 @@ pub struct EngineMetrics {
     pub queue_wait: LatencyHist,
     pub iter_latency: LatencyHist,
     pub request_latency: LatencyHist,
+    /// Prompt positions the admission forward actually covered (suffix
+    /// lengths under warm-prefix admission, full prompt lengths cold) —
+    /// against [`EngineMetrics::prompt_positions`] this is the
+    /// prefix-cache work saving made observable (DESIGN.md §14.3).
+    pub prefill_positions: Counter,
+    /// Total prompt positions admitted (the cold-prefill cost baseline).
+    pub prompt_positions: Counter,
 }
 
 impl EngineMetrics {
@@ -217,41 +238,70 @@ impl EngineMetrics {
 
     /// Render in a Prometheus-ish plain-text exposition format.
     pub fn render(&self) -> String {
-        let mut s = String::new();
-        let mut put = |k: &str, v: f64| s.push_str(&format!("specd_{k} {v}\n"));
-        put("requests_enqueued", self.requests_enqueued.get() as f64);
-        put("requests_completed", self.requests_completed.get() as f64);
-        put("tokens_emitted", self.tokens_emitted.get() as f64);
-        put("drafts_accepted", self.drafts_accepted.get() as f64);
-        put("drafts_scored", self.drafts_scored.get() as f64);
-        put("iterations", self.iterations.get() as f64);
-        put("batches", self.batches.get() as f64);
-        put("slots_refilled", self.slots_refilled.get() as f64);
-        put("slot_occupancy", self.slot_occupancy());
-        put("block_efficiency", self.block_efficiency());
-        put("accepted_len_mean", self.accepted_len_hist.mean());
-        put("prefill_batch_size_mean", self.prefill_batch_size.mean());
-        put("draft_forward_mean_us", self.draft_forward_us.mean_us());
-        put("draft_forward_p99_us", self.draft_forward_us.quantile_us(0.99) as f64);
-        put("target_forward_mean_us", self.target_forward_us.mean_us());
-        put("target_forward_p99_us", self.target_forward_us.quantile_us(0.99) as f64);
-        put("iter_latency_mean_us", self.iter_latency.mean_us());
-        put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
-        put("request_latency_mean_us", self.request_latency.mean_us());
-        put("queue_wait_mean_us", self.queue_wait.mean_us());
-        for (len, n) in self.accepted_len_hist.nonzero() {
-            s.push_str(&format!("specd_accepted_len_hist{{len=\"{len}\"}} {n}\n"));
-        }
-        for (n_rows, n) in self.prefill_batch_size.nonzero() {
-            s.push_str(&format!("specd_prefill_batch_size{{rows=\"{n_rows}\"}} {n}\n"));
-        }
+        let mut s = self.render_labeled("");
         // Info line: the process-wide native kernel choice and detected
         // ISA (constant per process — `default_kernel` is OnceLock-cached).
+        // Unlabelled only: it is process-global, not per-replica.
         s.push_str(&format!(
             "specd_native_kernel{{kernel=\"{}\",isa=\"{}\"}} 1\n",
             crate::backend::kernels::default_kernel(),
             crate::backend::kernels::active_isa(),
         ));
+        s
+    }
+
+    /// [`EngineMetrics::render`]'s body with an extra label set stamped
+    /// on every line (e.g. `replica="2"`; empty = no braces — the plain
+    /// single-engine exposition).  The serving-tier router renders one
+    /// labelled block per replica next to the unlabelled aggregate
+    /// (DESIGN.md §14.5).
+    pub fn render_labeled(&self, labels: &str) -> String {
+        let lb = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let mut s = String::new();
+        {
+            let mut put = |k: &str, v: f64| s.push_str(&format!("specd_{k}{lb} {v}\n"));
+            put("requests_enqueued", self.requests_enqueued.get() as f64);
+            put("requests_completed", self.requests_completed.get() as f64);
+            put("tokens_emitted", self.tokens_emitted.get() as f64);
+            put("drafts_accepted", self.drafts_accepted.get() as f64);
+            put("drafts_scored", self.drafts_scored.get() as f64);
+            put("iterations", self.iterations.get() as f64);
+            put("batches", self.batches.get() as f64);
+            put("slots_refilled", self.slots_refilled.get() as f64);
+            put("slot_occupancy", self.slot_occupancy());
+            put("block_efficiency", self.block_efficiency());
+            put("accepted_len_mean", self.accepted_len_hist.mean());
+            put("prefill_batch_size_mean", self.prefill_batch_size.mean());
+            put("prefill_positions", self.prefill_positions.get() as f64);
+            put("prompt_positions", self.prompt_positions.get() as f64);
+            put("draft_forward_mean_us", self.draft_forward_us.mean_us());
+            put("draft_forward_p99_us", self.draft_forward_us.quantile_us(0.99) as f64);
+            put("target_forward_mean_us", self.target_forward_us.mean_us());
+            put("target_forward_p99_us", self.target_forward_us.quantile_us(0.99) as f64);
+            put("iter_latency_mean_us", self.iter_latency.mean_us());
+            put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
+            put("request_latency_mean_us", self.request_latency.mean_us());
+            put("queue_wait_mean_us", self.queue_wait.mean_us());
+        }
+        let sub = |extra: String| {
+            if labels.is_empty() {
+                format!("{{{extra}}}")
+            } else {
+                format!("{{{extra},{labels}}}")
+            }
+        };
+        for (len, n) in self.accepted_len_hist.nonzero() {
+            s.push_str(&format!("specd_accepted_len_hist{} {n}\n", sub(format!("len=\"{len}\""))));
+        }
+        for (n_rows, n) in self.prefill_batch_size.nonzero() {
+            s.push_str(&format!(
+                "specd_prefill_batch_size{} {n}\n",
+                sub(format!("rows=\"{n_rows}\""))
+            ));
+        }
+        for (edge, n) in self.queue_wait.nonzero() {
+            s.push_str(&format!("specd_queue_wait_us{} {n}\n", sub(format!("le=\"{edge}\""))));
+        }
         s
     }
 }

@@ -1,0 +1,155 @@
+//! Paged KV accounting for the serving tier (DESIGN.md §14.2).
+//!
+//! [`KvPool`] is a fixed-size page arena with a free-list allocator:
+//! every admitted row leases the pages covering its worst-case position
+//! footprint (prompt + generation budget + draft scratch) before it may
+//! enter a replica's slot table, and every cached prompt prefix
+//! ([`crate::serve::PrefixCache`]) leases the pages covering its
+//! positions.  Slot capacity is therefore bounded by *memory pages*, not
+//! only by the compile-time batch shape: when the pool is sized below
+//! `replicas · B` full rows, replicas admit until pages run out and
+//! defer the rest (never panic, never queue unboundedly).
+//!
+//! A [`PageLease`]'s page-id vector is the row's page chain.  The
+//! physical `NativeKv` storage stays ring-contiguous per row (one
+//! `chunks_mut` slice per row is what makes the forward pass's safe row
+//! parallelism work, DESIGN.md §10), so the chain is an identity-mapped
+//! accounting view — the compact per-prefix caches
+//! ([`crate::backend::Backend::kv_extract`]) are where paging actually
+//! shrinks resident KV memory.
+
+use std::sync::{Arc, Mutex};
+
+/// Shared page arena: cheap-to-clone handle over the free list.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    inner: Arc<PoolInner>,
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    page_size: usize,
+    total: usize,
+    free: Mutex<Vec<u32>>,
+}
+
+impl KvPool {
+    /// A pool of `total_pages` pages, each covering `page_size` KV
+    /// positions (both models' caches for those positions count as one
+    /// page — the pool meters *positions*, the unit admission and prefix
+    /// caching both deal in).
+    pub fn new(total_pages: usize, page_size: usize) -> Self {
+        let total = total_pages.max(1);
+        KvPool {
+            inner: Arc::new(PoolInner {
+                page_size: page_size.max(1),
+                total,
+                free: Mutex::new((0..total as u32).rev().collect()),
+            }),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.inner.page_size
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.inner.total
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+
+    pub fn pages_used(&self) -> usize {
+        self.inner.total - self.pages_free()
+    }
+
+    /// Pages needed to cover `positions` KV positions (ceiling; at least
+    /// one page — a row always occupies storage).
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.max(1).div_ceil(self.inner.page_size)
+    }
+
+    /// Try to lease `pages` pages; `None` when the free list is short —
+    /// the caller's cue to evict idle prefixes, defer the admission, or
+    /// shed.  Never blocks and never over-allocates.
+    pub fn try_lease(&self, pages: usize) -> Option<PageLease> {
+        let mut free = self.inner.free.lock().unwrap();
+        if free.len() < pages {
+            return None;
+        }
+        let at = free.len() - pages;
+        let taken = free.split_off(at);
+        Some(PageLease { inner: Arc::clone(&self.inner), pages: taken })
+    }
+}
+
+/// An owned run of pages: the page chain of one admitted row or one
+/// cached prefix.  Pages return to the free list on drop, so page
+/// lifetime is exactly the lifetime of whatever holds the lease (the
+/// slot's bookkeeping entry, or the cache entry's `Arc`).
+#[derive(Debug)]
+pub struct PageLease {
+    inner: Arc<PoolInner>,
+    pages: Vec<u32>,
+}
+
+impl PageLease {
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// The leased page ids — the row's page chain.
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+}
+
+impl Drop for PageLease {
+    fn drop(&mut self) {
+        self.inner.free.lock().unwrap().append(&mut self.pages);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let pool = KvPool::new(8, 16);
+        assert_eq!(pool.pages_for(0), 1);
+        assert_eq!(pool.pages_for(1), 1);
+        assert_eq!(pool.pages_for(16), 1);
+        assert_eq!(pool.pages_for(17), 2);
+        assert_eq!(pool.pages_for(96), 6);
+    }
+
+    #[test]
+    fn lease_exhaustion_and_return_on_drop() {
+        let pool = KvPool::new(4, 16);
+        assert_eq!((pool.total_pages(), pool.pages_free(), pool.pages_used()), (4, 4, 0));
+        let a = pool.try_lease(3).expect("3 of 4 pages");
+        assert_eq!((pool.pages_free(), pool.pages_used()), (1, 3));
+        assert!(pool.try_lease(2).is_none(), "only 1 page left");
+        let b = pool.try_lease(1).expect("last page");
+        assert_eq!(pool.pages_free(), 0);
+        drop(a);
+        assert_eq!(pool.pages_free(), 3);
+        drop(b);
+        assert_eq!((pool.pages_free(), pool.pages_used()), (4, 0));
+    }
+
+    #[test]
+    fn leased_chains_are_disjoint() {
+        let pool = KvPool::new(6, 16);
+        let a = pool.try_lease(2).unwrap();
+        let b = pool.try_lease(3).unwrap();
+        assert_eq!(a.page_count(), 2);
+        assert_eq!(b.page_count(), 3);
+        for p in a.pages() {
+            assert!(!b.pages().contains(p), "page {p} double-leased");
+        }
+    }
+}

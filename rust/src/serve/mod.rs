@@ -1,0 +1,25 @@
+//! L4 serving tier (DESIGN.md §14): the traffic-facing layer above the
+//! per-replica continuous batchers.
+//!
+//! * [`router`] — [`Router`]: N engine replicas on worker threads,
+//!   least-outstanding-tokens placement, per-replica token-bucket
+//!   admission with explicit load shedding (429 + `Retry-After`).
+//! * [`kvpool`] — [`KvPool`]: fixed-size page arena with a free-list
+//!   allocator; rows and cached prefixes lease their page chains, so
+//!   admission is bounded by memory, not only by the batch shape.
+//! * [`prefix`] — [`PrefixCache`]: ref-counted, hash-keyed cache of
+//!   prefilled prompt-prefix KV; warm admissions splice cached pages and
+//!   prefill only the suffix, bit-identically to cold prefill
+//!   (test-enforced in `tests/serve_tier.rs`).
+//!
+//! The single-engine [`crate::coordinator::Coordinator`] is a thin shim
+//! over a one-replica router, so both entry points share one batcher
+//! implementation.
+
+pub mod kvpool;
+pub mod prefix;
+pub mod router;
+
+pub use kvpool::{KvPool, PageLease};
+pub use prefix::{CachedPrefix, PrefixCache, PrefixStats};
+pub use router::{RouteError, Router, RouterMetrics, ServeRequest};

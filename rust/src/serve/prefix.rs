@@ -1,0 +1,226 @@
+//! Ref-counted prompt-prefix KV cache for the serving tier
+//! (DESIGN.md §14.3).
+//!
+//! Keys are page-aligned token prefixes (exact `Vec<u32>` match — two
+//! prompts share a cache entry iff they share those tokens verbatim).
+//! Values are compact per-model KV caches produced by
+//! [`crate::engine::spec::SpecEngine::prefill_prefix`] /
+//! [`crate::backend::Backend::kv_extract`]: one row, ring length =
+//! prefix length, for *both* the target and the drafter (warm admission
+//! must splice both or the drafter would re-derive the prefix and the
+//! stream would diverge from cold prefill).
+//!
+//! Lifecycle is `Arc`-refcounted: `lookup` hands out a clone that the
+//! admission path holds across `admit_rows_prefixed` (the splice reads
+//! `&B::Kv` borrowed from it), so eviction can never free pages under a
+//! live splice — [`PrefixCache::evict_idle`] only removes entries whose
+//! sole owner is the cache itself (`Arc::strong_count == 1`), oldest
+//! `last_used` first.  Each entry owns the [`PageLease`] covering its
+//! positions; dropping the entry returns the pages.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::backend::Backend;
+use crate::metrics::Counter;
+
+use super::kvpool::PageLease;
+
+/// Hit/miss/eviction counters, shared with the router's `/metrics`
+/// rendering (non-generic so the HTTP layer needs no backend type).
+#[derive(Default, Debug)]
+pub struct PrefixStats {
+    pub hits: Counter,
+    pub misses: Counter,
+    pub evictions: Counter,
+    pub inserts: Counter,
+}
+
+/// One cached prefix: the exact tokens it covers plus both models'
+/// compact KV for those positions, pinned to its page lease.
+pub struct CachedPrefix<B: Backend> {
+    pub tokens: Vec<u32>,
+    pub kv_target: B::Kv,
+    pub kv_drafter: B::Kv,
+    /// Held, not read: pages return to the pool when the entry drops.
+    _lease: PageLease,
+}
+
+impl<B: Backend> CachedPrefix<B> {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+struct Entry<B: Backend> {
+    data: Arc<CachedPrefix<B>>,
+    last_used: u64,
+}
+
+/// Hash-keyed prefix cache shared by every replica of a router.
+pub struct PrefixCache<B: Backend> {
+    map: Mutex<HashMap<Vec<u32>, Entry<B>>>,
+    /// Logical LRU clock (bumped per lookup/insert — wall time would
+    /// break determinism for no benefit).
+    clock: AtomicU64,
+    page_size: usize,
+    min_len: usize,
+    /// Longest cacheable prefix (the engine's prompt budget `L/2 - 1`;
+    /// prefixes must stay strictly shorter than any admissible prompt).
+    max_len: usize,
+    pub stats: Arc<PrefixStats>,
+}
+
+impl<B: Backend> PrefixCache<B> {
+    pub fn new(page_size: usize, min_len: usize, max_len: usize) -> Self {
+        PrefixCache {
+            map: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            page_size: page_size.max(1),
+            // An engine prefix needs >= 2 tokens (BOS + content).
+            min_len: min_len.max(2),
+            max_len,
+            stats: Arc::new(PrefixStats::default()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Longest page-aligned *strict* prefix of a `prompt_len`-token
+    /// prompt this cache would key on; `None` when the prompt is too
+    /// short to leave a cacheable prefix.  Page alignment keeps the key
+    /// space coarse (at most `L / page_size` probe lengths) and matches
+    /// the pool's allocation granularity.
+    pub fn candidate_len(&self, prompt_len: usize) -> Option<usize> {
+        let cap = prompt_len.saturating_sub(1).min(self.max_len);
+        let len = (cap / self.page_size) * self.page_size;
+        (len >= self.min_len).then_some(len)
+    }
+
+    /// Longest-prefix match: probe page-aligned prefix lengths of
+    /// `prompt`, longest first.  A hit bumps the entry's LRU stamp and
+    /// returns a refcounted handle the caller holds across the splice.
+    pub fn lookup(&self, prompt: &[u32]) -> Option<Arc<CachedPrefix<B>>> {
+        let longest = self.candidate_len(prompt.len())?;
+        let stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut map = self.map.lock().unwrap();
+        let mut len = longest;
+        while len >= self.min_len {
+            if let Some(e) = map.get_mut(&prompt[..len]) {
+                e.last_used = stamp;
+                self.stats.hits.inc();
+                return Some(e.data.clone());
+            }
+            if len < self.page_size {
+                break;
+            }
+            len -= self.page_size;
+        }
+        self.stats.misses.inc();
+        None
+    }
+
+    /// Insert a freshly prefilled prefix and return the shared handle
+    /// (so the populating admission warms itself).  Re-inserting an
+    /// existing key replaces it — harmless: both values are bit-identical
+    /// by construction and in-flight holders keep their `Arc` alive.
+    pub fn insert(
+        &self,
+        tokens: Vec<u32>,
+        kv_target: B::Kv,
+        kv_drafter: B::Kv,
+        lease: PageLease,
+    ) -> Arc<CachedPrefix<B>> {
+        let data = Arc::new(CachedPrefix {
+            tokens: tokens.clone(),
+            kv_target,
+            kv_drafter,
+            _lease: lease,
+        });
+        let stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        self.map
+            .lock()
+            .unwrap()
+            .insert(tokens, Entry { data: data.clone(), last_used: stamp });
+        self.stats.inserts.inc();
+        data
+    }
+
+    /// Evict idle entries (cache is the sole `Arc` owner), least
+    /// recently used first, until roughly `want_pages` pages have been
+    /// returned to the pool or no idle entry remains.  Entries pinned by
+    /// an in-flight admission are never touched.
+    pub fn evict_idle(&self, want_pages: usize) {
+        let mut map = self.map.lock().unwrap();
+        let mut idle: Vec<(u64, Vec<u32>, usize)> = map
+            .iter()
+            .filter(|(_, e)| Arc::strong_count(&e.data) == 1)
+            .map(|(k, e)| (e.last_used, k.clone(), e.data._lease.page_count()))
+            .collect();
+        idle.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+        let mut freed = 0usize;
+        for (_, key, pages) in idle {
+            if freed >= want_pages {
+                break;
+            }
+            // Dropping the entry drops its Arc (sole owner) and with it
+            // the page lease — the pages are back in the pool before
+            // this returns.
+            map.remove(&key);
+            self.stats.evictions.inc();
+            freed += pages;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::backend::NativeBackend;
+
+    use super::*;
+
+    // Key/alignment logic is backend-independent — instantiate the cache
+    // at a concrete backend type without ever touching a model.  Entry
+    // lifecycle (insert/lookup/evict with real KV) is covered by
+    // `tests/serve_tier.rs`.
+    fn cache() -> PrefixCache<NativeBackend> {
+        // page 16, min prefix 16, prompt budget 47 (L=96 ring).
+        PrefixCache::new(16, 16, 47)
+    }
+
+    #[test]
+    fn candidate_len_is_page_aligned_and_strict() {
+        let c = cache();
+        assert_eq!(c.candidate_len(5), None, "too short to leave a 16-token prefix");
+        assert_eq!(c.candidate_len(16), None, "prefix must be strictly shorter");
+        assert_eq!(c.candidate_len(17), Some(16));
+        assert_eq!(c.candidate_len(33), Some(32));
+        assert_eq!(c.candidate_len(40), Some(32));
+        // Capped by the prompt budget: never a prefix the engine couldn't
+        // have admitted as a prompt itself.
+        assert_eq!(c.candidate_len(400), Some(32));
+    }
+
+    #[test]
+    fn lookup_miss_counts_and_returns_none() {
+        let c = cache();
+        let prompt: Vec<u32> = (0..20).map(|i| 16 + i).collect();
+        assert!(c.lookup(&prompt).is_none());
+        assert_eq!(c.stats.misses.get(), 1);
+        assert_eq!(c.stats.hits.get(), 0);
+        // Un-cacheable prompts are not misses — there was nothing to probe.
+        assert!(c.lookup(&prompt[..4]).is_none());
+        assert_eq!(c.stats.misses.get(), 1);
+    }
+}

@@ -1,0 +1,672 @@
+//! L4 serving tier: a multi-replica router over a paged, prefix-shared
+//! KV pool (DESIGN.md §14).
+//!
+//! [`Router::spawn`] stands up `N` [`SpecEngine`] replicas, each on its
+//! own worker thread with its own KV slot table and two-lane request
+//! queue ([`RequestQueue`]).  The router handle places each request on
+//! the replica with the fewest outstanding tokens whose admission
+//! [`TokenBucket`] still has budget; when no replica can take it, the
+//! request is **shed** — an explicit [`RouteError::Shed`] (HTTP 429 +
+//! `Retry-After`), never a panic and never an unbounded queue.
+//!
+//! Replica workers mirror the coordinator's continuous batcher, with two
+//! serving-tier additions at admission time: every row first leases the
+//! [`KvPool`] pages covering its worst-case footprint (deferring — not
+//! failing — when the pool is momentarily exhausted), and prompts are
+//! longest-prefix-matched against the shared [`PrefixCache`] so warm
+//! admissions splice the cached prefix KV and forward only the suffix
+//! ([`SpecEngine::admit_rows_prefixed`]) — bit-identical to cold
+//! prefill, test-enforced in `tests/serve_tier.rs`.
+//!
+//! Placement never changes what a request generates: with a per-request
+//! seed, a row's output is a pure function of `(prompt, seed)` on every
+//! replica (DESIGN.md §7), so least-outstanding-tokens routing is a pure
+//! latency policy (also test-enforced).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::Backend;
+use crate::config::{EngineConfig, RouterConfig, ServerConfig};
+use crate::coordinator::queue::{Lane, RequestQueue, SlotTable, TokenBucket};
+use crate::engine::spec::{Admission, DecodeState, PrefixHandle, SpecEngine};
+use crate::engine::{RowResult, RowTracker};
+use crate::metrics::{Counter, EngineMetrics, LatencyHist};
+use crate::verify::Rng;
+
+use super::kvpool::{KvPool, PageLease};
+use super::prefix::{CachedPrefix, PrefixCache, PrefixStats};
+
+/// A generation request as accepted by the router.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: Option<usize>,
+    /// Per-request sampling seed (same semantics as
+    /// [`crate::coordinator::GenRequest::seed`]): when set, the output is
+    /// a pure function of `(prompt, seed)` — independent of placement.
+    pub seed: Option<u64>,
+    pub lane: Lane,
+    /// Tenant id for intra-lane round-robin fairness.
+    pub tenant: u64,
+    pub enqueued: Instant,
+}
+
+impl ServeRequest {
+    /// An interactive, single-tenant request — the common case.
+    pub fn new(prompt: Vec<u32>, max_new_tokens: Option<usize>, seed: Option<u64>) -> Self {
+        ServeRequest {
+            prompt,
+            max_new_tokens,
+            seed,
+            lane: Lane::Interactive,
+            tenant: 0,
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// Why the router did not return a result.
+#[derive(Debug)]
+pub enum RouteError {
+    /// Load shed: every replica's admission budget (or channel) was
+    /// full.  Maps to HTTP 429 with a `Retry-After` hint.
+    Shed { retry_after_s: u64 },
+    /// The placed request failed (admission rejection or device error);
+    /// the message preserves the engine's error chain.
+    Failed(String),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Shed { retry_after_s } => {
+                write!(f, "over capacity — request shed (retry after {retry_after_s}s)")
+            }
+            RouteError::Failed(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Router-level counters, rendered next to the per-replica engine
+/// metrics in `/metrics`.
+#[derive(Default, Debug)]
+pub struct RouterMetrics {
+    /// Requests refused with 429 because no replica had admission budget.
+    pub requests_shed_total: Counter,
+    /// Enqueue-to-admission wait across all replicas.
+    pub queue_wait_us: LatencyHist,
+}
+
+type Reply = SyncSender<Result<RowResult>>;
+
+struct ReplicaHandle {
+    tx: SyncSender<(ServeRequest, Reply)>,
+    /// Admission budget in tokens (prompt + generation); sized so a
+    /// replica's backlog stays a few batches deep.
+    bucket: TokenBucket,
+    /// Outstanding token cost — the placement key.
+    outstanding: AtomicUsize,
+    metrics: Arc<EngineMetrics>,
+}
+
+/// The cloneable router handle held by server handlers.  Type-erased:
+/// worker threads own the engines, so the HTTP layer needs no backend
+/// generic.
+#[derive(Clone)]
+pub struct Router {
+    replicas: Arc<Vec<ReplicaHandle>>,
+    pool: KvPool,
+    stats: Arc<PrefixStats>,
+    pub metrics: Arc<RouterMetrics>,
+    default_max_new: usize,
+    pinned: Option<usize>,
+}
+
+impl Router {
+    /// Spawn `cfg.replicas` engine replicas over a shared backend, KV
+    /// pool and prefix cache.  Replicas share the backend `Arc` (its
+    /// scratch pool is keyed and locked per shape, and `prepare` is
+    /// idempotent), so weights are resident once.
+    pub fn spawn<B: Backend>(
+        backend: Arc<B>,
+        engine_cfg: EngineConfig,
+        server_cfg: &ServerConfig,
+        router_cfg: &RouterConfig,
+    ) -> Result<Router> {
+        let info = backend.info();
+        let (b, l) = (info.batch, info.max_len);
+        let n = router_cfg.replicas.max(1);
+        let page_size = router_cfg.page_size.max(1);
+        let pages_per_row = l.div_ceil(page_size);
+        // Auto pool: fund every replica's full slot table plus headroom
+        // for a handful of cached prefixes.  Sizing it *below*
+        // `n * b * pages_per_row` turns the pool into the admission
+        // bound: replicas defer rows until pages free up.
+        let total_pages = if router_cfg.kv_pages > 0 {
+            router_cfg.kv_pages
+        } else {
+            (n * b + 8) * pages_per_row
+        };
+        let pool = KvPool::new(total_pages, page_size);
+        let min_prefix = if router_cfg.min_prefix_len > 0 {
+            router_cfg.min_prefix_len
+        } else {
+            page_size
+        };
+        // Prefixes share the prompt budget: strictly below L/2.
+        let cache = Arc::new(PrefixCache::<B>::new(page_size, min_prefix, l / 2 - 1));
+        let stats = cache.stats.clone();
+        let token_budget = if router_cfg.token_budget > 0 {
+            router_cfg.token_budget
+        } else {
+            4 * b * l
+        };
+        let batch_wait = Duration::from_millis(server_cfg.batch_wait_ms);
+        let depth = server_cfg.queue_limit.max(1);
+        let metrics = Arc::new(RouterMetrics::default());
+        let default_max_new = engine_cfg.max_new_tokens;
+        let mut replicas = Vec::with_capacity(n);
+        for i in 0..n {
+            let engine = SpecEngine::new(backend.clone(), engine_cfg.clone())?;
+            let engine_metrics = engine.metrics.clone();
+            let (tx, rx) = sync_channel(depth);
+            let worker_pool = pool.clone();
+            let worker_cache = cache.clone();
+            let worker_metrics = metrics.clone();
+            let prefix_on = router_cfg.prefix_cache;
+            std::thread::Builder::new()
+                .name(format!("specd-replica-{i}"))
+                .spawn(move || {
+                    replica_worker(
+                        engine,
+                        rx,
+                        batch_wait,
+                        worker_pool,
+                        worker_cache,
+                        prefix_on,
+                        worker_metrics,
+                    )
+                })
+                .map_err(|e| anyhow!("spawning replica {i}: {e}"))?;
+            replicas.push(ReplicaHandle {
+                tx,
+                bucket: TokenBucket::new(token_budget),
+                outstanding: AtomicUsize::new(0),
+                metrics: engine_metrics,
+            });
+        }
+        Ok(Router {
+            replicas: Arc::new(replicas),
+            pool,
+            stats,
+            metrics,
+            default_max_new,
+            pinned: router_cfg.pinned_replica,
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// A replica's engine metrics (tests and the coordinator shim).
+    pub fn replica_metrics(&self, i: usize) -> Arc<EngineMetrics> {
+        self.replicas[i].metrics.clone()
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn prefix_stats(&self) -> &Arc<PrefixStats> {
+        &self.stats
+    }
+
+    /// Place a request and block until its row completes.
+    ///
+    /// Placement: replicas ordered by outstanding token cost (fewest
+    /// first; or the pinned replica when configured), first one whose
+    /// token bucket accepts the request's cost AND whose channel has
+    /// room wins.  If none does, the request is shed — the charge is
+    /// rolled back, nothing queues.
+    pub fn generate(&self, req: ServeRequest) -> Result<RowResult, RouteError> {
+        let cost = req
+            .prompt
+            .len()
+            .saturating_add(req.max_new_tokens.unwrap_or(self.default_max_new).max(1))
+            .max(1);
+        let order: Vec<usize> = match self.pinned {
+            Some(i) => vec![i.min(self.replicas.len() - 1)],
+            None => {
+                let mut idx: Vec<usize> = (0..self.replicas.len()).collect();
+                idx.sort_by_key(|&i| self.replicas[i].outstanding.load(Ordering::Acquire));
+                idx
+            }
+        };
+        let (otx, orx) = sync_channel(1);
+        let mut msg = (req, otx);
+        let mut placed: Option<usize> = None;
+        for &i in &order {
+            let r = &self.replicas[i];
+            if !r.bucket.try_acquire(cost) {
+                continue;
+            }
+            match r.tx.try_send(msg) {
+                Ok(()) => {
+                    placed = Some(i);
+                    break;
+                }
+                Err(e) => {
+                    // Channel full (or replica gone): roll back the
+                    // charge, recover the message, try the next replica.
+                    r.bucket.release(cost);
+                    msg = match e {
+                        TrySendError::Full(m) | TrySendError::Disconnected(m) => m,
+                    };
+                }
+            }
+        }
+        let Some(i) = placed else {
+            self.metrics.requests_shed_total.inc();
+            return Err(RouteError::Shed { retry_after_s: 1 });
+        };
+        let r = &self.replicas[i];
+        r.outstanding.fetch_add(cost, Ordering::AcqRel);
+        r.metrics.requests_enqueued.inc();
+        let res = orx.recv();
+        r.outstanding.fetch_sub(cost, Ordering::AcqRel);
+        r.bucket.release(cost);
+        match res {
+            Ok(Ok(row)) => Ok(row),
+            Ok(Err(e)) => Err(RouteError::Failed(format!("{e:#}"))),
+            Err(_) => Err(RouteError::Failed("replica dropped request".into())),
+        }
+    }
+
+    /// `/metrics` exposition: unlabelled aggregates over all replicas
+    /// (so single-engine dashboards and tests keep reading the same
+    /// lines), one `replica="i"`-labelled block per replica, then the
+    /// router-level serving metrics (DESIGN.md §14.5).
+    pub fn render_metrics(&self) -> String {
+        let mut s = String::new();
+        let total = |g: &dyn Fn(&EngineMetrics) -> u64| -> u64 {
+            self.replicas.iter().map(|r| g(&r.metrics)).sum()
+        };
+        {
+            let mut put = |k: &str, v: f64| s.push_str(&format!("specd_{k} {v}\n"));
+            put("requests_enqueued", total(&|m| m.requests_enqueued.get()) as f64);
+            put("requests_completed", total(&|m| m.requests_completed.get()) as f64);
+            put("tokens_emitted", total(&|m| m.tokens_emitted.get()) as f64);
+            put("drafts_accepted", total(&|m| m.drafts_accepted.get()) as f64);
+            put("drafts_scored", total(&|m| m.drafts_scored.get()) as f64);
+            put("iterations", total(&|m| m.iterations.get()) as f64);
+            put("batches", total(&|m| m.batches.get()) as f64);
+            put("slots_refilled", total(&|m| m.slots_refilled.get()) as f64);
+            let busy = total(&|m| m.slot_iters_busy.get());
+            let avail = total(&|m| m.slot_iters_total.get());
+            put("slot_occupancy", if avail == 0 { 0.0 } else { busy as f64 / avail as f64 });
+            let toks = total(&|m| m.tokens_emitted.get());
+            let iters = total(&|m| m.iterations.get());
+            put("block_efficiency", if iters == 0 { 0.0 } else { toks as f64 / iters as f64 });
+            put("prefill_positions", total(&|m| m.prefill_positions.get()) as f64);
+            put("prompt_positions", total(&|m| m.prompt_positions.get()) as f64);
+        }
+        for (i, r) in self.replicas.iter().enumerate() {
+            s.push_str(&r.metrics.render_labeled(&format!("replica=\"{i}\"")));
+            s.push_str(&format!(
+                "specd_replica_outstanding_tokens{{replica=\"{i}\"}} {}\n",
+                r.outstanding.load(Ordering::Relaxed)
+            ));
+        }
+        s.push_str(&format!("specd_router_replicas {}\n", self.replicas.len()));
+        s.push_str(&format!(
+            "specd_requests_shed_total {}\n",
+            self.metrics.requests_shed_total.get()
+        ));
+        s.push_str(&format!("specd_prefix_cache_hits {}\n", self.stats.hits.get()));
+        s.push_str(&format!("specd_prefix_cache_misses {}\n", self.stats.misses.get()));
+        s.push_str(&format!("specd_prefix_cache_evictions {}\n", self.stats.evictions.get()));
+        s.push_str(&format!("specd_prefix_cache_inserts {}\n", self.stats.inserts.get()));
+        s.push_str(&format!("specd_kv_pages_total {}\n", self.pool.total_pages()));
+        s.push_str(&format!("specd_kv_pages_used {}\n", self.pool.pages_used()));
+        s.push_str(&format!("specd_kv_pages_free {}\n", self.pool.pages_free()));
+        s.push_str(&format!(
+            "specd_router_queue_wait_mean_us {}\n",
+            self.metrics.queue_wait_us.mean_us()
+        ));
+        for (edge, n) in self.metrics.queue_wait_us.nonzero() {
+            s.push_str(&format!("specd_router_queue_wait_us{{le=\"{edge}\"}} {n}\n"));
+        }
+        // Process-global kernel info line, same as the single-engine
+        // exposition.
+        s.push_str(&format!(
+            "specd_native_kernel{{kernel=\"{}\",isa=\"{}\"}} 1\n",
+            crate::backend::kernels::default_kernel(),
+            crate::backend::kernels::active_isa(),
+        ));
+        s
+    }
+}
+
+/// Per-slot request bookkeeping held by a replica worker.  Holds the
+/// row's page lease: pages return to the pool exactly when the slot is
+/// released.
+struct SlotReq {
+    tracker: RowTracker,
+    reply: Reply,
+    enqueued: Instant,
+    _lease: PageLease,
+}
+
+/// A queued request after dequeue validation (prompt travels separately
+/// as the [`RequestQueue`] key).
+struct Pending {
+    max_new: usize,
+    seed: Option<u64>,
+    lane: Lane,
+    tenant: u64,
+    enqueued: Instant,
+    reply: Reply,
+}
+
+fn enqueue(
+    queue: &mut RequestQueue<Pending>,
+    req: ServeRequest,
+    reply: Reply,
+    default_max_new: usize,
+) {
+    // Too-short prompts cannot even key the queue; reject inline.  All
+    // other validation (ring budget) happens at engine admission so the
+    // error chain matches the single-engine path.
+    if req.prompt.len() < 2 {
+        let _ = reply.send(Err(anyhow!("prompts need >= 2 tokens (BOS + marker)")));
+        return;
+    }
+    let pend = Pending {
+        max_new: req.max_new_tokens.unwrap_or(default_max_new).max(1),
+        seed: req.seed,
+        lane: req.lane,
+        tenant: req.tenant,
+        enqueued: req.enqueued,
+        reply,
+    };
+    let _ = queue.push_with(req.prompt, pend.lane, pend.tenant, pend);
+}
+
+/// Longest-prefix-match the prompt against the shared cache; on a miss,
+/// populate the cache (prefill the page-aligned prefix once, extract
+/// compact caches) so this and every later admission sharing the prefix
+/// go warm.  Any failure degrades to a cold admission — losslessness
+/// never depends on this function succeeding.
+fn lookup_or_populate<B: Backend>(
+    engine: &SpecEngine<B>,
+    cache: &PrefixCache<B>,
+    pool: &KvPool,
+    prompt: &[u32],
+) -> Option<Arc<CachedPrefix<B>>> {
+    let plen = cache.candidate_len(prompt.len())?;
+    if let Some(hit) = cache.lookup(prompt) {
+        return Some(hit);
+    }
+    let need = pool.pages_for(plen);
+    let lease = pool.try_lease(need).or_else(|| {
+        cache.evict_idle(need);
+        pool.try_lease(need)
+    })?;
+    let (kv_t, kv_d) = engine.prefill_prefix(&prompt[..plen]).ok()?;
+    Some(cache.insert(prompt[..plen].to_vec(), kv_t, kv_d, lease))
+}
+
+/// An admission candidate that secured a slot, pages and (maybe) a
+/// cached prefix.  The `prefix` `Arc` is held across the batched
+/// prefill so eviction cannot free the spliced pages mid-admission.
+struct Ready<B: Backend> {
+    slot: usize,
+    prompt: Vec<u32>,
+    pend: Pending,
+    row_seed: u64,
+    lease: PageLease,
+    prefix: Option<Arc<CachedPrefix<B>>>,
+}
+
+/// Continuous batching loop for one replica: the coordinator's batcher
+/// (admit into free slots mid-decode, one fused step, reply per row)
+/// plus the serving-tier admission ladder — two-lane tenant-fair queue,
+/// page leasing with defer-on-exhaustion, prefix-cache splicing.
+fn replica_worker<B: Backend>(
+    engine: SpecEngine<B>,
+    rx: Receiver<(ServeRequest, Reply)>,
+    batch_wait: Duration,
+    pool: KvPool,
+    cache: Arc<PrefixCache<B>>,
+    prefix_on: bool,
+    router_metrics: Arc<RouterMetrics>,
+) {
+    let metrics = engine.metrics.clone();
+    let info = engine.backend().info();
+    let (b, l) = (info.batch, info.max_len);
+    let gamma = engine.cfg.gamma;
+    let default_max_new = engine.cfg.max_new_tokens;
+    let mut seed_rng = Rng::new(0xc0ffee0 ^ 0x9E3779B97F4A7C15);
+    let mut state: Option<DecodeState<B>> = None;
+    let mut slots: SlotTable<SlotReq> = SlotTable::new(b);
+    // Local queue: validation is the engine's job (limits unbounded here;
+    // the router's token buckets bound what can reach this queue).
+    let mut queue: RequestQueue<Pending> = RequestQueue::new(usize::MAX, usize::MAX);
+    'serve: loop {
+        // --- gather incoming requests ------------------------------------
+        if slots.is_empty() && queue.is_empty() {
+            // Idle: block for the next request, then give stragglers
+            // `batch_wait` to land so bursts start as one batch.
+            match rx.recv() {
+                Ok((req, reply)) => enqueue(&mut queue, req, reply, default_max_new),
+                Err(_) => return, // router dropped: shut down
+            }
+            let deadline = Instant::now() + batch_wait;
+            while queue.len() < b {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok((req, reply)) => enqueue(&mut queue, req, reply, default_max_new),
+                    Err(_) => break,
+                }
+            }
+        } else {
+            if slots.is_empty() {
+                // Deferred admissions with no live rows (pool
+                // exhausted): wait one straggler window for pages to
+                // come back instead of spinning.
+                if let Ok((req, reply)) = rx.recv_timeout(batch_wait.max(Duration::from_millis(1)))
+                {
+                    enqueue(&mut queue, req, reply, default_max_new);
+                }
+            }
+            // Mid-decode: non-blocking drain — live rows must not wait
+            // on the queue.
+            while let Ok((req, reply)) = rx.try_recv() {
+                enqueue(&mut queue, req, reply, default_max_new);
+            }
+        }
+
+        // --- admit into free slots (one batched prefill per tick) ---------
+        let free = slots.free_slots();
+        let cands = if free.is_empty() { Vec::new() } else { queue.take_batch(free.len()) };
+        if !cands.is_empty() {
+            match ensure_stream(&engine, &mut state) {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (_, pend) in cands {
+                        let _ = pend.reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+                Ok(st) => {
+                    let mut ready: Vec<Ready<B>> = Vec::new();
+                    let mut deferred: Vec<(Vec<u32>, Pending)> = Vec::new();
+                    let mut free_iter = free.into_iter();
+                    for (prompt, pend) in cands {
+                        // Page lease first: a row may only occupy a slot
+                        // if the pool can cover its worst-case footprint
+                        // (prompt + generation budget + draft scratch).
+                        let footprint = (prompt.len() + pend.max_new + gamma + 2).min(l);
+                        let need = pool.pages_for(footprint);
+                        let lease = pool.try_lease(need).or_else(|| {
+                            cache.evict_idle(need);
+                            pool.try_lease(need)
+                        });
+                        let Some(lease) = lease else {
+                            if need > pool.total_pages() {
+                                // Can never fit: reject, don't spin.
+                                let _ = pend.reply.send(Err(anyhow!(
+                                    "request needs {need} KV pages but the pool holds {}",
+                                    pool.total_pages()
+                                )));
+                            } else {
+                                // Momentary exhaustion: defer (back to
+                                // the front of its lane after this
+                                // tick), keep serving.
+                                deferred.push((prompt, pend));
+                            }
+                            continue;
+                        };
+                        let prefix = if prefix_on {
+                            lookup_or_populate(&engine, &cache, &pool, &prompt)
+                        } else {
+                            None
+                        };
+                        let row_seed = pend.seed.unwrap_or_else(|| seed_rng.next_u64());
+                        let slot = free_iter.next().expect("candidates bounded by free slots");
+                        ready.push(Ready { slot, prompt, pend, row_seed, lease, prefix });
+                    }
+                    // Reverse so repeated push-fronts restore arrival
+                    // order at the head of each lane.
+                    for (prompt, pend) in deferred.into_iter().rev() {
+                        queue.requeue(prompt, pend.lane, pend.tenant, pend);
+                    }
+                    let results = {
+                        let admissions: Vec<Admission<'_>> = ready
+                            .iter()
+                            .map(|r| Admission {
+                                slot: r.slot,
+                                prompt: &r.prompt,
+                                row_seed: r.row_seed,
+                            })
+                            .collect();
+                        let prefixes: Vec<Option<PrefixHandle<'_, B>>> = ready
+                            .iter()
+                            .map(|r| {
+                                r.prefix.as_ref().map(|c| PrefixHandle {
+                                    kv_target: &c.kv_target,
+                                    kv_drafter: &c.kv_drafter,
+                                    len: c.len(),
+                                })
+                            })
+                            .collect();
+                        engine.admit_rows_prefixed(st, &admissions, &prefixes)
+                    };
+                    for (r, res) in ready.into_iter().zip(results) {
+                        match res {
+                            Ok(()) => {
+                                metrics.queue_wait.observe(r.pend.enqueued.elapsed());
+                                router_metrics.queue_wait_us.observe(r.pend.enqueued.elapsed());
+                                slots.occupy(
+                                    r.slot,
+                                    SlotReq {
+                                        tracker: RowTracker::new(true, r.pend.max_new),
+                                        reply: r.pend.reply,
+                                        enqueued: r.pend.enqueued,
+                                        _lease: r.lease,
+                                    },
+                                );
+                            }
+                            // Admission errors (over-long prompt, bad
+                            // state) reject just this request; the live
+                            // batch and the tick's other admissions are
+                            // untouched.  The lease drops with `r`.
+                            Err(e) => {
+                                let _ = r.pend.reply.send(Err(e));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if slots.is_empty() {
+            continue 'serve;
+        }
+
+        // --- one fused engine step over the live batch --------------------
+        let st = state.as_mut().expect("occupied slots imply a live stream");
+        let out = match engine.step_stream(st) {
+            Ok(out) => out,
+            Err(e) => {
+                // Device-level failure: fail every in-flight request and
+                // rebuild the stream on the next admission.  Dropping the
+                // slot entries returns their page leases.
+                let msg = format!("{e:#}");
+                for (_, sr) in slots.drain() {
+                    let _ = sr.reply.send(Err(anyhow!("{msg}")));
+                }
+                state = None;
+                continue 'serve;
+            }
+        };
+
+        // --- absorb per-row outcomes; reply and free rows as they finish --
+        metrics.slot_iters_total.add(b as u64);
+        metrics.slot_iters_busy.add(slots.occupied() as u64);
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, sr) in slots.iter_occupied_mut() {
+            let tau = out.tau[i] as usize;
+            let row: Vec<u32> = out.emitted[i * (gamma + 1)..i * (gamma + 1) + tau + 1]
+                .iter()
+                .map(|&x| x as u32)
+                .collect();
+            sr.tracker.absorb(&row, tau, out.done[i] != 0);
+            metrics.tokens_emitted.add(row.len() as u64);
+            metrics.drafts_accepted.add(tau as u64);
+            metrics.accepted_len_hist.observe(tau);
+            metrics.iterations.inc();
+            if !sr.tracker.active() {
+                finished.push(i);
+            }
+        }
+        let any_finished = !finished.is_empty();
+        for i in finished {
+            let sr = slots.release(i).expect("finished slot was occupied");
+            metrics.requests_completed.inc();
+            metrics.request_latency.observe(sr.enqueued.elapsed());
+            let result = sr.tracker.into_result();
+            let _ = sr.reply.send(Ok(result));
+            engine.release_row(st, i);
+        }
+        if slots.is_empty() {
+            metrics.batches.inc();
+        }
+        if any_finished {
+            // Per-row drain boundary (see coordinator::batch_worker): all
+            // of this step's outputs were read back, so the backend can
+            // release per-batch resources.
+            engine.backend().end_batch();
+        }
+    }
+}
+
+/// Lazily build (or rebuild after failure) a worker's decode stream.
+fn ensure_stream<'a, B: Backend>(
+    engine: &SpecEngine<B>,
+    state: &'a mut Option<DecodeState<B>>,
+) -> Result<&'a mut DecodeState<B>> {
+    if state.is_none() {
+        *state = Some(engine.begin_stream()?);
+    }
+    Ok(state.as_mut().expect("just ensured"))
+}

@@ -10,6 +10,17 @@ use crate::util::json::{self, Value};
 
 /// POST a JSON body and return (status, body).
 pub fn post_json(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let (status, _headers, body) = post_json_full(addr, path, body)?;
+    Ok((status, body))
+}
+
+/// POST a JSON body and return (status, headers, body) — headers are
+/// lower-cased `(name, value)` pairs (e.g. `retry-after` on a shed 429).
+pub fn post_json_full(
+    addr: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut stream = TcpStream::connect(addr)?;
     let req = format!(
         "POST {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
@@ -24,10 +35,11 @@ pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
     let req = format!("GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n");
     stream.write_all(req.as_bytes())?;
-    read_response(stream)
+    let (status, _headers, body) = read_response(stream)?;
+    Ok((status, body))
 }
 
-fn read_response(mut stream: TcpStream) -> Result<(u16, String)> {
+fn read_response(mut stream: TcpStream) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut raw = Vec::new();
     stream.read_to_end(&mut raw)?;
     let text = String::from_utf8_lossy(&raw);
@@ -36,8 +48,16 @@ fn read_response(mut stream: TcpStream) -> Result<(u16, String)> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| anyhow!("malformed response"))?;
-    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
-    Ok((status, body))
+    let (head, body) = text.split_once("\r\n\r\n").unwrap_or((&text, ""));
+    let headers: Vec<(String, String)> = head
+        .split("\r\n")
+        .skip(1) // status line
+        .filter_map(|line| {
+            line.split_once(':')
+                .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        })
+        .collect();
+    Ok((status, headers, body.to_string()))
 }
 
 /// Parsed generate response.

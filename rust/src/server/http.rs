@@ -55,8 +55,14 @@ pub fn parse_request(buf: &[u8]) -> Result<Option<(Request, usize)>> {
     Ok(Some((Request { method, path, body, close }, body_start + content_length)))
 }
 
-/// Serialise a response.
-pub fn render_response(status: u16, content_type: &str, body: &str) -> Vec<u8> {
+/// Serialise a response.  `extra_headers` carries per-response headers
+/// (e.g. `retry-after` on a shed 429).
+pub fn render_response(
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(String, String)],
+    body: &str,
+) -> Vec<u8> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -64,8 +70,10 @@ pub fn render_response(status: u16, content_type: &str, body: &str) -> Vec<u8> {
         429 => "Too Many Requests",
         _ => "Internal Server Error",
     };
+    let extra: String =
+        extra_headers.iter().map(|(k, v)| format!("{k}: {v}\r\n")).collect();
     format!(
-        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\n{extra}connection: keep-alive\r\n\r\n{body}",
         body.len()
     )
     .into_bytes()
@@ -79,8 +87,9 @@ pub fn handle_connection(mut stream: TcpStream, state: Arc<ServerState>) -> Resu
         match parse_request(&buf)? {
             Some((req, consumed)) => {
                 buf.drain(..consumed);
-                let (status, ctype, body) = super::route(&state, &req.method, &req.path, &req.body);
-                stream.write_all(&render_response(status, &ctype, &body))?;
+                let (status, ctype, body, headers) =
+                    super::route(&state, &req.method, &req.path, &req.body);
+                stream.write_all(&render_response(status, &ctype, &headers, &body))?;
                 if req.close {
                     return Ok(());
                 }
@@ -144,9 +153,21 @@ mod tests {
 
     #[test]
     fn response_has_content_length() {
-        let r = render_response(200, "text/plain", "hello");
+        let r = render_response(200, "text/plain", &[], "hello");
         let s = String::from_utf8(r).unwrap();
         assert!(s.contains("content-length: 5"));
         assert!(s.ends_with("hello"));
+    }
+
+    #[test]
+    fn response_carries_extra_headers() {
+        let hdrs = vec![("retry-after".to_string(), "1".to_string())];
+        let r = render_response(429, "text/plain", &hdrs, "shed\n");
+        let s = String::from_utf8(r).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests"));
+        assert!(s.contains("retry-after: 1\r\n"));
+        // extra headers stay inside the head, before the blank line
+        let head = s.split("\r\n\r\n").next().unwrap();
+        assert!(head.contains("retry-after: 1"));
     }
 }

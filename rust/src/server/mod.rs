@@ -1,13 +1,17 @@
 //! HTTP/1.1 JSON front-end over std::net (thread-per-connection; the
 //! offline image has no tokio, and the engine serialises on one device
-//! anyway — see DESIGN.md §3).
+//! anyway — see DESIGN.md §3).  Requests route through the serving tier
+//! ([`crate::serve::Router`], DESIGN.md §14): multi-replica placement,
+//! token-bucket admission and explicit load shedding — over-budget
+//! traffic gets `429` with a `Retry-After` header, never a hang.
 //!
 //! Endpoints:
 //! * `POST /v1/generate` — body `{"prompt_tokens": [...], "dataset":
-//!   "gsm8k", "max_new_tokens": 48, "seed": 0}`; either explicit tokens or
-//!   a dataset to sample a prompt from.  Responds with generated tokens +
-//!   decode stats.
-//! * `GET /metrics`  — plain-text metrics exposition.
+//!   "gsm8k", "max_new_tokens": 48, "seed": 0, "lane": "interactive",
+//!   "tenant": 7}`; either explicit tokens or a dataset to sample a
+//!   prompt from.  Responds with generated tokens + decode stats.
+//! * `GET /metrics`  — plain-text metrics exposition (per-replica blocks
+//!   + router aggregates).
 //! * `GET /healthz`  — liveness.
 
 pub mod client;
@@ -19,9 +23,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, GenRequest};
+use crate::coordinator::Lane;
+use crate::serve::{RouteError, Router, ServeRequest};
 use crate::util::json::{self, Value};
 use crate::workload::Dataset;
+
+/// One routed HTTP response: status, content-type, body, extra headers.
+pub type Response = (u16, String, String, Vec<(String, String)>);
 
 /// Parsed generate-request body.
 #[derive(Debug, Default)]
@@ -30,6 +38,10 @@ pub struct GenerateBody {
     pub dataset: Option<String>,
     pub max_new_tokens: Option<usize>,
     pub seed: Option<u64>,
+    /// `"interactive"` (default) or `"batch"` — queue lane.
+    pub lane: Option<String>,
+    /// Tenant id for intra-lane round-robin fairness.
+    pub tenant: Option<u64>,
 }
 
 impl GenerateBody {
@@ -43,13 +55,15 @@ impl GenerateBody {
             dataset: v.get("dataset").and_then(Value::as_str).map(String::from),
             max_new_tokens: v.get("max_new_tokens").and_then(Value::as_usize),
             seed: v.get("seed").and_then(Value::as_u64),
+            lane: v.get("lane").and_then(Value::as_str).map(String::from),
+            tenant: v.get("tenant").and_then(Value::as_u64),
         })
     }
 }
 
 /// Shared server state.
 pub struct ServerState {
-    pub coordinator: Coordinator,
+    pub router: Router,
     pub datasets: Vec<Dataset>,
 }
 
@@ -66,45 +80,55 @@ pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
     }
 }
 
-/// Route one parsed request to (status, content-type, body).
-pub fn route(state: &ServerState, method: &str, path: &str, body: &[u8]) -> (u16, String, String) {
+fn plain(status: u16, body: impl Into<String>) -> Response {
+    (status, "text/plain".into(), body.into(), Vec::new())
+}
+
+/// Route one parsed request.
+pub fn route(state: &ServerState, method: &str, path: &str, body: &[u8]) -> Response {
     match (method, path) {
-        ("GET", "/healthz") => (200, "text/plain".into(), "ok\n".into()),
-        ("GET", "/metrics") => (200, "text/plain".into(), state.coordinator.metrics.render()),
+        ("GET", "/healthz") => plain(200, "ok\n"),
+        ("GET", "/metrics") => plain(200, state.router.render_metrics()),
         ("POST", "/v1/generate") => generate(state, body),
-        _ => (404, "text/plain".into(), "not found\n".into()),
+        _ => plain(404, "not found\n"),
     }
 }
 
-fn generate(state: &ServerState, body: &[u8]) -> (u16, String, String) {
+fn generate(state: &ServerState, body: &[u8]) -> Response {
     let req = match GenerateBody::parse(body) {
         Ok(r) => r,
-        Err(e) => return (400, "text/plain".into(), format!("bad request: {e}\n")),
+        Err(e) => return plain(400, format!("bad request: {e}\n")),
     };
     let prompt = match (&req.prompt_tokens, &req.dataset) {
         (Some(p), _) if p.len() >= 2 => p.clone(),
-        (Some(_), _) => return (400, "text/plain".into(), "prompt too short\n".into()),
+        (Some(_), _) => return plain(400, "prompt too short\n"),
         (None, Some(ds)) => {
             let seed = req.seed.unwrap_or(0);
             match state.datasets.iter().find(|d| &d.name == ds) {
                 Some(d) => d.sample(1, seed).pop().unwrap(),
-                None => return (400, "text/plain".into(), format!("unknown dataset {ds}\n")),
+                None => return plain(400, format!("unknown dataset {ds}\n")),
             }
         }
-        (None, None) => {
-            return (400, "text/plain".into(), "need prompt_tokens or dataset\n".into())
-        }
+        (None, None) => return plain(400, "need prompt_tokens or dataset\n"),
+    };
+    let lane = match req.lane.as_deref() {
+        None | Some("interactive") => Lane::Interactive,
+        Some("batch") => Lane::Batch,
+        Some(other) => return plain(400, format!("unknown lane {other}\n")),
     };
     let t0 = Instant::now();
-    let gen = GenRequest {
+    let gen = ServeRequest {
         prompt,
         max_new_tokens: req.max_new_tokens,
         // The request seed also pins the row's sampling stream, making
-        // generations reproducible under any batching (DESIGN.md §7).
+        // generations reproducible under any batching or placement
+        // (DESIGN.md §7, §14.1).
         seed: req.seed,
+        lane,
+        tenant: req.tenant.unwrap_or(0),
         enqueued: t0,
     };
-    match state.coordinator.generate(gen) {
+    match state.router.generate(gen) {
         Ok(row) => {
             let resp = json::obj(vec![
                 ("tokens", json::arr_u32(&row.tokens)),
@@ -115,8 +139,18 @@ fn generate(state: &ServerState, body: &[u8]) -> (u16, String, String) {
                 ("finish", json::str_v(&format!("{:?}", row.finish))),
                 ("latency_ms", json::num(t0.elapsed().as_secs_f64() * 1e3)),
             ]);
-            (200, "application/json".into(), json::to_string(&resp))
+            (200, "application/json".into(), json::to_string(&resp), Vec::new())
         }
-        Err(e) => (429, "text/plain".into(), format!("{e:#}\n")),
+        // Load shed: explicit 429 with a Retry-After hint — the
+        // serving-tier overload contract (DESIGN.md §14.1).
+        Err(RouteError::Shed { retry_after_s }) => (
+            429,
+            "text/plain".into(),
+            "over capacity — request shed\n".into(),
+            vec![("retry-after".into(), retry_after_s.to_string())],
+        ),
+        // Admission rejections (ring budget, bad prompt) and engine
+        // failures surface the engine's error chain.
+        Err(e @ RouteError::Failed(_)) => plain(400, format!("{e}\n")),
     }
 }

@@ -1,0 +1,324 @@
+//! Serving-tier invariants (DESIGN.md §14):
+//!
+//! 1. Warm-prefix losslessness: admitting a prompt over a cached prefix
+//!    (`prefill_prefix` + `admit_rows_prefixed`) produces token-for-token
+//!    the same output as a cold admission — for the fp32 *and* the int8
+//!    drafter.
+//! 2. Placement invariance: with per-request seeds, a request's output is
+//!    identical whether the router pins every request to replica 0 or
+//!    load-balances across replicas under concurrency.
+//! 3. Overload sheds: when no replica has admission budget the router
+//!    returns `RouteError::Shed` (429 + Retry-After upstream) and counts
+//!    it — never a panic, never an unbounded queue.
+//! 4. Paged KV pool: exhaustion defers admissions (requests still
+//!    complete, unshed); a request that can never fit is rejected with an
+//!    explicit error.
+//! 5. Router-level prefix serving: warm responses are bit-identical to a
+//!    prefix-cache-disabled router's, the cache counts hits/misses, and
+//!    warm admissions prefill strictly fewer positions than the prompts
+//!    contain.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use specd::backend::{NativeBackend, Precision};
+use specd::config::{Config, EngineConfig, RouterConfig};
+use specd::engine::spec::{Admission, DecodeState, PrefixHandle, SpecEngine};
+use specd::models::vocab;
+use specd::serve::{RouteError, Router, ServeRequest};
+
+fn prompt(tail: &[u32]) -> Vec<u32> {
+    let mut p = vec![vocab::BOS, vocab::marker_for(1)];
+    p.extend_from_slice(tail);
+    p
+}
+
+/// Step the stream until `slot`'s row finishes (the coordinator's absorb
+/// rules: EOS stops, `max_new` caps, device `done` ends the row).
+fn collect_row(
+    engine: &SpecEngine<NativeBackend>,
+    st: &mut DecodeState<NativeBackend>,
+    slot: usize,
+    max_new: usize,
+) -> Vec<u32> {
+    let gamma = engine.cfg.gamma;
+    let mut gen: Vec<u32> = Vec::new();
+    for _ in 0..(max_new + 200) {
+        let out = engine.step_stream(st).unwrap();
+        let tau = out.tau[slot] as usize;
+        let emitted = &out.emitted[slot * (gamma + 1)..slot * (gamma + 1) + tau + 1];
+        for &t in emitted {
+            if t as u32 == vocab::EOS {
+                return gen;
+            }
+            gen.push(t as u32);
+            if gen.len() >= max_new {
+                return gen;
+            }
+        }
+        if out.done[slot] != 0 {
+            return gen;
+        }
+    }
+    panic!("row {slot} never finished");
+}
+
+/// Engine-level warm-vs-cold: same prompt, same row seed, once admitted
+/// cold and once over a cached 16-token prefix — identical tokens.
+fn assert_warm_prefix_lossless(precision: Precision) {
+    let max_new = 12;
+    let seed = 0x5eed_0001;
+    let be = Arc::new(NativeBackend::seeded_with_shapes(2, 96, 7));
+    let cfg = EngineConfig {
+        gamma: 4,
+        max_new_tokens: max_new,
+        draft_precision: precision,
+        ..Default::default()
+    };
+    let engine = SpecEngine::new(be, cfg).unwrap();
+    // 20-token prompt; its first 16 tokens are the shared prefix.
+    let p = prompt(&[30, 31, 32, 33, 34, 35, 36, 37, 38, 39, 40, 41, 42, 43, 44, 45, 46, 47]);
+    let plen = 16;
+
+    let mut st = engine.begin_stream().unwrap();
+    engine.admit_row(&mut st, 0, &p, seed).unwrap();
+    let cold = collect_row(&engine, &mut st, 0, max_new);
+
+    let (kv_t, kv_d) = engine.prefill_prefix(&p[..plen]).unwrap();
+    let mut st = engine.begin_stream().unwrap();
+    let admissions = [Admission { slot: 0, prompt: &p, row_seed: seed }];
+    let prefixes =
+        [Some(PrefixHandle::<NativeBackend> { kv_target: &kv_t, kv_drafter: &kv_d, len: plen })];
+    let results = engine.admit_rows_prefixed(&mut st, &admissions, &prefixes);
+    results.into_iter().next().unwrap().expect("prefixed admission must succeed");
+    let warm = collect_row(&engine, &mut st, 0, max_new);
+
+    assert_eq!(
+        warm, cold,
+        "splicing a cached prefix must reproduce the cold decode token for token \
+         ({precision:?} drafter)"
+    );
+}
+
+#[test]
+fn warm_prefix_admission_is_bit_identical_fp32() {
+    assert_warm_prefix_lossless(Precision::Fp32);
+}
+
+#[test]
+fn warm_prefix_admission_is_bit_identical_int8() {
+    assert_warm_prefix_lossless(Precision::Int8);
+}
+
+#[test]
+fn placement_is_invariant_under_load() {
+    let backend = Arc::new(NativeBackend::seeded(0x11ad));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 8, ..Default::default() };
+    let pinned_cfg =
+        RouterConfig { replicas: 2, pinned_replica: Some(0), ..Default::default() };
+    let load_cfg = RouterConfig { replicas: 2, ..Default::default() };
+    let pinned =
+        Router::spawn(backend.clone(), ecfg.clone(), &cfg.server, &pinned_cfg).unwrap();
+    let load_aware = Router::spawn(backend, ecfg, &cfg.server, &load_cfg).unwrap();
+
+    let reqs: Vec<(Vec<u32>, usize, u64)> = (0..8u32)
+        .map(|i| (prompt(&[20 + i, 30 + i, 40 + i]), [1, 8, 4, 2][i as usize % 4], 100 + i as u64))
+        .collect();
+
+    // Reference: everything on replica 0, sequentially.
+    let reference: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|(p, max_new, seed)| {
+            pinned
+                .generate(ServeRequest::new(p.clone(), Some(*max_new), Some(*seed)))
+                .unwrap()
+                .tokens
+        })
+        .collect();
+
+    // Same requests, concurrent, least-outstanding-tokens placement.
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|(p, max_new, seed)| {
+            let r = load_aware.clone();
+            let (p, max_new, seed) = (p.clone(), *max_new, *seed);
+            std::thread::spawn(move || {
+                r.generate(ServeRequest::new(p, Some(max_new), Some(seed))).unwrap().tokens
+            })
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&reference) {
+        let got = h.join().unwrap();
+        assert_eq!(
+            &got, want,
+            "a seeded request's output must not depend on replica placement"
+        );
+    }
+}
+
+#[test]
+fn overload_sheds_with_retry_after_not_panic() {
+    let backend = Arc::new(NativeBackend::seeded(0x0bad));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 48, ..Default::default() };
+    // Budget fits exactly one long request (cost = prompt 5 + max_new 80
+    // = 85 tokens), so a second request while it decodes must shed.
+    let rcfg = RouterConfig {
+        replicas: 1,
+        token_budget: 86,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let router = Router::spawn(backend, ecfg, &cfg.server, &rcfg).unwrap();
+
+    let long_router = router.clone();
+    let long = std::thread::spawn(move || {
+        long_router
+            .generate(ServeRequest::new(prompt(&[20, 21, 22]), Some(80), Some(1)))
+            .unwrap()
+    });
+    // Wait until the long request is actually admitted and decoding.
+    let metrics = router.replica_metrics(0);
+    let t0 = Instant::now();
+    while metrics.slots_refilled.get() < 1 {
+        assert!(t0.elapsed().as_secs() < 10, "long request never admitted");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let err = router
+        .generate(ServeRequest::new(prompt(&[50, 51]), Some(1), Some(2)))
+        .expect_err("an over-budget request must be shed");
+    match err {
+        RouteError::Shed { retry_after_s } => {
+            assert!(retry_after_s >= 1, "shed must carry a usable Retry-After hint")
+        }
+        other => panic!("expected Shed, got: {other}"),
+    }
+    assert!(router.metrics.requests_shed_total.get() >= 1);
+
+    let long_row = long.join().unwrap();
+    assert!(!long_row.tokens.is_empty());
+    // Budget released on completion: the same request now succeeds.
+    let ok = router
+        .generate(ServeRequest::new(prompt(&[50, 51]), Some(1), Some(2)))
+        .unwrap();
+    assert!(ok.tokens.len() <= 1);
+}
+
+#[test]
+fn pool_exhaustion_defers_then_completes() {
+    let backend = Arc::new(NativeBackend::seeded_with_shapes(2, 64, 9));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 8, ..Default::default() };
+    // Each row's footprint is prompt 5 + max_new 8 + gamma 8 + 2 = 23
+    // positions = 2 pages; a 2-page pool serialises admissions — later
+    // requests defer (not shed, not fail) until pages free up.
+    let rcfg = RouterConfig {
+        replicas: 1,
+        page_size: 16,
+        kv_pages: 2,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let router = Router::spawn(backend, ecfg, &cfg.server, &rcfg).unwrap();
+
+    let handles: Vec<_> = (0..3u32)
+        .map(|i| {
+            let r = router.clone();
+            std::thread::spawn(move || {
+                r.generate(ServeRequest::new(
+                    prompt(&[30 + i, 40 + i, 50 + i]),
+                    Some(8),
+                    Some(10 + i as u64),
+                ))
+                .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let row = h.join().unwrap();
+        assert!(row.tokens.len() <= 8);
+    }
+    assert_eq!(router.metrics.requests_shed_total.get(), 0, "deferral must not shed");
+    assert_eq!(router.replica_metrics(0).requests_completed.get(), 3);
+    // Row leases return to the pool with their slots.
+    let t0 = Instant::now();
+    while router.pool().pages_used() != 0 {
+        assert!(t0.elapsed().as_secs() < 10, "row page leases never returned to the pool");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn request_larger_than_pool_is_rejected_not_hung() {
+    let backend = Arc::new(NativeBackend::seeded_with_shapes(2, 64, 9));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 8, ..Default::default() };
+    // One 16-position page total; a footprint of 23 positions can never
+    // fit — the worker must reply with an explicit error, not defer
+    // forever.
+    let rcfg = RouterConfig {
+        replicas: 1,
+        page_size: 16,
+        kv_pages: 1,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let router = Router::spawn(backend, ecfg, &cfg.server, &rcfg).unwrap();
+    let err = router
+        .generate(ServeRequest::new(prompt(&[30, 31, 32]), Some(8), Some(0)))
+        .expect_err("a request that cannot ever fit the pool must be rejected");
+    match err {
+        RouteError::Failed(msg) => {
+            assert!(msg.contains("KV pages"), "unexpected rejection: {msg}")
+        }
+        other => panic!("expected Failed, got: {other}"),
+    }
+}
+
+#[test]
+fn router_warm_prefix_serving_is_bit_identical_and_counted() {
+    let backend = Arc::new(NativeBackend::seeded(0x9a9e));
+    let cfg = Config::default();
+    let ecfg = EngineConfig { max_new_tokens: 8, ..Default::default() };
+    let cold_cfg = RouterConfig { replicas: 1, prefix_cache: false, ..Default::default() };
+    let warm_cfg = RouterConfig { replicas: 1, prefix_cache: true, ..Default::default() };
+    let cold_router =
+        Router::spawn(backend.clone(), ecfg.clone(), &cfg.server, &cold_cfg).unwrap();
+    let warm_router = Router::spawn(backend, ecfg, &cfg.server, &warm_cfg).unwrap();
+
+    // 36-token prompt: its page-aligned 32-token head is cacheable
+    // (page_size 16, L/2 = 48 budget).
+    let tail: Vec<u32> = (0..34u32).map(|i| 30 + (i % 60)).collect();
+    let p = prompt(&tail);
+    let req = || ServeRequest::new(p.clone(), Some(8), Some(7));
+
+    let cold = cold_router.generate(req()).unwrap().tokens;
+    // First warm request misses and populates (and already decodes over
+    // the spliced prefix); the second hits.
+    let warm1 = warm_router.generate(req()).unwrap().tokens;
+    let warm2 = warm_router.generate(req()).unwrap().tokens;
+    assert_eq!(warm1, cold, "populate-path decode must be bit-identical to cold prefill");
+    assert_eq!(warm2, cold, "hit-path decode must be bit-identical to cold prefill");
+
+    let stats = warm_router.prefix_stats();
+    assert!(stats.misses.get() >= 1, "first request must count a miss");
+    assert!(stats.inserts.get() >= 1, "the miss must populate the cache");
+    assert!(stats.hits.get() >= 1, "second request must count a hit");
+    assert_eq!(cold_router.prefix_stats().hits.get(), 0);
+
+    // Hit-work accounting (DESIGN.md §14.5): warm admissions forwarded
+    // only prompt suffixes, so prefilled positions trail prompt positions.
+    let m = warm_router.replica_metrics(0);
+    assert!(
+        m.prefill_positions.get() < m.prompt_positions.get(),
+        "warm admissions must prefill strictly fewer positions than the prompts contain \
+         (prefill {} vs prompt {})",
+        m.prefill_positions.get(),
+        m.prompt_positions.get()
+    );
+    // The cold router prefilled every prompt position.
+    let c = cold_router.replica_metrics(0);
+    assert_eq!(c.prefill_positions.get(), c.prompt_positions.get());
+}

@@ -1,12 +1,12 @@
-//! End-to-end serving: coordinator + HTTP server + client over the
-//! hermetic native backend on a loopback socket — the full request path
-//! with zero external dependencies and no artifact bundle.
+//! End-to-end serving: router + HTTP server + client over the hermetic
+//! native backend on a loopback socket — the full request path with zero
+//! external dependencies and no artifact bundle.
 
 use std::sync::Arc;
 
 use specd::backend::NativeBackend;
 use specd::config::{Config, EngineConfig};
-use specd::coordinator::Coordinator;
+use specd::serve::Router;
 use specd::server::{client, serve, ServerState};
 use specd::workload::Dataset;
 
@@ -16,8 +16,8 @@ fn http_generate_roundtrip() {
     let datasets = Dataset::load_or_synthetic(None).unwrap();
     let cfg = Config::default();
     let ecfg = EngineConfig { max_new_tokens: 12, ..Default::default() };
-    let coordinator = Coordinator::spawn(backend, ecfg, &cfg.server).unwrap();
-    let state = Arc::new(ServerState { coordinator, datasets });
+    let router = Router::spawn(backend, ecfg, &cfg.server, &cfg.router).unwrap();
+    let state = Arc::new(ServerState { router, datasets });
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
@@ -53,7 +53,14 @@ fn http_generate_roundtrip() {
     let (status, _) = client::get(&addr, "/bogus").unwrap();
     assert_eq!(status, 404);
 
-    // metrics reflect the traffic
+    // metrics reflect the traffic: unlabelled aggregates plus the
+    // serving-tier exposition (per-replica blocks, shed/pool/prefix
+    // counters — DESIGN.md §14.5)
     let (_, metrics) = client::get(&addr, "/metrics").unwrap();
     assert!(metrics.contains("specd_requests_completed 3"), "{metrics}");
+    assert!(metrics.contains("specd_slot_occupancy{replica=\"0\"}"), "{metrics}");
+    assert!(metrics.contains("specd_requests_shed_total 0"), "{metrics}");
+    assert!(metrics.contains("specd_prefix_cache_hits"), "{metrics}");
+    assert!(metrics.contains("specd_kv_pages_total"), "{metrics}");
+    assert!(metrics.contains("specd_kv_pages_free"), "{metrics}");
 }
