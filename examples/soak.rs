@@ -269,8 +269,8 @@ fn main() -> anyhow::Result<()> {
                 json::num(prefill_positions as f64 / prompt_positions.max(1) as f64),
             ),
         ]);
-        std::fs::write("BENCH_ci.json", json::to_string(&report))?;
-        println!("soak: wrote BENCH_ci.json");
+        specd::bench::merge_section("BENCH_ci.json", "soak", report)?;
+        println!("soak: merged section 'soak' into BENCH_ci.json");
     }
 
     let mut failed = false;

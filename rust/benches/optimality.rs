@@ -1,12 +1,123 @@
 //! Theorem-2 harness benchmarks: exact enumeration vs Monte-Carlo cost of
 //! estimating E[tau] for both algorithms (E7 in DESIGN.md), plus the §2
-//! motivating example regeneration speed.
+//! motivating example regeneration speed, plus the adaptive controller's
+//! oracle-replay regret gate (DESIGN.md §15): replay the controller
+//! against a known piecewise-constant acceptance trace and require its
+//! cumulative objective to stay within 10% of the best *fixed* (gamma, K)
+//! chosen in hindsight.  The replay is fully deterministic (seeded
+//! acceptance draws, deterministic controller), so the gate cannot flake.
+//!
+//! `--smoke` shrinks the replay for CI; the regret gate runs either way
+//! and exits non-zero when it trips.
 
-use specd::bench::Bench;
+use specd::bench::{self, Bench};
+use specd::config::AdaptiveConfig;
+use specd::control::{self, Controller};
 use specd::sim::{self, MarkovPair};
-use specd::verify::Algo;
+use specd::util::json;
+use specd::verify::{Algo, Rng};
+
+/// True token-acceptance of the replay trace at `step`: alternating
+/// "easy" and "hard" phases, the regime shift the controller must chase.
+const EASY_ALPHA: f64 = 0.9;
+const HARD_ALPHA: f64 = 0.3;
+
+fn replay_alpha(step: usize, phase_len: usize) -> f64 {
+    if (step / phase_len) % 2 == 0 {
+        EASY_ALPHA
+    } else {
+        HARD_ALPHA
+    }
+}
+
+/// Replay the controller against the known trace; return `(regret,
+/// ctrl_value, best_fixed_value, best_fixed_gamma, steps)`.  Each step
+/// scores the arm the controller picked with [`control::objective`]
+/// evaluated at the *true* alpha — the controller only ever sees the
+/// noisy tau observations, exactly as in production.
+fn oracle_replay(smoke: bool) -> (f64, f64, f64, usize, usize) {
+    let (steps, phase_len) = if smoke { (400, 50) } else { (2000, 100) };
+    let cfg = AdaptiveConfig {
+        enabled: true,
+        window: 16,
+        min_window: 2,
+        gamma_min: 1,
+        gamma_max: 8,
+        hysteresis: 0.05,
+        cost_ratio: Some(0.25),
+    };
+    let r = 0.25;
+    // True per-arm step values, precomputed once per (phase, gamma).
+    let value = |alpha: f64, g: usize| control::objective(Algo::Block, alpha, r, g, 1);
+    let easy: Vec<f64> = (0..=cfg.gamma_max).map(|g| value(EASY_ALPHA, g.max(1))).collect();
+    let hard: Vec<f64> = (0..=cfg.gamma_max).map(|g| value(HARD_ALPHA, g.max(1))).collect();
+    let g_hi = cfg.gamma_max;
+    let mut ctrl = Controller::new(cfg, 4, Algo::Block);
+    let mut rng = Rng::new(0x0eac1e9e9);
+    let mut ctrl_value = 0.0;
+    for t in 0..steps {
+        let alpha = replay_alpha(t, phase_len);
+        let d = ctrl.choose(64);
+        ctrl_value += if alpha == EASY_ALPHA { easy[d.gamma] } else { hard[d.gamma] };
+        // Token-chain acceptance draw: tau consecutive accepts at the
+        // true alpha, capped by the gamma the controller actually ran.
+        let mut tau = 0usize;
+        while tau < d.gamma && rng.uniform() < alpha {
+            tau += 1;
+        }
+        ctrl.observe(tau, d.gamma);
+    }
+    let easy_steps = (0..steps).filter(|&t| replay_alpha(t, phase_len) == EASY_ALPHA).count();
+    let hard_steps = steps - easy_steps;
+    let (mut best_fixed, mut best_g) = (f64::MIN, 1usize);
+    for g in 1..=g_hi {
+        let v = easy_steps as f64 * easy[g] + hard_steps as f64 * hard[g];
+        if v > best_fixed {
+            (best_fixed, best_g) = (v, g);
+        }
+    }
+    let regret = 1.0 - ctrl_value / best_fixed.max(1e-12);
+    (regret, ctrl_value, best_fixed, best_g, steps)
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // ---- adaptive controller: oracle-replay regret gate ------------------
+    let (regret, ctrl_value, best_fixed, best_g, steps) = oracle_replay(smoke);
+    println!(
+        "replay/adaptive      regret {:.2}%  (controller {ctrl_value:.1} vs best fixed \
+         gamma={best_g} at {best_fixed:.1} over {steps} steps)",
+        regret * 100.0
+    );
+    bench::merge_section(
+        "BENCH_ci.json",
+        "adaptive_replay",
+        json::obj(vec![
+            ("replay_smoke", json::Value::Bool(smoke)),
+            ("replay_steps", json::num(steps as f64)),
+            ("replay_regret", json::num(regret)),
+            ("replay_ctrl_value", json::num(ctrl_value)),
+            ("replay_best_fixed_value", json::num(best_fixed)),
+            ("replay_best_fixed_gamma", json::num(best_g as f64)),
+        ]),
+    )
+    .expect("merge adaptive_replay section into BENCH_ci.json");
+    println!("merged section 'adaptive_replay' into BENCH_ci.json");
+    if regret > 0.10 {
+        eprintln!(
+            "PERF REGRESSION: oracle-replay regret {:.2}% exceeds the 10% bound \
+             against the best fixed gamma",
+            regret * 100.0
+        );
+        std::process::exit(1);
+    }
+    if smoke {
+        // CI smoke stops at the gate; the enumeration/MC benches below
+        // are for the full perf run.
+        return;
+    }
+
     let b = Bench::new(2, 8);
     let pair = MarkovPair::random(4, 0.6, 5);
 

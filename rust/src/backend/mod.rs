@@ -61,6 +61,11 @@ pub struct DraftRequest<'a> {
     /// Draft-forward precision override; `None` = the backend's prepared
     /// default (what [`Backend::prepare`] installed).
     pub precision: Option<Precision>,
+    /// Per-row draft-length override for ragged iterations
+    /// ([`Backend::spec_iter_rows`], DESIGN.md §15): row `b` drafts
+    /// `row_gammas[b] <= gamma` levels, with `gamma` staying the layout
+    /// stride.  `None` = every row drafts `gamma` (the uniform case).
+    pub row_gammas: Option<&'a [usize]>,
 }
 
 /// Static facts about a backend instance: the fixed serving shapes the
@@ -111,9 +116,15 @@ impl BackendInfo {
 pub struct SpecIterOut {
     /// Accepted draft tokens per row, `(B,)`.
     pub tau: Vec<i32>,
-    /// Emitted tokens per row, row-major `(B, gamma + 1)`; entries past
+    /// Emitted tokens per row, row-major `(B, stride)`; entries past
     /// `tau[i]` are padding.
     pub emitted: Vec<i32>,
+    /// Row stride of `emitted`: `gamma + 1` for a uniform iteration,
+    /// `max(row gammas) + 1` for a ragged one
+    /// ([`Backend::spec_iter_rows`]).  Consumers must slice
+    /// `emitted[i*stride .. i*stride + tau[i] + 1]` rather than assume
+    /// `cfg.gamma + 1`.
+    pub stride: usize,
     /// Per-row done flag (EOS emitted within the accepted prefix, or the
     /// sequence ring is out of room), `(B,)`.
     pub done: Vec<i32>,
@@ -331,6 +342,37 @@ pub trait Backend: Send + Sync + 'static {
         seeds: &[i32],
     ) -> anyhow::Result<SpecIterOut>;
 
+    /// One fused SpecDec iteration with a **per-row** draft length
+    /// (variable-gamma batching, DESIGN.md §15): row `i` drafts and
+    /// verifies `gammas[i]` tokens, everything else exactly as
+    /// [`Backend::spec_iter`].  Row `i`'s outputs must be bit-identical
+    /// to what a uniform iteration at `gammas[i]` would produce for that
+    /// row (rows are independent, so the per-row determinism contract
+    /// carries over unchanged) — which is why the adaptive controller
+    /// can never affect the committed distribution: each row runs the
+    /// plain lossless iteration at its own depth.
+    ///
+    /// The default implementation runs the whole batch at
+    /// `min(gammas)`: lossless (speculation depth never changes the
+    /// committed distribution) but without per-row depth.  Backends
+    /// with a ragged layout override it (the native backend runs true
+    /// ragged rows).
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter_rows(
+        &self,
+        algo: Algo,
+        drafter: &str,
+        gammas: &[usize],
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut Self::Kv,
+        kv_drafter: &mut Self::Kv,
+        seeds: &[i32],
+    ) -> anyhow::Result<SpecIterOut> {
+        let g = gammas.iter().copied().min().unwrap_or(1).max(1);
+        self.spec_iter(algo, drafter, g, tokens, length, kv_target, kv_drafter, seeds)
+    }
+
     /// `gamma` autoregressive draft steps from the pending token
     /// (host-verify path), drawing row `b`'s samples from `seeds[b]`.
     /// Advances `kv` by `gamma` cache rows; does not touch
@@ -410,6 +452,7 @@ pub trait Backend: Send + Sync + 'static {
             length,
             seeds,
             precision: None,
+            row_gammas: None,
         };
         self.draft_tree(&req, kv)?.flatten()
     }

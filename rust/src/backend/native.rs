@@ -1380,6 +1380,32 @@ impl NativeBackend {
         start_pos: &[i32],
         want_probs: bool,
     ) -> Vec<f32> {
+        self.forward_block_masked(model, name, quant, kv, tokens_t, t, start_pos, want_probs, None)
+    }
+
+    /// Masked variant of [`NativeBackend::forward_block`]: rows with
+    /// `active[bi] == false` are skipped outright — no model evaluation,
+    /// no KV write, their `probs` slice stays zero.  Because every row
+    /// is processed independently (`forward_row` is a pure function of
+    /// one row's slot), masking neighbours cannot change an active
+    /// row's bits, which is what lets the ragged variable-gamma paths
+    /// (DESIGN.md §15) advance only the rows whose draft length reaches
+    /// the current level while staying bit-identical per row to a
+    /// uniform run.  `active == None` runs every row (the plain
+    /// [`NativeBackend::forward_block`]).
+    #[allow(clippy::too_many_arguments)]
+    fn forward_block_masked(
+        &self,
+        model: &NativeModel,
+        name: &str,
+        quant: Option<&QuantModel>,
+        kv: &mut NativeKv,
+        tokens_t: &[i32],
+        t: usize,
+        start_pos: &[i32],
+        want_probs: bool,
+        active: Option<&[bool]>,
+    ) -> Vec<f32> {
         let dims = &model.dims;
         let (rows, l) = (kv.batch, kv.max_len);
         let vcb = dims.vocab_size;
@@ -1404,23 +1430,31 @@ impl NativeBackend {
         let mut pit = probs.chunks_mut(t * vcb);
         let mut slots = Vec::with_capacity(rows);
         for bi in 0..rows {
+            // Advance every iterator in lockstep so row `bi` always maps to
+            // chunk `bi`, then drop the slot for masked-out rows.
+            let k = kit.next().expect("kv row chunk");
+            let v = vit.next().expect("kv row chunk");
+            let p = if want_probs { Some(pit.next().expect("probs row chunk")) } else { None };
+            if active.is_some_and(|a| !a[bi]) {
+                continue;
+            }
             slots.push(RowSlot {
-                k: kit.next().expect("kv row chunk"),
-                v: vit.next().expect("kv row chunk"),
-                probs: if want_probs { Some(pit.next().expect("probs row chunk")) } else { None },
+                k,
+                v,
+                probs: p,
                 toks: &tokens_t[bi * t..(bi + 1) * t],
                 start: start_pos[bi],
             });
         }
 
-        let n_threads = self.threads.min(rows).max(1);
+        let n_threads = self.threads.min(slots.len()).max(1);
         if n_threads == 1 {
             let mut scratch = RowScratch::new(dims, t, l);
             for slot in slots {
                 forward_row(model, quant, packed, kernel, slot, t, l, &mut scratch);
             }
         } else {
-            let chunk = rows.div_ceil(n_threads);
+            let chunk = slots.len().div_ceil(n_threads);
             let mut it = slots.into_iter();
             let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(n_threads);
             loop {
@@ -1618,6 +1652,127 @@ impl NativeBackend {
     }
 
     // ------------------------------------------------------------------
+    // Ragged (variable-gamma) speculation (DESIGN.md §15)
+    // ------------------------------------------------------------------
+
+    /// Ragged counterpart of [`NativeBackend::draft_scan_flat`]: row `r`
+    /// takes `gammas[r]` autoregressive steps; levels past a row's own
+    /// gamma mask that row out of the forward and consume nothing from
+    /// its RNG stream.  Drafts and per-step distributions are laid out at
+    /// the uniform `gmax = max(gammas)` stride with zero padding, so
+    /// downstream slicing matches the uniform path.  Each surviving level
+    /// is bit-identical to the same level of a uniform `gammas[r]` run —
+    /// the per-row losslessness invariant the adaptive controller relies
+    /// on (test: `ragged_rows_match_uniform_runs`).
+    #[allow(clippy::too_many_arguments)]
+    fn draft_scan_ragged(
+        &self,
+        model: &NativeModel,
+        name: &str,
+        quant: Option<&QuantModel>,
+        kv: &mut NativeKv,
+        mut cur: Vec<i32>,
+        start0: &[i32],
+        gammas: &[usize],
+        rngs: &mut [Rng],
+    ) -> (Vec<i32>, Vec<f32>) {
+        let (rows, vcb) = (kv.batch, self.info.vocab_size);
+        debug_assert_eq!(cur.len(), rows);
+        debug_assert_eq!(start0.len(), rows);
+        debug_assert_eq!(rngs.len(), rows);
+        debug_assert_eq!(gammas.len(), rows);
+        let gmax = gammas.iter().copied().max().unwrap_or(0);
+        let mut drafts = vec![0i32; rows * gmax];
+        let mut qs = vec![0.0f32; rows * gmax * vcb];
+        let mut active = vec![true; rows];
+        for j in 0..gmax {
+            for r in 0..rows {
+                active[r] = gammas[r] > j;
+            }
+            let start: Vec<i32> = start0.iter().map(|&s| s + j as i32).collect();
+            let probs = self
+                .forward_block_masked(model, name, quant, kv, &cur, 1, &start, true, Some(&active));
+            for r in 0..rows {
+                if !active[r] {
+                    continue;
+                }
+                let prow = &probs[r * vcb..(r + 1) * vcb];
+                qs[(r * gmax + j) * vcb..(r * gmax + j + 1) * vcb].copy_from_slice(prow);
+                let u = rngs[r].uniform();
+                let next = sample_row(prow, u) as i32;
+                drafts[r * gmax + j] = next;
+                cur[r] = next;
+            }
+        }
+        (drafts, qs)
+    }
+
+    /// Ragged counterpart of [`NativeBackend::score`] over an
+    /// already-flattened row set: row `r` scores its `gammas[r] + 1`
+    /// prefixes in one forward.  Rows are grouped by their gamma so each
+    /// forward keeps the uniform `(rows, g + 1)` block shape the kernels
+    /// want, masking out the other groups; distinct gammas in flight are
+    /// bounded by the controller's [gamma_min, gamma_max] band, so the
+    /// group count stays small.  Output keeps the uniform
+    /// `(gmax + 1) * vocab` row stride with zero padding past a row's own
+    /// `gammas[r] + 1` distributions.
+    #[allow(clippy::too_many_arguments)]
+    fn score_ragged_flat(
+        &self,
+        model: &NativeModel,
+        kv: &mut NativeKv,
+        pending: &[i32],
+        start0: &[i32],
+        drafts: &[i32],
+        gammas: &[usize],
+        gmax: usize,
+    ) -> Vec<f32> {
+        let (rows, vcb) = (kv.batch, self.info.vocab_size);
+        debug_assert_eq!(pending.len(), rows);
+        debug_assert_eq!(start0.len(), rows);
+        debug_assert_eq!(gammas.len(), rows);
+        debug_assert_eq!(drafts.len(), rows * gmax);
+        let mut ps = vec![0.0f32; rows * (gmax + 1) * vcb];
+        let mut distinct: Vec<usize> = gammas.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let mut active = vec![false; rows];
+        for &g in &distinct {
+            for r in 0..rows {
+                active[r] = gammas[r] == g;
+            }
+            let mut inp = vec![0i32; rows * (g + 1)];
+            for r in 0..rows {
+                if !active[r] {
+                    continue;
+                }
+                inp[r * (g + 1)] = pending[r];
+                inp[r * (g + 1) + 1..(r + 1) * (g + 1)]
+                    .copy_from_slice(&drafts[r * gmax..r * gmax + g]);
+            }
+            let probs = self.forward_block_masked(
+                model,
+                "target",
+                None,
+                kv,
+                &inp,
+                g + 1,
+                start0,
+                true,
+                Some(&active),
+            );
+            for r in 0..rows {
+                if !active[r] {
+                    continue;
+                }
+                ps[r * (gmax + 1) * vcb..(r * (gmax + 1) + g + 1) * vcb]
+                    .copy_from_slice(&probs[r * (g + 1) * vcb..(r + 1) * (g + 1) * vcb]);
+            }
+        }
+        ps
+    }
+
+    // ------------------------------------------------------------------
     // Multi-draft speculation (DESIGN.md §9)
     // ------------------------------------------------------------------
 
@@ -1800,7 +1955,219 @@ impl NativeBackend {
         }
         self.put_scratch(drafter, d_scratch);
         self.put_scratch("target", t_scratch);
-        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us, drafted: b * k * gamma })
+        Ok(SpecIterOut {
+            tau,
+            emitted,
+            done,
+            stride: gamma + 1,
+            draft_us,
+            target_us,
+            drafted: b * k * gamma,
+        })
+    }
+
+    /// Ragged multi-draft iteration (DESIGN.md §15): like
+    /// [`NativeBackend::spec_iter_multipath`], but serving row `bi` drafts
+    /// and verifies `gammas[bi]` tokens on each of its `k` paths.  Tree
+    /// iterations also land here when rows disagree on gamma — the flat
+    /// multipath path commits the same bits (the tree layout is a pure
+    /// FLOP optimisation, test-enforced equal to multipath), it only
+    /// forgoes prefix-sharing on the transient ragged iterations.
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter_rows_multi(
+        &self,
+        k: usize,
+        drafter: &str,
+        gammas: &[usize],
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut NativeKv,
+        kv_drafter: &mut NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<SpecIterOut> {
+        if k == 0 {
+            return Err(anyhow!("multipath draft set needs k >= 1"));
+        }
+        let (b, l, vcb) = (self.info.batch, self.info.max_len, self.info.vocab_size);
+        let gmax = gammas.iter().copied().max().unwrap_or(1);
+        let m_d = self.model(drafter)?;
+        let m_t = self.model("target")?;
+
+        // Draft: K path rows per serving row against prefix-spliced
+        // scratch, every path row running its serving row's own gamma.
+        let t_draft = Instant::now();
+        let mut d_scratch = self.multi_prefix_scratch(m_d, drafter, k, length, kv_drafter);
+        let pending = self.gather_pending(tokens, length);
+        let mut cur = Vec::with_capacity(b * k);
+        let mut pend_flat = Vec::with_capacity(b * k);
+        let mut start0 = Vec::with_capacity(b * k);
+        let mut rngs = Vec::with_capacity(b * k);
+        let mut flat_gammas = Vec::with_capacity(b * k);
+        for bi in 0..b {
+            for path in 0..k {
+                cur.push(pending[bi]);
+                pend_flat.push(pending[bi]);
+                start0.push(length[bi] - 1);
+                rngs.push(path_rng(seeds[bi], DOM_DRAFT, path));
+                flat_gammas.push(gammas[bi]);
+            }
+        }
+        let quant = self.draft_quant(drafter);
+        let (drafts, qs) = self.draft_scan_ragged(
+            m_d,
+            drafter,
+            quant.as_deref(),
+            &mut d_scratch,
+            cur,
+            &start0,
+            &flat_gammas,
+            &mut rngs,
+        );
+        let draft_us = t_draft.elapsed().as_micros() as u64;
+
+        // Score each path row's own gamma + 1 prefixes in grouped
+        // forwards, then hand the gmax-stride buffers to the draft set.
+        let t_target = Instant::now();
+        let mut t_scratch = self.multi_prefix_scratch(m_t, "target", k, length, kv_target);
+        let ps = self.score_ragged_flat(
+            m_t,
+            &mut t_scratch,
+            &pend_flat,
+            &start0,
+            &drafts,
+            &flat_gammas,
+            gmax,
+        );
+        let target_us = t_target.elapsed().as_micros() as u64;
+        let mut set = DraftSet::new(b, k, gmax, vcb, drafts, qs)?;
+        set.set_row_gammas(gammas.to_vec())?;
+        set.set_ps(ps)?;
+
+        let mut tau = vec![0i32; b];
+        let mut emitted = vec![vocab::PAD as i32; b * (gmax + 1)];
+        let mut done = vec![0i32; b];
+        let mut views = RowViews::default();
+        for bi in 0..b {
+            let g = gammas[bi];
+            let (etas, u_res) = multipath_uniforms(seeds[bi], g, k);
+            set.row_views_into(bi, &mut views)?;
+            let outcome =
+                verify::multipath_verify(&views.ps, &views.qs, &views.drafts, &etas, u_res);
+            let len = length[bi].max(0) as usize;
+            let w = set.flat_row(bi, outcome.path);
+            copy_kv_rows(kv_drafter, bi, &d_scratch, w, (len + g).saturating_sub(1).min(l));
+            copy_kv_rows(kv_target, bi, &t_scratch, w, (len + g).min(l));
+            for (j, &t) in outcome.emitted.iter().enumerate() {
+                if len + j < l {
+                    tokens[bi * l + len + j] = t as i32;
+                }
+                emitted[bi * (gmax + 1) + j] = t as i32;
+            }
+            let eos_hit = outcome.emitted.iter().any(|&t| t == vocab::EOS);
+            let new_len = length[bi] + outcome.tau as i32 + 1;
+            let out_of_room = new_len > (l as i32) - (g as i32 + 2);
+            tau[bi] = outcome.tau as i32;
+            done[bi] = (eos_hit || out_of_room) as i32;
+            length[bi] = new_len.min(l as i32 - 1);
+        }
+        self.put_scratch(drafter, d_scratch);
+        self.put_scratch("target", t_scratch);
+        Ok(SpecIterOut {
+            tau,
+            emitted,
+            done,
+            stride: gmax + 1,
+            draft_us,
+            target_us,
+            drafted: k * gammas.iter().sum::<usize>(),
+        })
+    }
+
+    /// Ragged single-draft iteration (Token/Block/Greedy): row `bi`
+    /// drafts, scores and verifies `gammas[bi]` tokens.  Per-row bits
+    /// match a uniform iteration at that row's gamma exactly — drafting
+    /// consumes `gammas[bi]` RNG draws, verification reseeds per row from
+    /// `seeds[bi]` alone, and the forward masking never touches a
+    /// neighbour's rows (test: `ragged_rows_match_uniform_runs`).
+    #[allow(clippy::too_many_arguments)]
+    fn spec_iter_rows_block(
+        &self,
+        algo: Algo,
+        drafter: &str,
+        gammas: &[usize],
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut NativeKv,
+        kv_drafter: &mut NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<SpecIterOut> {
+        let (b, l, vcb) = (self.info.batch, self.info.max_len, self.info.vocab_size);
+        let gmax = gammas.iter().copied().max().unwrap_or(1);
+        let m_d = self.model(drafter)?;
+        let m_t = self.model("target")?;
+        let quant = self.draft_quant(drafter);
+
+        let t_draft = Instant::now();
+        let mut rngs: Vec<Rng> =
+            seeds.iter().map(|&s| Rng::new(seed64(s) ^ DOM_DRAFT)).collect();
+        let pending = self.gather_pending(tokens, length);
+        let start0: Vec<i32> = length.iter().map(|&len| len - 1).collect();
+        let (drafts, qs) = self.draft_scan_ragged(
+            m_d,
+            drafter,
+            quant.as_deref(),
+            kv_drafter,
+            pending.clone(),
+            &start0,
+            gammas,
+            &mut rngs,
+        );
+        let draft_us = t_draft.elapsed().as_micros() as u64;
+
+        let t_target = Instant::now();
+        let ps =
+            self.score_ragged_flat(m_t, kv_target, &pending, &start0, &drafts, gammas, gmax);
+        let target_us = t_target.elapsed().as_micros() as u64;
+
+        let mut tau = vec![0i32; b];
+        let mut emitted = vec![vocab::PAD as i32; b * (gmax + 1)];
+        let mut done = vec![0i32; b];
+        for bi in 0..b {
+            let g = gammas[bi];
+            let (etas, u_res) = verify_uniforms(seeds[bi], g);
+            let ps_m = ProbMatrix::from_f32(
+                g + 1,
+                vcb,
+                &ps[bi * (gmax + 1) * vcb..(bi * (gmax + 1) + g + 1) * vcb],
+            );
+            let qs_m =
+                ProbMatrix::from_f32(g, vcb, &qs[bi * gmax * vcb..(bi * gmax + g) * vcb]);
+            let row_drafts: Vec<u32> =
+                drafts[bi * gmax..bi * gmax + g].iter().map(|&x| x as u32).collect();
+            let outcome = verify::verify(algo, &ps_m, &qs_m, &row_drafts, &etas, u_res);
+            let len = length[bi].max(0) as usize;
+            for (j, &t) in outcome.emitted.iter().enumerate() {
+                if len + j < l {
+                    tokens[bi * l + len + j] = t as i32;
+                }
+                emitted[bi * (gmax + 1) + j] = t as i32;
+            }
+            let eos_hit = outcome.emitted.iter().any(|&t| t == vocab::EOS);
+            let new_len = length[bi] + outcome.tau as i32 + 1;
+            let out_of_room = new_len > (l as i32) - (g as i32 + 2);
+            tau[bi] = outcome.tau as i32;
+            done[bi] = (eos_hit || out_of_room) as i32;
+            length[bi] = new_len.min(l as i32 - 1);
+        }
+        Ok(SpecIterOut {
+            tau,
+            emitted,
+            done,
+            stride: gmax + 1,
+            draft_us,
+            target_us,
+            drafted: gammas.iter().sum(),
+        })
     }
 
     // ------------------------------------------------------------------
@@ -2103,6 +2470,7 @@ impl NativeBackend {
             length,
             seeds,
             precision: None,
+            row_gammas: None,
         };
         let (mut tree, d_scratch) = self.draft_tree_scratch(&req, kv_drafter)?;
         let draft_us = t_draft.elapsed().as_micros() as u64;
@@ -2167,7 +2535,7 @@ impl NativeBackend {
         }
         self.put_scratch(drafter, d_scratch);
         self.put_scratch("target", t_scratch);
-        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us, drafted })
+        Ok(SpecIterOut { tau, emitted, done, stride: gamma + 1, draft_us, target_us, drafted })
     }
 }
 
@@ -2492,7 +2860,61 @@ impl Backend for NativeBackend {
             done[bi] = (eos_hit || out_of_room) as i32;
             length[bi] = new_len.min(l as i32 - 1);
         }
-        Ok(SpecIterOut { tau, emitted, done, draft_us, target_us, drafted: b * gamma })
+        Ok(SpecIterOut {
+            tau,
+            emitted,
+            done,
+            stride: gamma + 1,
+            draft_us,
+            target_us,
+            drafted: b * gamma,
+        })
+    }
+
+    /// True ragged implementation of [`Backend::spec_iter_rows`]: each
+    /// row runs at its own gamma via the masked forwards (no default-impl
+    /// clamp to `min(gammas)`).  Uniform calls fall through to the plain
+    /// fused [`Backend::spec_iter`] so the adaptive-off and steady-state
+    /// paths stay byte-for-byte the pre-existing code.
+    fn spec_iter_rows(
+        &self,
+        algo: Algo,
+        drafter: &str,
+        gammas: &[usize],
+        tokens: &mut [i32],
+        length: &mut [i32],
+        kv_target: &mut NativeKv,
+        kv_drafter: &mut NativeKv,
+        seeds: &[i32],
+    ) -> anyhow::Result<SpecIterOut> {
+        if !algo.fused() {
+            return Err(anyhow!("algo {algo} requires the host-verify engine"));
+        }
+        self.check_shapes(tokens, length)?;
+        self.check_seeds(seeds)?;
+        if gammas.len() != self.info.batch {
+            return Err(anyhow!(
+                "gammas shape {} != batch {}",
+                gammas.len(),
+                self.info.batch
+            ));
+        }
+        for &g in gammas {
+            self.check_gamma(g)?;
+        }
+        let gmax = gammas.iter().copied().max().unwrap_or(1);
+        if gammas.iter().all(|&g| g == gmax) {
+            return self
+                .spec_iter(algo, drafter, gmax, tokens, length, kv_target, kv_drafter, seeds);
+        }
+        match algo {
+            Algo::MultiPath { k } | Algo::Tree { k } => self.spec_iter_rows_multi(
+                k, drafter, gammas, tokens, length, kv_target, kv_drafter, seeds,
+            ),
+            _ => self.spec_iter_rows_block(
+                algo, drafter, gammas, tokens, length, kv_target, kv_drafter, seeds,
+            ),
+        }
     }
 
     fn draft_block(
@@ -2692,6 +3114,127 @@ mod tests {
                     toks[b * be.info().max_len + len0[b] as usize + j],
                     out.emitted[b * 5 + j]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn spec_iter_rows_uniform_delegates_bit_identically() {
+        let be = tiny();
+        let (toks0, lens0) = prompt_state(&be);
+        let seeds = [3, 4];
+        let mut ta = toks0.clone();
+        let mut la = lens0.clone();
+        let mut kvt_a = be.prefill("target", &toks0, &lens0).unwrap();
+        let mut kvd_a = be.prefill("xxs", &toks0, &lens0).unwrap();
+        let a = be
+            .spec_iter(Algo::Block, "xxs", 4, &mut ta, &mut la, &mut kvt_a, &mut kvd_a, &seeds)
+            .unwrap();
+        let mut tb = toks0.clone();
+        let mut lb = lens0.clone();
+        let mut kvt_b = be.prefill("target", &toks0, &lens0).unwrap();
+        let mut kvd_b = be.prefill("xxs", &toks0, &lens0).unwrap();
+        let b = be
+            .spec_iter_rows(
+                Algo::Block,
+                "xxs",
+                &[4, 4],
+                &mut tb,
+                &mut lb,
+                &mut kvt_b,
+                &mut kvd_b,
+                &seeds,
+            )
+            .unwrap();
+        assert_eq!(a.tau, b.tau);
+        assert_eq!(a.emitted, b.emitted);
+        assert_eq!(a.stride, b.stride);
+        assert_eq!(a.done, b.done);
+        assert_eq!(ta, tb);
+        assert_eq!(la, lb);
+        assert_eq!(kvt_a.k, kvt_b.k);
+        assert_eq!(kvd_a.v, kvd_b.v);
+    }
+
+    fn run_uniform(
+        be: &NativeBackend,
+        algo: Algo,
+        g: usize,
+        toks0: &[i32],
+        lens0: &[i32],
+        seeds: &[i32],
+    ) -> (Vec<i32>, Vec<i32>, SpecIterOut, NativeKv, NativeKv) {
+        let mut toks = toks0.to_vec();
+        let mut lens = lens0.to_vec();
+        let mut kvt = be.prefill("target", &toks, &lens).unwrap();
+        let mut kvd = be.prefill("xxs", &toks, &lens).unwrap();
+        let out = be
+            .spec_iter(algo, "xxs", g, &mut toks, &mut lens, &mut kvt, &mut kvd, seeds)
+            .unwrap();
+        (toks, lens, out, kvt, kvd)
+    }
+
+    /// The per-row losslessness invariant behind the adaptive controller:
+    /// in a ragged iteration every row commits exactly the bits a uniform
+    /// iteration at that row's gamma would (tokens, lengths, emitted,
+    /// done, and — where the cache layout is shared — KV bytes).
+    #[test]
+    fn ragged_rows_match_uniform_runs() {
+        for algo in [Algo::Block, Algo::Token, Algo::MultiPath { k: 2 }, Algo::Tree { k: 2 }] {
+            let be = NativeBackend::seeded_with_shapes(4, 32, 7);
+            let (toks0, lens0) = prompt_state(&be);
+            let seeds = [3, 4, 5, 6];
+            let gammas = [3usize, 5, 3, 5];
+            let mut toks = toks0.clone();
+            let mut lens = lens0.clone();
+            let mut kvt = be.prefill("target", &toks0, &lens0).unwrap();
+            let mut kvd = be.prefill("xxs", &toks0, &lens0).unwrap();
+            let out = be
+                .spec_iter_rows(
+                    algo, "xxs", &gammas, &mut toks, &mut lens, &mut kvt, &mut kvd, &seeds,
+                )
+                .unwrap();
+            assert_eq!(out.stride, 6, "{algo}: stride is max(gammas) + 1");
+            assert_eq!(out.drafted, algo.paths() * (3 + 5 + 3 + 5), "{algo}: drafted");
+            let l = be.info().max_len;
+            for g in [3usize, 5] {
+                let (ut, ul, uo, ukvt, ukvd) = run_uniform(&be, algo, g, &toks0, &lens0, &seeds);
+                for bi in 0..4 {
+                    if gammas[bi] != g {
+                        continue;
+                    }
+                    assert_eq!(out.tau[bi], uo.tau[bi], "{algo}: tau row {bi} at gamma {g}");
+                    assert_eq!(out.done[bi], uo.done[bi], "{algo}: done row {bi}");
+                    assert_eq!(lens[bi], ul[bi], "{algo}: length row {bi}");
+                    assert_eq!(
+                        &toks[bi * l..(bi + 1) * l],
+                        &ut[bi * l..(bi + 1) * l],
+                        "{algo}: token ring row {bi}"
+                    );
+                    let t = out.tau[bi] as usize;
+                    assert_eq!(
+                        &out.emitted[bi * out.stride..bi * out.stride + t + 1],
+                        &uo.emitted[bi * uo.stride..bi * uo.stride + t + 1],
+                        "{algo}: emitted row {bi}"
+                    );
+                    // The tree layout commits equivalent-but-differently
+                    // padded scratch rows; byte-compare KV only where the
+                    // uniform run uses the same flat layout.
+                    if !matches!(algo, Algo::Tree { .. }) {
+                        let ks = kvt.row_stride();
+                        assert_eq!(
+                            &kvt.k[bi * ks..(bi + 1) * ks],
+                            &ukvt.k[bi * ks..(bi + 1) * ks],
+                            "{algo}: target K row {bi}"
+                        );
+                        let ds = kvd.row_stride();
+                        assert_eq!(
+                            &kvd.v[bi * ds..(bi + 1) * ds],
+                            &ukvd.v[bi * ds..(bi + 1) * ds],
+                            "{algo}: drafter V row {bi}"
+                        );
+                    }
+                }
             }
         }
     }
@@ -2949,6 +3492,7 @@ mod tests {
             length: &lens,
             seeds: &[5, 6],
             precision: None,
+            row_gammas: None,
         };
         let req_s = DraftRequest { policy: BranchPolicy::EntropyGap { threshold: 0.0 }, ..req_d };
         let t_d = be.draft_tree(&req_d, &kv).unwrap();

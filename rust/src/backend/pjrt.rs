@@ -197,6 +197,7 @@ impl Backend for PjrtBackend {
             tau,
             emitted,
             done,
+            stride: gamma + 1,
             draft_us: 0,
             target_us: 0,
             drafted: self.info.batch * gamma,

@@ -8,6 +8,7 @@
 use std::time::{Duration, Instant};
 
 use crate::stats::mean_std;
+use crate::util::json::{self, Value};
 
 /// Configuration for one benchmark group.
 #[derive(Clone, Debug)]
@@ -102,6 +103,39 @@ impl Bench {
     }
 }
 
+/// Read-merge-write for the shared CI bench reports (`BENCH_ci.json`,
+/// `BENCH_native.json`): several writers each own one top-level *section*
+/// (`"soak"`, `"serving"`, `"adaptive_replay"`, ...) and compose in any
+/// order — whoever runs later re-reads the file and replaces only its own
+/// key, so the tier1 soak and the perf-smoke bench can no longer clobber
+/// each other's cells.  A missing file starts a fresh object; an
+/// unparsable or non-object one is replaced *loudly* (stderr) rather than
+/// propagated as an error, so a corrupt artifact cannot wedge the CI
+/// perf jobs that gate on these numbers.
+pub fn merge_section(path: &str, section: &str, cells: Value) -> std::io::Result<()> {
+    let mut top = match std::fs::read_to_string(path) {
+        Ok(text) => match json::parse(&text) {
+            Ok(v @ Value::Obj(_)) => v,
+            Ok(_) => {
+                eprintln!("specd: {path} is not a JSON object; rewriting it from scratch");
+                json::obj(vec![])
+            }
+            Err(e) => {
+                eprintln!("specd: {path} is unparsable ({e}); rewriting it from scratch");
+                json::obj(vec![])
+            }
+        },
+        Err(_) => json::obj(vec![]),
+    };
+    match &mut top {
+        Value::Obj(map) => {
+            map.insert(section.to_string(), cells);
+        }
+        _ => unreachable!("top is always an object here"),
+    }
+    std::fs::write(path, json::to_string(&top))
+}
+
 /// Throughput helper: report items/sec from a closure returning item count.
 pub fn throughput<F: FnMut() -> usize>(name: &str, reps: usize, mut f: F) -> f64 {
     let t0 = Instant::now();
@@ -141,5 +175,35 @@ mod tests {
     fn throughput_counts_items() {
         let r = throughput("count", 5, || 10);
         assert!(r > 0.0);
+    }
+
+    #[test]
+    fn merge_section_composes_in_any_order() {
+        let path = std::env::temp_dir()
+            .join(format!("specd_merge_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let _ = std::fs::remove_file(&path);
+        // Writer A (soak) lands first, writer B (serving) second: both
+        // sections must survive, in either order.
+        merge_section(&path, "soak", json::obj(vec![("p99", json::num(3.5))])).unwrap();
+        merge_section(&path, "serving", json::obj(vec![("block_be", json::num(2.0))])).unwrap();
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("soak").and_then(|s| s.get("p99")).and_then(Value::as_f64), Some(3.5));
+        assert_eq!(
+            v.get("serving").and_then(|s| s.get("block_be")).and_then(Value::as_f64),
+            Some(2.0)
+        );
+        // Re-running a writer replaces only its own section.
+        merge_section(&path, "soak", json::obj(vec![("p99", json::num(4.0))])).unwrap();
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("soak").and_then(|s| s.get("p99")).and_then(Value::as_f64), Some(4.0));
+        assert!(v.get("serving").is_some(), "other writer's section was clobbered");
+        // A corrupt file is replaced, not propagated.
+        std::fs::write(&path, "not json {{{").unwrap();
+        merge_section(&path, "soak", json::obj(vec![("p99", json::num(1.0))])).unwrap();
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("soak").and_then(|s| s.get("p99")).and_then(Value::as_f64), Some(1.0));
+        let _ = std::fs::remove_file(&path);
     }
 }

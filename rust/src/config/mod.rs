@@ -58,6 +58,10 @@ pub struct EngineConfig {
     /// always runs fp32; backends without a quantised path (PJRT) serve
     /// the draft in fp32 regardless.
     pub draft_precision: Precision,
+    /// Online speculation controller (DESIGN.md §15).  Off by default so
+    /// existing streams stay bit-identical; `SPECD_ADAPTIVE=on` or the
+    /// JSON `"adaptive"` block opts in.
+    pub adaptive: AdaptiveConfig,
 }
 
 impl Default for EngineConfig {
@@ -70,7 +74,74 @@ impl Default for EngineConfig {
             host_verify: false,
             seed: 0,
             draft_precision: Precision::from_env_or_default(),
+            adaptive: AdaptiveConfig::default(),
         }
+    }
+}
+
+/// Knobs for the per-slot adaptive speculation controller
+/// ([`crate::control::Controller`], DESIGN.md §15).  The controller only
+/// retunes gamma (and the path count K for multi-draft algorithms) —
+/// both are losslessness-invariant, so no setting here can change the
+/// committed-token distribution (test-enforced in `tests/theorems.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Master switch.  Default: env `SPECD_ADAPTIVE` (`on`/`off`), else
+    /// off — adaptive-off streams are bit-identical to pre-controller
+    /// builds.
+    pub enabled: bool,
+    /// Sliding acceptance window, in speculation iterations per slot.
+    pub window: usize,
+    /// Observations before the controller trusts its estimate and leaves
+    /// the configured gamma (a fresh slot should not thrash on noise).
+    pub min_window: usize,
+    /// Inclusive gamma search band.
+    pub gamma_min: usize,
+    /// Inclusive gamma search band; also the batch layout bound the
+    /// serving tier reserves room for.
+    pub gamma_max: usize,
+    /// Relative improvement a challenger arm must show over the incumbent
+    /// before the controller switches (suppresses estimate-noise flapping).
+    pub hysteresis: f64,
+    /// Pinned draft/target per-token cost ratio for the objective;
+    /// `None` = measure online from the engine's forward timings.  CI
+    /// gates pin it for determinism.
+    pub cost_ratio: Option<f64>,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: adaptive_env_default(),
+            window: 32,
+            min_window: 4,
+            gamma_min: 2,
+            gamma_max: 8,
+            hysteresis: 0.15,
+            cost_ratio: None,
+        }
+    }
+}
+
+/// Strict parse of an `SPECD_ADAPTIVE`-style toggle; `None` = unknown.
+fn adaptive_flag(s: &str) -> Option<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "on" | "true" | "yes" => Some(true),
+        "" | "0" | "off" | "false" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// `SPECD_ADAPTIVE` env toggle.  Mirrors `SPECD_DRAFT_PRECISION`'s
+/// convention: an invalid value warns on stderr and falls back to the
+/// default (off) instead of erroring.
+fn adaptive_env_default() -> bool {
+    match std::env::var("SPECD_ADAPTIVE") {
+        Ok(s) => adaptive_flag(&s).unwrap_or_else(|| {
+            eprintln!("specd: ignoring invalid SPECD_ADAPTIVE '{s}' (on | off); using off");
+            false
+        }),
+        Err(_) => false,
     }
 }
 
@@ -119,6 +190,31 @@ impl EngineConfig {
                 Precision::parse(x)
                     .ok_or_else(|| anyhow!("unknown draft_precision '{x}' (int8 | fp32)"))?,
             );
+        }
+        if let Some(a) = v.get("adaptive") {
+            let mut ac = self.adaptive.clone();
+            if let Some(x) = a.get("enabled").and_then(Value::as_bool) {
+                ac.enabled = x;
+            }
+            if let Some(x) = a.get("window").and_then(Value::as_usize) {
+                ac.window = x;
+            }
+            if let Some(x) = a.get("min_window").and_then(Value::as_usize) {
+                ac.min_window = x;
+            }
+            if let Some(x) = a.get("gamma_min").and_then(Value::as_usize) {
+                ac.gamma_min = x;
+            }
+            if let Some(x) = a.get("gamma_max").and_then(Value::as_usize) {
+                ac.gamma_max = x;
+            }
+            if let Some(x) = a.get("hysteresis").and_then(Value::as_f64) {
+                ac.hysteresis = x;
+            }
+            if let Some(x) = a.get("cost_ratio").and_then(Value::as_f64) {
+                ac.cost_ratio = Some(x);
+            }
+            b = b.adaptive(ac);
         }
         *self = b.build()?;
         Ok(())
@@ -196,6 +292,12 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Adaptive speculation controller knobs (DESIGN.md §15).
+    pub fn adaptive(mut self, a: AdaptiveConfig) -> Self {
+        self.cfg.adaptive = a;
+        self
+    }
+
     /// Validate and produce the config.  The one warn-on-stderr point for
     /// engine configuration: degenerate values error, ineffective
     /// combinations warn and are normalised.
@@ -223,6 +325,49 @@ impl EngineConfigBuilder {
         }
         if cfg.max_new_tokens == 0 {
             eprintln!("specd: max_new_tokens is 0; the engine will emit nothing");
+        }
+        if cfg.adaptive.enabled {
+            let a = &mut cfg.adaptive;
+            if a.gamma_min == 0 {
+                eprintln!("specd: adaptive.gamma_min 0 raised to 1");
+                a.gamma_min = 1;
+            }
+            if a.gamma_max < a.gamma_min {
+                eprintln!(
+                    "specd: adaptive.gamma_max {} below gamma_min {}; clamping to gamma_min",
+                    a.gamma_max, a.gamma_min
+                );
+                a.gamma_max = a.gamma_min;
+            }
+            if a.window == 0 {
+                eprintln!("specd: adaptive.window 0 raised to 1");
+                a.window = 1;
+            }
+            if a.min_window > a.window {
+                eprintln!(
+                    "specd: adaptive.min_window {} clamped to window {}",
+                    a.min_window, a.window
+                );
+                a.min_window = a.window;
+            }
+            if !a.hysteresis.is_finite() || a.hysteresis < 0.0 {
+                eprintln!("specd: adaptive.hysteresis {} normalised to 0", a.hysteresis);
+                a.hysteresis = 0.0;
+            }
+            if let Some(r) = a.cost_ratio {
+                if !r.is_finite() || r <= 0.0 {
+                    eprintln!("specd: adaptive.cost_ratio {r} invalid; measuring online instead");
+                    a.cost_ratio = None;
+                }
+            }
+            if cfg.host_verify || !cfg.algo.fused() {
+                eprintln!(
+                    "specd: adaptive controller requires the fused engine path; \
+                     disabling it for host-verify/'{}'",
+                    cfg.algo
+                );
+                cfg.adaptive.enabled = false;
+            }
         }
         Ok(cfg)
     }
@@ -527,6 +672,65 @@ mod tests {
         assert!(Config::parse(r#"{"engine": {"algo": "tree", "paths": 0}}"#).is_err());
         // Tree runs on the fused engine path.
         assert!(!c.engine.effective_host_verify());
+    }
+
+    #[test]
+    fn adaptive_defaults_off_and_parses() {
+        let c = Config::default();
+        assert!(!c.engine.adaptive.enabled, "adaptive must default off (bit-identity)");
+        assert_eq!(c.engine.adaptive.window, 32);
+        assert_eq!(c.engine.adaptive.cost_ratio, None);
+        let c = Config::parse(
+            r#"{"engine": {"adaptive": {"enabled": true, "window": 8, "min_window": 2,
+                "gamma_min": 1, "gamma_max": 6, "hysteresis": 0.05, "cost_ratio": 0.25}}}"#,
+        )
+        .unwrap();
+        let a = &c.engine.adaptive;
+        assert!(a.enabled);
+        assert_eq!((a.window, a.min_window, a.gamma_min, a.gamma_max), (8, 2, 1, 6));
+        assert_eq!(a.cost_ratio, Some(0.25));
+        assert!((a.hysteresis - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_degenerate_values_normalise_in_build() {
+        let c = Config::parse(
+            r#"{"engine": {"adaptive": {"enabled": true, "window": 0, "min_window": 9,
+                "gamma_min": 0, "gamma_max": 0, "hysteresis": -1.0, "cost_ratio": -2.0}}}"#,
+        )
+        .unwrap();
+        let a = &c.engine.adaptive;
+        assert!(a.enabled);
+        assert_eq!(a.gamma_min, 1);
+        assert_eq!(a.gamma_max, 1);
+        assert_eq!(a.window, 1);
+        assert_eq!(a.min_window, 1);
+        assert_eq!(a.hysteresis, 0.0);
+        assert_eq!(a.cost_ratio, None);
+    }
+
+    #[test]
+    fn adaptive_disabled_off_the_fused_path() {
+        // Host-verify and greedy lack the ragged fused iteration the
+        // controller drives; the builder warns and turns it off.
+        let a = AdaptiveConfig { enabled: true, ..AdaptiveConfig::default() };
+        let cfg = EngineConfig::builder().adaptive(a.clone()).host_verify(true).build().unwrap();
+        assert!(!cfg.adaptive.enabled);
+        let cfg = EngineConfig::builder().adaptive(a).algo(Algo::Greedy).build().unwrap();
+        assert!(!cfg.adaptive.enabled);
+    }
+
+    #[test]
+    fn adaptive_env_flag_parses_strictly() {
+        for s in ["1", "on", "ON", "true", "yes"] {
+            assert_eq!(adaptive_flag(s), Some(true), "{s}");
+        }
+        for s in ["", "0", "off", "Off", "false", "no"] {
+            assert_eq!(adaptive_flag(s), Some(false), "{s:?}");
+        }
+        // Unknown values are None: the env reader warns and falls back.
+        assert_eq!(adaptive_flag("fast"), None);
+        assert_eq!(adaptive_flag("2"), None);
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Adaptive speculation controller (DESIGN.md §15).
+//!
+//! Gamma (the draft block length) and K (the path count of the
+//! multi-draft algorithms) are *losslessness-invariant*: any value, on
+//! any iteration, commits tokens from the same target distribution
+//! (tests/theorems.rs enforces this).  Tuning them online is therefore a
+//! pure throughput knob — the only question is which (gamma, K) buys the
+//! most committed tokens per unit of forward work for the acceptance
+//! rate the stream is *currently* showing.
+//!
+//! One [`Controller`] lives with each decode slot (engine/spec.rs keeps
+//! them in `DecodeState`, so in the serving tier the state automatically
+//! stays with the replica that owns the slot).  Per iteration it:
+//!
+//! 1. **Estimates acceptance** from a sliding window of observed
+//!    `tau` values.  The window feeds from the same observations the
+//!    engine already pushes into `accepted_len_hist`.  Naively
+//!    `sum(tau) / sum(gamma)` is biased low — an iteration that accepts
+//!    all `gamma` drafts never *observes* a rejection, it is truncated.
+//!    The geometric-MLE correction counts `tau + 1` Bernoulli trials for
+//!    a rejected iteration (`tau < gamma`: tau successes then one
+//!    failure) and `tau` trials for a fully-accepted one, making
+//!    `successes / trials` exactly the acceptance MLE under the
+//!    token-chain model.
+//! 2. **Measures cost** as the forward-time ratio `r` of one sequential
+//!    draft step to one target row-forward (or uses the pinned
+//!    [`AdaptiveConfig::cost_ratio`] — CI does, for determinism).
+//! 3. **Scores each arm** `(gamma, k)` in the configured band with the
+//!    exact expected-tau oracles from [`crate::sim::exact`] evaluated on
+//!    the two-symbol i.i.d. pair whose overlap equals the estimated
+//!    acceptance: committed tokens per unit work,
+//!    `(E[tau] + 1) / (r * draft_tokens + scored_tokens)`.
+//! 4. **Switches with hysteresis**: the incumbent arm is kept unless a
+//!    challenger beats it by a relative margin, so estimate noise near
+//!    an objective plateau cannot make the schedule flap.
+//!
+//! The controller never touches probabilities, seeds or the verify
+//! kernels; it only picks which *already-lossless* iteration shape to
+//! run next.  Expected regret against the best fixed arm is bounded in
+//! `benches/optimality.rs` (oracle replay, CI-gated).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::config::AdaptiveConfig;
+use crate::sim::exact;
+use crate::sim::MarkovPair;
+use crate::verify::Algo;
+
+/// Acceptance estimate the controller assumes until `min_window`
+/// observations have arrived (a mid-range prior: speculation is worth
+/// running, but not worth maxing gamma for).
+pub const PRIOR_ALPHA: f64 = 0.75;
+
+/// Fallback draft/target per-token cost ratio when nothing has been
+/// measured and none is pinned (the xxs drafter runs at roughly a
+/// quarter of the target's per-token cost on the native backend).
+pub const DEFAULT_COST_RATIO: f64 = 0.25;
+
+/// Acceptance clamp: the exact oracles are defined on (0, 1) and the
+/// extreme bins carry no ranking information anyway.
+const ALPHA_MIN: f64 = 0.02;
+const ALPHA_MAX: f64 = 0.98;
+
+/// Quantisation bins for the acceptance estimate: stabilises decisions
+/// and keys the expected-tau cache.
+const ALPHA_BINS: usize = 64;
+
+/// One (gamma, path-count) choice for the next speculation iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub gamma: usize,
+    /// Path count; 1 for single-draft algorithms.
+    pub k: usize,
+}
+
+/// Committed-tokens-per-unit-work objective for one arm, from first
+/// principles (no controller state): `alpha` is the true/estimated
+/// token acceptance, `cost_ratio` (`r`) the cost of one sequential
+/// draft step relative to one target row-forward.  Work is counted in
+/// *target row-forward equivalents* — the latency model that makes
+/// speculation pay at all: one target forward scores all `gamma + 1`
+/// positions in parallel for ~the cost of one sequential step, while
+/// drafting is `gamma` genuinely sequential steps at `r` each.
+///
+/// * Token/Block/Greedy: `r·gamma + 1` per iteration.
+/// * MultiPath(k): `k` independent path rows — `r·k·gamma` draft steps
+///   and `k` target row-forwards.
+/// * Tree(k): prefix sharing drafts only the expected unique node count
+///   and scores the whole tree in one tree-attention row-forward.
+///
+/// Public because the oracle-replay harness scores arms against the
+/// *true* alpha with exactly this function.
+pub fn objective(algo: Algo, alpha: f64, cost_ratio: f64, gamma: usize, k: usize) -> f64 {
+    let a = alpha.clamp(ALPHA_MIN, ALPHA_MAX);
+    let pair = alpha_pair(a);
+    let (e_tau, draft_steps, target_fwds) = match algo {
+        Algo::Token => (exact::expected_tau_token(&pair, gamma), gamma as f64, 1.0),
+        Algo::Greedy | Algo::Block => (exact::expected_tau_block(&pair, gamma), gamma as f64, 1.0),
+        Algo::MultiPath { .. } => (
+            exact::expected_tau_multipath(&pair, gamma, k),
+            (k * gamma) as f64,
+            k as f64,
+        ),
+        Algo::Tree { .. } => {
+            let nodes = exact::expected_tree_nodes(&pair, gamma, k);
+            (exact::expected_tau_tree(&pair, gamma, k), nodes, 1.0)
+        }
+    };
+    (e_tau + 1.0) / (cost_ratio * draft_steps + target_fwds)
+}
+
+/// Two-symbol i.i.d. pair with token overlap exactly `alpha`:
+/// `t = [a, 1-a]`, `d = [1-a, a]` with `a = 1 - alpha/2` gives
+/// `sum_i min(t_i, d_i) = alpha`.  The exact oracles only see the
+/// distributions through their overlap structure, so this is the
+/// cheapest pair realising a given acceptance.
+fn alpha_pair(alpha: f64) -> MarkovPair {
+    let a = 1.0 - alpha / 2.0;
+    MarkovPair::iid(vec![a, 1.0 - a], vec![1.0 - a, a])
+}
+
+/// Per-slot online tuner for (gamma, K).  See the module docs for the
+/// policy; all state is a few hundred bytes per slot.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    cfg: AdaptiveConfig,
+    algo: Algo,
+    /// Incumbent arm (starts at the engine's configured shape).
+    current: Decision,
+    /// Sliding `(successes, trials)` window of acceptance observations.
+    window: VecDeque<(u32, u32)>,
+    /// Accumulated forward timings for the measured cost ratio.
+    draft_us: u64,
+    drafted: u64,
+    target_us: u64,
+    scored: u64,
+    /// Memoised `objective` numerators/denominators don't cache well
+    /// (the ratio moves with `r`), but `objective` itself is cheap and
+    /// deterministic per `(alpha_bin, gamma, k, r_bin)`; we cache on the
+    /// full quantised key.
+    cache: HashMap<(usize, usize, usize, u64), f64>,
+    /// Cumulative opportunity cost of hysteresis/laziness, in
+    /// milli-fractions of the per-step best arm's value, drained by
+    /// [`Controller::take_regret_milli`] into the metrics counter.
+    regret_milli: u64,
+}
+
+impl Controller {
+    /// `gamma0` / `algo` are the engine's configured shape: the arm the
+    /// controller runs (and reports) until it has seen enough to move.
+    pub fn new(cfg: AdaptiveConfig, gamma0: usize, algo: Algo) -> Self {
+        let gamma0 = gamma0.clamp(cfg.gamma_min, cfg.gamma_max);
+        Controller {
+            cfg,
+            algo,
+            current: Decision { gamma: gamma0, k: algo.paths() },
+            window: VecDeque::new(),
+            draft_us: 0,
+            drafted: 0,
+            target_us: 0,
+            scored: 0,
+            cache: HashMap::new(),
+            regret_milli: 0,
+        }
+    }
+
+    /// Record one iteration's outcome: `tau` drafts accepted out of the
+    /// `gamma` this slot actually ran (which the controller may have
+    /// varied — the estimator is per-observation, not per-config).
+    pub fn observe(&mut self, tau: usize, gamma: usize) {
+        let tau = tau.min(gamma) as u32;
+        // Truncation correction: a full acceptance is tau censored
+        // trials; a rejection adds the failed trial.
+        let trials = tau + u32::from((tau as usize) < gamma);
+        self.window.push_back((tau, trials));
+        while self.window.len() > self.cfg.window {
+            self.window.pop_front();
+        }
+    }
+
+    /// Accumulate forward timings for the measured cost ratio (ignored
+    /// while [`AdaptiveConfig::cost_ratio`] pins it).  `drafted` counts
+    /// sequential draft steps × rows; `scored` counts target
+    /// row-forwards (rows × forwards, *not* scored positions — one
+    /// row-forward scores gamma + 1 positions in parallel).
+    pub fn observe_costs(&mut self, draft_us: u64, drafted: usize, target_us: u64, scored: usize) {
+        self.draft_us += draft_us;
+        self.drafted += drafted as u64;
+        self.target_us += target_us;
+        self.scored += scored as u64;
+    }
+
+    /// Windowed acceptance MLE, or the prior while the window is short.
+    pub fn alpha(&self) -> f64 {
+        if self.window.len() < self.cfg.min_window.max(1) {
+            return PRIOR_ALPHA;
+        }
+        let (succ, trials) = self
+            .window
+            .iter()
+            .fold((0u64, 0u64), |(s, t), &(a, b)| (s + a as u64, t + b as u64));
+        if trials == 0 {
+            return PRIOR_ALPHA;
+        }
+        (succ as f64 / trials as f64).clamp(ALPHA_MIN, ALPHA_MAX)
+    }
+
+    /// Draft/target per-token cost ratio: pinned > measured > default.
+    pub fn cost_ratio(&self) -> f64 {
+        if let Some(r) = self.cfg.cost_ratio {
+            return r;
+        }
+        if self.drafted == 0 || self.scored == 0 || self.target_us == 0 {
+            return DEFAULT_COST_RATIO;
+        }
+        let per_draft = self.draft_us as f64 / self.drafted as f64;
+        let per_target = self.target_us as f64 / self.scored as f64;
+        if per_target <= 0.0 {
+            return DEFAULT_COST_RATIO;
+        }
+        (per_draft / per_target).clamp(0.01, 10.0)
+    }
+
+    /// The arm the controller is currently running.
+    pub fn current(&self) -> Decision {
+        self.current
+    }
+
+    /// Pick the next iteration's arm.  `room` caps gamma by the slot's
+    /// remaining ring space (`l - len - 2`); a slot out of room degrades
+    /// to the smallest gamma rather than erroring.
+    pub fn choose(&mut self, room: usize) -> Decision {
+        let g_lo = self.cfg.gamma_min;
+        let g_hi = self.cfg.gamma_max.min(room.max(g_lo));
+        let alpha = self.alpha();
+        let r = self.cost_ratio();
+        let ks: Vec<usize> = match self.algo {
+            Algo::MultiPath { .. } | Algo::Tree { .. } => (1..=self.algo.paths().max(1)).collect(),
+            _ => vec![1],
+        };
+        let mut best = Decision { gamma: g_lo, k: 1 };
+        let mut best_v = f64::MIN;
+        let mut cur_v = f64::MIN;
+        for g in g_lo..=g_hi {
+            for &k in &ks {
+                let v = self.arm_value(alpha, r, g, k);
+                if v > best_v {
+                    best_v = v;
+                    best = Decision { gamma: g, k };
+                }
+                if g == self.current.gamma && k == self.current.k {
+                    cur_v = v;
+                }
+            }
+        }
+        // Hysteresis: stay on the incumbent unless the challenger clears
+        // the margin (or the incumbent fell out of the feasible band).
+        let switch = cur_v == f64::MIN || best_v > cur_v * (1.0 + self.cfg.hysteresis);
+        if switch {
+            self.current = best;
+        } else if best_v > 0.0 && cur_v < best_v {
+            // Laziness has a price; account it so the regret counter can
+            // surface a mis-tuned hysteresis in metrics.
+            self.regret_milli += (((best_v - cur_v) / best_v) * 1000.0) as u64;
+        }
+        self.current
+    }
+
+    /// Drain the accumulated hysteresis-regret counter (millis of the
+    /// per-step best arm's value).
+    pub fn take_regret_milli(&mut self) -> u64 {
+        std::mem::take(&mut self.regret_milli)
+    }
+
+    fn arm_value(&mut self, alpha: f64, r: f64, gamma: usize, k: usize) -> f64 {
+        let a_bin =
+            ((alpha * ALPHA_BINS as f64) as usize).min(ALPHA_BINS - 1);
+        let a_q = (a_bin as f64 + 0.5) / ALPHA_BINS as f64;
+        let r_bin = (r * 100.0) as u64;
+        let algo = self.algo;
+        *self
+            .cache
+            .entry((a_bin, gamma, k, r_bin))
+            .or_insert_with(|| objective(algo, a_q, r, gamma, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            enabled: true,
+            window: 16,
+            min_window: 4,
+            gamma_min: 1,
+            gamma_max: 8,
+            hysteresis: 0.0,
+            cost_ratio: Some(0.25),
+        }
+    }
+
+    #[test]
+    fn truncation_corrected_alpha_is_unbiased_on_clean_streams() {
+        // tau == gamma every time: successes 4/trials 4 -> alpha ~ 1.
+        let mut c = Controller::new(cfg(), 4, Algo::Block);
+        for _ in 0..8 {
+            c.observe(4, 4);
+        }
+        assert!(c.alpha() > 0.95, "alpha {}", c.alpha());
+        // tau == 0 every time: 0 successes, 1 trial each -> alpha ~ 0.
+        let mut c = Controller::new(cfg(), 4, Algo::Block);
+        for _ in 0..8 {
+            c.observe(0, 4);
+        }
+        assert!(c.alpha() < 0.05, "alpha {}", c.alpha());
+        // Mixed stream: 3 accepted then rejection = 3 succ / 4 trials.
+        let mut c = Controller::new(cfg(), 4, Algo::Block);
+        for _ in 0..8 {
+            c.observe(3, 4);
+        }
+        assert!((c.alpha() - 0.75).abs() < 1e-9, "alpha {}", c.alpha());
+    }
+
+    #[test]
+    fn prior_holds_until_min_window() {
+        let mut c = Controller::new(cfg(), 4, Algo::Block);
+        c.observe(0, 4);
+        c.observe(0, 4);
+        assert_eq!(c.alpha(), PRIOR_ALPHA);
+        c.observe(0, 4);
+        c.observe(0, 4);
+        assert!(c.alpha() < 0.05);
+    }
+
+    #[test]
+    fn high_acceptance_prefers_larger_gamma_than_low() {
+        let mut hi = Controller::new(cfg(), 4, Algo::Block);
+        let mut lo = Controller::new(cfg(), 4, Algo::Block);
+        for _ in 0..16 {
+            hi.observe(8, 8); // everything accepted
+            lo.observe(0, 8); // everything rejected
+        }
+        let g_hi = hi.choose(64).gamma;
+        let g_lo = lo.choose(64).gamma;
+        assert!(
+            g_hi > g_lo,
+            "accepting stream chose gamma {g_hi}, rejecting stream {g_lo}"
+        );
+        assert_eq!(g_lo, 1, "hopeless stream should draft the minimum");
+    }
+
+    #[test]
+    fn room_caps_gamma() {
+        let mut c = Controller::new(cfg(), 8, Algo::Block);
+        for _ in 0..16 {
+            c.observe(8, 8);
+        }
+        assert!(c.choose(3).gamma <= 3);
+        // Even out-of-room slots stay in the configured band's floor.
+        assert_eq!(c.choose(0).gamma, 1);
+    }
+
+    #[test]
+    fn hysteresis_holds_the_incumbent_near_plateaus() {
+        let mut sticky = AdaptiveConfig { hysteresis: 10.0, ..cfg() };
+        sticky.gamma_min = 2;
+        let mut c = Controller::new(sticky, 4, Algo::Block);
+        for _ in 0..16 {
+            c.observe(8, 8);
+        }
+        // A 10x-improvement bar is unmeetable: the incumbent must hold,
+        // and the counter must record the passed-up value.
+        assert_eq!(c.choose(64), Decision { gamma: 4, k: 1 });
+        assert!(c.take_regret_milli() > 0);
+        assert_eq!(c.take_regret_milli(), 0, "take_ drains");
+    }
+
+    #[test]
+    fn multipath_tunes_k_down_when_paths_stop_paying() {
+        // With near-certain acceptance a single path already commits
+        // gamma + 1 tokens; extra paths only add cost.
+        let mut c = Controller::new(cfg(), 4, Algo::MultiPath { k: 4 });
+        for _ in 0..16 {
+            c.observe(8, 8);
+        }
+        assert_eq!(c.choose(64).k, 1);
+    }
+
+    #[test]
+    fn measured_cost_ratio_falls_back_then_tracks() {
+        let mut c = Controller::new(AdaptiveConfig { cost_ratio: None, ..cfg() }, 4, Algo::Block);
+        assert_eq!(c.cost_ratio(), DEFAULT_COST_RATIO);
+        // 10us/token draft vs 40us/token target -> r = 0.25.
+        c.observe_costs(100, 10, 400, 10);
+        assert!((c.cost_ratio() - 0.25).abs() < 1e-9);
+        // Pinned ratio wins over measurements.
+        let mut p = Controller::new(cfg(), 4, Algo::Block);
+        p.observe_costs(100, 10, 100, 10);
+        assert_eq!(p.cost_ratio(), 0.25);
+    }
+
+    #[test]
+    fn objective_matches_cached_arm_values() {
+        let mut c = Controller::new(cfg(), 4, Algo::Block);
+        for _ in 0..16 {
+            c.observe(3, 4);
+        }
+        let (alpha, r) = (c.alpha(), c.cost_ratio());
+        let d = c.choose(64);
+        // The decision maximises the public objective on the quantised
+        // alpha (the replay harness relies on this equivalence).
+        let a_bin = ((alpha * ALPHA_BINS as f64) as usize).min(ALPHA_BINS - 1);
+        let a_q = (a_bin as f64 + 0.5) / ALPHA_BINS as f64;
+        let best = (1..=8)
+            .max_by(|&x, &y| {
+                objective(Algo::Block, a_q, r, x, 1)
+                    .total_cmp(&objective(Algo::Block, a_q, r, y, 1))
+            })
+            .unwrap();
+        assert_eq!(d.gamma, best);
+    }
+}

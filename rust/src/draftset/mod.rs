@@ -47,6 +47,12 @@ pub struct DraftSet {
     /// `(B, K, gamma + 1, V)`; empty until target scoring fills it
     /// ([`DraftSet::set_ps`]).
     pub ps: Vec<f32>,
+    /// Per-serving-row draft lengths for ragged variable-gamma sets
+    /// (DESIGN.md §15): `row_gammas[b] <= gamma`, with `gamma` staying
+    /// the layout stride of `drafts`/`qs`/`ps` (entries past a row's own
+    /// length are padding).  `None` = the uniform layout, every row at
+    /// `gamma`.
+    pub row_gammas: Option<Vec<usize>>,
 }
 
 impl DraftSet {
@@ -78,7 +84,32 @@ impl DraftSet {
                 batch * k * gamma * vocab
             ));
         }
-        Ok(DraftSet { batch, k, gamma, vocab, drafts, qs, ps: Vec::new() })
+        Ok(DraftSet { batch, k, gamma, vocab, drafts, qs, ps: Vec::new(), row_gammas: None })
+    }
+
+    /// Mark the set ragged: row `b`'s paths carry `row_gammas[b]` real
+    /// draft tokens (the rest of the `gamma` stride is padding).  Every
+    /// per-row accessor ([`DraftSet::row_views_into`] and friends) then
+    /// serves that row's own length.
+    pub fn set_row_gammas(&mut self, row_gammas: Vec<usize>) -> anyhow::Result<()> {
+        if row_gammas.len() != self.batch {
+            return Err(anyhow!(
+                "row_gammas shape {} != batch {}",
+                row_gammas.len(),
+                self.batch
+            ));
+        }
+        if let Some(&bad) = row_gammas.iter().find(|&&g| g == 0 || g > self.gamma) {
+            return Err(anyhow!("row gamma {bad} outside 1..={}", self.gamma));
+        }
+        self.row_gammas = Some(row_gammas);
+        Ok(())
+    }
+
+    /// Draft length of one serving row: its ragged override, else the
+    /// uniform `gamma`.
+    pub fn row_gamma(&self, row: usize) -> usize {
+        self.row_gammas.as_ref().map_or(self.gamma, |v| v[row])
     }
 
     /// Rows of the flattened scratch batch: `B * K`.
@@ -167,14 +198,23 @@ impl DraftSet {
         out.ps.resize_with(self.k, || ProbMatrix::new(0, 0));
         out.qs.resize_with(self.k, || ProbMatrix::new(0, 0));
         out.drafts.resize_with(self.k, Vec::new);
+        // Ragged rows serve their own length: the first `g` (+1) entries
+        // of each `gamma`-stride block are the real data, the rest is
+        // padding (row-major, so the real prefix is contiguous).
+        let g = self.row_gamma(row);
         let np = (self.gamma + 1) * self.vocab;
         let nq = self.gamma * self.vocab;
         for path in 0..self.k {
             let r = self.flat_row(row, path);
-            out.ps[path].copy_from_f32(self.gamma + 1, self.vocab, &self.ps[r * np..(r + 1) * np]);
-            out.qs[path].copy_from_f32(self.gamma, self.vocab, &self.qs[r * nq..(r + 1) * nq]);
+            out.ps[path].copy_from_f32(
+                g + 1,
+                self.vocab,
+                &self.ps[r * np..r * np + (g + 1) * self.vocab],
+            );
+            out.qs[path].copy_from_f32(g, self.vocab, &self.qs[r * nq..r * nq + g * self.vocab]);
             out.drafts[path].clear();
-            out.drafts[path].extend(self.path_drafts(row, path).iter().map(|&x| x as u32));
+            out.drafts[path]
+                .extend(self.path_drafts(row, path)[..g].iter().map(|&x| x as u32));
         }
         Ok(())
     }

@@ -27,9 +27,10 @@ use anyhow::anyhow;
 
 use crate::backend::{Backend, PrefixSplice, RowSplice, SpecIterOut};
 use crate::config::EngineConfig;
+use crate::control::Controller;
 use crate::metrics::EngineMetrics;
 use crate::models::vocab;
-use crate::verify::Rng;
+use crate::verify::{Algo, Rng};
 
 use super::{layout_prompts, pad_prompts, BatchReport, RowTracker};
 
@@ -74,6 +75,42 @@ impl<B: Backend> SpecEngine<B> {
         // precision, the drafter's quantised twin here, DESIGN.md
         // §10/§11).
         backend.prepare(cfg.algo, &cfg.drafter, cfg.draft_precision)?;
+        let mut cfg = cfg;
+        if cfg.adaptive.enabled && !info.open_gamma {
+            eprintln!(
+                "specd: adaptive controller needs an open-gamma backend; \
+                 disabling on '{}' (exported gammas {:?})",
+                info.name, info.gammas
+            );
+            cfg.adaptive.enabled = false;
+        }
+        if cfg.adaptive.enabled {
+            let cap = (info.max_len / 4).max(1);
+            if cfg.adaptive.gamma_max > cap {
+                eprintln!(
+                    "specd: adaptive.gamma_max {} clamped to backend cap {cap}",
+                    cfg.adaptive.gamma_max
+                );
+                cfg.adaptive.gamma_max = cap;
+                cfg.adaptive.gamma_min = cfg.adaptive.gamma_min.min(cap);
+            }
+            // Pre-size scratch for every path count the controller may
+            // pick, so mid-stream K switches never allocate.  Ragged
+            // tree iterations run on the flat multipath rows
+            // (DESIGN.md §15), so prepare those shapes too.
+            for k in 1..=cfg.algo.paths() {
+                match cfg.algo {
+                    Algo::MultiPath { .. } => {
+                        backend.prepare(Algo::MultiPath { k }, &cfg.drafter, cfg.draft_precision)?
+                    }
+                    Algo::Tree { .. } => {
+                        backend.prepare(Algo::Tree { k }, &cfg.drafter, cfg.draft_precision)?;
+                        backend.prepare(Algo::MultiPath { k }, &cfg.drafter, cfg.draft_precision)?
+                    }
+                    _ => {}
+                }
+            }
+        }
         Ok(SpecEngine { backend, cfg, metrics: Arc::new(EngineMetrics::default()) })
     }
 
@@ -111,28 +148,75 @@ impl<B: Backend> SpecEngine<B> {
         let mut device_iterations = 0usize;
         // Hard cap: every row emits >= 1 token per iteration.
         let max_iters = self.cfg.max_new_tokens + info.max_len;
+        // Per-row tuners when the adaptive controller is on; the off path
+        // below runs the exact pre-controller iteration (bit-identity).
+        let adaptive = self.cfg.adaptive.enabled;
+        let mut controllers: Vec<Controller> = if adaptive {
+            (0..b)
+                .map(|_| Controller::new(self.cfg.adaptive.clone(), gamma, self.cfg.algo))
+                .collect()
+        } else {
+            Vec::new()
+        };
 
         while trackers.iter().any(|t| t.active()) && device_iterations < max_iters {
             let t_iter = Instant::now();
             let seeds: Vec<i32> =
                 row_rngs.iter_mut().map(|r| r.next_u64() as i32).collect();
-            let out = backend.spec_iter(
-                self.cfg.algo,
-                &self.cfg.drafter,
-                gamma,
-                &mut tokens,
-                &mut length,
-                &mut kv_t,
-                &mut kv_d,
-                &seeds,
-            )?;
+            let out = if adaptive {
+                let mut gammas = vec![1usize; b];
+                let mut votes = Vec::new();
+                for (i, tr) in trackers.iter().enumerate() {
+                    if tr.active() {
+                        let room =
+                            info.max_len.saturating_sub(length[i].max(0) as usize + 2).max(1);
+                        let d = controllers[i].choose(room);
+                        gammas[i] = d.gamma;
+                        votes.push(d.k);
+                    }
+                }
+                let k = modal(&votes).unwrap_or_else(|| self.cfg.algo.paths().max(1));
+                let out = backend.spec_iter_rows(
+                    with_paths(self.cfg.algo, k),
+                    &self.cfg.drafter,
+                    &gammas,
+                    &mut tokens,
+                    &mut length,
+                    &mut kv_t,
+                    &mut kv_d,
+                    &seeds,
+                )?;
+                for (i, tr) in trackers.iter().enumerate() {
+                    if tr.active() {
+                        controllers[i].observe(out.tau[i].max(0) as usize, gammas[i]);
+                        let (d_us, t_us) = (out.draft_us, out.target_us);
+                        controllers[i].observe_costs(d_us, out.drafted, t_us, b * k);
+                        self.metrics.gamma_chosen.observe(gammas[i]);
+                        self.metrics.paths_chosen.observe(k);
+                        let regret = controllers[i].take_regret_milli();
+                        self.metrics.controller_regret_milli.add(regret);
+                    }
+                }
+                out
+            } else {
+                backend.spec_iter(
+                    self.cfg.algo,
+                    &self.cfg.drafter,
+                    gamma,
+                    &mut tokens,
+                    &mut length,
+                    &mut kv_t,
+                    &mut kv_d,
+                    &seeds,
+                )?
+            };
 
             for (i, tr) in trackers.iter_mut().enumerate() {
                 if !tr.active() {
                     continue;
                 }
                 let t_i = out.tau[i] as usize;
-                let row: Vec<u32> = out.emitted[i * (gamma + 1)..i * (gamma + 1) + t_i + 1]
+                let row: Vec<u32> = out.emitted[i * out.stride..i * out.stride + t_i + 1]
                     .iter()
                     .map(|&x| x as u32)
                     .collect();
@@ -200,6 +284,7 @@ impl<B: Backend> SpecEngine<B> {
             kv_target,
             kv_drafter,
             row_rngs: vec![None; info.batch],
+            controllers: vec![None; info.batch],
         })
     }
 
@@ -412,6 +497,13 @@ impl<B: Backend> SpecEngine<B> {
                         }
                         st.length[a.slot] = a.prompt.len() as i32;
                         st.row_rngs[a.slot] = Some(Rng::new(a.row_seed ^ SEED_DOMAIN));
+                        // Controller state lives with the slot: a fresh
+                        // request starts from the configured arm and its
+                        // own empty acceptance window.
+                        st.controllers[a.slot] = self.cfg.adaptive.enabled.then(|| {
+                            let adaptive = self.cfg.adaptive.clone();
+                            Controller::new(adaptive, self.cfg.gamma, self.cfg.algo)
+                        });
                         self.metrics.slots_refilled.inc();
                         // Prefill-work accounting: positions the forward
                         // actually covered vs. the whole prompt — the
@@ -430,18 +522,99 @@ impl<B: Backend> SpecEngine<B> {
     /// One fused iteration over the live stream.  Every slot advances
     /// (free slots decode the inert prompt; their outputs are discarded by
     /// the caller); per-slot `tau`/`emitted`/`done` come back in the
-    /// returned [`SpecIterOut`] at stride `gamma + 1`.
+    /// returned [`SpecIterOut`] at stride [`SpecIterOut::stride`]
+    /// (`cfg.gamma + 1` with the adaptive controller off, `max(row
+    /// gammas) + 1` when it varies the rows).
+    ///
+    /// With [`crate::config::AdaptiveConfig::enabled`] each occupied
+    /// slot's [`Controller`] picks the next (gamma, K); since gamma and K
+    /// are losslessness-invariant and each row's randomness is a pure
+    /// function of its own seed stream (one seed per iteration,
+    /// regardless of shape), the committed distribution is unchanged —
+    /// adaptive-off streams are bit-identical to pre-controller builds.
     pub fn step_stream(&self, st: &mut DecodeState<B>) -> anyhow::Result<SpecIterOut> {
+        if !self.cfg.adaptive.enabled {
+            let t_iter = Instant::now();
+            let seeds: Vec<i32> = st
+                .row_rngs
+                .iter_mut()
+                .map(|r| r.as_mut().map_or(0, |rng| rng.next_u64() as i32))
+                .collect();
+            let out = self.backend.spec_iter(
+                self.cfg.algo,
+                &self.cfg.drafter,
+                self.cfg.gamma,
+                &mut st.tokens,
+                &mut st.length,
+                &mut st.kv_target,
+                &mut st.kv_drafter,
+                &seeds,
+            )?;
+            if out.draft_us > 0 {
+                self.metrics
+                    .draft_forward_us
+                    .observe(std::time::Duration::from_micros(out.draft_us));
+            }
+            if out.target_us > 0 {
+                self.metrics
+                    .target_forward_us
+                    .observe(std::time::Duration::from_micros(out.target_us));
+            }
+            self.metrics.drafts_scored.add(out.drafted as u64);
+            self.metrics.iter_latency.observe(t_iter.elapsed());
+            return Ok(out);
+        }
+        let info = self.backend.info();
+        let l = info.max_len;
+        let mut gammas = vec![1usize; info.batch];
+        let mut votes = Vec::new();
+        for slot in 0..info.batch {
+            if let Some(c) = st.controllers[slot].as_mut() {
+                let room = l.saturating_sub(st.length[slot].max(0) as usize + 2).max(1);
+                let d = c.choose(room);
+                gammas[slot] = d.gamma;
+                votes.push(d.k);
+            }
+        }
+        // One iteration shape per step: gamma is per-row (ragged), K is
+        // batch-wide, so the controllers vote and the mode wins.
+        let k = modal(&votes).unwrap_or_else(|| self.cfg.algo.paths().max(1));
+        let out = self.step_stream_rows(st, &gammas, k)?;
+        for slot in 0..info.batch {
+            if let Some(c) = st.controllers[slot].as_mut() {
+                c.observe(out.tau[slot].max(0) as usize, gammas[slot]);
+                c.observe_costs(out.draft_us, out.drafted, out.target_us, info.batch * k);
+                self.metrics.gamma_chosen.observe(gammas[slot]);
+                self.metrics.paths_chosen.observe(k);
+                self.metrics.controller_regret_milli.add(c.take_regret_milli());
+            }
+        }
+        Ok(out)
+    }
+
+    /// One fused iteration with an explicit per-slot gamma schedule and
+    /// path-count override — the adaptive step's engine.  Public so
+    /// tests and the oracle-replay harness can force arbitrary (even
+    /// adversarial per-iteration) schedules and check the committed
+    /// distribution never moves (tests/theorems.rs).  Consumes exactly
+    /// one seed per occupied slot, like [`SpecEngine::step_stream`], so
+    /// any schedule replays the same per-row randomness.
+    pub fn step_stream_rows(
+        &self,
+        st: &mut DecodeState<B>,
+        gammas: &[usize],
+        k: usize,
+    ) -> anyhow::Result<SpecIterOut> {
         let t_iter = Instant::now();
         let seeds: Vec<i32> = st
             .row_rngs
             .iter_mut()
             .map(|r| r.as_mut().map_or(0, |rng| rng.next_u64() as i32))
             .collect();
-        let out = self.backend.spec_iter(
-            self.cfg.algo,
+        let out = self.backend.spec_iter_rows(
+            with_paths(self.cfg.algo, k.max(1)),
             &self.cfg.drafter,
-            self.cfg.gamma,
+            gammas,
             &mut st.tokens,
             &mut st.length,
             &mut st.kv_target,
@@ -478,7 +651,31 @@ impl<B: Backend> SpecEngine<B> {
         }
         st.length[slot] = inert[0].len() as i32;
         st.row_rngs[slot] = None;
+        st.controllers[slot] = None;
     }
+}
+
+/// Rebuild a multi-draft algo with path count `k` (no-op for
+/// single-draft algorithms, whose controllers only vote k = 1).
+fn with_paths(algo: Algo, k: usize) -> Algo {
+    match algo {
+        Algo::MultiPath { .. } => Algo::MultiPath { k },
+        Algo::Tree { .. } => Algo::Tree { k },
+        a => a,
+    }
+}
+
+/// Most-voted value, smallest winner on ties (deterministic across
+/// iteration orders); `None` for an empty vote.
+fn modal(votes: &[usize]) -> Option<usize> {
+    let mut counts = std::collections::BTreeMap::new();
+    for &v in votes {
+        *counts.entry(v).or_insert(0usize) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by_key(|&(v, c)| (c, std::cmp::Reverse(v)))
+        .map(|(v, _)| v)
 }
 
 /// One pending admission for [`SpecEngine::admit_rows`]: which free slot
@@ -525,6 +722,10 @@ pub struct DecodeState<B: Backend> {
     kv_drafter: B::Kv,
     /// `Some` while a request owns the slot; drives that row's seeds.
     row_rngs: Vec<Option<Rng>>,
+    /// Per-slot adaptive tuner (`Some` only while the slot is occupied
+    /// *and* [`crate::config::AdaptiveConfig::enabled`]); lives and dies
+    /// with the request, so its acceptance window never mixes streams.
+    controllers: Vec<Option<Controller>>,
 }
 
 impl<B: Backend> DecodeState<B> {

@@ -29,6 +29,7 @@
 pub mod backend;
 pub mod bench;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod draftset;
 pub mod engine;

@@ -214,6 +214,20 @@ pub struct EngineMetrics {
     pub prefill_positions: Counter,
     /// Total prompt positions admitted (the cold-prefill cost baseline).
     pub prompt_positions: Counter,
+    /// Gamma the adaptive controller chose, per slot-iteration
+    /// (DESIGN.md §15).  With the controller off this stays at the
+    /// configured gamma; its spread under load is the adaptivity made
+    /// observable.
+    pub gamma_chosen: ValueHist,
+    /// Path count K the controller chose per slot-iteration (1 for
+    /// single-draft algorithms).
+    pub paths_chosen: ValueHist,
+    /// Accumulated controller hysteresis regret, in milli-fractions of
+    /// the per-step best arm's objective value
+    /// ([`crate::control::Controller::take_regret_milli`]).  Growing
+    /// fast relative to `iterations` means the hysteresis margin is
+    /// holding the schedule on a stale arm.
+    pub controller_regret_milli: Counter,
 }
 
 impl EngineMetrics {
@@ -282,6 +296,8 @@ impl EngineMetrics {
             put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
             put("request_latency_mean_us", self.request_latency.mean_us());
             put("queue_wait_mean_us", self.queue_wait.mean_us());
+            put("gamma_chosen_mean", self.gamma_chosen.mean());
+            put("controller_regret_milli", self.controller_regret_milli.get() as f64);
         }
         let sub = |extra: String| {
             if labels.is_empty() {
@@ -301,6 +317,12 @@ impl EngineMetrics {
         }
         for (edge, n) in self.queue_wait.nonzero() {
             s.push_str(&format!("specd_queue_wait_us{} {n}\n", sub(format!("le=\"{edge}\""))));
+        }
+        for (g, n) in self.gamma_chosen.nonzero() {
+            s.push_str(&format!("specd_gamma_chosen{} {n}\n", sub(format!("gamma=\"{g}\""))));
+        }
+        for (k, n) in self.paths_chosen.nonzero() {
+            s.push_str(&format!("specd_paths_chosen{} {n}\n", sub(format!("k=\"{k}\""))));
         }
         s
     }
@@ -384,6 +406,24 @@ mod tests {
         assert!(r.contains("specd_target_forward_mean_us"));
         assert!(r.contains("specd_native_kernel{kernel=\""));
         assert!((m.prefill_batch_size.mean() - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn controller_metrics_render() {
+        let m = EngineMetrics::default();
+        m.gamma_chosen.observe(4);
+        m.gamma_chosen.observe(8);
+        m.paths_chosen.observe(2);
+        m.controller_regret_milli.add(37);
+        let r = m.render();
+        assert!(r.contains("specd_gamma_chosen{gamma=\"4\"} 1"));
+        assert!(r.contains("specd_gamma_chosen{gamma=\"8\"} 1"));
+        assert!(r.contains("specd_paths_chosen{k=\"2\"} 1"));
+        assert!(r.contains("specd_gamma_chosen_mean 6"));
+        assert!(r.contains("specd_controller_regret_milli 37"));
+        // Labelled rendering stamps the label on hist lines too.
+        let r = m.render_labeled("replica=\"1\"");
+        assert!(r.contains("specd_gamma_chosen{gamma=\"4\",replica=\"1\"} 1"));
     }
 
     #[test]

@@ -452,7 +452,13 @@ fn replica_worker<B: Backend>(
     let metrics = engine.metrics.clone();
     let info = engine.backend().info();
     let (b, l) = (info.batch, info.max_len);
-    let gamma = engine.cfg.gamma;
+    // Footprint reservations must cover the largest gamma the adaptive
+    // controller may pick, not just the configured static one.
+    let gamma = if engine.cfg.adaptive.enabled {
+        engine.cfg.gamma.max(engine.cfg.adaptive.gamma_max)
+    } else {
+        engine.cfg.gamma
+    };
     let default_max_new = engine.cfg.max_new_tokens;
     let mut seed_rng = Rng::new(0xc0ffee0 ^ 0x9E3779B97F4A7C15);
     let mut state: Option<DecodeState<B>> = None;
@@ -626,7 +632,7 @@ fn replica_worker<B: Backend>(
         let mut finished: Vec<usize> = Vec::new();
         for (i, sr) in slots.iter_occupied_mut() {
             let tau = out.tau[i] as usize;
-            let row: Vec<u32> = out.emitted[i * (gamma + 1)..i * (gamma + 1) + tau + 1]
+            let row: Vec<u32> = out.emitted[i * out.stride..i * out.stride + tau + 1]
                 .iter()
                 .map(|&x| x as u32)
                 .collect();

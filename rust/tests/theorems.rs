@@ -277,6 +277,159 @@ fn batched_prefill_rows_matches_per_row_admissions() {
     assert!(st.occupied(0) && !st.occupied(1) && st.occupied(2));
 }
 
+/// Theorem 1 under *adaptive* speculation (DESIGN.md §15): forcing any
+/// per-row gamma / path-count schedule — including adversarial
+/// per-iteration switches — through the public forced-schedule hook
+/// commits tokens from the same target law as the static configuration.
+/// The static and forced arms share row seeds, so the paired TV gap
+/// isolates exactly the shape-induced drift (which must be pure
+/// finite-sample noise), and both arms must sit on the exact target
+/// next-token law.  Runs the fp32 and int8 drafters: quantisation and
+/// schedule switches must compose without moving the committed
+/// distribution.
+#[test]
+fn forced_gamma_schedules_commit_target_distributed_tokens() {
+    const SEED: u64 = 0x5c4ed;
+    const N_RUNS: u64 = 250;
+    let prompt: Vec<u32> = vec![vocab::BOS, vocab::marker_for(0), 25, 33, 47];
+
+    // Exact target next-token law after the prompt (fp32 target forward,
+    // as in the int8 test above).
+    let be = NativeBackend::seeded_with_shapes(4, 24, SEED);
+    let info = be.info().clone();
+    let (b, l, v) = (info.batch, info.max_len, info.vocab_size);
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        for (j, &t) in prompt.iter().enumerate() {
+            toks[bi * l + j] = t as i32;
+        }
+        lens[bi] = prompt.len() as i32;
+    }
+    let mut kv = be.prefill("target", &toks, &lens).unwrap();
+    let ps = be.target_score(1, &toks, &lens, &mut kv, &vec![20i32; b]).unwrap();
+    let mass: f64 = ps[..v].iter().map(|&x| x as f64).sum();
+    let exact: Vec<f64> = ps[..v].iter().map(|&x| x as f64 / mass).collect();
+
+    // Adversarial per-iteration (gammas, K) schedule: ragged across rows
+    // and switching both knobs every iteration (the last entry stays
+    // small so three iterations always fit the ring).
+    let schedule: [(Vec<usize>, usize); 3] =
+        [(vec![2, 5, 3, 6], 2), (vec![6, 2, 5, 3], 1), (vec![1, 2, 1, 2], 2)];
+
+    for algo in [Algo::Block, Algo::MultiPath { k: 2 }, Algo::Tree { k: 2 }] {
+        for prec in [Precision::Fp32, Precision::Int8] {
+            let backend = Arc::new(
+                NativeBackend::seeded_with_shapes(4, 24, SEED).with_draft_precision(prec),
+            );
+            let cfg = EngineConfig {
+                algo,
+                gamma: 4,
+                max_new_tokens: 8,
+                draft_precision: prec,
+                ..Default::default()
+            };
+            let engine = SpecEngine::new(backend, cfg).unwrap();
+            // Single-draft algos ignore K; keep the schedule well-typed.
+            let ks = |k: usize| if matches!(algo, Algo::Block) { 1 } else { k };
+            let mut hist = [vec![0u64; v], vec![0u64; v]]; // [static, forced]
+            let mut n = 0u64;
+            for run in 0..N_RUNS {
+                for (arm, h) in hist.iter_mut().enumerate() {
+                    let mut st = engine.begin_stream().unwrap();
+                    for slot in 0..b {
+                        engine
+                            .admit_row(&mut st, slot, &prompt, 0x5eed + run * 31 + slot as u64)
+                            .unwrap();
+                    }
+                    // Same row seeds on both arms: the first iteration's
+                    // draws pair exactly, so any TV gap is shape-induced.
+                    let out = if arm == 0 {
+                        engine.step_stream(&mut st).unwrap()
+                    } else {
+                        engine
+                            .step_stream_rows(&mut st, &schedule[0].0, ks(schedule[0].1))
+                            .unwrap()
+                    };
+                    for i in 0..b {
+                        let tok = out.emitted[i * out.stride];
+                        h[(tok as usize).min(v - 1)] += 1;
+                    }
+                    if arm == 1 && run < 8 {
+                        // Keep switching shapes: the stream must stay
+                        // structurally coherent across the switches.
+                        for (gs, k) in schedule[1..].iter() {
+                            let o = engine.step_stream_rows(&mut st, gs, ks(*k)).unwrap();
+                            for i in 0..b {
+                                let tau = o.tau[i] as usize;
+                                assert!(tau <= gs[i], "{algo}: tau {tau} > gamma {}", gs[i]);
+                                for &t in &o.emitted[i * o.stride..i * o.stride + tau + 1] {
+                                    assert!((t as usize) < v, "{algo}: token {t} out of vocab");
+                                }
+                            }
+                        }
+                    }
+                }
+                n += b as u64;
+            }
+            let tvs: Vec<f64> = hist
+                .iter()
+                .map(|h| {
+                    let emp: Vec<f64> = h.iter().map(|&c| c as f64 / n as f64).collect();
+                    dist::tv_distance(&exact, &emp)
+                })
+                .collect();
+            let (tv_static, tv_forced) = (tvs[0], tvs[1]);
+            assert!(
+                tv_forced < 0.25,
+                "{algo}/{prec:?}: forced-schedule committed TV {tv_forced} vs exact target"
+            );
+            assert!(
+                tv_forced <= tv_static + 0.05,
+                "{algo}/{prec:?}: forced TV {tv_forced} outside the static arm's noise band \
+                 ({tv_static})"
+            );
+        }
+    }
+}
+
+/// The adaptive machinery is strictly additive: with `adaptive` disabled
+/// (the default), `step_stream` is the pre-existing uniform path, and
+/// the forced-schedule hook run at the engine's own (gamma, K)
+/// reproduces it bit for bit — same taus, same tokens, same done flags,
+/// same stride.
+#[test]
+fn adaptive_off_is_bit_identical_to_uniform_rows() {
+    for algo in [Algo::Block, Algo::MultiPath { k: 2 }] {
+        let backend = Arc::new(NativeBackend::seeded_with_shapes(4, 48, 0xb17));
+        let cfg = EngineConfig { algo, gamma: 4, max_new_tokens: 12, ..Default::default() };
+        let engine = SpecEngine::new(backend, cfg).unwrap();
+        assert!(!engine.cfg.adaptive.enabled, "adaptive must default off");
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![vocab::BOS, vocab::marker_for(0), 21, 35],
+            vec![vocab::BOS, vocab::marker_for(1), 60, 61, 62],
+            vec![vocab::BOS, vocab::marker_for(2), 77],
+            vec![vocab::BOS, vocab::marker_for(3), 80, 81, 82, 83],
+        ];
+        let mut st_plain = engine.begin_stream().unwrap();
+        let mut st_rows = engine.begin_stream().unwrap();
+        for (slot, p) in prompts.iter().enumerate() {
+            engine.admit_row(&mut st_plain, slot, p, 0xab5 + slot as u64).unwrap();
+            engine.admit_row(&mut st_rows, slot, p, 0xab5 + slot as u64).unwrap();
+        }
+        let uniform = vec![4usize; prompts.len()];
+        for step in 0..5 {
+            let x = engine.step_stream(&mut st_plain).unwrap();
+            let y = engine.step_stream_rows(&mut st_rows, &uniform, algo.paths().max(1)).unwrap();
+            assert_eq!(x.stride, 5, "{algo} step {step}: uniform stride is gamma + 1");
+            assert_eq!(x.stride, y.stride, "{algo} step {step}: stride diverged");
+            assert_eq!(x.tau, y.tau, "{algo} step {step}: tau diverged");
+            assert_eq!(x.emitted, y.emitted, "{algo} step {step}: emitted diverged");
+            assert_eq!(x.done, y.done, "{algo} step {step}: done flags diverged");
+        }
+    }
+}
+
 /// The §2 example end-to-end (E0 in DESIGN.md): exact 10/9, 11/9, 12/9.
 #[test]
 fn motivating_example_numbers() {
