@@ -23,17 +23,20 @@
 
 pub mod kernels;
 pub mod native;
+pub mod paged;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod pool;
 pub mod quant;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::draftset::{BranchPolicy, DraftSet, DraftTree};
 use crate::verify::Algo;
 
 pub use native::{NativeBackend, NativeKv};
+pub use paged::{kvstats, KvLayout, PageAllocator};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use quant::Precision;
@@ -92,6 +95,13 @@ pub struct BackendInfo {
     /// (used to locate the canonical prompt sets; `None` ⇒ synthetic
     /// prompts, see [`crate::workload::Dataset::load_or_synthetic`]).
     pub artifacts_dir: Option<PathBuf>,
+    /// Whether this backend serves scatter-paged physical KV
+    /// ([`KvLayout::Paged`], DESIGN.md §16): splices alias refcounted
+    /// pages instead of copying spans, and
+    /// [`Backend::page_allocator`] returns the physical allocator the
+    /// serving tier's `KvPool` should account against.  False for
+    /// ring-contiguous layouts (the bit-identity oracle, and PJRT).
+    pub paged_kv: bool,
 }
 
 impl BackendInfo {
@@ -228,6 +238,17 @@ pub trait Backend: Send + Sync + 'static {
 
     /// Fixed shapes and capabilities of this backend instance.
     fn info(&self) -> &BackendInfo;
+
+    /// The physical page allocator behind this backend's KV caches,
+    /// when it serves scatter-paged KV ([`BackendInfo::paged_kv`],
+    /// DESIGN.md §16.4).  The serving tier's `KvPool` accounts its
+    /// admission budget directly against this object — one allocator,
+    /// no parallel ledger.  `None` (the default, and every
+    /// ring-contiguous layout) keeps the pool on its own identity
+    /// free-list accounting.
+    fn page_allocator(&self) -> Option<Arc<dyn PageAllocator>> {
+        None
+    }
 
     /// Warm-up hook, called by engine constructors with the configured
     /// algorithm, drafter and draft precision so a backend can pre-size
@@ -495,6 +516,14 @@ pub trait Backend: Send + Sync + 'static {
     /// positions `len..` of the destination row are left as-is (they are
     /// rewritten before ever being attended, per the layout contract
     /// above).
+    ///
+    /// Paged-KV backends ([`BackendInfo::paged_kv`]) implement this as
+    /// a page-table operation: full pages inside `0..len` are aliased
+    /// with a refcount bump (zero bytes moved), only the boundary
+    /// partial page is physically copied, and a later append into a
+    /// still-shared page copies-on-write (DESIGN.md §16.3).  The
+    /// observable outcome must stay bit-identical to the contiguous
+    /// span copy — including the destination's preserved `len..` tail.
     fn kv_splice(
         &self,
         model: &str,
@@ -528,6 +557,7 @@ mod tests {
             open_gamma: false,
             drafters: vec!["xxs".into()],
             artifacts_dir: None,
+            paged_kv: false,
         };
         assert!(info.supports_gamma(6));
         assert!(!info.supports_gamma(5));

@@ -30,6 +30,9 @@ use super::kernels::{
     default_kernel, dot_f32, dot_q8_i32, matmul_q8_i32, matmul_q8_i32_ref, quantise_row_q8,
     MatKernel, PackedF32, QuantScratch,
 };
+use super::paged::{
+    kvstats, KvLayout, PageAllocator, PageArena, PagedRows, DEFAULT_PAGE_POSITIONS, NO_PAGE,
+};
 use super::pool::{ScopedJob, ThreadPool};
 use super::quant::{Precision, QuantLayer, QuantMatrix, QuantModel, QuantRows};
 use super::{
@@ -130,17 +133,29 @@ impl NativeModel {
     }
 }
 
-/// KV cache for one model over one batch: `(B, n_layers, L, H, hd)` flat.
+/// KV cache for one model over one batch, in one of two physical
+/// layouts (DESIGN.md §16):
 ///
-/// Batch-major layout: one serving row's entire cache (all layers) is a
-/// single contiguous [`NativeKv::row_stride`]-sized slice, which is what
-/// lets `forward_block` hand disjoint `&mut` row views to the thread
-/// pool via `chunks_mut` — safe row parallelism with no interior
-/// aliasing (DESIGN.md §10).
+/// * **Contig** (`pages: None`): `(B, n_layers, L, H, hd)` flat in
+///   `k`/`v`.  Batch-major, so one serving row's entire cache (all
+///   layers) is a single contiguous [`NativeKv::row_stride`]-sized
+///   slice — the original layout, kept as the bit-identity oracle.
+/// * **Paged** (`pages: Some`): `k`/`v` are empty and every `(layer,
+///   position)` block lives in a fixed-size refcounted arena page
+///   behind a per-row page table ([`PagedRows`]), so splices alias
+///   pages instead of copying spans, with copy-on-write on append.
+///
+/// All forward and copy paths go through the per-`(layer, position)`
+/// block accessors below, which resolve to the same `(H, hd)` float
+/// blocks in either layout — paged runs the identical float ops in the
+/// identical order, hence bit-identical streams (test-enforced in
+/// `tests/paged_kv.rs`).
 #[derive(Clone, Debug)]
 pub struct NativeKv {
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Paged layout state; `None` = ring-contiguous `k`/`v` above.
+    pages: Option<PagedRows>,
     n_layers: usize,
     batch: usize,
     max_len: usize,
@@ -154,6 +169,7 @@ impl NativeKv {
         NativeKv {
             k: vec![0.0; n],
             v: vec![0.0; n],
+            pages: None,
             n_layers: dims.n_layers,
             batch,
             max_len,
@@ -162,60 +178,421 @@ impl NativeKv {
         }
     }
 
+    /// A paged cache with every page-table entry unmapped — reads see
+    /// zeros (the arena's zero slab), so this is `zeros` without the
+    /// allocation; pages materialise lazily on first write.
+    fn paged(dims: &ModelDims, batch: usize, max_len: usize, arena: &Arc<PageArena>) -> Self {
+        debug_assert_eq!(arena.n_layers(), dims.n_layers, "arena geometry mismatch");
+        debug_assert_eq!(arena.hhd(), dims.n_heads * dims.head_dim(), "arena geometry mismatch");
+        NativeKv {
+            k: Vec::new(),
+            v: Vec::new(),
+            pages: Some(PagedRows::new(arena.clone(), batch, max_len)),
+            n_layers: dims.n_layers,
+            batch,
+            max_len,
+            n_heads: dims.n_heads,
+            head_dim: dims.head_dim(),
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.pages.is_some()
+    }
+
+    /// Floats per `(layer, position)` K or V block: `H · hd`.
+    #[inline]
+    fn hhd(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
     /// Flat length of one batch row's cache: `(n_layers, L, H, hd)`.
+    /// Contig layout only.
     #[inline]
     fn row_stride(&self) -> usize {
         self.n_layers * self.max_len * self.n_heads * self.head_dim
     }
 
     /// Flat offset of cache row `(layer, b, pos)` (a `(H, hd)` block).
+    /// Contig layout only.
     #[inline]
     fn row(&self, layer: usize, b: usize, pos: usize) -> usize {
         ((b * self.n_layers + layer) * self.max_len + pos) * self.n_heads * self.head_dim
+    }
+
+    /// The K block of `(layer, b, pos)` in either layout.  Paged reads
+    /// of unmapped pages resolve to the arena's zero slab — exactly
+    /// what a contig `zeros` cache reads.
+    #[inline]
+    fn k_block(&self, layer: usize, b: usize, pos: usize) -> &[f32] {
+        let hhd = self.hhd();
+        match &self.pages {
+            None => {
+                let r = self.row(layer, b, pos);
+                &self.k[r..r + hhd]
+            }
+            Some(p) => {
+                let pp = p.arena.page_positions();
+                let pr = p.tables[b][pos / pp];
+                let off = (layer * pp + pos % pp) * hhd;
+                unsafe { std::slice::from_raw_parts((pr.addr as *const f32).add(off), hhd) }
+            }
+        }
+    }
+
+    /// The V block of `(layer, b, pos)` in either layout.
+    #[inline]
+    fn v_block(&self, layer: usize, b: usize, pos: usize) -> &[f32] {
+        let hhd = self.hhd();
+        match &self.pages {
+            None => {
+                let r = self.row(layer, b, pos);
+                &self.v[r..r + hhd]
+            }
+            Some(p) => {
+                let pp = p.arena.page_positions();
+                let pr = p.tables[b][pos / pp];
+                let off = p.arena.half() + (layer * pp + pos % pp) * hhd;
+                unsafe { std::slice::from_raw_parts((pr.addr as *const f32).add(off), hhd) }
+            }
+        }
+    }
+
+    /// Mutable K block.  Paged callers must have made the position's
+    /// page privately writable first ([`NativeKv::ensure_writable_span`]).
+    #[inline]
+    fn k_block_mut(&mut self, layer: usize, b: usize, pos: usize) -> &mut [f32] {
+        let hhd = self.hhd();
+        let r = ((b * self.n_layers + layer) * self.max_len + pos) * hhd;
+        match &mut self.pages {
+            None => &mut self.k[r..r + hhd],
+            Some(p) => {
+                let pp = p.arena.page_positions();
+                let pr = p.tables[b][pos / pp];
+                debug_assert!(pr.id != NO_PAGE, "write into an unmapped KV page");
+                let off = (layer * pp + pos % pp) * hhd;
+                unsafe { std::slice::from_raw_parts_mut((pr.addr as *mut f32).add(off), hhd) }
+            }
+        }
+    }
+
+    /// Mutable V block (same writability contract as `k_block_mut`).
+    #[inline]
+    fn v_block_mut(&mut self, layer: usize, b: usize, pos: usize) -> &mut [f32] {
+        let hhd = self.hhd();
+        let r = ((b * self.n_layers + layer) * self.max_len + pos) * hhd;
+        match &mut self.pages {
+            None => &mut self.v[r..r + hhd],
+            Some(p) => {
+                let pp = p.arena.page_positions();
+                let pr = p.tables[b][pos / pp];
+                debug_assert!(pr.id != NO_PAGE, "write into an unmapped KV page");
+                let off = p.arena.half() + (layer * pp + pos % pp) * hhd;
+                unsafe { std::slice::from_raw_parts_mut((pr.addr as *mut f32).add(off), hhd) }
+            }
+        }
+    }
+
+    /// Make every page covering positions `lo..hi` of row `b` privately
+    /// writable (unmapped → fresh zeroed page, shared → copy-on-write).
+    /// No-op on the contig layout.  This is the pre-pass every writer
+    /// runs *before* handing raw-address row views to the thread pool:
+    /// afterwards the written pages are uniquely owned, so parallel row
+    /// writes cannot touch a page any other row (or cache) can see.
+    fn ensure_writable_span(&mut self, b: usize, lo: usize, hi: usize) {
+        let Some(p) = &mut self.pages else { return };
+        if hi <= lo {
+            return;
+        }
+        debug_assert!(hi <= self.max_len, "KV write span {lo}..{hi} overruns ring {}", self.max_len);
+        let pp = p.arena.page_positions();
+        for page in lo / pp..=(hi - 1) / pp {
+            let r = p.tables[b][page];
+            let w = p.arena.ensure_writable(r);
+            p.tables[b][page] = w;
+        }
+    }
+
+    /// Gather positions `0..len.min(max_len)` of row `b` into contig
+    /// `(n_layers, len, H, hd)` K and V buffers — the layout-agnostic
+    /// comparison form the bit-identity tests diff (`k`/`v` are empty
+    /// in the paged layout, so tests must never peek them directly).
+    pub fn row_snapshot(&self, b: usize, len: usize) -> (Vec<f32>, Vec<f32>) {
+        let len = len.min(self.max_len);
+        let hhd = self.hhd();
+        let mut k = Vec::with_capacity(self.n_layers * len * hhd);
+        let mut v = Vec::with_capacity(self.n_layers * len * hhd);
+        for li in 0..self.n_layers {
+            for pos in 0..len {
+                k.extend_from_slice(self.k_block(li, b, pos));
+                v.extend_from_slice(self.v_block(li, b, pos));
+            }
+        }
+        (k, v)
+    }
+
+    /// Ring length (positions) of this cache.
+    pub fn ring_len(&self) -> usize {
+        self.max_len
+    }
+
+    /// Batch rows in this cache.
+    pub fn rows(&self) -> usize {
+        self.batch
+    }
+}
+
+/// One row's KV resolved for a forward call: raw base addresses in
+/// either layout, so the slot structs stay `Send` for the fork-join
+/// pool without borrowing the cache (the paged layout has no
+/// per-row contiguous slice for `chunks_mut` to split).  Soundness
+/// (DESIGN.md §16.2): rows are disjoint; within a row, the
+/// ensure-writable pre-pass ran before views were captured, so written
+/// pages are uniquely owned by this cache and shared pages are only
+/// ever read.
+struct RowKvView {
+    hhd: usize,
+    mode: RowKvMode,
+}
+
+enum RowKvMode {
+    /// Base addresses of the row's contiguous K/V slices; `ring` is the
+    /// cache ring length the flat `(li·L + pos)` indexing strides by.
+    Contig { k: usize, v: usize, ring: usize },
+    /// Per-page slab base addresses (one per table entry), page
+    /// geometry, and the zero-slab address for write assertions.
+    Paged { slabs: Vec<usize>, pp: usize, half: usize, zero: usize },
+}
+
+impl RowKvView {
+    #[inline]
+    fn k_block(&self, li: usize, pos: usize) -> &[f32] {
+        match &self.mode {
+            RowKvMode::Contig { k, ring, .. } => unsafe {
+                std::slice::from_raw_parts(
+                    (*k as *const f32).add((li * ring + pos) * self.hhd),
+                    self.hhd,
+                )
+            },
+            RowKvMode::Paged { slabs, pp, .. } => unsafe {
+                std::slice::from_raw_parts(
+                    (slabs[pos / pp] as *const f32).add((li * pp + pos % pp) * self.hhd),
+                    self.hhd,
+                )
+            },
+        }
+    }
+
+    #[inline]
+    fn v_block(&self, li: usize, pos: usize) -> &[f32] {
+        match &self.mode {
+            RowKvMode::Contig { v, ring, .. } => unsafe {
+                std::slice::from_raw_parts(
+                    (*v as *const f32).add((li * ring + pos) * self.hhd),
+                    self.hhd,
+                )
+            },
+            RowKvMode::Paged { slabs, pp, half, .. } => unsafe {
+                std::slice::from_raw_parts(
+                    (slabs[pos / pp] as *const f32).add(half + (li * pp + pos % pp) * self.hhd),
+                    self.hhd,
+                )
+            },
+        }
+    }
+
+    #[inline]
+    fn k_block_mut(&mut self, li: usize, pos: usize) -> &mut [f32] {
+        match &self.mode {
+            RowKvMode::Contig { k, ring, .. } => unsafe {
+                std::slice::from_raw_parts_mut(
+                    (*k as *mut f32).add((li * ring + pos) * self.hhd),
+                    self.hhd,
+                )
+            },
+            RowKvMode::Paged { slabs, pp, zero, .. } => {
+                let slab = slabs[pos / pp];
+                debug_assert!(slab != *zero, "write into an unmapped KV page");
+                unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (slab as *mut f32).add((li * pp + pos % pp) * self.hhd),
+                        self.hhd,
+                    )
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn v_block_mut(&mut self, li: usize, pos: usize) -> &mut [f32] {
+        match &self.mode {
+            RowKvMode::Contig { v, ring, .. } => unsafe {
+                std::slice::from_raw_parts_mut(
+                    (*v as *mut f32).add((li * ring + pos) * self.hhd),
+                    self.hhd,
+                )
+            },
+            RowKvMode::Paged { slabs, pp, half, zero } => {
+                let slab = slabs[pos / pp];
+                debug_assert!(slab != *zero, "write into an unmapped KV page");
+                unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (slab as *mut f32).add(half + (li * pp + pos % pp) * self.hhd),
+                        self.hhd,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl NativeKv {
+    /// Capture row `b` as a [`RowKvView`] for a forward call.  Callers
+    /// must run [`NativeKv::ensure_writable_span`] over every position
+    /// the forward will write *before* capturing views: CoW changes
+    /// slab addresses, and the view freezes them.
+    fn row_view(&mut self, b: usize) -> RowKvView {
+        let hhd = self.hhd();
+        match &self.pages {
+            None => {
+                let base = b * self.row_stride();
+                RowKvView {
+                    hhd,
+                    mode: RowKvMode::Contig {
+                        k: unsafe { self.k.as_mut_ptr().add(base) } as usize,
+                        v: unsafe { self.v.as_mut_ptr().add(base) } as usize,
+                        ring: self.max_len,
+                    },
+                }
+            }
+            Some(p) => RowKvView {
+                hhd,
+                mode: RowKvMode::Paged {
+                    slabs: p.tables[b].iter().map(|r| r.addr).collect(),
+                    pp: p.arena.page_positions(),
+                    half: p.arena.half(),
+                    zero: p.arena.zero_addr(),
+                },
+            },
+        }
     }
 }
 
 /// Copy cache positions `0..len` of `src` row `src_row` over `dst` row
 /// `dst_row`, for every layer.  The raw copy behind
 /// [`Backend::kv_splice`] and the multipath scratch/commit paths
-/// (geometries must already be validated by the caller).
+/// (geometries must already be validated by the caller).  Same-ring
+/// twin of [`copy_kv_span`] — the extra ring assert is the difference.
 fn copy_kv_rows(dst: &mut NativeKv, dst_row: usize, src: &NativeKv, src_row: usize, len: usize) {
-    debug_assert_eq!(
-        (dst.n_layers, dst.n_heads, dst.head_dim, dst.max_len),
-        (src.n_layers, src.n_heads, src.head_dim, src.max_len),
-        "KV geometry mismatch"
-    );
-    debug_assert!(dst_row < dst.batch && src_row < src.batch && len <= src.max_len);
-    let chunk = len * src.n_heads * src.head_dim;
-    for li in 0..src.n_layers {
-        let d0 = dst.row(li, dst_row, 0);
-        let s0 = src.row(li, src_row, 0);
-        dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
-        dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+    debug_assert_eq!(dst.max_len, src.max_len, "KV ring mismatch");
+    copy_kv_span(dst, dst_row, src, src_row, len)
+}
+
+/// Physically copy positions `lo..hi` of `src` row `src_row` over the
+/// same positions of `dst` row `dst_row`, for every layer, through the
+/// layout-agnostic block accessors — the generic path shared by the
+/// boundary-partial-page copy, mixed-layout splices and
+/// [`copy_kv_pos`].  Counts the moved bytes in [`kvstats`].
+fn copy_kv_blocks(
+    dst: &mut NativeKv,
+    dst_row: usize,
+    src: &NativeKv,
+    src_row: usize,
+    lo: usize,
+    hi: usize,
+) {
+    if hi <= lo {
+        return;
     }
+    dst.ensure_writable_span(dst_row, lo, hi);
+    for li in 0..src.n_layers {
+        for pos in lo..hi {
+            dst.k_block_mut(li, dst_row, pos).copy_from_slice(src.k_block(li, src_row, pos));
+            dst.v_block_mut(li, dst_row, pos).copy_from_slice(src.v_block(li, src_row, pos));
+        }
+    }
+    let moved = 2 * src.n_layers * (hi - lo) * src.n_heads * src.head_dim;
+    kvstats::add_bytes_copied(moved as u64 * 4);
 }
 
 /// Copy cache positions `0..len` of `src` row `src_row` over `dst` row
 /// `dst_row`, for every layer, tolerating caches with *different ring
 /// lengths* — the cross-ring twin of [`copy_kv_rows`] the tree paths
 /// need (tree scratch rings are [`NativeBackend::tree_scratch_len`]
-/// long, the live ring `L`).  Positions within a layer are contiguous in
-/// both, so this is still one chunk copy per layer.
+/// long, the live ring `L`).  Ring tolerance is bounded, not silent:
+/// the span must fit both rings (debug-asserted below), so a bad page
+/// table or splice length fails loudly in tests instead of truncating.
+///
+/// Layout behaviour (observably identical, DESIGN.md §16.3):
+/// * contig → contig: one chunk memcpy per layer (positions within a
+///   layer are contiguous in both rings);
+/// * paged → paged on the same arena: every **full** page in `0..len`
+///   is aliased with a refcount bump — zero bytes moved — and only the
+///   boundary partial page is physically copied, preserving the
+///   destination page's `len..` tail exactly as the contig copy leaves
+///   `dst` positions `len..` untouched (the in-page offset of a
+///   position depends only on `pos % P`, so aliasing is ring-length
+///   agnostic);
+/// * mixed layouts / different arenas: generic per-block copy.
 fn copy_kv_span(dst: &mut NativeKv, dst_row: usize, src: &NativeKv, src_row: usize, len: usize) {
     debug_assert_eq!(
         (dst.n_layers, dst.n_heads, dst.head_dim),
         (src.n_layers, src.n_heads, src.head_dim),
         "KV geometry mismatch"
     );
-    debug_assert!(dst_row < dst.batch && src_row < src.batch);
-    debug_assert!(len <= src.max_len && len <= dst.max_len);
-    let chunk = len * src.n_heads * src.head_dim;
-    for li in 0..src.n_layers {
-        let d0 = dst.row(li, dst_row, 0);
-        let s0 = src.row(li, src_row, 0);
-        dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
-        dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+    debug_assert!(
+        dst_row < dst.batch && src_row < src.batch,
+        "KV row out of range (dst {dst_row}/{}, src {src_row}/{})",
+        dst.batch,
+        src.batch
+    );
+    debug_assert!(
+        len <= src.max_len && len <= dst.max_len,
+        "KV span {len} overruns a ring (dst ring {}, src ring {})",
+        dst.max_len,
+        src.max_len
+    );
+    if len == 0 {
+        return;
     }
+    let same_arena = match (&dst.pages, &src.pages) {
+        (Some(d), Some(s)) => Arc::ptr_eq(&d.arena, &s.arena),
+        _ => false,
+    };
+    if same_arena {
+        let pp = src.pages.as_ref().unwrap().arena.page_positions();
+        let full = len / pp;
+        {
+            let dp = dst.pages.as_mut().unwrap();
+            let sp = src.pages.as_ref().unwrap();
+            for pg in 0..full {
+                let s = sp.tables[src_row][pg];
+                let old = dp.tables[dst_row][pg];
+                if s.id == old.id {
+                    continue;
+                }
+                sp.arena.retain(s);
+                sp.arena.release(old);
+                dp.tables[dst_row][pg] = s;
+            }
+        }
+        // Boundary partial page: physical copy of the in-span slots
+        // only, keeping the destination's tail beyond `len` intact.
+        copy_kv_blocks(dst, dst_row, src, src_row, full * pp, len);
+        return;
+    }
+    if dst.pages.is_none() && src.pages.is_none() {
+        let chunk = len * src.n_heads * src.head_dim;
+        for li in 0..src.n_layers {
+            let d0 = dst.row(li, dst_row, 0);
+            let s0 = src.row(li, src_row, 0);
+            dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
+            dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+        }
+        kvstats::add_bytes_copied((2 * src.n_layers * chunk) as u64 * 4);
+        return;
+    }
+    copy_kv_blocks(dst, dst_row, src, src_row, 0, len);
 }
 
 /// Copy one cache position across rows (and possibly rings), for every
@@ -235,14 +612,24 @@ fn copy_kv_pos(
         (src.n_layers, src.n_heads, src.head_dim),
         "KV geometry mismatch"
     );
-    debug_assert!(dst_pos < dst.max_len && src_pos < src.max_len);
-    let chunk = src.n_heads * src.head_dim;
+    debug_assert!(
+        dst_row < dst.batch && src_row < src.batch,
+        "KV row out of range (dst {dst_row}/{}, src {src_row}/{})",
+        dst.batch,
+        src.batch
+    );
+    debug_assert!(
+        dst_pos < dst.max_len && src_pos < src.max_len,
+        "KV position out of range (dst {dst_pos}/{}, src {src_pos}/{})",
+        dst.max_len,
+        src.max_len
+    );
+    dst.ensure_writable_span(dst_row, dst_pos, dst_pos + 1);
     for li in 0..src.n_layers {
-        let d0 = dst.row(li, dst_row, dst_pos);
-        let s0 = src.row(li, src_row, src_pos);
-        dst.k[d0..d0 + chunk].copy_from_slice(&src.k[s0..s0 + chunk]);
-        dst.v[d0..d0 + chunk].copy_from_slice(&src.v[s0..s0 + chunk]);
+        dst.k_block_mut(li, dst_row, dst_pos).copy_from_slice(src.k_block(li, src_row, src_pos));
+        dst.v_block_mut(li, dst_row, dst_pos).copy_from_slice(src.v_block(li, src_row, src_pos));
     }
+    kvstats::add_bytes_copied((2 * src.n_layers * src.n_heads * src.head_dim) as u64 * 4);
 }
 
 // ---------------------------------------------------------------------------
@@ -332,12 +719,12 @@ impl RowScratch {
 }
 
 /// One batch row's inputs and disjoint mutable outputs — the unit of
-/// work handed to the thread pool.  The `k`/`v` slices are that row's
-/// contiguous `(n_layers, L, H, hd)` cache block (the batch-major
-/// [`NativeKv`] layout), so rows never alias.
+/// work handed to the thread pool.  `kv` is the row's resolved KV view
+/// ([`RowKvView`]): rows never alias in either layout (batch-major
+/// contig rows are disjoint slices; paged rows write only pages the
+/// ensure-writable pre-pass made uniquely owned).
 struct RowSlot<'a> {
-    k: &'a mut [f32],
-    v: &'a mut [f32],
+    kv: RowKvView,
     probs: Option<&'a mut [f32]>,
     toks: &'a [i32],
     start: i32,
@@ -446,12 +833,11 @@ fn forward_row(
 ) {
     let dims = &model.dims;
     let (d, h, hd, vcb) = (dims.d_model, dims.n_heads, dims.head_dim(), dims.vocab_size);
-    let hhd = h * hd;
     let scale = (hd as f32).powf(-0.5);
     let start = slot.start.max(0) as usize;
     // Clamped write origin, as jax.lax.dynamic_update_slice does.
     let ws = start.min(l.saturating_sub(t));
-    let RowSlot { k: krow, v: vrow, probs, toks, .. } = slot;
+    let RowSlot { mut kv, probs, toks, .. } = slot;
     // Embed + positions (positions clamped for lookup only).
     for j in 0..t {
         let tok = (toks[j].max(0) as usize).min(vcb - 1);
@@ -484,9 +870,8 @@ fn forward_row(
         matmul_any(kernel, wv, pv, &s.y, &layer.wv, &mut s.vx, t, d, d, &mut s.qscr);
         // Write the new K/V rows into the cache at ws..ws+t.
         for j in 0..t {
-            let row = (li * l + ws + j) * hhd;
-            krow[row..row + hhd].copy_from_slice(&s.kx[j * d..(j + 1) * d]);
-            vrow[row..row + hhd].copy_from_slice(&s.vx[j * d..(j + 1) * d]);
+            kv.k_block_mut(li, ws + j).copy_from_slice(&s.kx[j * d..(j + 1) * d]);
+            kv.v_block_mut(li, ws + j).copy_from_slice(&s.vx[j * d..(j + 1) * d]);
         }
         // Causal attention over the cache: key_pos <= query_pos.
         s.o.iter_mut().for_each(|z| *z = 0.0);
@@ -497,8 +882,8 @@ fn forward_row(
                 let qv = &s.q[j * d + hh * hd..j * d + (hh + 1) * hd];
                 let mut mx = f32::NEG_INFINITY;
                 for (sp, a) in s.att[..=hi].iter_mut().enumerate() {
-                    let row = (li * l + sp) * hhd + hh * hd;
-                    *a = dot_f32(qv, &krow[row..row + hd]) * scale;
+                    let kb = &kv.k_block(li, sp)[hh * hd..hh * hd + hd];
+                    *a = dot_f32(qv, kb) * scale;
                     mx = mx.max(*a);
                 }
                 let mut sum = 0.0f32;
@@ -510,8 +895,7 @@ fn forward_row(
                 let orow = &mut s.o[j * d + hh * hd..j * d + (hh + 1) * hd];
                 for (sp, &a) in s.att[..=hi].iter().enumerate() {
                     let w = a * inv;
-                    let row = (li * l + sp) * hhd + hh * hd;
-                    let vr = &vrow[row..row + hd];
+                    let vr = &kv.v_block(li, sp)[hh * hd..hh * hd + hd];
                     for (ov, &vv) in orow.iter_mut().zip(vr.iter()) {
                         *ov += w * vv;
                     }
@@ -576,8 +960,7 @@ fn forward_row(
 /// visible-slot list (shared prefix, then ancestors by node index, then
 /// self: the tree attention mask over the node→parent table).
 struct TreeSlot<'a> {
-    k: &'a mut [f32],
-    v: &'a mut [f32],
+    kv: RowKvView,
     probs: &'a mut [f32],
     toks: &'a [i32],
     /// Flat sequence position per token (`len + depth` — what the token's
@@ -637,8 +1020,8 @@ fn visible_slots(len: usize, parent: &[i32], node: usize) -> Vec<usize> {
 /// [`TreeSlot`]'s explicit per-token lists.  A token's outputs therefore
 /// match the flat forward of its root-to-leaf path bit for bit
 /// (test-enforced via the `Algo::Tree`/`Algo::MultiPath` ladder).
-/// `lt` is the scratch ring length, `lm` the model ring (position-table)
-/// length.
+/// `lm` is the model ring (position-table) length; the scratch ring the
+/// slots index is carried by the slot's [`RowKvView`].
 #[allow(clippy::too_many_arguments)]
 fn forward_tree_row(
     model: &NativeModel,
@@ -646,16 +1029,14 @@ fn forward_tree_row(
     packed: Option<&PackedModel>,
     kernel: MatKernel,
     slot: TreeSlot<'_>,
-    lt: usize,
     lm: usize,
     s: &mut RowScratch,
 ) {
     let dims = &model.dims;
     let (d, h, hd, vcb) = (dims.d_model, dims.n_heads, dims.head_dim(), dims.vocab_size);
-    let hhd = h * hd;
     let scale = (hd as f32).powf(-0.5);
     let t = slot.toks.len();
-    let TreeSlot { k: krow, v: vrow, probs, toks, pos, slot: wslot, vis } = slot;
+    let TreeSlot { mut kv, probs, toks, pos, slot: wslot, vis } = slot;
     // Embed + positions (position lookup clamped like forward_row).
     for j in 0..t {
         let tok = (toks[j].max(0) as usize).min(vcb - 1);
@@ -690,9 +1071,8 @@ fn forward_tree_row(
         // (the flat forward's write-then-attend order; tokens of one call
         // are never each other's ancestors, so visibility is unaffected).
         for j in 0..t {
-            let row = (li * lt + wslot[j]) * hhd;
-            krow[row..row + hhd].copy_from_slice(&s.kx[j * d..(j + 1) * d]);
-            vrow[row..row + hhd].copy_from_slice(&s.vx[j * d..(j + 1) * d]);
+            kv.k_block_mut(li, wslot[j]).copy_from_slice(&s.kx[j * d..(j + 1) * d]);
+            kv.v_block_mut(li, wslot[j]).copy_from_slice(&s.vx[j * d..(j + 1) * d]);
         }
         // Tree attention: each token attends exactly its visible slots.
         s.o.iter_mut().for_each(|z| *z = 0.0);
@@ -702,8 +1082,8 @@ fn forward_tree_row(
                 let qv = &s.q[j * d + hh * hd..j * d + (hh + 1) * hd];
                 let mut mx = f32::NEG_INFINITY;
                 for (a, &sp) in s.att[..nv].iter_mut().zip(vis[j].iter()) {
-                    let row = (li * lt + sp) * hhd + hh * hd;
-                    *a = dot_f32(qv, &krow[row..row + hd]) * scale;
+                    let kb = &kv.k_block(li, sp)[hh * hd..hh * hd + hd];
+                    *a = dot_f32(qv, kb) * scale;
                     mx = mx.max(*a);
                 }
                 let mut sum = 0.0f32;
@@ -715,8 +1095,7 @@ fn forward_tree_row(
                 let orow = &mut s.o[j * d + hh * hd..j * d + (hh + 1) * hd];
                 for (&a, &sp) in s.att[..nv].iter().zip(vis[j].iter()) {
                     let w = a * inv;
-                    let row = (li * lt + sp) * hhd + hh * hd;
-                    let vr = &vrow[row..row + hd];
+                    let vr = &kv.v_block(li, sp)[hh * hd..hh * hd + hd];
                     for (ov, &vv) in orow.iter_mut().zip(vr.iter()) {
                         *ov += w * vv;
                     }
@@ -1030,6 +1409,18 @@ pub struct NativeBackend {
     /// Pack-once cache of tile-major fp32 model twins for the SIMD
     /// kernel, keyed by model name (same idiom as `quant`).
     packed: Mutex<HashMap<String, Arc<PackedModel>>>,
+    /// Physical KV layout every cache this backend allocates uses:
+    /// scatter-paged (the default) or ring-contiguous (the bit-identity
+    /// oracle).  Set at construction (`SPECD_KV_LAYOUT`), overridden by
+    /// [`NativeBackend::with_kv_layout`] or the engine's `kv_layout`
+    /// config via [`Backend::prepare`]-time construction.
+    kv_layout: KvLayout,
+    /// One [`PageArena`] per model (keyed by name, same idiom as
+    /// `quant`/`packed`): every paged cache of a model — live rings,
+    /// scratch checkouts, extracted prefixes — draws pages from the same
+    /// arena, which is what lets splices alias pages instead of copying.
+    /// Empty under the contiguous layout.
+    arenas: Mutex<HashMap<String, Arc<PageArena>>>,
 }
 
 /// Forward-pass thread count default: `SPECD_NATIVE_THREADS` when set
@@ -1067,7 +1458,9 @@ fn default_branch_threshold() -> f64 {
 }
 
 impl NativeBackend {
-    fn with_models(info: BackendInfo, models: HashMap<String, NativeModel>) -> Self {
+    fn with_models(mut info: BackendInfo, models: HashMap<String, NativeModel>) -> Self {
+        let kv_layout = KvLayout::from_env_or_default();
+        info.paged_kv = kv_layout == KvLayout::Paged;
         NativeBackend {
             info,
             models,
@@ -1080,6 +1473,8 @@ impl NativeBackend {
             draft_precision: AtomicU8::new(Precision::from_env_or_default() as u8),
             quant: Mutex::new(HashMap::new()),
             packed: Mutex::new(HashMap::new()),
+            kv_layout,
+            arenas: Mutex::new(HashMap::new()),
         }
     }
 
@@ -1108,6 +1503,8 @@ impl NativeBackend {
                 open_gamma: true,
                 drafters: models::DRAFTERS.iter().map(|s| s.to_string()).collect(),
                 artifacts_dir: None,
+                // Overwritten by `with_models` from the layout knob.
+                paged_kv: false,
             },
             models_map,
         )
@@ -1135,6 +1532,8 @@ impl NativeBackend {
                 open_gamma: true,
                 drafters: manifest.drafters.clone(),
                 artifacts_dir: Some(dir.to_path_buf()),
+                // Overwritten by `with_models` from the layout knob.
+                paged_kv: false,
             },
             models_map,
         ))
@@ -1190,6 +1589,59 @@ impl NativeBackend {
     /// Current entropy-gap branch threshold.
     pub fn branch_threshold(&self) -> f64 {
         self.branch_threshold
+    }
+
+    /// Pin the physical KV layout explicitly (A/B benchmarking and the
+    /// bit-identity tests; decode streams are bitwise identical either
+    /// way, DESIGN.md §16).  Overrides the `SPECD_KV_LAYOUT` env choice.
+    /// Must be called before any KV cache is allocated — already-paged
+    /// caches keep their layout.
+    pub fn with_kv_layout(mut self, layout: KvLayout) -> Self {
+        self.kv_layout = layout;
+        self.info.paged_kv = layout == KvLayout::Paged;
+        self
+    }
+
+    /// Physical layout of the KV caches this backend allocates.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.kv_layout
+    }
+
+    /// The page arena of `name` (created on first use).  Every paged
+    /// cache of a model shares one arena — aliasing across caches is only
+    /// sound within a single allocator.
+    fn arena_for(&self, name: &str, dims: &ModelDims) -> Arc<PageArena> {
+        let mut arenas = self.arenas.lock().unwrap();
+        arenas
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(PageArena::new(
+                    dims.n_layers,
+                    dims.n_heads * dims.head_dim(),
+                    DEFAULT_PAGE_POSITIONS,
+                ))
+            })
+            .clone()
+    }
+
+    /// Allocate a zeroed `(rows,)`-row KV cache of ring length `max_len`
+    /// for `name` in the backend's configured layout.
+    fn alloc_kv(&self, name: &str, dims: &ModelDims, rows: usize, max_len: usize) -> NativeKv {
+        match self.kv_layout {
+            KvLayout::Contig => NativeKv::zeros(dims, rows, max_len),
+            KvLayout::Paged => {
+                NativeKv::paged(dims, rows, max_len, &self.arena_for(name, dims))
+            }
+        }
+    }
+
+    /// `(live, free)` page counts of `model`'s arena (`None` under the
+    /// contiguous layout, or before the model allocated anything).  The
+    /// refcount-leak tests pin `live` back to baseline after rows are
+    /// released.
+    pub fn kv_arena_stats(&self, model: &str) -> Option<(usize, usize)> {
+        let arenas = self.arenas.lock().unwrap();
+        arenas.get(model).map(|a| (a.live_pages(), a.free_pages()))
     }
 
     /// Set the draft-model inference precision (fp32, or the int8
@@ -1284,7 +1736,7 @@ impl NativeBackend {
                 return kv;
             }
         }
-        NativeKv::zeros(&model.dims, rows, max_len)
+        self.alloc_kv(name, &model.dims, rows, max_len)
     }
 
     /// Return a scratch cache to the persistent pool (dropped when the
@@ -1422,25 +1874,31 @@ impl NativeBackend {
         let kernel = self.kernel();
         let packed_arc = self.packed_model(name, model);
         let packed = packed_arc.as_deref();
-        // Disjoint per-row views: the batch-major cache layout makes each
-        // row's K/V a contiguous chunk, and probs splits the same way.
-        let stride = kv.row_stride();
-        let mut kit = kv.k.chunks_mut(stride);
-        let mut vit = kv.v.chunks_mut(stride);
+        // CoW pre-pass: materialise every page an active row will write
+        // this call (shared pages cloned, holes allocated) *before* the
+        // per-row views are captured — CoW replaces slab addresses, so it
+        // must never run inside the parallel scope.
+        for bi in 0..rows {
+            if active.is_some_and(|a| !a[bi]) {
+                continue;
+            }
+            let start = start_pos[bi].max(0) as usize;
+            let ws = start.min(l.saturating_sub(t));
+            kv.ensure_writable_span(bi, ws, ws + t);
+        }
+        // Disjoint per-row views: each slot resolves its own row's pages
+        // (or contiguous chunk), and probs splits row-major the same way.
         let mut pit = probs.chunks_mut(t * vcb);
         let mut slots = Vec::with_capacity(rows);
         for bi in 0..rows {
-            // Advance every iterator in lockstep so row `bi` always maps to
-            // chunk `bi`, then drop the slot for masked-out rows.
-            let k = kit.next().expect("kv row chunk");
-            let v = vit.next().expect("kv row chunk");
+            // Advance the probs iterator in lockstep so row `bi` always
+            // maps to chunk `bi`, then drop the slot for masked-out rows.
             let p = if want_probs { Some(pit.next().expect("probs row chunk")) } else { None };
             if active.is_some_and(|a| !a[bi]) {
                 continue;
             }
             slots.push(RowSlot {
-                k,
-                v,
+                kv: kv.row_view(bi),
                 probs: p,
                 toks: &tokens_t[bi * t..(bi + 1) * t],
                 start: start_pos[bi],
@@ -2205,14 +2663,19 @@ impl NativeBackend {
         let packed = packed_arc.as_deref();
         let mut probs: Vec<Vec<f32>> =
             batch_tokens.iter().map(|tt| vec![0.0f32; tt.toks.len() * vcb]).collect();
-        let stride = kv.row_stride();
-        let mut kit = kv.k.chunks_mut(stride);
-        let mut vit = kv.v.chunks_mut(stride);
+        // CoW pre-pass: materialise every scratch slot this call writes
+        // (the trees write scattered single slots, not one dense span)
+        // before the per-row views are captured — CoW replaces slab
+        // addresses, so it must never run inside the parallel scope.
+        for (bi, tt) in batch_tokens.iter().enumerate() {
+            for &sl in &tt.slot {
+                kv.ensure_writable_span(bi, sl, sl + 1);
+            }
+        }
         let mut slots = Vec::with_capacity(rows);
-        for (tt, prow) in batch_tokens.iter().zip(probs.iter_mut()) {
+        for (bi, (tt, prow)) in batch_tokens.iter().zip(probs.iter_mut()).enumerate() {
             slots.push(TreeSlot {
-                k: kit.next().expect("kv row chunk"),
-                v: vit.next().expect("kv row chunk"),
+                kv: kv.row_view(bi),
                 probs: prow,
                 toks: &tt.toks,
                 pos: &tt.pos,
@@ -2227,7 +2690,7 @@ impl NativeBackend {
                     continue;
                 }
                 let mut scratch = RowScratch::new(dims, slot.toks.len(), lt);
-                forward_tree_row(model, quant, packed, kernel, slot, lt, lm, &mut scratch);
+                forward_tree_row(model, quant, packed, kernel, slot, lm, &mut scratch);
             }
         } else {
             let chunk = rows.div_ceil(n_threads);
@@ -2244,7 +2707,7 @@ impl NativeBackend {
                             continue;
                         }
                         let mut scratch = RowScratch::new(dims, slot.toks.len(), lt);
-                        forward_tree_row(model, quant, packed, kernel, slot, lt, lm, &mut scratch);
+                        forward_tree_row(model, quant, packed, kernel, slot, lm, &mut scratch);
                     }
                 }));
             }
@@ -2563,6 +3026,18 @@ impl Backend for NativeBackend {
         &self.info
     }
 
+    /// The target model's page arena, when the backend runs the paged
+    /// layout: [`crate::serve::KvPool`] accounts its leases directly
+    /// against this allocator, so the serving pool and the physical
+    /// arena agree by construction (one allocator, no parallel ledger).
+    fn page_allocator(&self) -> Option<Arc<dyn PageAllocator>> {
+        if self.kv_layout != KvLayout::Paged {
+            return None;
+        }
+        let m = self.models.get("target")?;
+        Some(self.arena_for("target", &m.dims))
+    }
+
     /// Pre-size the persistent multipath scratch for the engine's
     /// configured path count, so the first iteration never pays the
     /// `(B·K)`-row allocations (they would otherwise be taken lazily on
@@ -2613,7 +3088,8 @@ impl Backend for NativeBackend {
                 let mut cache = self.scratch.lock().unwrap();
                 let entry = cache.entry((name.to_string(), rows, ring)).or_default();
                 if entry.is_empty() {
-                    entry.push(NativeKv::zeros(&m.dims, rows, ring));
+                    let kv = self.alloc_kv(name, &m.dims, rows, ring);
+                    entry.push(kv);
                 }
             }
         }
@@ -2623,7 +3099,7 @@ impl Backend for NativeBackend {
     fn prefill(&self, model: &str, tokens: &[i32], length: &[i32]) -> anyhow::Result<NativeKv> {
         self.check_shapes(tokens, length)?;
         let m = self.model(model)?;
-        let mut kv = NativeKv::zeros(&m.dims, self.info.batch, self.info.max_len);
+        let mut kv = self.alloc_kv(model, &m.dims, self.info.batch, self.info.max_len);
         self.prefill_into(m, model, &mut kv, tokens, length);
         Ok(kv)
     }
@@ -2757,8 +3233,14 @@ impl Backend for NativeBackend {
     /// `len`, so a prefix cache holds `len` positions instead of a full
     /// `(B, L)` batch — the memory footprint the page accounting in
     /// [`crate::serve::KvPool`] charges for it.  Only ever a splice
-    /// source ([`copy_kv_span`] tolerates ring mismatches); it is never
-    /// forwarded.
+    /// source (ring mismatches are legal for splices; the span bounds
+    /// are still debug-asserted against both rings); it is never
+    /// forwarded.  The single-row checkout comes from the scratch pool
+    /// (sized to `len`, not `max_len`), and under the paged layout the
+    /// extract aliases the source row's full pages instead of copying
+    /// them — only the boundary partial page moves.  The row is handed
+    /// off to the caller (prefix caches own their extracts), so it is
+    /// never returned to the pool.
     fn kv_extract(
         &self,
         model: &str,
@@ -2777,7 +3259,12 @@ impl Backend for NativeBackend {
         if len > src.max_len {
             return Err(anyhow!("kv_extract: len {len} exceeds ring {}", src.max_len));
         }
-        let mut out = NativeKv::zeros(&m.dims, 1, len.max(1));
+        if len == 0 {
+            // Degenerate extract: a zeroed 1-position ring (stale pool
+            // contents would leak unwritten floats — nothing covers them).
+            return Ok(self.alloc_kv(model, &m.dims, 1, 1));
+        }
+        let mut out = self.take_scratch(m, model, 1, len);
         copy_kv_span(&mut out, 0, src, src_row, len);
         Ok(out)
     }
@@ -3051,6 +3538,20 @@ mod tests {
         NativeBackend::seeded_with_shapes(2, 32, 7)
     }
 
+    /// Layout-agnostic full-ring KV equality (gathers through the page
+    /// table under the paged layout, straight from the ring otherwise).
+    fn assert_kv_eq(a: &NativeKv, b: &NativeKv, msg: &str) {
+        assert_eq!(a.batch, b.batch, "{msg}: row counts differ");
+        assert_eq!(a.max_len, b.max_len, "{msg}: ring lengths differ");
+        for bi in 0..a.batch {
+            assert_eq!(
+                a.row_snapshot(bi, a.max_len),
+                b.row_snapshot(bi, b.max_len),
+                "{msg}: row {bi} diverged"
+            );
+        }
+    }
+
     fn prompt_state(be: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
         let info = be.info();
         let mut toks = vec![vocab::PAD as i32; info.batch * info.max_len];
@@ -3088,7 +3589,7 @@ mod tests {
         let (toks, lens) = prompt_state(&a);
         let mut kva = a.prefill("target", &toks, &lens).unwrap();
         let mut kvb = b.prefill("target", &toks, &lens).unwrap();
-        assert_eq!(kva.k, kvb.k);
+        assert_kv_eq(&kva, &kvb, "prefill");
         let pa = a.target_score(2, &toks, &lens, &mut kva, &[20, 21, 20, 21]).unwrap();
         let pb = b.target_score(2, &toks, &lens, &mut kvb, &[20, 21, 20, 21]).unwrap();
         assert_eq!(pa, pb);
@@ -3152,8 +3653,8 @@ mod tests {
         assert_eq!(a.done, b.done);
         assert_eq!(ta, tb);
         assert_eq!(la, lb);
-        assert_eq!(kvt_a.k, kvt_b.k);
-        assert_eq!(kvd_a.v, kvd_b.v);
+        assert_kv_eq(&kvt_a, &kvt_b, "target cache");
+        assert_kv_eq(&kvd_a, &kvd_b, "drafter cache");
     }
 
     fn run_uniform(
@@ -3221,17 +3722,15 @@ mod tests {
                     // padded scratch rows; byte-compare KV only where the
                     // uniform run uses the same flat layout.
                     if !matches!(algo, Algo::Tree { .. }) {
-                        let ks = kvt.row_stride();
                         assert_eq!(
-                            &kvt.k[bi * ks..(bi + 1) * ks],
-                            &ukvt.k[bi * ks..(bi + 1) * ks],
-                            "{algo}: target K row {bi}"
+                            kvt.row_snapshot(bi, l),
+                            ukvt.row_snapshot(bi, l),
+                            "{algo}: target KV row {bi}"
                         );
-                        let ds = kvd.row_stride();
                         assert_eq!(
-                            &kvd.v[bi * ds..(bi + 1) * ds],
-                            &ukvd.v[bi * ds..(bi + 1) * ds],
-                            "{algo}: drafter V row {bi}"
+                            kvd.row_snapshot(bi, l),
+                            ukvd.row_snapshot(bi, l),
+                            "{algo}: drafter KV row {bi}"
                         );
                     }
                 }
@@ -3272,19 +3771,13 @@ mod tests {
         let mut toks2 = toks.clone();
         toks2[2] = 60;
         let mut dst = be.prefill("target", &toks2, &lens).unwrap();
-        let before_row0 = dst.k[dst.row(0, 0, 0)..dst.row(0, 1, 0)].to_vec();
+        let before_row0 = dst.row_snapshot(0, dst.max_len);
         let len = lens[0] as usize;
         be.kv_splice("target", &mut dst, 1, &src, 0, len).unwrap();
         // Destination row 1 now equals source row 0 on the spliced span...
-        let chunk = len * dst.n_heads * dst.head_dim;
-        for li in 0..dst.n_layers {
-            let d0 = dst.row(li, 1, 0);
-            let s0 = src.row(li, 0, 0);
-            assert_eq!(&dst.k[d0..d0 + chunk], &src.k[s0..s0 + chunk]);
-            assert_eq!(&dst.v[d0..d0 + chunk], &src.v[s0..s0 + chunk]);
-        }
+        assert_eq!(dst.row_snapshot(1, len), src.row_snapshot(0, len));
         // ...and row 0 was left untouched.
-        assert_eq!(before_row0, dst.k[dst.row(0, 0, 0)..dst.row(0, 1, 0)].to_vec());
+        assert_eq!(before_row0, dst.row_snapshot(0, dst.max_len));
         // Bad geometry / bounds are rejected.
         assert!(be.kv_splice("target", &mut dst, 9, &src, 0, len).is_err());
         let xxs = be.prefill("xxs", &toks, &lens).unwrap();
@@ -3382,10 +3875,8 @@ mod tests {
             assert_eq!(a.done, b.done, "iter {iter}");
             assert_eq!(t1, t2, "iter {iter}: token rings diverged");
             assert_eq!(l1, l2, "iter {iter}: lengths diverged");
-            assert_eq!(kt1.k, kt2.k, "iter {iter}: target K cache diverged");
-            assert_eq!(kt1.v, kt2.v, "iter {iter}: target V cache diverged");
-            assert_eq!(kd1.k, kd2.k, "iter {iter}: drafter K cache diverged");
-            assert_eq!(kd1.v, kd2.v, "iter {iter}: drafter V cache diverged");
+            assert_kv_eq(&kt1, &kt2, "target cache");
+            assert_kv_eq(&kd1, &kd2, "drafter cache");
         }
     }
 
@@ -3412,10 +3903,8 @@ mod tests {
             assert_eq!(oa.done, ob.done, "{a} vs {b} iter {iter}");
             assert_eq!(t1, t2, "{a} vs {b} iter {iter}: token rings diverged");
             assert_eq!(l1, l2, "{a} vs {b} iter {iter}: lengths diverged");
-            assert_eq!(kt1.k, kt2.k, "{a} vs {b} iter {iter}: target K cache diverged");
-            assert_eq!(kt1.v, kt2.v, "{a} vs {b} iter {iter}: target V cache diverged");
-            assert_eq!(kd1.k, kd2.k, "{a} vs {b} iter {iter}: drafter K cache diverged");
-            assert_eq!(kd1.v, kd2.v, "{a} vs {b} iter {iter}: drafter V cache diverged");
+            assert_kv_eq(&kt1, &kt2, "target cache");
+            assert_kv_eq(&kd1, &kd2, "drafter cache");
         }
     }
 

@@ -60,6 +60,8 @@ impl PjrtBackend {
             open_gamma: false,
             drafters: m.drafters.clone(),
             artifacts_dir: Some(rt.artifacts_dir().to_path_buf()),
+            // PJRT KV lives in device buffers; paging is native-only.
+            paged_kv: false,
         };
         PjrtBackend { rt, info }
     }

@@ -31,7 +31,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::backend::Precision;
+use crate::backend::{KvLayout, Precision};
 use crate::util::json::Value;
 use crate::verify::Algo;
 
@@ -62,6 +62,13 @@ pub struct EngineConfig {
     /// existing streams stay bit-identical; `SPECD_ADAPTIVE=on` or the
     /// JSON `"adaptive"` block opts in.
     pub adaptive: AdaptiveConfig,
+    /// Native KV cache layout (`"paged"` | `"contig"`, DESIGN.md §16).
+    /// Default: env `SPECD_KV_LAYOUT`, else paged — the scatter-paged
+    /// arena is bit-identical to the contiguous rings (test-enforced), so
+    /// the layout can never change the committed-token distribution;
+    /// contig remains the oracle for the identity tests.  Backends that
+    /// allocate their own KV (PJRT) ignore this knob.
+    pub kv_layout: KvLayout,
 }
 
 impl Default for EngineConfig {
@@ -75,6 +82,7 @@ impl Default for EngineConfig {
             seed: 0,
             draft_precision: Precision::from_env_or_default(),
             adaptive: AdaptiveConfig::default(),
+            kv_layout: KvLayout::from_env_or_default(),
         }
     }
 }
@@ -191,6 +199,12 @@ impl EngineConfig {
                     .ok_or_else(|| anyhow!("unknown draft_precision '{x}' (int8 | fp32)"))?,
             );
         }
+        if let Some(x) = v.get("kv_layout").and_then(Value::as_str) {
+            b = b.kv_layout(
+                KvLayout::parse(x)
+                    .ok_or_else(|| anyhow!("unknown kv_layout '{x}' (contig | paged)"))?,
+            );
+        }
         if let Some(a) = v.get("adaptive") {
             let mut ac = self.adaptive.clone();
             if let Some(x) = a.get("enabled").and_then(Value::as_bool) {
@@ -295,6 +309,12 @@ impl EngineConfigBuilder {
     /// Adaptive speculation controller knobs (DESIGN.md §15).
     pub fn adaptive(mut self, a: AdaptiveConfig) -> Self {
         self.cfg.adaptive = a;
+        self
+    }
+
+    /// Native KV cache layout (DESIGN.md §16).
+    pub fn kv_layout(mut self, l: KvLayout) -> Self {
+        self.cfg.kv_layout = l;
         self
     }
 
@@ -640,6 +660,19 @@ mod tests {
         let c = Config::parse(r#"{"engine": {"draft_precision": "int8"}}"#).unwrap();
         assert_eq!(c.engine.draft_precision, Precision::Int8);
         assert!(Config::parse(r#"{"engine": {"draft_precision": "fp64"}}"#).is_err());
+    }
+
+    #[test]
+    fn kv_layout_parses_and_rejects_garbage() {
+        // No env override in the test environment: the default is paged.
+        let c = Config::parse(r#"{"engine": {"kv_layout": "contig"}}"#).unwrap();
+        assert_eq!(c.engine.kv_layout, KvLayout::Contig);
+        let c = Config::parse(r#"{"engine": {"kv_layout": "paged"}}"#).unwrap();
+        assert_eq!(c.engine.kv_layout, KvLayout::Paged);
+        assert!(Config::parse(r#"{"engine": {"kv_layout": "sparse"}}"#).is_err());
+        // The builder funnel carries it like every other engine knob.
+        let cfg = EngineConfig::builder().kv_layout(KvLayout::Contig).build().unwrap();
+        assert_eq!(cfg.kv_layout, KvLayout::Contig);
     }
 
     #[test]

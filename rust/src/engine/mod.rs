@@ -232,6 +232,7 @@ mod tests {
             open_gamma: true,
             drafters: vec!["xxs".into()],
             artifacts_dir: None,
+            paged_kv: false,
         };
         let padded = pad_prompts(&[vec![1, 3, 20, 21]], 2);
         let (toks, lens) = layout_prompts(&info, &padded);

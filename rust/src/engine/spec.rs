@@ -25,7 +25,7 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
-use crate::backend::{Backend, PrefixSplice, RowSplice, SpecIterOut};
+use crate::backend::{Backend, KvLayout, PrefixSplice, RowSplice, SpecIterOut};
 use crate::config::EngineConfig;
 use crate::control::Controller;
 use crate::metrics::EngineMetrics;
@@ -68,6 +68,24 @@ impl<B: Backend> SpecEngine<B> {
                 cfg.drafter,
                 info.drafters
             ));
+        }
+        // The KV layout lives with the backend (it owns the physical
+        // caches); the config knob is advisory at engine level.  A
+        // mismatch is harmless — both layouts are bit-identical — but it
+        // means the operator's intent did not reach the backend
+        // constructor, so surface it (warn-on-stderr convention).
+        // Backends that cannot page at all (PJRT owns device-resident KV)
+        // stay silent under the default paged config.
+        let mismatch = (cfg.kv_layout == KvLayout::Paged) != info.paged_kv;
+        if mismatch && (info.paged_kv || info.name == "native") {
+            eprintln!(
+                "specd: engine config wants kv_layout {} but backend '{}' serves {}; \
+                 the backend's layout wins (construct it with the matching layout \
+                 or set SPECD_KV_LAYOUT)",
+                cfg.kv_layout,
+                info.name,
+                if info.paged_kv { KvLayout::Paged } else { KvLayout::Contig },
+            );
         }
         // Let the backend size internal scratch for this configuration up
         // front (the native backend pre-allocates its persistent
@@ -456,6 +474,7 @@ impl<B: Backend> SpecEngine<B> {
                     prefix: prefixes[i].as_ref().map(|p| (p.kv_drafter, p.len)),
                 })
                 .collect();
+            let t_admit = Instant::now();
             let prefilled = self
                 .backend
                 .prefill_rows_prefixed(
@@ -486,6 +505,11 @@ impl<B: Backend> SpecEngine<B> {
                     }
                 }
                 Ok(()) => {
+                    // Admission latency: the batched prefill forward plus
+                    // every per-row KV splice — the serving-path cost the
+                    // paged layout's zero-copy prefix sharing attacks
+                    // (DESIGN.md §16; gated in benches/serving.rs).
+                    self.metrics.admission_us.observe(t_admit.elapsed());
                     self.metrics.prefill_batch_size.observe(valid.len());
                     for &i in &valid {
                         let a = &admissions[i];

@@ -207,6 +207,12 @@ pub struct EngineMetrics {
     pub queue_wait: LatencyHist,
     pub iter_latency: LatencyHist,
     pub request_latency: LatencyHist,
+    /// Wall-clock of one batched admission — prefill forward plus the KV
+    /// splices into the live stream (DESIGN.md §16).  Under the paged
+    /// layout a warm-prefix splice is a page-table clone, so this is
+    /// where the zero-copy admission win is observable (gated in
+    /// `benches/serving.rs`, `kv_paging` section).
+    pub admission_us: LatencyHist,
     /// Prompt positions the admission forward actually covered (suffix
     /// lengths under warm-prefix admission, full prompt lengths cold) —
     /// against [`EngineMetrics::prompt_positions`] this is the
@@ -261,6 +267,18 @@ impl EngineMetrics {
             crate::backend::kernels::default_kernel(),
             crate::backend::kernels::active_isa(),
         ));
+        // Physical-KV movement counters (process-global like the kernel
+        // info line: the paged arena's copy/CoW ledger is one ledger per
+        // process, shared by every engine and the serving tier's splices
+        // — DESIGN.md §16).
+        s.push_str(&format!(
+            "specd_kv_bytes_copied_total {}\n",
+            crate::backend::kvstats::bytes_copied()
+        ));
+        s.push_str(&format!(
+            "specd_kv_pages_cow_total {}\n",
+            crate::backend::kvstats::pages_cow()
+        ));
         s
     }
 
@@ -296,6 +314,8 @@ impl EngineMetrics {
             put("iter_latency_p99_us", self.iter_latency.quantile_us(0.99) as f64);
             put("request_latency_mean_us", self.request_latency.mean_us());
             put("queue_wait_mean_us", self.queue_wait.mean_us());
+            put("admission_mean_us", self.admission_us.mean_us());
+            put("admission_p99_us", self.admission_us.quantile_us(0.99) as f64);
             put("gamma_chosen_mean", self.gamma_chosen.mean());
             put("controller_regret_milli", self.controller_regret_milli.get() as f64);
         }
@@ -317,6 +337,9 @@ impl EngineMetrics {
         }
         for (edge, n) in self.queue_wait.nonzero() {
             s.push_str(&format!("specd_queue_wait_us{} {n}\n", sub(format!("le=\"{edge}\""))));
+        }
+        for (edge, n) in self.admission_us.nonzero() {
+            s.push_str(&format!("specd_admission_us{} {n}\n", sub(format!("le=\"{edge}\""))));
         }
         for (g, n) in self.gamma_chosen.nonzero() {
             s.push_str(&format!("specd_gamma_chosen{} {n}\n", sub(format!("gamma=\"{g}\""))));
@@ -424,6 +447,23 @@ mod tests {
         // Labelled rendering stamps the label on hist lines too.
         let r = m.render_labeled("replica=\"1\"");
         assert!(r.contains("specd_gamma_chosen{gamma=\"4\",replica=\"1\"} 1"));
+    }
+
+    #[test]
+    fn admission_and_kv_counters_render() {
+        let m = EngineMetrics::default();
+        m.admission_us.observe(Duration::from_micros(250));
+        let r = m.render();
+        assert!(r.contains("specd_admission_mean_us"));
+        assert!(r.contains("specd_admission_p99_us"));
+        assert!(r.contains("specd_admission_us{le=\""));
+        // The KV movement ledger renders unlabelled (process-global),
+        // like the kernel info line.
+        assert!(r.contains("specd_kv_bytes_copied_total "));
+        assert!(r.contains("specd_kv_pages_cow_total "));
+        // ...and only in the global render, not per-replica blocks.
+        let r = m.render_labeled("replica=\"0\"");
+        assert!(!r.contains("specd_kv_bytes_copied_total"));
     }
 
     #[test]

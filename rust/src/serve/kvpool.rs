@@ -1,51 +1,116 @@
-//! Paged KV accounting for the serving tier (DESIGN.md §14.2).
+//! Paged KV accounting for the serving tier (DESIGN.md §14.2, §16).
 //!
-//! [`KvPool`] is a fixed-size page arena with a free-list allocator:
-//! every admitted row leases the pages covering its worst-case position
-//! footprint (prompt + generation budget + draft scratch) before it may
-//! enter a replica's slot table, and every cached prompt prefix
+//! [`KvPool`] meters KV *positions* in pages: every admitted row leases
+//! the pages covering its worst-case position footprint (prompt +
+//! generation budget + draft scratch) before it may enter a replica's
+//! slot table, and every cached prompt prefix
 //! ([`crate::serve::PrefixCache`]) leases the pages covering its
 //! positions.  Slot capacity is therefore bounded by *memory pages*, not
 //! only by the compile-time batch shape: when the pool is sized below
 //! `replicas · B` full rows, replicas admit until pages run out and
 //! defer the rest (never panic, never queue unboundedly).
 //!
-//! A [`PageLease`]'s page-id vector is the row's page chain.  The
-//! physical `NativeKv` storage stays ring-contiguous per row (one
-//! `chunks_mut` slice per row is what makes the forward pass's safe row
-//! parallelism work, DESIGN.md §10), so the chain is an identity-mapped
-//! accounting view — the compact per-prefix caches
-//! ([`crate::backend::Backend::kv_extract`]) are where paging actually
-//! shrinks resident KV memory.
-
+//! Two backings share the [`PageLease`] interface:
+//!
+//! * **Arena-backed** ([`KvPool::with_allocator`]) — the normal shape
+//!   under the paged native KV layout.  The pool's budget is installed
+//!   directly on the backend's [`PageAllocator`] (the per-model
+//!   [`crate::backend::paged`] arena), so the admission ledger and the
+//!   physical page allocator are **one object**: a lease reserves real
+//!   page capacity in the same arena the forward pass allocates from,
+//!   and the arena's `live_pages`/`free_pages` are the physical truth the
+//!   router's `/metrics` renders.
+//! * **Free-list** ([`KvPool::new`]) — the standalone accounting arena
+//!   used when the backend has no page allocator (contig layout, PJRT).
+//!   Page ids are an identity-mapped accounting view; the physical KV
+//!   stays ring-contiguous per row.
 use std::sync::{Arc, Mutex};
 
-/// Shared page arena: cheap-to-clone handle over the free list.
+use crate::backend::PageAllocator;
+
+/// Shared page arena: cheap-to-clone handle over the backing.
 #[derive(Debug, Clone)]
 pub struct KvPool {
     inner: Arc<PoolInner>,
 }
 
-#[derive(Debug)]
 struct PoolInner {
     page_size: usize,
-    total: usize,
-    free: Mutex<Vec<u32>>,
+    backing: Backing,
+}
+
+enum Backing {
+    /// Standalone accounting free list (ids are synthetic).
+    FreeList { total: usize, free: Mutex<Vec<u32>> },
+    /// Budget installed on the backend's physical page arena.
+    Arena(Arc<dyn PageAllocator>),
+}
+
+impl std::fmt::Debug for PoolInner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.backing {
+            Backing::FreeList { total, free } => f
+                .debug_struct("KvPool")
+                .field("page_size", &self.page_size)
+                .field("total", total)
+                .field("free", &free.lock().unwrap().len())
+                .finish(),
+            Backing::Arena(a) => f
+                .debug_struct("KvPool")
+                .field("page_size", &self.page_size)
+                .field("limit", &a.page_limit())
+                .field("reserved", &a.reserved_pages())
+                .field("live", &a.live_pages())
+                .finish(),
+        }
+    }
 }
 
 impl KvPool {
-    /// A pool of `total_pages` pages, each covering `page_size` KV
-    /// positions (both models' caches for those positions count as one
-    /// page — the pool meters *positions*, the unit admission and prefix
-    /// caching both deal in).
+    /// A standalone pool of `total_pages` pages, each covering
+    /// `page_size` KV positions (both models' caches for those positions
+    /// count as one page — the pool meters *positions*, the unit
+    /// admission and prefix caching both deal in).
     pub fn new(total_pages: usize, page_size: usize) -> Self {
         let total = total_pages.max(1);
         KvPool {
             inner: Arc::new(PoolInner {
                 page_size: page_size.max(1),
-                total,
-                free: Mutex::new((0..total as u32).rev().collect()),
+                backing: Backing::FreeList {
+                    total,
+                    free: Mutex::new((0..total as u32).rev().collect()),
+                },
             }),
+        }
+    }
+
+    /// A pool whose budget lives on the backend's own page allocator
+    /// (DESIGN.md §16): installs `total_pages` as the arena's admission
+    /// limit and takes the arena's page geometry.  Leases reserve and
+    /// release capacity on that same arena — one allocator, no parallel
+    /// ledger.
+    pub fn with_allocator(total_pages: usize, alloc: Arc<dyn PageAllocator>) -> Self {
+        alloc.set_page_limit(total_pages.max(1));
+        KvPool {
+            inner: Arc::new(PoolInner {
+                page_size: alloc.page_positions(),
+                backing: Backing::Arena(alloc),
+            }),
+        }
+    }
+
+    /// Is the budget installed on a backend arena (vs a standalone
+    /// free list)?
+    pub fn is_arena_backed(&self) -> bool {
+        matches!(self.inner.backing, Backing::Arena(_))
+    }
+
+    /// Physical `(live, free)` slab counts of the backing arena; `None`
+    /// for a free-list pool (it has no physical pages).
+    pub fn physical_pages(&self) -> Option<(usize, usize)> {
+        match &self.inner.backing {
+            Backing::FreeList { .. } => None,
+            Backing::Arena(a) => Some((a.live_pages(), a.free_pages())),
         }
     }
 
@@ -54,15 +119,24 @@ impl KvPool {
     }
 
     pub fn total_pages(&self) -> usize {
-        self.inner.total
+        match &self.inner.backing {
+            Backing::FreeList { total, .. } => *total,
+            Backing::Arena(a) => a.page_limit(),
+        }
     }
 
     pub fn pages_free(&self) -> usize {
-        self.inner.free.lock().unwrap().len()
+        match &self.inner.backing {
+            Backing::FreeList { free, .. } => free.lock().unwrap().len(),
+            Backing::Arena(a) => a.page_limit().saturating_sub(a.reserved_pages()),
+        }
     }
 
     pub fn pages_used(&self) -> usize {
-        self.inner.total - self.pages_free()
+        match &self.inner.backing {
+            Backing::FreeList { total, .. } => *total - self.pages_free(),
+            Backing::Arena(a) => a.reserved_pages(),
+        }
     }
 
     /// Pages needed to cover `positions` KV positions (ceiling; at least
@@ -71,36 +145,55 @@ impl KvPool {
         positions.max(1).div_ceil(self.inner.page_size)
     }
 
-    /// Try to lease `pages` pages; `None` when the free list is short —
+    /// Try to lease `pages` pages; `None` when the budget is short —
     /// the caller's cue to evict idle prefixes, defer the admission, or
     /// shed.  Never blocks and never over-allocates.
     pub fn try_lease(&self, pages: usize) -> Option<PageLease> {
-        let mut free = self.inner.free.lock().unwrap();
-        if free.len() < pages {
-            return None;
-        }
-        let at = free.len() - pages;
-        let taken = free.split_off(at);
-        Some(PageLease { inner: Arc::clone(&self.inner), pages: taken })
+        let taken = match &self.inner.backing {
+            Backing::FreeList { free, .. } => {
+                let mut free = free.lock().unwrap();
+                if free.len() < pages {
+                    return None;
+                }
+                let at = free.len() - pages;
+                free.split_off(at)
+            }
+            Backing::Arena(a) => {
+                if !a.try_reserve(pages) {
+                    return None;
+                }
+                // No synthetic ids: the physical chain lives in the
+                // row's `NativeKv` page table, allocated lazily on
+                // write.
+                Vec::new()
+            }
+        };
+        Some(PageLease { inner: Arc::clone(&self.inner), count: pages, pages: taken })
     }
 }
 
-/// An owned run of pages: the page chain of one admitted row or one
-/// cached prefix.  Pages return to the free list on drop, so page
+/// An owned page reservation: the budget of one admitted row or one
+/// cached prefix.  Capacity returns to the pool on drop, so page
 /// lifetime is exactly the lifetime of whatever holds the lease (the
 /// slot's bookkeeping entry, or the cache entry's `Arc`).
 #[derive(Debug)]
 pub struct PageLease {
     inner: Arc<PoolInner>,
+    count: usize,
+    /// Free-list backing only: the synthetic page-id chain.  Empty under
+    /// an arena backing, where physical pages live in the row's page
+    /// table instead.
     pages: Vec<u32>,
 }
 
 impl PageLease {
     pub fn page_count(&self) -> usize {
-        self.pages.len()
+        self.count
     }
 
-    /// The leased page ids — the row's page chain.
+    /// The leased page ids — the row's page chain under the free-list
+    /// backing; empty under an arena backing (see [`PageLease::pages`]
+    /// field docs).
     pub fn pages(&self) -> &[u32] {
         &self.pages
     }
@@ -108,13 +201,19 @@ impl PageLease {
 
 impl Drop for PageLease {
     fn drop(&mut self) {
-        self.inner.free.lock().unwrap().append(&mut self.pages);
+        match &self.inner.backing {
+            Backing::FreeList { free, .. } => {
+                free.lock().unwrap().append(&mut self.pages);
+            }
+            Backing::Arena(a) => a.unreserve(self.count),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::paged::PageArena;
 
     #[test]
     fn pages_for_rounds_up() {
@@ -151,5 +250,27 @@ mod tests {
         for p in a.pages() {
             assert!(!b.pages().contains(p), "page {p} double-leased");
         }
+    }
+
+    #[test]
+    fn arena_backing_reserves_on_the_arena_itself() {
+        let arena = Arc::new(PageArena::new(2, 8, 16));
+        let pool = KvPool::with_allocator(4, arena.clone());
+        assert!(pool.is_arena_backed());
+        assert_eq!(pool.page_size(), 16);
+        assert_eq!(pool.total_pages(), 4);
+        // The budget lives on the arena — no parallel ledger.
+        assert_eq!(arena.page_limit(), 4);
+        let a = pool.try_lease(3).expect("3 of 4");
+        assert_eq!(arena.reserved_pages(), 3);
+        assert_eq!((pool.pages_free(), pool.pages_used()), (1, 3));
+        assert!(pool.try_lease(2).is_none(), "budget exhausted defers");
+        assert!(a.pages().is_empty(), "arena leases carry no synthetic ids");
+        assert_eq!(a.page_count(), 3);
+        drop(a);
+        assert_eq!(arena.reserved_pages(), 0);
+        assert_eq!(pool.pages_free(), 4);
+        // No physical slabs were ever allocated by accounting alone.
+        assert_eq!(pool.physical_pages(), Some((0, 0)));
     }
 }

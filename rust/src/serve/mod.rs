@@ -4,9 +4,12 @@
 //! * [`router`] — [`Router`]: N engine replicas on worker threads,
 //!   least-outstanding-tokens placement, per-replica token-bucket
 //!   admission with explicit load shedding (429 + `Retry-After`).
-//! * [`kvpool`] — [`KvPool`]: fixed-size page arena with a free-list
-//!   allocator; rows and cached prefixes lease their page chains, so
-//!   admission is bounded by memory, not only by the batch shape.
+//! * [`kvpool`] — [`KvPool`]: fixed-size page budget; rows and cached
+//!   prefixes lease their pages, so admission is bounded by memory, not
+//!   only by the batch shape.  Under the paged native KV layout the
+//!   budget is installed directly on the backend's physical page arena
+//!   ([`crate::backend::Backend::page_allocator`], DESIGN.md §16); a
+//!   standalone free-list backing covers contig/PJRT backends.
 //! * [`prefix`] — [`PrefixCache`]: ref-counted, hash-keyed cache of
 //!   prefilled prompt-prefix KV; warm admissions splice cached pages and
 //!   prefill only the suffix, bit-identically to cold prefill

@@ -17,6 +17,15 @@
 //! sole owner is the cache itself (`Arc::strong_count == 1`), oldest
 //! `last_used` first.  Each entry owns the [`PageLease`] covering its
 //! positions; dropping the entry returns the pages.
+//!
+//! Under the paged native layout (DESIGN.md §16) the cached `B::Kv`
+//! values are page tables into the backend arena, so an entry **pins its
+//! physical pages directly**: keys are page-aligned
+//! ([`PrefixCache::candidate_len`]), every page of a cached prefix is
+//! full, and a warm admission splice is therefore a pure page-table
+//! clone — refcount bumps, zero prefix KV bytes copied (gated in
+//! `benches/serving.rs`).  Copy-on-write keeps the pinned pages
+//! immutable while admitted rows extend past them.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::Backend;
+use crate::backend::{kvstats, Backend};
 use crate::config::{EngineConfig, RouterConfig, ServerConfig};
 use crate::coordinator::queue::{Lane, RequestQueue, SlotTable, TokenBucket};
 use crate::engine::spec::{Admission, DecodeState, PrefixHandle, SpecEngine};
@@ -143,7 +143,25 @@ impl Router {
         let info = backend.info();
         let (b, l) = (info.batch, info.max_len);
         let n = router_cfg.replicas.max(1);
-        let page_size = router_cfg.page_size.max(1);
+        // Under the paged native layout the pool's budget is installed on
+        // the backend's own page arena (DESIGN.md §16) — the arena's page
+        // geometry then *is* the pool geometry, overriding the config
+        // knob (warn when they disagree so the operator learns why).
+        let alloc = backend.page_allocator();
+        let page_size = match &alloc {
+            Some(a) => {
+                let pp = a.page_positions();
+                if router_cfg.page_size.max(1) != pp {
+                    eprintln!(
+                        "specd: router page_size {} overridden by the backend \
+                         arena's {pp} positions/page",
+                        router_cfg.page_size.max(1)
+                    );
+                }
+                pp
+            }
+            None => router_cfg.page_size.max(1),
+        };
         let pages_per_row = l.div_ceil(page_size);
         // Auto pool: fund every replica's full slot table plus headroom
         // for a handful of cached prefixes.  Sizing it *below*
@@ -154,7 +172,10 @@ impl Router {
         } else {
             (n * b + 8) * pages_per_row
         };
-        let pool = KvPool::new(total_pages, page_size);
+        let pool = match alloc {
+            Some(a) => KvPool::with_allocator(total_pages, a),
+            None => KvPool::new(total_pages, page_size),
+        };
         let min_prefix = if router_cfg.min_prefix_len > 0 {
             router_cfg.min_prefix_len
         } else {
@@ -337,6 +358,17 @@ impl Router {
         s.push_str(&format!("specd_kv_pages_total {}\n", self.pool.total_pages()));
         s.push_str(&format!("specd_kv_pages_used {}\n", self.pool.pages_used()));
         s.push_str(&format!("specd_kv_pages_free {}\n", self.pool.pages_free()));
+        // Physical truth of the arena backing (paged layout only): slabs
+        // referenced by live page tables vs recycled on the free list.
+        if let Some((live, free)) = self.pool.physical_pages() {
+            s.push_str(&format!("specd_kv_pages_live {live}\n"));
+            s.push_str(&format!("specd_kv_pages_recycled {free}\n"));
+        }
+        // Process-global KV movement ledger (DESIGN.md §16): bytes the
+        // splice/CoW paths physically copied, next to the admission
+        // traffic that avoided copying.
+        s.push_str(&format!("specd_kv_bytes_copied_total {}\n", kvstats::bytes_copied()));
+        s.push_str(&format!("specd_kv_pages_cow_total {}\n", kvstats::pages_cow()));
         s.push_str(&format!(
             "specd_router_queue_wait_mean_us {}\n",
             self.metrics.queue_wait_us.mean_us()

@@ -1,0 +1,113 @@
+//! Exact KV copy/CoW ledger accounting (DESIGN.md §16.3).
+//!
+//! `kvstats` counters are process-global, so exact *deltas* can only be
+//! asserted where nothing else touches the ledger concurrently.  This
+//! binary holds a single `#[test]` — cargo gives it its own process and
+//! there is no sibling thread to race — which lets it pin the paged
+//! layout's central claims as equalities rather than the monotonic
+//! lower bounds `tests/paged_kv.rs` has to settle for:
+//!
+//! * a page-aligned extract/splice moves **zero** KV bytes (pure
+//!   page-table aliasing);
+//! * an unaligned span copies exactly the boundary positions, nothing
+//!   more;
+//! * writing through a shared page copies exactly one slab and counts
+//!   exactly one CoW;
+//! * the contiguous oracle pays the full span for the same operation.
+
+use specd::backend::{kvstats, Backend, KvLayout, NativeBackend};
+use specd::models::vocab;
+
+/// 16 positions per page everywhere in the native backend
+/// (`DEFAULT_PAGE_POSITIONS` — the router's default page geometry).
+const PP: u64 = specd::backend::paged::DEFAULT_PAGE_POSITIONS as u64;
+
+#[test]
+fn ledger_counts_exact_bytes_and_cow_pages() {
+    let (b, l) = (2usize, 64usize);
+    let be = NativeBackend::seeded_with_shapes(b, l, 0x1ed6e).with_kv_layout(KvLayout::Paged);
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        toks[bi * l] = vocab::BOS as i32;
+        toks[bi * l + 1] = vocab::marker_for(bi as u32) as i32;
+        for j in 2..40 {
+            toks[bi * l + j] = (vocab::CONTENT_BASE + ((bi * 29 + j * 7) % 150) as u32) as i32;
+        }
+        lens[bi] = 40;
+    }
+    let kv = be.prefill("target", &toks, &lens).unwrap();
+
+    // Bytes one cache position occupies across K and V of every layer:
+    // the K half of a 1-position snapshot is `n_layers * n_heads *
+    // head_dim` floats.
+    let (k1, v1) = kv.row_snapshot(0, 1);
+    assert_eq!(k1.len(), v1.len());
+    let pos_bytes = (k1.len() + v1.len()) as u64 * 4;
+    let slab_bytes = PP * pos_bytes;
+
+    // --- page-aligned extract: pure aliasing, zero bytes ---------------
+    let b0 = kvstats::bytes_copied();
+    let c0 = kvstats::pages_cow();
+    let e32 = be.kv_extract("target", &kv, 0, 32).unwrap();
+    assert_eq!(
+        kvstats::bytes_copied(),
+        b0,
+        "a page-aligned extract must not copy any KV bytes"
+    );
+    assert_eq!(kvstats::pages_cow(), c0);
+    assert_eq!(e32.row_snapshot(0, 32), kv.row_snapshot(0, 32));
+
+    // --- page-aligned splice into a live cache: still zero -------------
+    let mut dst = kv.clone();
+    let b1 = kvstats::bytes_copied();
+    be.kv_splice("target", &mut dst, 1, &e32, 0, 32).unwrap();
+    assert_eq!(
+        kvstats::bytes_copied(),
+        b1,
+        "a page-aligned splice is a page-table clone, not a copy"
+    );
+    assert_eq!(kvstats::pages_cow(), c0, "retargeting table entries is not a CoW");
+    assert_eq!(dst.row_snapshot(1, 32), kv.row_snapshot(0, 32));
+
+    // --- unaligned extract: exactly the boundary positions -------------
+    let b2 = kvstats::bytes_copied();
+    let e33 = be.kv_extract("target", &kv, 0, 33).unwrap();
+    assert_eq!(
+        kvstats::bytes_copied(),
+        b2 + pos_bytes,
+        "extract of 33 = 2 aliased pages + exactly 1 boundary position copied"
+    );
+    assert_eq!(e33.row_snapshot(0, 33), kv.row_snapshot(0, 33));
+
+    // --- write through a shared page: exactly one slab CoW -------------
+    // `dst` row 0 still aliases `kv` row 0's pages (and `e32` aliases
+    // page 0 too), so a 1-position splice must first clone that one
+    // page, then copy the one position.
+    let b3 = kvstats::bytes_copied();
+    let c3 = kvstats::pages_cow();
+    let twin = dst.clone();
+    be.kv_splice("target", &mut dst, 0, &e33, 0, 1).unwrap();
+    assert_eq!(kvstats::pages_cow(), c3 + 1, "exactly one page clones on shared-page write");
+    assert_eq!(
+        kvstats::bytes_copied(),
+        b3 + slab_bytes + pos_bytes,
+        "one slab clone plus the one spliced position"
+    );
+    // The twin saw nothing.
+    assert_eq!(twin.row_snapshot(0, 40), kv.row_snapshot(0, 40));
+    drop(twin);
+
+    // --- contiguous oracle pays the full span --------------------------
+    let bc = NativeBackend::seeded_with_shapes(b, l, 0x1ed6e).with_kv_layout(KvLayout::Contig);
+    let kv_c = bc.prefill("target", &toks, &lens).unwrap();
+    let b4 = kvstats::bytes_copied();
+    let e32_c = bc.kv_extract("target", &kv_c, 0, 32).unwrap();
+    assert_eq!(
+        kvstats::bytes_copied(),
+        b4 + 32 * pos_bytes,
+        "the contiguous layout physically copies every extracted position"
+    );
+    // Same content either way — the ledger is the only difference.
+    assert_eq!(e32_c.row_snapshot(0, 32), e32.row_snapshot(0, 32));
+}

@@ -1,0 +1,424 @@
+//! Scatter-paged KV vs the contiguous oracle (DESIGN.md §16).
+//!
+//! The paged arena is a pure *layout* change: every kernel, precision,
+//! verification algorithm and serving path must produce byte-identical
+//! tokens and KV contents against `KvLayout::Contig`, copy-on-write must
+//! isolate shared pages from decode writes, recycled (dirty) slabs must
+//! never leak stale state into later decodes, and page refcounts must
+//! balance when caches drop.
+//!
+//! Counter *deltas* are asserted only monotonically here — `kvstats` is
+//! process-global and tests in this binary run concurrently.  Exact
+//! ledger accounting lives in `tests/kv_ledger.rs` (single-test binary,
+//! its own process).
+
+use std::sync::Arc;
+
+use specd::backend::{kvstats, Backend, KvLayout, NativeBackend, Precision};
+use specd::config::{Config, EngineConfig, RouterConfig};
+use specd::engine::spec::SpecEngine;
+use specd::models::vocab;
+use specd::serve::{Router, ServeRequest};
+use specd::verify::Algo;
+
+/// Deterministic prompt: BOS + dataset marker + `len - 2` content tokens
+/// derived from `i`.
+fn prompt(i: u32, len: usize) -> Vec<u32> {
+    let mut p = vec![vocab::BOS, vocab::marker_for(i % 8)];
+    while p.len() < len {
+        p.push(vocab::CONTENT_BASE + ((i * 37 + p.len() as u32 * 13) % 200));
+    }
+    p
+}
+
+/// Row-major `(B, L)` token state + lengths for direct backend calls.
+fn backend_state(b: usize, l: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut toks = vec![vocab::PAD as i32; b * l];
+    let mut lens = vec![0i32; b];
+    for bi in 0..b {
+        let p = prompt(bi as u32, 4 + 2 * bi);
+        for (j, &t) in p.iter().enumerate() {
+            toks[bi * l + j] = t as i32;
+        }
+        lens[bi] = p.len() as i32;
+    }
+    (toks, lens)
+}
+
+fn decode_tokens(
+    layout: KvLayout,
+    algo: Algo,
+    precision: Precision,
+    reference: bool,
+) -> Vec<Vec<u32>> {
+    let be = Arc::new(
+        NativeBackend::seeded_with_shapes(3, 96, 0x9a6ed)
+            .with_kv_layout(layout)
+            .with_reference_kernel(reference),
+    );
+    let cfg = EngineConfig {
+        gamma: 4,
+        algo,
+        draft_precision: precision,
+        max_new_tokens: 10,
+        kv_layout: layout,
+        ..Default::default()
+    };
+    let eng = SpecEngine::new(be, cfg).unwrap();
+    let prompts: Vec<Vec<u32>> = (0..3).map(|i| prompt(i, 5 + 3 * i as usize)).collect();
+    let rep = eng.run_batch(&prompts, 0x5eed).unwrap();
+    rep.rows.into_iter().map(|r| r.tokens).collect()
+}
+
+fn assert_layouts_agree(algo: Algo, precision: Precision, reference: bool) {
+    let contig = decode_tokens(KvLayout::Contig, algo, precision, reference);
+    let paged = decode_tokens(KvLayout::Paged, algo, precision, reference);
+    assert_eq!(
+        paged, contig,
+        "paged decode diverged from the contiguous oracle \
+         ({algo:?}, {precision:?}, reference_kernel={reference})"
+    );
+}
+
+// ---- full-stream bit-identity: kernel × precision × algorithm --------
+
+#[test]
+fn paged_matches_contig_token_int8() {
+    assert_layouts_agree(Algo::Token, Precision::Int8, false);
+}
+
+#[test]
+fn paged_matches_contig_block_int8() {
+    assert_layouts_agree(Algo::Block, Precision::Int8, false);
+}
+
+#[test]
+fn paged_matches_contig_multipath2_int8() {
+    assert_layouts_agree(Algo::MultiPath { k: 2 }, Precision::Int8, false);
+}
+
+#[test]
+fn paged_matches_contig_multipath4_int8() {
+    assert_layouts_agree(Algo::MultiPath { k: 4 }, Precision::Int8, false);
+}
+
+#[test]
+fn paged_matches_contig_tree2_int8() {
+    assert_layouts_agree(Algo::Tree { k: 2 }, Precision::Int8, false);
+}
+
+#[test]
+fn paged_matches_contig_tree4_int8() {
+    assert_layouts_agree(Algo::Tree { k: 4 }, Precision::Int8, false);
+}
+
+#[test]
+fn paged_matches_contig_block_fp32() {
+    assert_layouts_agree(Algo::Block, Precision::Fp32, false);
+}
+
+#[test]
+fn paged_matches_contig_multipath2_fp32() {
+    assert_layouts_agree(Algo::MultiPath { k: 2 }, Precision::Fp32, false);
+}
+
+#[test]
+fn paged_matches_contig_tree2_fp32() {
+    assert_layouts_agree(Algo::Tree { k: 2 }, Precision::Fp32, false);
+}
+
+#[test]
+fn paged_matches_contig_block_reference_kernel() {
+    assert_layouts_agree(Algo::Block, Precision::Int8, true);
+}
+
+#[test]
+fn paged_matches_contig_tree2_reference_kernel() {
+    assert_layouts_agree(Algo::Tree { k: 2 }, Precision::Int8, true);
+}
+
+// ---- KV-level bit-identity on ragged iterations ----------------------
+
+/// Drive both layouts through identical ragged `spec_iter_rows` streams
+/// and compare not just the outputs but the *entire KV rings* after
+/// every iteration — the strongest form of the §16 accumulation-order
+/// contract (positions never rewritten must match too: the paged zero
+/// slab mirrors the contig zero-init).
+#[test]
+fn ragged_decode_kv_rings_bit_identical() {
+    let (b, l) = (4usize, 64usize);
+    for algo in [Algo::Block, Algo::MultiPath { k: 2 }, Algo::Tree { k: 2 }] {
+        let bc = NativeBackend::seeded_with_shapes(b, l, 0xfeed).with_kv_layout(KvLayout::Contig);
+        let bp = NativeBackend::seeded_with_shapes(b, l, 0xfeed).with_kv_layout(KvLayout::Paged);
+        bc.prepare(algo, "xxs", Precision::Int8).unwrap();
+        bp.prepare(algo, "xxs", Precision::Int8).unwrap();
+
+        let (mut tc, mut lc) = backend_state(b, l);
+        let (mut tp, mut lp) = backend_state(b, l);
+        let mut kvt_c = bc.prefill("target", &tc, &lc).unwrap();
+        let mut kvd_c = bc.prefill("xxs", &tc, &lc).unwrap();
+        let mut kvt_p = bp.prefill("target", &tp, &lp).unwrap();
+        let mut kvd_p = bp.prefill("xxs", &tp, &lp).unwrap();
+
+        for it in 0..5i32 {
+            let gammas: Vec<usize> =
+                (0..b).map(|bi| 1 + (it as usize * 7 + bi * 3) % 5).collect();
+            let seeds: Vec<i32> = (0..b as i32).map(|bi| it * 977 + 13 + bi * 131).collect();
+            let oc = bc
+                .spec_iter_rows(algo, "xxs", &gammas, &mut tc, &mut lc, &mut kvt_c, &mut kvd_c, &seeds)
+                .unwrap();
+            let op = bp
+                .spec_iter_rows(algo, "xxs", &gammas, &mut tp, &mut lp, &mut kvt_p, &mut kvd_p, &seeds)
+                .unwrap();
+            assert_eq!(op.tau, oc.tau, "{algo:?} iter {it}: tau");
+            assert_eq!(op.emitted, oc.emitted, "{algo:?} iter {it}: emitted");
+            assert_eq!(tp, tc, "{algo:?} iter {it}: token state");
+            assert_eq!(lp, lc, "{algo:?} iter {it}: lengths");
+            for bi in 0..b {
+                assert_eq!(
+                    kvt_p.row_snapshot(bi, l),
+                    kvt_c.row_snapshot(bi, l),
+                    "{algo:?} iter {it}: target KV ring, row {bi}"
+                );
+                assert_eq!(
+                    kvd_p.row_snapshot(bi, l),
+                    kvd_c.row_snapshot(bi, l),
+                    "{algo:?} iter {it}: drafter KV ring, row {bi}"
+                );
+            }
+        }
+    }
+}
+
+// ---- splice / extract against the contiguous oracle ------------------
+
+/// `kv_extract` + `kv_splice` at lengths straddling every page-boundary
+/// case (page = 16 positions): mid-page, boundary-1, exact boundary,
+/// boundary+1, multi-page.  Paged full pages are aliased and only the
+/// partial boundary page is copied — the result must still be
+/// position-for-position what the contiguous memcpy path produces.
+#[test]
+fn splice_extract_matches_contig_at_ragged_lengths() {
+    let (b, l) = (4usize, 64usize);
+    let bc = NativeBackend::seeded_with_shapes(b, l, 0xab1e).with_kv_layout(KvLayout::Contig);
+    let bp = NativeBackend::seeded_with_shapes(b, l, 0xab1e).with_kv_layout(KvLayout::Paged);
+    let (mut toks, mut lens) = backend_state(b, l);
+    // Long source row so extracts read real (non-zero) cache content.
+    for (j, t) in (0..40u32).enumerate() {
+        toks[l + j] = (vocab::CONTENT_BASE + (t * 7) % 120) as i32;
+    }
+    toks[l] = vocab::BOS as i32;
+    toks[l + 1] = vocab::marker_for(1) as i32;
+    lens[1] = 40;
+    let kv_c = bc.prefill("target", &toks, &lens).unwrap();
+    let kv_p = bp.prefill("target", &toks, &lens).unwrap();
+
+    for len in [1usize, 5, 15, 16, 17, 31, 32, 33, 47] {
+        let e_c = bc.kv_extract("target", &kv_c, 1, len).unwrap();
+        let e_p = bp.kv_extract("target", &kv_p, 1, len).unwrap();
+        assert_eq!(
+            e_p.row_snapshot(0, len),
+            e_c.row_snapshot(0, len),
+            "extract len {len}"
+        );
+
+        let mut dst_c = bc.prefill("target", &toks, &lens).unwrap();
+        let mut dst_p = bp.prefill("target", &toks, &lens).unwrap();
+        bc.kv_splice("target", &mut dst_c, 3, &e_c, 0, len).unwrap();
+        bp.kv_splice("target", &mut dst_p, 3, &e_p, 0, len).unwrap();
+        for bi in 0..b {
+            assert_eq!(
+                dst_p.row_snapshot(bi, l),
+                dst_c.row_snapshot(bi, l),
+                "splice len {len}: full ring of row {bi}"
+            );
+        }
+    }
+}
+
+// ---- copy-on-write isolation -----------------------------------------
+
+/// A cloned cache aliases every page of the original; decoding over the
+/// original must copy-on-write, never mutate through the shared pages.
+#[test]
+fn cow_isolates_cloned_caches_from_decode_writes() {
+    let (b, l) = (2usize, 64usize);
+    let be = NativeBackend::seeded_with_shapes(b, l, 0xc0de).with_kv_layout(KvLayout::Paged);
+    be.prepare(Algo::Block, "xxs", Precision::Int8).unwrap();
+    let (mut toks, mut lens) = backend_state(b, l);
+    let mut kv_t = be.prefill("target", &toks, &lens).unwrap();
+    let mut kv_d = be.prefill("xxs", &toks, &lens).unwrap();
+
+    let frozen_t = kv_t.clone();
+    let frozen_d = kv_d.clone();
+    let snap_t: Vec<_> = (0..b).map(|bi| frozen_t.row_snapshot(bi, l)).collect();
+    let snap_d: Vec<_> = (0..b).map(|bi| frozen_d.row_snapshot(bi, l)).collect();
+    let cow0 = kvstats::pages_cow();
+
+    let lens0 = lens.clone();
+    for it in 0..4i32 {
+        let seeds: Vec<i32> = (0..b as i32).map(|bi| it * 31 + bi).collect();
+        be.spec_iter(Algo::Block, "xxs", 4, &mut toks, &mut lens, &mut kv_t, &mut kv_d, &seeds)
+            .unwrap();
+    }
+    assert!(
+        lens.iter().zip(&lens0).all(|(a, b)| a > b),
+        "decode must have advanced every row"
+    );
+    for bi in 0..b {
+        assert_eq!(
+            frozen_t.row_snapshot(bi, l),
+            snap_t[bi],
+            "decode writes leaked into the shared target clone (row {bi})"
+        );
+        assert_eq!(
+            frozen_d.row_snapshot(bi, l),
+            snap_d[bi],
+            "decode writes leaked into the shared drafter clone (row {bi})"
+        );
+    }
+    assert!(
+        kvstats::pages_cow() > cow0,
+        "appending into a fully-shared cache must trigger copy-on-write"
+    );
+}
+
+// ---- dirty-slab recycling --------------------------------------------
+
+/// Slabs recycled through the arena free list carry stale KV from their
+/// previous life; alloc-time zeroing must make a decode over recycled
+/// pages identical to one on a fresh arena.
+#[test]
+fn recycled_dirty_slabs_never_leak_into_later_decodes() {
+    let mk = || {
+        Arc::new(NativeBackend::seeded_with_shapes(2, 96, 0xd127).with_kv_layout(KvLayout::Paged))
+    };
+    let cfg = EngineConfig {
+        gamma: 4,
+        max_new_tokens: 8,
+        kv_layout: KvLayout::Paged,
+        ..Default::default()
+    };
+    let batch_a: Vec<Vec<u32>> = (0..2).map(|i| prompt(i + 10, 8)).collect();
+    let batch_b: Vec<Vec<u32>> = (0..2).map(|i| prompt(i + 20, 12)).collect();
+
+    let warm = SpecEngine::new(mk(), cfg.clone()).unwrap();
+    warm.run_batch(&batch_a, 1).unwrap(); // dirty slabs into the free list
+    let recycled = warm.run_batch(&batch_b, 2).unwrap();
+
+    let fresh = SpecEngine::new(mk(), cfg).unwrap().run_batch(&batch_b, 2).unwrap();
+    let toks = |r: &specd::engine::BatchReport| -> Vec<Vec<u32>> {
+        r.rows.iter().map(|x| x.tokens.clone()).collect()
+    };
+    assert_eq!(
+        toks(&recycled),
+        toks(&fresh),
+        "decode over recycled slabs diverged — stale page state leaked"
+    );
+}
+
+// ---- page refcount lifecycle -----------------------------------------
+
+#[test]
+fn pages_release_when_every_cache_reference_drops() {
+    let (b, l) = (2usize, 64usize);
+    let be = NativeBackend::seeded_with_shapes(b, l, 0x1ea4).with_kv_layout(KvLayout::Paged);
+    assert!(be.is_paged());
+    assert!(
+        be.kv_arena_stats("target").is_none(),
+        "no arena before the model allocates"
+    );
+    let (toks, lens) = backend_state(b, l);
+    let kv = be.prefill("target", &toks, &lens).unwrap();
+    let (live1, _) = be.kv_arena_stats("target").unwrap();
+    assert!(live1 > 0, "prefill must allocate pages");
+
+    let twin = kv.clone();
+    let (live2, _) = be.kv_arena_stats("target").unwrap();
+    assert_eq!(live2, live1, "cloning aliases pages, never allocates");
+
+    drop(kv);
+    let (live3, _) = be.kv_arena_stats("target").unwrap();
+    assert_eq!(live3, live1, "the twin keeps every page live");
+
+    drop(twin);
+    let (live4, free4) = be.kv_arena_stats("target").unwrap();
+    assert_eq!(live4, 0, "dropping the last reference must release every page");
+    assert_eq!(free4, live1, "released slabs recycle through the free list");
+}
+
+/// Repeated same-seed decodes must reach a page steady state: whatever
+/// persistent scratch the tree path retains, run N+1 may not hold more
+/// live pages than run N once warmed up.
+#[test]
+fn repeated_decodes_reach_page_steady_state() {
+    let be =
+        Arc::new(NativeBackend::seeded_with_shapes(2, 64, 0x57ab).with_kv_layout(KvLayout::Paged));
+    let cfg = EngineConfig {
+        gamma: 4,
+        algo: Algo::Tree { k: 2 },
+        max_new_tokens: 8,
+        kv_layout: KvLayout::Paged,
+        ..Default::default()
+    };
+    let eng = SpecEngine::new(be.clone(), cfg).unwrap();
+    let prompts: Vec<Vec<u32>> = (0..2).map(|i| prompt(i, 6)).collect();
+    eng.run_batch(&prompts, 3).unwrap();
+    let (live1, _) = be.kv_arena_stats("target").unwrap();
+    eng.run_batch(&prompts, 3).unwrap();
+    let (live2, _) = be.kv_arena_stats("target").unwrap();
+    eng.run_batch(&prompts, 3).unwrap();
+    let (live3, _) = be.kv_arena_stats("target").unwrap();
+    assert!(live2 <= live1, "warm run must not grow the live set ({live1} -> {live2})");
+    assert_eq!(live3, live2, "same-seed runs must not leak pages ({live2} -> {live3})");
+}
+
+// ---- serving tier over both layouts ----------------------------------
+
+/// End-to-end router comparison: one replica, prefix cache on, identical
+/// seeded traffic (with a repeated prompt so the second hit takes the
+/// warm zero-copy splice path) — paged and contig routers must serve
+/// byte-identical streams, and the paged router's `/metrics` must expose
+/// the physical-arena gauges the free-list pool cannot.
+#[test]
+fn router_streams_identical_across_layouts() {
+    let spawn = |layout: KvLayout| {
+        let be = Arc::new(NativeBackend::seeded(0x707e7).with_kv_layout(layout));
+        let cfg = Config::default();
+        let ecfg = EngineConfig { max_new_tokens: 8, kv_layout: layout, ..Default::default() };
+        let rcfg = RouterConfig { replicas: 1, prefix_cache: true, ..Default::default() };
+        Router::spawn(be, ecfg, &cfg.server, &rcfg).unwrap()
+    };
+    let contig = spawn(KvLayout::Contig);
+    let paged = spawn(KvLayout::Paged);
+
+    // 36-token prompt (page-aligned 32-token head is cacheable) issued
+    // twice — the second admission splices the cached prefix — plus a
+    // distinct short prompt.
+    let long = prompt(3, 36);
+    let short = prompt(4, 9);
+    let reqs =
+        vec![(long.clone(), 7u64), (long.clone(), 7u64), (short.clone(), 9u64)];
+    for (p, seed) in reqs {
+        let c = contig
+            .generate(ServeRequest::new(p.clone(), Some(8), Some(seed)))
+            .unwrap()
+            .tokens;
+        let g = paged
+            .generate(ServeRequest::new(p, Some(8), Some(seed)))
+            .unwrap()
+            .tokens;
+        assert_eq!(g, c, "router stream diverged between layouts");
+    }
+    assert!(paged.prefix_stats().hits.get() >= 1, "repeat prompt must hit the cache");
+
+    let pm = paged.render_metrics();
+    for line in ["specd_kv_pages_live", "specd_kv_pages_recycled", "specd_kv_bytes_copied_total", "specd_kv_pages_cow_total"] {
+        assert!(pm.contains(line), "paged router metrics missing {line}:\n{pm}");
+    }
+    let cm = contig.render_metrics();
+    assert!(
+        !cm.contains("specd_kv_pages_live"),
+        "free-list pool has no physical pages to report"
+    );
+}
